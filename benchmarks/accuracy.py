@@ -1,0 +1,43 @@
+"""Paper Fig 8 + Table 3: quantization accuracy of all methods across
+compression rates (avg/max relative error + recall@100)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import bench_datasets, emit, evaluate_method, save_json
+
+METHODS = ("saq", "caq", "rabitq", "lvq", "pq", "pca")
+BITS = (0.5, 1.0, 2.0, 4.0, 8.0)
+
+
+def run(fast: bool = True) -> dict:
+    data = bench_datasets(fast)
+    rows = []
+    for ds, (x, queries) in data.items():
+        for b in BITS:
+            for m in METHODS:
+                res = evaluate_method(m, x, queries, avg_bits=b,
+                                      rounds=6)
+                if res is None:
+                    continue
+                row = {"dataset": ds, "method": m, "bits": b, **res}
+                rows.append(row)
+                emit("fig8_accuracy", row)
+    # Table 3 view: error blowup vs SAQ at B=4
+    blowups = []
+    for ds in data:
+        saq_err = next(r["avg_rel_err"] for r in rows
+                       if r["dataset"] == ds and r["method"] == "saq"
+                       and r["bits"] == 4.0)
+        for m in METHODS[1:]:
+            match = [r for r in rows if r["dataset"] == ds
+                     and r["method"] == m and r["bits"] == 4.0]
+            if match:
+                row = {"dataset": ds, "method": m,
+                       "blowup_vs_saq": match[0]["avg_rel_err"]
+                       / max(saq_err, 1e-12)}
+                blowups.append(row)
+                emit("table3_blowup", row)
+    out = {"fig8": rows, "table3": blowups}
+    save_json("accuracy", out)
+    return out

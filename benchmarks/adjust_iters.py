@@ -1,0 +1,41 @@
+"""Paper Fig 10: quantization accuracy vs code-adjustment rounds r,
+with the E-RaBitQ code as the 'optimal' reference."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import caq_encode, erabitq_encode, estimate_dist_sq
+from repro.core.rotation import random_orthonormal
+from .common import bench_datasets, emit, rel_err, save_json, true_sq_dists
+
+
+def run(fast: bool = True) -> dict:
+    data = bench_datasets(fast)
+    x, queries = data["gist"]
+    n = min(len(x), 3000 if fast else len(x))
+    x, queries = x[:n], queries[:8]
+    rot = np.asarray(random_orthonormal(jax.random.PRNGKey(0), x.shape[1]))
+    xr = x @ rot.T
+    rows = []
+    for bits in (2, 4):
+        for r in (0, 1, 2, 4, 8, 16, 32):
+            code = caq_encode(xr, bits=bits, rounds=r)
+            errs = [rel_err(np.asarray(estimate_dist_sq(
+                code, jnp.asarray(q @ rot.T))), true_sq_dists(x, q)).mean()
+                for q in queries]
+            row = {"bits": bits, "rounds": r,
+                   "avg_rel_err": float(np.mean(errs))}
+            rows.append(row)
+            emit("fig10_adjust_iters", row)
+        opt = erabitq_encode(xr, bits=bits)
+        errs = [rel_err(np.asarray(estimate_dist_sq(
+            opt, jnp.asarray(q @ rot.T))), true_sq_dists(x, q)).mean()
+            for q in queries]
+        row = {"bits": bits, "rounds": "optimal(rabitq)",
+               "avg_rel_err": float(np.mean(errs))}
+        rows.append(row)
+        emit("fig10_adjust_iters", row)
+    save_json("adjust_iters", rows)
+    return {"fig10": rows}

@@ -1,0 +1,57 @@
+"""Paper Fig 9 + Table 5: ANNS QPS vs recall with the IVF index,
+full estimator vs multi-stage estimator, across B."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.saq import SAQConfig
+from repro.ivf import IVFIndex
+from repro.ivf.index import brute_force_topk
+from .common import bench_datasets, emit, save_json
+
+
+def run(fast: bool = True) -> dict:
+    data = bench_datasets(fast)
+    rows = []
+    name = "deep"
+    x, queries = data[name]
+    n = min(len(x), 6000 if fast else len(x))
+    x = x[:n]
+    queries = queries[:8] if fast else queries
+    k = 10
+    gt = [set(np.asarray(brute_force_topk(
+        jax_x, jax_q, k)[0]).tolist()) for jax_x, jax_q in
+        ((jax.numpy.asarray(x), jax.numpy.asarray(q)) for q in queries)]
+
+    for bits in (2, 3, 5):
+        idx = IVFIndex.build(
+            x, SAQConfig(avg_bits=bits, rounds=4, align=64, max_bits=12),
+            n_clusters=32)
+        for nprobe in (4, 8, 16):
+            for mode in ("full", "multistage"):
+                t0 = time.perf_counter()
+                recs, bits_acc = [], []
+                for qi, q in enumerate(queries):
+                    if mode == "full":
+                        ids, _ = idx.search(q, k=k, nprobe=nprobe)
+                    else:
+                        ids, _, st = idx.search_multistage(
+                            q, k=k, nprobe=nprobe, m=4.0)
+                        bits_acc.append(st.bits_accessed)
+                    recs.append(len(gt[qi] &
+                                    set(np.asarray(ids).tolist())) / k)
+                dt = time.perf_counter() - t0
+                row = {"dataset": name, "bits": bits, "nprobe": nprobe,
+                       "mode": mode, "recall": round(float(
+                           np.mean(recs)), 4),
+                       "qps": round(len(queries) / dt, 1)}
+                if bits_acc:
+                    row["bits_accessed"] = round(float(
+                        np.mean(bits_acc)), 1)
+                rows.append(row)
+                emit("fig9_anns", row)
+    save_json("anns", rows)
+    return {"fig9": rows}

@@ -1,0 +1,47 @@
+"""Paper Fig 11: average quantization-code bits accessed per candidate
+and recall for the multi-stage estimator across m, vs the full scan."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.saq import SAQConfig
+from repro.ivf import IVFIndex
+from repro.ivf.index import brute_force_topk
+import jax.numpy as jnp
+
+from .common import bench_datasets, emit, save_json
+
+
+def run(fast: bool = True) -> dict:
+    data = bench_datasets(fast)
+    x, queries = data["gist"]
+    n = min(len(x), 5000 if fast else len(x))
+    x, queries = x[:n], queries[:6]
+    k, nprobe = 10, 8
+    gt = [set(np.asarray(brute_force_topk(jnp.asarray(x),
+                                          jnp.asarray(q), k)[0]).tolist())
+          for q in queries]
+    rows = []
+    for bits in (4, 8):
+        idx = IVFIndex.build(
+            x, SAQConfig(avg_bits=bits, rounds=4, align=64, max_bits=12),
+            n_clusters=32)
+        full_bits = idx.plan.total_bits
+        for m in (2.0, 4.0, 8.0, 16.0):
+            recs, accessed, pruned = [], [], []
+            for qi, q in enumerate(queries):
+                ids, _, st = idx.search_multistage(q, k=k, nprobe=nprobe,
+                                                   m=m)
+                recs.append(len(gt[qi] & set(np.asarray(ids).tolist())) / k)
+                accessed.append(st.bits_accessed)
+                pruned.append(st.pruned_frac)
+            row = {"bits": bits, "m": m, "full_bits": full_bits,
+                   "bits_accessed": round(float(np.mean(accessed)), 1),
+                   "reduction_x": round(full_bits
+                                        / max(np.mean(accessed), 1e-9), 2),
+                   "recall": round(float(np.mean(recs)), 4),
+                   "pruned_frac": round(float(np.mean(pruned)), 4)}
+            rows.append(row)
+            emit("fig11_bits_accessed", row)
+    save_json("bits_accessed", rows)
+    return {"fig11": rows}

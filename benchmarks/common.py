@@ -1,0 +1,137 @@
+"""Shared benchmark scaffolding: datasets, method registry, metrics.
+
+Reduced-scale stand-ins for the paper's Table 2 datasets (offline
+container; see DESIGN.md §6): matched dimensionality, power-law PCA
+spectrum, cluster structure. All benchmarks print ``name,key=value`` CSV
+lines AND return dicts so run.py can aggregate into JSON.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (PQ, PCADrop, erabitq_encode, estimate_dist_sq,
+                        fit_caq, fit_saq, lvq_encode, lvq_distance_sq)
+
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments")
+
+
+def bench_datasets(fast: bool = True):
+    from repro.data import DATASETS, make_dataset, make_queries
+    import dataclasses
+    names = ["deep", "gist"] if fast else ["deep", "gist", "msmarco",
+                                           "openai"]
+    out = {}
+    for name in names:
+        spec = DATASETS[name]
+        n = min(spec.n, 8000 if fast else spec.n)
+        nq = 16 if fast else 100
+        out[name] = (make_dataset(spec, n=n), make_queries(spec, nq))
+    return out
+
+
+def true_sq_dists(x: np.ndarray, q: np.ndarray) -> np.ndarray:
+    return ((x - q[None, :]) ** 2).sum(-1)
+
+
+def rel_err(est: np.ndarray, true: np.ndarray) -> np.ndarray:
+    return np.abs(est - true) / np.maximum(true, 1e-9)
+
+
+def recall_at(est: np.ndarray, true: np.ndarray, k: int = 100) -> float:
+    k = min(k, len(true))
+    gt = set(np.argsort(true)[:k].tolist())
+    got = set(np.argsort(est)[:k].tolist())
+    return len(gt & got) / k
+
+
+class MethodErrors:
+    """avg/max relative error + recall for one (method, dataset, B)."""
+
+    def __init__(self):
+        self.avg, self.mx, self.rec = [], [], []
+
+    def add(self, est, true, k=100):
+        r = rel_err(est, true)
+        self.avg.append(r.mean())
+        self.mx.append(r.max())
+        self.rec.append(recall_at(est, true, k))
+
+    def summary(self) -> Dict[str, float]:
+        return {"avg_rel_err": float(np.mean(self.avg)),
+                "max_rel_err": float(np.mean(self.mx)),
+                "recall": float(np.mean(self.rec))}
+
+
+def evaluate_method(name: str, x: np.ndarray, queries: np.ndarray,
+                    avg_bits: float, rounds: int = 6,
+                    seed: int = 0) -> Optional[Dict[str, float]]:
+    """Encode with one method at the given budget; per-query metrics."""
+    me = MethodErrors()
+    xj = jnp.asarray(x)
+    if name in ("saq", "caq"):
+        if name == "caq" and (avg_bits < 1 or avg_bits != int(avg_bits)):
+            return None
+        q = (fit_saq(x, avg_bits=avg_bits, rounds=rounds, align=64,
+                     max_bits=16, seed=seed) if name == "saq" else
+             fit_caq(x, bits=int(avg_bits), rounds=rounds, seed=seed))
+        qds = q.encode(xj)
+        for i in range(queries.shape[0]):
+            qc = q.preprocess_query(jnp.asarray(queries[i]))
+            est = np.asarray(q.estimate_dist_sq(qds, qc))
+            me.add(est, true_sq_dists(x, queries[i]))
+    elif name == "rabitq":
+        if avg_bits < 1 or avg_bits != int(avg_bits):
+            return None
+        from repro.core.rotation import random_orthonormal
+        rot = np.asarray(random_orthonormal(jax.random.PRNGKey(seed),
+                                            x.shape[1]))
+        code = erabitq_encode(x @ rot.T, bits=int(avg_bits))
+        for i in range(queries.shape[0]):
+            est = np.asarray(estimate_dist_sq(code,
+                                              jnp.asarray(queries[i] @ rot.T)))
+            me.add(est, true_sq_dists(x, queries[i]))
+    elif name == "lvq":
+        if avg_bits < 1 or avg_bits != int(avg_bits):
+            return None
+        code = lvq_encode(xj, bits=int(avg_bits))
+        for i in range(queries.shape[0]):
+            est = np.asarray(lvq_distance_sq(code, jnp.asarray(queries[i])))
+            me.add(est, true_sq_dists(x, queries[i]))
+    elif name == "pq":
+        m = PQ.n_subspaces(x.shape[1], avg_bits)
+        if m < 1 or m > x.shape[1]:
+            return None
+        pq = PQ.fit(xj, m=m, nbits=8, iters=10, seed=seed)
+        codes = pq.encode(xj)
+        for i in range(queries.shape[0]):
+            est = np.asarray(pq.estimate_dist_sq(codes,
+                                                 jnp.asarray(queries[i])))
+            me.add(est, true_sq_dists(x, queries[i]))
+    elif name == "pca":
+        pd = PCADrop.fit(xj, avg_bits=avg_bits)
+        kept, tail = pd.encode(xj)
+        for i in range(queries.shape[0]):
+            est = np.asarray(pd.estimate_dist_sq(kept, tail,
+                                                 jnp.asarray(queries[i])))
+            me.add(est, true_sq_dists(x, queries[i]))
+    else:
+        raise ValueError(name)
+    return me.summary()
+
+
+def emit(table: str, row: Dict) -> None:
+    print(f"{table}," + ",".join(f"{k}={v}" for k, v in row.items()),
+          flush=True)
+
+
+def save_json(name: str, payload) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"bench_{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)

@@ -1,0 +1,42 @@
+"""Paper Fig 12: progressive approximation — error of the b-bit prefix
+sampled from an 8-bit CAQ code vs a natively b-bit CAQ code vs LVQ."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (caq_encode, caq_prefix, estimate_dist_sq,
+                        lvq_encode, lvq_distance_sq)
+from repro.core.rotation import random_orthonormal
+from .common import bench_datasets, emit, rel_err, save_json, true_sq_dists
+
+
+def run(fast: bool = True) -> dict:
+    data = bench_datasets(fast)
+    x, queries = data["gist"]
+    n = min(len(x), 3000 if fast else len(x))
+    x, queries = x[:n], queries[:8]
+    rot = np.asarray(random_orthonormal(jax.random.PRNGKey(0), x.shape[1]))
+    xr = x @ rot.T
+    full = caq_encode(xr, bits=8, rounds=4)
+    rows = []
+    for b in (1, 2, 3, 4, 5, 6, 7, 8):
+        pre = caq_prefix(full, b)
+        e_pre = np.mean([rel_err(np.asarray(estimate_dist_sq(
+            pre, jnp.asarray(q @ rot.T))), true_sq_dists(x, q)).mean()
+            for q in queries])
+        native = caq_encode(xr, bits=b, rounds=4)
+        e_nat = np.mean([rel_err(np.asarray(estimate_dist_sq(
+            native, jnp.asarray(q @ rot.T))), true_sq_dists(x, q)).mean()
+            for q in queries])
+        lvq = lvq_encode(jnp.asarray(x), bits=b)
+        e_lvq = np.mean([rel_err(np.asarray(lvq_distance_sq(
+            lvq, jnp.asarray(q))), true_sq_dists(x, q)).mean()
+            for q in queries])
+        row = {"b": b, "err_prefix_from_8bit": float(e_pre),
+               "err_native": float(e_nat), "err_lvq": float(e_lvq)}
+        rows.append(row)
+        emit("fig12_progressive", row)
+    save_json("progressive", rows)
+    return {"fig12": rows}

@@ -1,0 +1,58 @@
+"""Paper Table 4: quantization (encode) time per method and bit width.
+
+The headline claim: E-RaBitQ encode is O(2^B D log D) and blows up with
+B, while CAQ/SAQ stay O(r D). Wall time here is CPU (container), but the
+*ratio* — the speedup column — is the complexity claim transferring.
+Includes rotation time, excludes PCA (amortized, same as paper §5.1).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import erabitq_encode, fit_caq, fit_saq, lvq_encode
+from repro.core.rotation import random_orthonormal
+from .common import bench_datasets, emit, save_json
+
+BITS = (1, 4, 8, 9)
+
+
+def _timed(fn, *args):
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def run(fast: bool = True) -> dict:
+    data = bench_datasets(fast)
+    rows = []
+    for ds, (x, _) in data.items():
+        n = min(len(x), 2000 if fast else len(x))
+        x = x[:n]
+        xj = jnp.asarray(x)
+        rot = random_orthonormal(jax.random.PRNGKey(0), x.shape[1])
+        xr = xj @ rot.T
+        for b in BITS:
+            times = {}
+            times["lvq"] = _timed(lambda: lvq_encode(xj, bits=b).codes)
+            times["rabitq"] = _timed(
+                lambda: erabitq_encode(xr, bits=b).codes)
+            caq = fit_caq(np.asarray(x), bits=b, rounds=6)
+            times["caq"] = _timed(
+                lambda: caq.encode(xj).segments[0].codes)
+            saq = fit_saq(np.asarray(x), avg_bits=float(b), rounds=6,
+                          align=64)
+            times["saq"] = _timed(
+                lambda: jax.tree_util.tree_leaves(saq.encode(xj)))
+            row = {"dataset": ds, "bits": b, "n": n,
+                   **{f"t_{k}_s": round(v, 4) for k, v in times.items()},
+                   "speedup_saq_vs_rabitq":
+                       round(times["rabitq"] / max(times["saq"], 1e-9), 1)}
+            rows.append(row)
+            emit("table4_quant_time", row)
+    save_json("quant_time", rows)
+    return {"table4": rows}

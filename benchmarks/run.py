@@ -1,0 +1,44 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # fast sizes
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale N
+    PYTHONPATH=src python -m benchmarks.run --only accuracy,space
+
+Emits ``table,key=value`` CSV lines and writes JSON into experiments/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+SUITES = ("accuracy", "quant_time", "anns", "space", "adjust_iters",
+          "bits_accessed", "progressive")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale dataset sizes (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    args = ap.parse_args(argv)
+    wanted = args.only.split(",") if args.only else list(SUITES)
+
+    from . import (accuracy, adjust_iters, anns, bits_accessed,
+                   progressive, quant_time, space)
+    mods = {"accuracy": accuracy, "quant_time": quant_time, "anns": anns,
+            "space": space, "adjust_iters": adjust_iters,
+            "bits_accessed": bits_accessed, "progressive": progressive}
+    for name in wanted:
+        t0 = time.time()
+        print(f"=== {name} ===", flush=True)
+        mods[name].run(fast=not args.full)
+        print(f"=== {name} done in {time.time() - t0:.1f}s ===",
+              flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

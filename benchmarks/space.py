@@ -1,0 +1,50 @@
+"""Paper Table 6: storage space of the quantized vectors across B
+(codes + per-vector factors + per-dataset statistics)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import fit_caq, fit_saq, erabitq_encode
+from repro.core.rotation import random_orthonormal
+from .common import bench_datasets, emit, save_json
+
+
+def _nbytes(tree) -> int:
+    return int(sum(np.asarray(x).nbytes
+                   for x in jax.tree_util.tree_leaves(tree)))
+
+
+def run(fast: bool = True) -> dict:
+    data = bench_datasets(fast)
+    x, _ = data["gist"]
+    n = min(len(x), 4000 if fast else len(x))
+    x = x[:n]
+    raw = x.nbytes
+    rows = []
+    for b in (0.5, 1, 2, 4, 6, 8):
+        row = {"dataset": "gist", "bits": b, "raw_mb": round(raw / 2**20, 1)}
+        if b >= 1 and b == int(b):
+            rot = random_orthonormal(jax.random.PRNGKey(0), x.shape[1])
+            code = erabitq_encode(x @ np.asarray(rot).T, bits=int(b))
+            # pack codes at b bits (stored bitstring in production)
+            packed = code.codes.size * int(b) / 8 + code.vmax.nbytes \
+                + code.ip_xo.nbytes + code.o_norm_sq.nbytes
+            row["rabitq_mb"] = round(packed / 2**20, 1)
+            caq = fit_caq(x, bits=int(b), rounds=2)
+            qds = caq.encode(x)
+            seg = qds.segments[0]
+            packed = seg.codes.size * int(b) / 8 + seg.vmax.nbytes \
+                + seg.ip_xo.nbytes + seg.o_norm_sq.nbytes
+            row["caq_mb"] = round(packed / 2**20, 1)
+        saq = fit_saq(x, avg_bits=float(b), rounds=2, align=64)
+        qds = saq.encode(x)
+        packed = sum(s.codes.size * s.bits / 8 + s.vmax.nbytes
+                     + s.ip_xo.nbytes + s.o_norm_sq.nbytes
+                     for s in qds.segments) \
+            + np.asarray(qds.o_norm_sq_total).nbytes
+        row["saq_mb"] = round(packed / 2**20, 1)
+        rows.append(row)
+        emit("table6_space", row)
+    save_json("space", rows)
+    return {"table6": rows}

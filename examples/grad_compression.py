@@ -1,0 +1,56 @@
+"""SAQ gradient compression for data-parallel training: 8 replicas, the
+DP all-reduce replaced by quantized reduce-scatter + all-gather
+(4x fewer bytes at 8 bits), with error feedback.
+
+    python examples/grad_compression.py      # sets its own XLA device flag
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import AxisType
+
+from repro.models import ModelConfig, MeshAxes
+from repro.models.model import init_params
+from repro.train import AdamWConfig, adamw_init
+from repro.train.optimizer import adamw_update
+from repro.train.grad_compress import make_dp_train_step
+from repro.train.train_step import make_loss_fn
+
+
+def main():
+    cfg = ModelConfig(
+        arch_id="gc-demo", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+        attn_q_chunk=16, attn_kv_chunk=16, loss_vocab_chunk=16,
+        remat=False)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    opt = AdamWConfig(lr=5e-3, warmup_steps=2, total_steps=40)
+    state = adamw_init(params, opt)
+    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    loss_fn = make_loss_fn(cfg, MeshAxes())
+    step = make_dp_train_step(
+        lambda p, t, l: loss_fn(p, t, l), mesh, "data",
+        lambda g, s, p: adamw_update(g, s, p, opt), bits=8,
+        error_feedback=True)
+    ef = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (32, 32), 0, 256)
+    labels = jnp.roll(toks, -1, axis=1)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"{n/1e6:.2f}M params, 8 replicas, compressed grad exchange "
+          f"(~4x fewer collective bytes at b=8)")
+    for i in range(10):
+        params, state, ef, m = step(params, state, ef, toks, labels)
+        print(f"step {i} loss {float(m['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Checkpointing: atomic, async, retained, mesh-elastic restore."""
+from .manager import CheckpointManager  # noqa: F401

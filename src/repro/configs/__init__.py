@@ -1,0 +1,37 @@
+"""Architecture registry: the 10 assigned configs (+ reduced smoke
+variants) and the input-shape set. ``get_config(arch_id)`` /
+``get_smoke_config(arch_id)`` are the public entry points; the launcher's
+``--arch`` flag resolves through ARCHS."""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.models import ModelConfig
+
+from . import (arctic_480b, codeqwen15_7b, command_r_plus_104b, dbrx_132b,
+               falcon_mamba_7b, granite_20b, llama32_vision_11b,
+               musicgen_large, qwen3_32b, zamba2_1p2b)
+from .shapes import SHAPES, ShapeSpec, applicable, input_specs  # noqa: F401
+
+_MODULES = {
+    "dbrx-132b": dbrx_132b,
+    "arctic-480b": arctic_480b,
+    "granite-20b": granite_20b,
+    "qwen3-32b": qwen3_32b,
+    "command-r-plus-104b": command_r_plus_104b,
+    "codeqwen1.5-7b": codeqwen15_7b,
+    "falcon-mamba-7b": falcon_mamba_7b,
+    "musicgen-large": musicgen_large,
+    "zamba2-1.2b": zamba2_1p2b,
+    "llama-3.2-vision-11b": llama32_vision_11b,
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].smoke_config()

@@ -1,0 +1,26 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual.
+[hf:Snowflake/snowflake-arctic-base; hf]
+
+56 heads do not divide the 16-way tensor axis -> attention runs with
+FSDP-only sharding (attn_tp=False); the MoE (>97% of FLOPs) is fully
+expert-parallel. See DESIGN.md §7."""
+import dataclasses
+from repro.models import ModelConfig
+
+BASE = ModelConfig(
+    arch_id="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8, d_ff=4864,
+    vocab_size=32000, n_experts=128, experts_per_token=2,
+    moe_dense_residual=True, attn_tp=False, rope_theta=1_000_000.0)
+
+
+def config() -> ModelConfig:
+    return BASE
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        BASE, arch_id="arctic-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=48, vocab_size=256, n_experts=8,
+        experts_per_token=2, attn_q_chunk=8, attn_kv_chunk=8,
+        loss_vocab_chunk=8)

@@ -1,0 +1,20 @@
+"""codeqwen1.5-7b [dense] — qwen1.5 arch: MHA (kv=32), qkv bias.
+[hf:Qwen/CodeQwen1.5-7B; hf]"""
+import dataclasses
+from repro.models import ModelConfig
+
+BASE = ModelConfig(
+    arch_id="codeqwen1.5-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32, d_ff=13440,
+    vocab_size=92416, attn_bias=True, rope_theta=1_000_000.0)
+
+
+def config() -> ModelConfig:
+    return BASE
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        BASE, arch_id="codeqwen-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=256, attn_q_chunk=8,
+        attn_kv_chunk=8, loss_vocab_chunk=8)

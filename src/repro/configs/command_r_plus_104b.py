@@ -1,0 +1,21 @@
+"""command-r-plus-104b [dense] — GQA kv=8, no-bias, 256k vocab.
+[hf:CohereForAI/c4ai-command-r-v01; unverified]"""
+import dataclasses
+from repro.models import ModelConfig
+
+BASE = ModelConfig(
+    arch_id="command-r-plus-104b", family="dense",
+    n_layers=64, d_model=12288, n_heads=96, n_kv_heads=8, d_ff=33792,
+    vocab_size=256000, rope_theta=75_000_000.0,
+    loss_vocab_chunk=512)
+
+
+def config() -> ModelConfig:
+    return BASE
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        BASE, arch_id="commandr-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=512, attn_q_chunk=8,
+        attn_kv_chunk=8, loss_vocab_chunk=8)

@@ -1,0 +1,22 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained MoE.
+[hf:databricks/dbrx-base; unverified]"""
+import dataclasses
+from repro.models import ModelConfig
+
+BASE = ModelConfig(
+    arch_id="dbrx-132b", family="moe",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=10752,
+    vocab_size=100352, n_experts=16, experts_per_token=4,
+    rope_theta=500_000.0)
+
+
+def config() -> ModelConfig:
+    return BASE
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        BASE, arch_id="dbrx-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=96, vocab_size=256, n_experts=4,
+        experts_per_token=2, attn_q_chunk=8, attn_kv_chunk=8,
+        loss_vocab_chunk=8, ssm_chunk=8)

@@ -1,0 +1,20 @@
+"""falcon-mamba-7b [ssm] — mamba1 arch, attention-free, ssm_state=16.
+[arXiv:2410.05355; unverified]"""
+import dataclasses
+from repro.models import ModelConfig
+
+BASE = ModelConfig(
+    arch_id="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0, d_ff=0,
+    vocab_size=65024, ssm_state=16, ssm_conv=4, ssm_expand=2,
+    mamba_version=1, ssm_chunk=256)
+
+
+def config() -> ModelConfig:
+    return BASE
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        BASE, arch_id="falconmamba-smoke", n_layers=2, d_model=64,
+        vocab_size=256, ssm_state=8, ssm_chunk=8, loss_vocab_chunk=8)

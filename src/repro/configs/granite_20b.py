@@ -1,0 +1,20 @@
+"""granite-20b [dense] — llama-arch code model, MQA (kv=1).
+[arXiv:2405.04324; hf]"""
+import dataclasses
+from repro.models import ModelConfig
+
+BASE = ModelConfig(
+    arch_id="granite-20b", family="dense",
+    n_layers=52, d_model=6144, n_heads=48, n_kv_heads=1, d_ff=24576,
+    vocab_size=49152, rope_theta=10_000.0)
+
+
+def config() -> ModelConfig:
+    return BASE
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        BASE, arch_id="granite-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=1, d_ff=128, vocab_size=256, attn_q_chunk=8,
+        attn_kv_chunk=8, loss_vocab_chunk=8)

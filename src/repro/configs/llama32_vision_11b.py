@@ -1,0 +1,26 @@
+"""llama-3.2-vision-11b [vlm] — cross-attn image layers every 5 self
+layers (8 cross layers over the 40-layer text stack).
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+
+The vision tower is a STUB per the assignment: inputs include
+precomputed image-patch embeddings (B, n_img_tokens, d_model)."""
+import dataclasses
+from repro.models import ModelConfig
+
+BASE = ModelConfig(
+    arch_id="llama-3.2-vision-11b", family="vlm",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab_size=128256, cross_attn_every=5, n_img_tokens=1600,
+    rope_theta=500_000.0)
+
+
+def config() -> ModelConfig:
+    return BASE
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        BASE, arch_id="llamav-smoke", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=256, cross_attn_every=2,
+        n_img_tokens=8, attn_q_chunk=8, attn_kv_chunk=8,
+        loss_vocab_chunk=8)

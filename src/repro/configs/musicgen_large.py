@@ -1,0 +1,23 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens, 4 codebooks.
+[arXiv:2306.05284; hf]
+
+The EnCodec frontend is a STUB per the assignment: inputs are the
+(B, S, 4) token ids of precomputed audio frames."""
+import dataclasses
+from repro.models import ModelConfig
+
+BASE = ModelConfig(
+    arch_id="musicgen-large", family="audio",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab_size=2048, n_codebooks=4, rope_theta=10_000.0)
+
+
+def config() -> ModelConfig:
+    return BASE
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        BASE, arch_id="musicgen-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=64, n_codebooks=4,
+        attn_q_chunk=8, attn_kv_chunk=8, loss_vocab_chunk=8)

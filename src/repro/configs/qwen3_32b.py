@@ -1,0 +1,21 @@
+"""qwen3-32b [dense] — qk_norm, GQA kv=8, head_dim 128.
+[hf:Qwen/Qwen3-8B; hf]"""
+import dataclasses
+from repro.models import ModelConfig
+
+BASE = ModelConfig(
+    arch_id="qwen3-32b", family="dense",
+    n_layers=64, d_model=5120, n_heads=64, n_kv_heads=8, d_ff=25600,
+    vocab_size=151936, head_dim=128, qk_norm=True,
+    rope_theta=1_000_000.0)
+
+
+def config() -> ModelConfig:
+    return BASE
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        BASE, arch_id="qwen3-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=256, head_dim=16,
+        attn_q_chunk=8, attn_kv_chunk=8, loss_vocab_chunk=8)

@@ -1,0 +1,74 @@
+"""Assigned input shapes (one set, shared by all LM-family archs).
+
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> serve prefill
+  decode_32k   one token, KV cache 32,768, global_batch 128 -> serve decode
+  long_500k    one token, context 524,288, global_batch 1   -> serve decode
+               (sub-quadratic archs only: ssm / hybrid)
+
+``input_specs`` builds the exact ShapeDtypeStruct stand-ins the dry-run
+lowers — weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str              # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k":    ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k":  ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k":   ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    """long_500k needs sub-quadratic decode (see DESIGN.md §5)."""
+    if shape.name == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def token_struct(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.family == "audio":
+        return sds((batch, seq, cfg.n_codebooks), jnp.int32)
+    return sds((batch, seq), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStructs for every model input of this (arch, shape)."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = token_struct(cfg, b, s)
+        out["labels"] = (sds((b, s, cfg.n_codebooks), jnp.int32)
+                         if cfg.family == "audio" else
+                         sds((b, s), jnp.int32))
+    elif shape.kind == "prefill":
+        out["tokens"] = token_struct(cfg, b, s)
+    elif shape.kind == "decode":
+        out["token"] = (sds((b, cfg.n_codebooks), jnp.int32)
+                        if cfg.family == "audio" else sds((b,), jnp.int32))
+        out["pos"] = sds((), jnp.int32)
+    if cfg.family == "vlm":
+        out["img_embeds"] = sds((b, cfg.n_img_tokens, cfg.d_model),
+                                jnp.bfloat16)
+    return out

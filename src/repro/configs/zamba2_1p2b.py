@@ -1,0 +1,26 @@
+"""zamba2-1.2b [hybrid] — Mamba2 blocks + ONE shared attention block
+re-applied periodically. [arXiv:2411.15242; hf]
+
+38 mamba2 layers; the shared attention block is applied after every 19
+(= 2 applications), the even grouping closest to the paper's cadence
+(DESIGN.md §5)."""
+import dataclasses
+from repro.models import ModelConfig
+
+BASE = ModelConfig(
+    arch_id="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab_size=32000, ssm_state=64, ssm_conv=4, ssm_expand=2,
+    mamba_version=2, ssm_head_dim=64, attn_every=19, ssm_chunk=128)
+
+
+def config() -> ModelConfig:
+    return BASE
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        BASE, arch_id="zamba2-smoke", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=256, ssm_state=16,
+        ssm_head_dim=16, attn_every=2, ssm_chunk=8, attn_q_chunk=8,
+        attn_kv_chunk=8, loss_vocab_chunk=8)

@@ -1,0 +1,14 @@
+"""Paper core: SAQ vector quantization (code adjustment + dimension
+segmentation) and the reproduced baselines."""
+from .types import (QuantPlan, QuantizedDataset, SegmentCode,  # noqa: F401
+                    SegmentSpec, bits_dtype)
+from .rotation import (PCA, DenseRotation, FWHTRotation, fwht,  # noqa: F401
+                       make_rotation, random_orthonormal)
+from .lvq import (LVQCode, SymmetricGrid, lvq_encode,  # noqa: F401
+                  lvq_distance_sq, lvq_symmetric_init)
+from .caq import (CAQCode, caq_encode, caq_prefix,  # noqa: F401
+                  estimate_dist_sq, estimate_ip)
+from .plan import plan_error, search_plan, uniform_plan  # noqa: F401
+from .saq import SAQ, SAQConfig, QueryCache, fit_caq, fit_saq  # noqa: F401
+from .kmeans import kmeans_fit  # noqa: F401
+from .baselines import ERaBitQ, PCADrop, PQ, erabitq_encode  # noqa: F401

@@ -1,0 +1,4 @@
+"""Baseline quantizers reproduced from the paper's §5 comparison set."""
+from .erabitq import ERaBitQ, erabitq_encode  # noqa: F401
+from .pq import PQ  # noqa: F401
+from .pca_drop import PCADrop  # noqa: F401

@@ -1,0 +1,122 @@
+"""Extended RaBitQ (paper §2.3) — the state-of-the-art accuracy baseline.
+
+E-RaBitQ quantizes a rotated vector ``o`` to the codeword of the scaled
+grid ``G_r = {y / ||y|| : y in G}``, ``G = {-(2^B-1)/2 + u}^D`` that
+maximizes cosine similarity. Finding the nearest codeword requires the
+pruned enumeration the paper prices at ``O(2^B * D log D)``.
+
+We implement the enumeration *exactly* via the critical-scale sweep:
+
+  For t in (0, inf) let y(t) be the coordinate-wise nearest grid point to
+  t*o. y(t) changes only at the critical scales t = m / |o_i|
+  (m = 1 .. 2^(B-1)-1), i.e. at most (2^(B-1)-1) * D events. Sorting the
+  events and updating <y,o> and ||y||^2 incrementally (each event moves
+  one coordinate one grid step outward: d<ip> = |o_i|, d<sq> = 2m) visits
+  every codeword y(t) in O(2^B * D log D) — and the optimum is y(t*) for
+  some t* (the best codeword must be the nearest grid point to a scaled
+  copy of o). argmax of the running cosine gives the exact solution.
+
+This sort+cumsum formulation is fully vectorized (numpy or JAX vmap),
+unlike the pointer-walk in the reference C++ — same asymptotics, dense
+arithmetic instead of branches (the TPU/SIMD-friendly shape).
+
+The resulting code is expressible as a :class:`repro.core.caq.CAQCode`
+with ``vmax = 2^(B-1)`` (grid step 1, midpoints at half-integers), so the
+entire estimator stack (Eq 5/13, progressive prefix, IVF scan) is shared
+with CAQ/SAQ — Lemma 3.1 in executable form.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..caq import CAQCode
+from ..types import bits_dtype
+
+
+class ERaBitQ(NamedTuple):
+    """Thin wrapper marking a CAQCode as E-RaBitQ-encoded."""
+
+    code: CAQCode
+
+
+def _encode_block(o: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Exact nearest-codeword levels for a block of vectors.
+
+    o: (N, D) f32. Returns (N, D) int32 levels m_i >= 0 such that the
+    codeword is sign(o_i) * (m_i + 0.5).
+    """
+    n, d = o.shape
+    a = jnp.abs(o)
+    a_safe = jnp.maximum(a, 1e-30)
+    k_max = (1 << (bits - 1)) - 1          # events per coordinate
+    if k_max == 0:  # B = 1: original RaBitQ, sign quantization
+        return jnp.zeros((n, d), jnp.int32)
+    m = jnp.arange(1, k_max + 1, dtype=jnp.float32)        # (K,)
+    t = m[None, None, :] / a_safe[:, :, None]              # (N, D, K)
+    d_ip = jnp.broadcast_to(a[:, :, None], t.shape)        # |o_i| per event
+    d_sq = jnp.broadcast_to(2.0 * m[None, None, :], t.shape)
+    t = t.reshape(n, -1)
+    d_ip = d_ip.reshape(n, -1)
+    d_sq = d_sq.reshape(n, -1)
+    order = jnp.argsort(t, axis=-1)
+    t_s = jnp.take_along_axis(t, order, axis=-1)
+    ip = jnp.cumsum(jnp.take_along_axis(d_ip, order, axis=-1), axis=-1) \
+        + 0.5 * jnp.sum(a, axis=-1, keepdims=True)
+    sq = jnp.cumsum(jnp.take_along_axis(d_sq, order, axis=-1), axis=-1) \
+        + 0.25 * d
+    cos = ip * jax.lax.rsqrt(sq)
+    # state 0 (before any event): all levels 0
+    cos0 = (0.5 * jnp.sum(a, axis=-1)) * jax.lax.rsqrt(jnp.asarray(0.25 * d))
+    best = jnp.argmax(cos, axis=-1)
+    t_best = jnp.take_along_axis(t_s, best[:, None], axis=-1)  # (N, 1)
+    use_init = jnp.max(cos, axis=-1) <= cos0
+    t_star = jnp.where(use_init[:, None], 0.0, t_best)
+    levels = jnp.clip(jnp.floor(t_star * a + 1e-7), 0, k_max)
+    return levels.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def _encode_jit(o: jnp.ndarray, bits: int) -> CAQCode:
+    o = jnp.asarray(o, jnp.float32)
+    levels = _encode_block(o, bits)
+    signed = jnp.where(o >= 0, levels.astype(jnp.float32) + 0.5,
+                       -(levels.astype(jnp.float32) + 0.5))
+    half = float(1 << (bits - 1))
+    codes = (signed + half - 0.5).astype(bits_dtype(bits))  # u in [0, 2^B)
+    vmax = jnp.full((o.shape[0],), half, jnp.float32)       # grid step = 1
+    return CAQCode(
+        codes=codes,
+        vmax=vmax,
+        o_norm_sq=jnp.sum(o * o, axis=-1),
+        ip_xo=jnp.sum(signed * o, axis=-1),
+        x_norm_sq=jnp.sum(signed * signed, axis=-1),
+        bits=bits,
+    )
+
+
+def erabitq_encode(o: jnp.ndarray, bits: int,
+                   block: int = 0) -> CAQCode:
+    """Encode rows of ``o`` (already rotated/centered). ``block`` limits the
+    event-table memory: vectors are processed ``block`` at a time (0 =
+    auto-size to ~64M events)."""
+    o = jnp.asarray(o, jnp.float32)
+    n, d = o.shape
+    events = max(1, d * ((1 << (bits - 1)) - 1))
+    if block <= 0:
+        block = max(1, min(n, (64 << 20) // events))
+    if n <= block:
+        return _encode_jit(o, bits)
+    outs = [_encode_jit(o[i:i + block], bits) for i in range(0, n, block)]
+    return CAQCode(
+        codes=jnp.concatenate([c.codes for c in outs]),
+        vmax=jnp.concatenate([c.vmax for c in outs]),
+        o_norm_sq=jnp.concatenate([c.o_norm_sq for c in outs]),
+        ip_xo=jnp.concatenate([c.ip_xo for c in outs]),
+        x_norm_sq=jnp.concatenate([c.x_norm_sq for c in outs]),
+        bits=bits,
+    )

@@ -1,0 +1,52 @@
+"""PCA dimension-dropping baseline (paper §5).
+
+Projects by the PCA matrix and keeps only the leading dimensions at full
+fp32 precision; the dropping rate equals the compression rate:
+
+    keep = round(B * D / 32)   (32 = bits of an fp32 lane)
+
+The estimator is the distance over the kept dimensions plus the stored
+energy of each vector's dropped tail (an unbiased-in-expectation
+cross-term-zero completion; the paper's plain variant omits the tail —
+both are provided, plain is the default for the comparison figures).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..rotation import PCA
+
+
+@dataclasses.dataclass
+class PCADrop:
+    pca: PCA
+    keep: int
+
+    @staticmethod
+    def keep_for_bits(dim: int, avg_bits: float) -> int:
+        return max(1, min(dim, int(round(avg_bits * dim / 32.0))))
+
+    @classmethod
+    def fit(cls, data: jnp.ndarray, avg_bits: float) -> "PCADrop":
+        data = jnp.asarray(data, jnp.float32)
+        pca = PCA.fit(data)
+        return cls(pca=pca, keep=cls.keep_for_bits(data.shape[-1], avg_bits))
+
+    def encode(self, data: jnp.ndarray):
+        proj = self.pca.apply(jnp.asarray(data, jnp.float32))
+        kept = proj[:, : self.keep]
+        tail_sq = jnp.sum(proj[:, self.keep:] ** 2, axis=-1)
+        return kept, tail_sq
+
+    def estimate_dist_sq(self, kept: jnp.ndarray, tail_sq: jnp.ndarray,
+                         q: jnp.ndarray, use_tail: bool = False
+                         ) -> jnp.ndarray:
+        qp = self.pca.apply(jnp.asarray(q, jnp.float32)[None, :])[0]
+        qk = qp[: self.keep]
+        d = jnp.sum((kept - qk[None, :]) ** 2, axis=-1)
+        if use_tail:
+            d = d + tail_sq + jnp.sum(qp[self.keep:] ** 2)
+        return d

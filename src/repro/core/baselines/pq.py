@@ -1,0 +1,108 @@
+"""Product Quantization baseline (paper §5, faiss-style, nbits=8).
+
+D dims are split into M contiguous sub-spaces; each sub-space gets a
+K=2^nbits-entry k-means codebook. Distance is ADC: a per-query LUT of
+query-to-centroid distances per sub-space, summed by code lookup.
+
+To match the per-dimension bit budget of the other methods:
+    M * nbits = B * D  =>  M = B * D / nbits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kmeans import kmeans_fit, pairwise_sq_dists
+
+
+@dataclasses.dataclass
+class PQ:
+    codebooks: jnp.ndarray     # (M, K, d_sub)
+    dim: int                   # original D (pre-padding)
+    nbits: int
+
+    @property
+    def m(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def d_sub(self) -> int:
+        return self.codebooks.shape[2]
+
+    @property
+    def padded_dim(self) -> int:
+        return self.m * self.d_sub
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def n_subspaces(dim: int, avg_bits: float, nbits: int = 8) -> int:
+        """Sub-space count matching an average per-dim budget."""
+        return max(1, int(round(avg_bits * dim / nbits)))
+
+    @classmethod
+    def fit(cls, data: jnp.ndarray, m: int, nbits: int = 8,
+            iters: int = 20, seed: int = 0) -> "PQ":
+        data = jnp.asarray(data, jnp.float32)
+        n, d = data.shape
+        d_sub = -(-d // m)                       # ceil
+        pad = m * d_sub - d
+        if pad:
+            data = jnp.pad(data, ((0, 0), (0, pad)))
+        k = 1 << nbits
+        sub = data.reshape(n, m, d_sub)
+        books = []
+        for j in range(m):
+            res = kmeans_fit(sub[:, j, :], k=min(k, n), iters=iters,
+                             seed=seed + j)
+            c = res.centroids
+            if c.shape[0] < k:                   # tiny datasets
+                c = jnp.concatenate(
+                    [c, jnp.zeros((k - c.shape[0], d_sub), jnp.float32)])
+            books.append(c)
+        return cls(codebooks=jnp.stack(books), dim=d, nbits=nbits)
+
+    # ------------------------------------------------------------------
+    def encode(self, data: jnp.ndarray) -> jnp.ndarray:
+        data = jnp.asarray(data, jnp.float32)
+        n, d = data.shape
+        pad = self.padded_dim - d
+        if pad:
+            data = jnp.pad(data, ((0, 0), (0, pad)))
+        sub = data.reshape(n, self.m, self.d_sub)
+
+        def enc_one(j):
+            return jnp.argmin(
+                pairwise_sq_dists(sub[:, j, :], self.codebooks[j]), axis=-1)
+
+        codes = jnp.stack([enc_one(j) for j in range(self.m)], axis=-1)
+        return codes.astype(jnp.uint8 if self.nbits <= 8 else jnp.uint16)
+
+    def decode(self, codes: jnp.ndarray) -> jnp.ndarray:
+        parts = [self.codebooks[j][codes[:, j].astype(jnp.int32)]
+                 for j in range(self.m)]
+        out = jnp.concatenate(parts, axis=-1)
+        return out[:, : self.dim]
+
+    # ------------------------------------------------------------------
+    def lut(self, q: jnp.ndarray) -> jnp.ndarray:
+        """(M, K) LUT of squared distances from q's sub-vectors to the
+        codewords — computed once per query (ADC)."""
+        q = jnp.asarray(q, jnp.float32)
+        pad = self.padded_dim - q.shape[-1]
+        if pad:
+            q = jnp.pad(q, (0, pad))
+        qs = q.reshape(self.m, self.d_sub)
+        diff = self.codebooks - qs[:, None, :]
+        return jnp.sum(diff * diff, axis=-1)
+
+    def estimate_dist_sq(self, codes: jnp.ndarray, q: jnp.ndarray
+                         ) -> jnp.ndarray:
+        """ADC distances for all coded vectors against one query: (N,)."""
+        table = self.lut(q)                                  # (M, K)
+        idx = codes.astype(jnp.int32)                        # (N, M)
+        gathered = table[jnp.arange(self.m)[None, :], idx]   # (N, M)
+        return jnp.sum(gathered, axis=-1)

@@ -1,0 +1,59 @@
+"""Batched Lloyd k-means in JAX (shared by PQ codebooks and the IVF index).
+
+Plain-JAX, jit-safe, works on CPU and TPU. Initialization is a random
+sample of distinct points (k-means++ is sequential and not worth it at
+our codebook sizes); empty clusters are re-seeded to the points currently
+farthest from their centroid.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KMeansResult(NamedTuple):
+    centroids: jnp.ndarray   # (K, D)
+    assignments: jnp.ndarray  # (N,)
+    inertia: jnp.ndarray      # () sum of squared distances
+
+
+def pairwise_sq_dists(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """(N, K) squared distances via the expansion trick (MXU-friendly)."""
+    xn = jnp.sum(x * x, axis=-1, keepdims=True)          # (N, 1)
+    cn = jnp.sum(c * c, axis=-1)                          # (K,)
+    return xn + cn[None, :] - 2.0 * (x @ c.T)
+
+
+def assign(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmin(pairwise_sq_dists(x, c), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans_fit(x: jnp.ndarray, k: int, iters: int = 25,
+               seed: int = 0) -> KMeansResult:
+    x = jnp.asarray(x, jnp.float32)
+    n, d = x.shape
+    key = jax.random.PRNGKey(seed)
+    idx = jax.random.permutation(key, n)[:k]
+    init = x[idx]
+
+    def step(c, _):
+        dists = pairwise_sq_dists(x, c)
+        a = jnp.argmin(dists, axis=-1)                    # (N,)
+        one_hot = jax.nn.one_hot(a, k, dtype=jnp.float32)  # (N, K)
+        counts = jnp.sum(one_hot, axis=0)                  # (K,)
+        sums = one_hot.T @ x                               # (K, D)
+        new_c = sums / jnp.maximum(counts, 1.0)[:, None]
+        # Re-seed empty clusters with the globally worst-fit points.
+        min_d = jnp.min(dists, axis=-1)
+        far = jnp.argsort(-min_d)[:k]                      # (K,)
+        new_c = jnp.where((counts > 0)[:, None], new_c, x[far])
+        return new_c, None
+
+    c, _ = jax.lax.scan(step, init, None, length=iters)
+    a = assign(x, c)
+    inertia = jnp.sum(jnp.min(pairwise_sq_dists(x, c), axis=-1))
+    return KMeansResult(centroids=c, assignments=a, inertia=inertia)

@@ -1,0 +1,90 @@
+"""LVQ — Locally-adaptive Vector Quantization (paper §2.1, baseline).
+
+Two variants are provided:
+
+* ``lvq_encode`` — the published LVQ: per-vector ``[min, max]`` range split
+  into ``2^B - 1`` steps (codes are interval boundaries).
+* ``lvq_symmetric_init`` — the symmetric ``[-vmax, +vmax]`` grid with
+  ``2^B`` cells used by CAQ as its starting point (paper §3.1, Eq 10/11).
+
+Both are fully vectorized over the leading batch axis and jit-safe.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import bits_dtype
+
+
+class LVQCode(NamedTuple):
+    """LVQ codes + per-vector affine range. x_hat = lo + codes * step."""
+
+    codes: jnp.ndarray   # (N, D) uint
+    lo: jnp.ndarray      # (N,)
+    step: jnp.ndarray    # (N,)
+    bits: int
+
+    def decode(self) -> jnp.ndarray:
+        return self.lo[..., None] + self.codes.astype(jnp.float32) * self.step[..., None]
+
+
+def lvq_encode(x: jnp.ndarray, bits: int) -> LVQCode:
+    """Classic LVQ: quantize each coordinate to the nearest of 2^B grid
+    points spanning the per-vector [min, max] range (Eq 1 of the paper)."""
+    x = jnp.asarray(x, jnp.float32)
+    lo = jnp.min(x, axis=-1)
+    hi = jnp.max(x, axis=-1)
+    levels = (1 << bits) - 1
+    step = (hi - lo) / jnp.maximum(levels, 1)
+    step = jnp.where(step <= 0, 1.0, step)  # constant vectors
+    q = jnp.round((x - lo[..., None]) / step[..., None])
+    q = jnp.clip(q, 0, levels).astype(bits_dtype(bits))
+    return LVQCode(codes=q, lo=lo, step=step, bits=bits)
+
+
+class SymmetricGrid(NamedTuple):
+    """CAQ's symmetric per-vector grid (paper §3.1).
+
+    Cell ``c`` decodes to ``-vmax + delta * (c + 0.5)`` (interval midpoints),
+    with ``delta = 2 * vmax / 2^B``.
+    """
+
+    codes: jnp.ndarray   # (N, D) uint in [0, 2^B)
+    vmax: jnp.ndarray    # (N,)
+    bits: int
+
+    @property
+    def delta(self) -> jnp.ndarray:
+        return (2.0 * self.vmax) / (1 << self.bits)
+
+    def decode(self) -> jnp.ndarray:
+        d = self.delta[..., None]
+        return d * (self.codes.astype(jnp.float32) + 0.5) - self.vmax[..., None]
+
+
+def lvq_symmetric_init(x: jnp.ndarray, bits: int) -> SymmetricGrid:
+    """Paper Eq (10)/(11): midpoint grid over [-vmax, vmax] with 2^B cells."""
+    x = jnp.asarray(x, jnp.float32)
+    vmax = jnp.max(jnp.abs(x), axis=-1)
+    vmax = jnp.where(vmax <= 0, 1.0, vmax)
+    delta = (2.0 * vmax) / (1 << bits)
+    c = jnp.floor((x + vmax[..., None]) / delta[..., None])
+    c = jnp.clip(c, 0, (1 << bits) - 1).astype(bits_dtype(bits))
+    return SymmetricGrid(codes=c, vmax=vmax, bits=bits)
+
+
+def lvq_distance_sq(code: LVQCode, q: jnp.ndarray) -> jnp.ndarray:
+    """Estimated squared euclidean distance ||x_hat - q||^2 for a batch of
+    LVQ codes against one query (D,). Uses the integer-domain expansion:
+
+        ||x_hat - q||^2 = ||x_hat||^2 + ||q||^2 - 2 <x_hat, q>
+        <x_hat, q> = step * <codes, q> + lo * q_sum
+    """
+    q = jnp.asarray(q, jnp.float32)
+    x_hat = code.decode()
+    ip = code.step * (code.codes.astype(jnp.float32) @ q) + code.lo * jnp.sum(q)
+    xn = jnp.sum(x_hat * x_hat, axis=-1)
+    return xn + jnp.sum(q * q) - 2.0 * ip

@@ -1,0 +1,146 @@
+"""Quantization-plan search (paper §4.2, Algorithm 2).
+
+Finds the segmentation {(Seg_i, B_i)} of the PCA-projected dimensions and
+the per-segment bit widths minimizing the error model of Eq (17)
+
+    ERROR(Seg, B) = (1 / (pi * 2^B)) * sum_{i in Seg} sigma_i^2
+
+subject to  sum_i B_i * |Seg_i| <= quota.
+
+Dynamic program over (boundary, used-quota) states, with the inner quota
+loop vectorized in numpy — the paper's O(D^2 * Q) becomes ~O((D/align)^2 *
+n_bits) vector ops. Segment boundaries are restricted to multiples of
+``align`` (64 by default, matching the paper's cache-line/SIMD constraint
+— for us, the TPU lane width).
+
+Following §4.2 we return, among plans whose error is within ``slack``
+(default 0.1%) of the optimum, one with (approximately) the fewest
+segments; implemented as a second DP pass with a tiny per-segment penalty
+calibrated so the total penalty cannot exceed ``slack * best_error``.
+
+``bits=0`` segments are *dropped* dimensions (dimension reduction as the
+degenerate case): stored nowhere, estimator contributes zero, and the
+error model charges the full sigma^2/pi (the B=0 limit of Eq 17).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from .types import QuantPlan, SegmentSpec
+
+_INF = np.float64(np.inf)
+
+
+def segment_error(sum_var: float, bits: int) -> float:
+    """Eq (17) for one segment given the summed variance."""
+    return float(sum_var) / (np.pi * (1 << bits) if bits < 63 else np.inf)
+
+
+def plan_error(plan: QuantPlan, variances: np.ndarray) -> float:
+    """Model error (Eq 18) of a plan on per-dim variances."""
+    v = np.asarray(variances, np.float64)
+    return float(sum(segment_error(v[s.start:s.stop].sum(), s.bits)
+                     for s in plan.segments))
+
+
+def _dp(prefix: np.ndarray, bpos: np.ndarray, quota: int,
+        bit_choices: Sequence[int], seg_penalty: float):
+    """One DP pass. Returns (dp, parent_j, parent_b) tables.
+
+    dp[k, q]   — best error covering dims [0, bpos[k]) using exactly q bits
+    parent_*   — backpointers for reconstruction
+    """
+    m = len(bpos)
+    dp = np.full((m, quota + 1), _INF)
+    dp[0, 0] = 0.0
+    pj = np.full((m, quota + 1), -1, np.int32)
+    pb = np.full((m, quota + 1), -1, np.int32)
+    pq = np.full((m, quota + 1), -1, np.int32)
+    for j in range(m - 1):
+        row = dp[j]
+        feas = row < _INF
+        if not feas.any():
+            continue
+        for k in range(j + 1, m):
+            w = int(bpos[k] - bpos[j])
+            sv = float(prefix[bpos[k]] - prefix[bpos[j]])
+            for b in bit_choices:
+                qc = b * w
+                if qc > quota:
+                    continue
+                err = sv / (np.pi * float(1 << b)) + seg_penalty
+                src = row[: quota + 1 - qc]
+                dst = dp[k, qc:]
+                cand = src + err
+                upd = cand < dst
+                if upd.any():
+                    idx = np.nonzero(upd)[0]
+                    dst[idx] = cand[idx]
+                    pj[k, qc + idx] = j
+                    pb[k, qc + idx] = b
+                    pq[k, qc + idx] = idx  # source quota = dst offset
+    return dp, pj, pb, pq
+
+
+def _reconstruct(bpos, pj, pb, pq, k: int, q: int) -> Tuple[SegmentSpec, ...]:
+    segs = []
+    while k > 0:
+        j = int(pj[k, q])
+        b = int(pb[k, q])
+        sq = int(pq[k, q])
+        segs.append(SegmentSpec(int(bpos[j]), int(bpos[k]), b))
+        k, q = j, sq
+    return tuple(reversed(segs))
+
+
+def search_plan(variances: np.ndarray, quota_bits: int, *,
+                align: int = 64, max_bits: int = 16,
+                bit_choices: Optional[Sequence[int]] = None,
+                slack: float = 1e-3) -> QuantPlan:
+    """Algorithm 2: optimal segmentation + bit allocation under a quota.
+
+    variances: per-dim variances AFTER PCA projection (descending).
+    quota_bits: total bit budget Q_quota (e.g. B_avg * D).
+    align: segment boundaries restricted to multiples of this.
+    """
+    v = np.asarray(variances, np.float64)
+    d = v.shape[0]
+    if d <= 0:
+        raise ValueError("empty variance vector")
+    align = max(1, min(align, d))
+    prefix = np.concatenate([[0.0], np.cumsum(v)])
+    bpos = list(range(0, d, align))
+    if bpos[-1] != d:
+        bpos.append(d)
+    else:
+        bpos.append(d)
+    bpos = np.unique(np.asarray(bpos + [d], np.int64))
+    if bit_choices is None:
+        bit_choices = list(range(0, max_bits + 1))
+    quota = int(quota_bits)
+
+    # Pass 1: true optimum.
+    dp, pj, pb, pq = _dp(prefix, bpos, quota, bit_choices, 0.0)
+    last = len(bpos) - 1
+    if not np.isfinite(dp[last]).any():
+        raise ValueError(f"no feasible plan for quota {quota}")
+    best_err = float(np.min(dp[last]))
+
+    # Pass 2: fewest segments within `slack` of the optimum.
+    max_segs = max(1, len(bpos) - 1)
+    penalty = slack * max(best_err, 1e-300) / max_segs
+    dp2, pj2, pb2, pq2 = _dp(prefix, bpos, quota, bit_choices, penalty)
+    q_star = int(np.argmin(dp2[last]))
+    segs = _reconstruct(bpos, pj2, pb2, pq2, last, q_star)
+    return QuantPlan(dim=d, segments=segs)
+
+
+def uniform_plan(dim: int, bits: int) -> QuantPlan:
+    return QuantPlan.uniform(dim, bits)
+
+
+def fractional_quota(dim: int, avg_bits: float) -> int:
+    """Quota for fractional B (the paper evaluates B=0.2/0.5 etc.)."""
+    return int(round(avg_bits * dim))

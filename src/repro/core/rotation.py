@@ -1,0 +1,180 @@
+"""Random orthonormal rotations and PCA projection.
+
+Two rotation families:
+
+* ``DenseRotation`` — QR-of-Gaussian orthonormal matrix. Exact, O(D^2) apply,
+  MXU-friendly. Used for segment widths up to a few thousand.
+* ``FWHTRotation`` — randomized fast Walsh–Hadamard transform
+  (sign-flip o FWHT o sign-flip, with power-of-two padding), O(D log D),
+  gather-free: every butterfly stage is a reshape + add/sub, which maps to
+  contiguous VPU ops on TPU. This is the structured-rotation used for very
+  wide segments and for the gradient-compression path where D is millions.
+
+Both preserve inner products (orthonormal), which the RaBitQ/CAQ estimator
+algebra requires.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Dense QR rotation
+# --------------------------------------------------------------------------
+
+def random_orthonormal(key: jax.Array, dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    """D x D random orthonormal matrix (Haar via QR of Gaussian)."""
+    g = jax.random.normal(key, (dim, dim), dtype=jnp.float32)
+    q, r = jnp.linalg.qr(g)
+    # Fix signs so the distribution is Haar (multiply columns by sign(diag(r)))
+    d = jnp.sign(jnp.diagonal(r))
+    d = jnp.where(d == 0, 1.0, d)
+    return (q * d[None, :]).astype(dtype)
+
+
+class DenseRotation:
+    """Orthonormal rotation y = x @ R^T (rows are vectors)."""
+
+    def __init__(self, dim: int, seed: int = 0, matrix: Optional[jnp.ndarray] = None):
+        self.dim = dim
+        self.seed = seed
+        if matrix is None:
+            matrix = random_orthonormal(jax.random.PRNGKey(seed), dim)
+        self.matrix = matrix
+
+    def apply(self, x: jnp.ndarray) -> jnp.ndarray:
+        return x @ self.matrix.T
+
+    def inverse(self, y: jnp.ndarray) -> jnp.ndarray:
+        return y @ self.matrix
+
+
+# --------------------------------------------------------------------------
+# Fast Walsh-Hadamard rotation
+# --------------------------------------------------------------------------
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def fwht(x: jnp.ndarray) -> jnp.ndarray:
+    """Fast Walsh-Hadamard transform along the last axis (len must be 2^k).
+
+    Implemented as log2(D) stages of reshape + (a+b, a-b): contiguous,
+    gather-free, vmap/shard-safe.
+    """
+    d = x.shape[-1]
+    assert d & (d - 1) == 0, f"FWHT needs power-of-two length, got {d}"
+    orig_shape = x.shape
+    h = 1
+    while h < d:
+        x = x.reshape(orig_shape[:-1] + (d // (2 * h), 2, h))
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.concatenate([a + b, a - b], axis=-1)
+        x = x.reshape(orig_shape)
+        h *= 2
+    return x
+
+
+class FWHTRotation:
+    """y = diag(s2) H diag(s1) x / sqrt(D'), padded to the next power of two.
+
+    The composition of two random sign flips around a Hadamard matrix is a
+    (near-Haar) orthonormal transform widely used for dimension balancing.
+    Padding: x is zero-padded to D' = next_pow2(D); the transform operates in
+    D' and `apply` returns all D' dims (callers quantize the padded width).
+    Inner products are exactly preserved between padded representations.
+    """
+
+    def __init__(self, dim: int, seed: int = 0):
+        self.dim = dim
+        self.padded_dim = _next_pow2(dim)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        self.s1 = jax.random.rademacher(k1, (self.padded_dim,), dtype=jnp.float32)
+        self.s2 = jax.random.rademacher(k2, (self.padded_dim,), dtype=jnp.float32)
+        self._scale = 1.0 / np.sqrt(self.padded_dim)
+
+    def apply(self, x: jnp.ndarray) -> jnp.ndarray:
+        if x.shape[-1] != self.padded_dim:
+            pad = self.padded_dim - x.shape[-1]
+            x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        y = fwht(x * self.s1) * self._scale
+        return y * self.s2
+
+    def inverse(self, y: jnp.ndarray) -> jnp.ndarray:
+        x = fwht(y * self.s2) * self._scale
+        x = x * self.s1
+        return x[..., : self.dim]
+
+
+def make_rotation(dim: int, seed: int = 0, kind: str = "dense"):
+    if kind == "dense":
+        return DenseRotation(dim, seed)
+    if kind == "fwht":
+        return FWHTRotation(dim, seed)
+    raise ValueError(f"unknown rotation kind {kind!r}")
+
+
+# --------------------------------------------------------------------------
+# PCA
+# --------------------------------------------------------------------------
+
+class PCA:
+    """PCA projection learned from data: y = (x - mean) @ components^T.
+
+    components rows are eigenvectors sorted by descending eigenvalue.
+    ``variances`` are the per-projected-dim variances (the sigma_i^2 of
+    Eq 17 / Eq 20 in the paper).
+    """
+
+    def __init__(self, mean: jnp.ndarray, components: jnp.ndarray,
+                 variances: jnp.ndarray):
+        self.mean = mean
+        self.components = components
+        self.variances = variances
+
+    @property
+    def dim(self) -> int:
+        return int(self.components.shape[0])
+
+    @staticmethod
+    def fit(x: jnp.ndarray, sample: Optional[int] = None,
+            seed: int = 0) -> "PCA":
+        x = jnp.asarray(x, jnp.float32)
+        n, d = x.shape
+        if sample is not None and sample < n:
+            idx = jax.random.permutation(jax.random.PRNGKey(seed), n)[:sample]
+            xs = x[idx]
+        else:
+            xs = x
+        mean = jnp.mean(xs, axis=0)
+        xc = xs - mean
+        cov = (xc.T @ xc) / jnp.maximum(xs.shape[0] - 1, 1)
+        evals, evecs = jnp.linalg.eigh(cov)          # ascending
+        order = jnp.argsort(-evals)
+        evals = jnp.maximum(evals[order], 0.0)
+        components = evecs[:, order].T               # rows = eigenvectors
+        return PCA(mean=mean, components=components, variances=evals)
+
+    @staticmethod
+    def identity(dim: int, variances: Optional[jnp.ndarray] = None) -> "PCA":
+        if variances is None:
+            variances = jnp.ones((dim,), jnp.float32)
+        return PCA(mean=jnp.zeros((dim,), jnp.float32),
+                   components=jnp.eye(dim, dtype=jnp.float32),
+                   variances=variances)
+
+    def apply(self, x: jnp.ndarray) -> jnp.ndarray:
+        return (x - self.mean) @ self.components.T
+
+    def inverse(self, y: jnp.ndarray) -> jnp.ndarray:
+        return y @ self.components + self.mean

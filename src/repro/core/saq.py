@@ -1,0 +1,237 @@
+"""SAQ — Segmented CAQ (paper §4): the paper's headline method.
+
+Pipeline:
+
+    data --PCA--> polarized dims --Algorithm 2--> plan {(Seg_i, B_i)}
+         --per-segment random rotation (dimension balancing *within* the
+           segment)--> CAQ encode each segment with its own B_i.
+
+Queries follow the same transform; distances are assembled from the
+per-segment unbiased inner-product estimates (Eq 13 per segment). The
+multi-stage estimator (§4.3) scans segments leading-first and prunes with
+the Chebyshev bound Est_v(Seg) = m * sigma_Seg (Eq 20/21).
+
+Everything after `fit` is jit-safe: the plan is static metadata, all
+transforms are arrays, and the per-segment loop is a static unroll.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import caq as caq_mod
+from .caq import CAQCode, caq_encode
+from .plan import fractional_quota, search_plan
+from .rotation import PCA, random_orthonormal
+from .types import QuantPlan, QuantizedDataset, SegmentCode, SegmentSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class SAQConfig:
+    """Tuning knobs for SAQ (defaults follow the paper's recommendations)."""
+
+    avg_bits: float = 8.0          # space quota per dimension (B)
+    rounds: int = 6                # code-adjustment rounds r in [4, 8]
+    mode: str = "scan"             # 'scan' | 'jacobi' | 'kernel' | 'lvq'
+    align: int = 64                # segment-boundary alignment
+    max_bits: int = 16             # per-dim bit ceiling for the planner
+    use_pca: bool = True           # False => CAQ (single segment, no PCA)
+    seed: int = 0
+    plan_slack: float = 1e-3       # §4.2 fewest-segments slack
+    plan: Optional[QuantPlan] = None  # externally supplied plan
+
+
+class QueryCache(NamedTuple):
+    """Per-query precomputation shared across all candidates (§3.2, §4.3)."""
+
+    q_rot: Tuple[jnp.ndarray, ...]     # rotated query slice per stored segment
+    q_sum: jnp.ndarray                 # (S,) sum of rotated slice
+    q_sq: jnp.ndarray                  # (S,) ||q_seg||^2
+    q_norm_sq: jnp.ndarray             # () total ||q'||^2 across ALL dims
+    sigma_seg: jnp.ndarray             # (S,) sqrt(Var<o_seg,q_seg>) (Eq 20)
+    sigma_dropped: jnp.ndarray         # () bound term for dropped dims
+
+
+class SAQ:
+    """Fitted SAQ quantizer: transforms + plan. Use :meth:`fit`."""
+
+    def __init__(self, config: SAQConfig, pca: Optional[PCA],
+                 plan: QuantPlan,
+                 rotations: Tuple[jnp.ndarray, ...],
+                 variances: jnp.ndarray):
+        self.config = config
+        self.pca = pca
+        self.plan = plan
+        self.rotations = rotations        # aligned with plan.stored_segments
+        self.variances = variances        # per-dim sigma_i^2 in code basis
+
+    # ------------------------------------------------------------------ fit
+    @classmethod
+    def fit(cls, data: jnp.ndarray, config: SAQConfig) -> "SAQ":
+        data = jnp.asarray(data, jnp.float32)
+        n, d = data.shape
+        if config.use_pca:
+            pca = PCA.fit(data)
+            variances = pca.variances
+        else:
+            pca = None
+            variances = jnp.var(data, axis=0)
+        if config.plan is not None:
+            plan = config.plan
+        elif config.use_pca:
+            quota = fractional_quota(d, config.avg_bits)
+            plan = search_plan(np.asarray(variances), quota,
+                               align=config.align, max_bits=config.max_bits,
+                               slack=config.plan_slack)
+        else:  # plain CAQ: one segment, integer B
+            plan = QuantPlan.uniform(d, int(round(config.avg_bits)))
+        keys = jax.random.split(jax.random.PRNGKey(config.seed),
+                                max(1, len(plan.stored_segments)))
+        rotations = tuple(
+            random_orthonormal(keys[i], s.width)
+            for i, s in enumerate(plan.stored_segments))
+        return cls(config, pca, plan, rotations, jnp.asarray(variances))
+
+    # --------------------------------------------------------------- encode
+    def project(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Apply the learned PCA (or identity) to raw vectors."""
+        x = jnp.asarray(x, jnp.float32)
+        return self.pca.apply(x) if self.pca is not None else x
+
+    def encode(self, data: jnp.ndarray) -> QuantizedDataset:
+        proj = self.project(data)
+        o_norm_sq_total = jnp.sum(proj * proj, axis=-1)
+        segs = []
+        for rot, spec in zip(self.rotations, self.plan.stored_segments):
+            o_s = proj[:, spec.start:spec.stop] @ rot.T
+            code = caq_encode(o_s, bits=spec.bits, rounds=self.config.rounds,
+                              mode=self.config.mode)
+            segs.append(SegmentCode(
+                codes=code.codes, vmax=code.vmax, o_norm_sq=code.o_norm_sq,
+                ip_xo=code.ip_xo, x_norm_sq=code.x_norm_sq,
+                bits=spec.bits, start=spec.start, stop=spec.stop))
+        return QuantizedDataset(segments=tuple(segs),
+                                o_norm_sq_total=o_norm_sq_total,
+                                plan=self.plan)
+
+    def decode(self, qds: QuantizedDataset) -> jnp.ndarray:
+        """Reconstruct (approximately) the PCA-projected vectors.
+
+        Dropped segments decode to 0 (their mean in the centered basis).
+        Each stored segment is decoded on its grid, rescaled by the
+        estimator factor (unbiased direction-consistent reconstruction),
+        and rotated back.
+        """
+        n = qds.n
+        out = jnp.zeros((n, self.plan.dim), jnp.float32)
+        for rot, seg in zip(self.rotations, qds.segments):
+            delta = (2.0 * seg.vmax) / (1 << seg.bits)
+            x = delta[:, None] * (seg.codes.astype(jnp.float32) + 0.5) \
+                - seg.vmax[:, None]
+            safe = jnp.where(jnp.abs(seg.ip_xo) > 1e-30, seg.ip_xo, 1.0)
+            rescale = jnp.where(jnp.abs(seg.ip_xo) > 1e-30,
+                                seg.o_norm_sq / safe, 0.0)
+            x = x * rescale[:, None]
+            out = out.at[:, seg.start:seg.stop].set(x @ rot)
+        return out
+
+    def unproject(self, proj: jnp.ndarray) -> jnp.ndarray:
+        return self.pca.inverse(proj) if self.pca is not None else proj
+
+    # ---------------------------------------------------------------- query
+    def preprocess_query(self, q: jnp.ndarray) -> QueryCache:
+        qp = self.project(q[None, :])[0]
+        q_rot, q_sum, q_sq, sig = [], [], [], []
+        var = self.variances
+        for rot, spec in zip(self.rotations, self.plan.stored_segments):
+            qs = qp[spec.start:spec.stop] @ rot.T
+            q_rot.append(qs)
+            q_sum.append(jnp.sum(qs))
+            q_sq.append(jnp.sum(qs * qs))
+            # Eq (20): Var<o_seg, q_seg> = sum q_i^2 sigma_i^2 — invariant
+            # under the per-segment rotation; computed in the PCA basis.
+            qseg = qp[spec.start:spec.stop]
+            sig.append(jnp.sum(qseg * qseg * var[spec.start:spec.stop]))
+        dropped = [s for s in self.plan.segments if s.bits == 0]
+        sig_drop = sum((jnp.sum(qp[s.start:s.stop] ** 2
+                                * var[s.start:s.stop]) for s in dropped),
+                       jnp.float32(0.0))
+        q_norm_sq = jnp.sum(qp * qp)
+        return QueryCache(
+            q_rot=tuple(q_rot),
+            q_sum=jnp.stack(q_sum) if q_sum else jnp.zeros((0,)),
+            q_sq=jnp.stack(q_sq) if q_sq else jnp.zeros((0,)),
+            q_norm_sq=q_norm_sq,
+            sigma_seg=jnp.sqrt(jnp.stack(sig)) if sig else jnp.zeros((0,)),
+            sigma_dropped=jnp.sqrt(sig_drop))
+
+    # ------------------------------------------------------------ estimators
+    def segment_ip(self, qds: QuantizedDataset, qc: QueryCache,
+                   prefix_bits: Optional[Sequence[int]] = None) -> jnp.ndarray:
+        """Per-segment unbiased estimates of <o_seg, q_seg>: (N, S).
+
+        prefix_bits: optional per-segment progressive precision b_s <= B_s
+        (uses the first b_s bits of each code, §3.2).
+        """
+        cols = []
+        for i, seg in enumerate(qds.segments):
+            codes, bits = seg.codes, seg.bits
+            if prefix_bits is not None and prefix_bits[i] < seg.bits:
+                b = prefix_bits[i]
+                codes = (codes >> (seg.bits - b))
+                bits = b
+            delta = (2.0 * seg.vmax) / (1 << bits)
+            ip_xq = delta * (codes.astype(jnp.float32) @ qc.q_rot[i]) \
+                + qc.q_sum[i] * (delta * 0.5 - seg.vmax)
+            safe = jnp.where(jnp.abs(seg.ip_xo) > 1e-30, seg.ip_xo, 1.0)
+            rescale = jnp.where(jnp.abs(seg.ip_xo) > 1e-30,
+                                seg.o_norm_sq / safe, 0.0)
+            cols.append(ip_xq * rescale)
+        if not cols:
+            return jnp.zeros((qds.n, 0))
+        return jnp.stack(cols, axis=-1)
+
+    def estimate_dist_sq(self, qds: QuantizedDataset, qc: QueryCache,
+                         prefix_bits: Optional[Sequence[int]] = None
+                         ) -> jnp.ndarray:
+        """||o - q||^2 estimate for every encoded vector: (N,)."""
+        ip = jnp.sum(self.segment_ip(qds, qc, prefix_bits), axis=-1)
+        return qds.o_norm_sq_total + qc.q_norm_sq - 2.0 * ip
+
+    def dist_bounds(self, qds: QuantizedDataset, qc: QueryCache,
+                    n_stages: int, m: float = 4.0) -> jnp.ndarray:
+        """Multi-stage lower bound after processing the first ``n_stages``
+        segments (§4.3): unprocessed segments are credited their Chebyshev
+        upper contribution m * sigma_Seg, giving
+
+            dist^2 >= ||o||^2 + ||q||^2 - 2 (sum_done est + m * sum_rest sigma)
+        """
+        s_total = len(qds.segments)
+        ip = self.segment_ip(qds, qc)
+        done = jnp.sum(ip[:, :n_stages], axis=-1) if n_stages else 0.0
+        rest = (jnp.sum(qc.sigma_seg[n_stages:]) + qc.sigma_dropped) * m
+        return qds.o_norm_sq_total + qc.q_norm_sq - 2.0 * (done + rest)
+
+
+# ---------------------------------------------------------------------------
+# Convenience wrappers matching the paper's method names
+# ---------------------------------------------------------------------------
+
+def fit_caq(data: jnp.ndarray, bits: int, rounds: int = 6,
+            mode: str = "scan", seed: int = 0) -> SAQ:
+    """CAQ = SAQ with a single uniform segment and no PCA (§3)."""
+    cfg = SAQConfig(avg_bits=float(bits), rounds=rounds, mode=mode,
+                    use_pca=False, seed=seed)
+    return SAQ.fit(data, cfg)
+
+
+def fit_saq(data: jnp.ndarray, avg_bits: float, rounds: int = 6,
+            mode: str = "scan", align: int = 64, seed: int = 0,
+            max_bits: int = 16) -> SAQ:
+    cfg = SAQConfig(avg_bits=avg_bits, rounds=rounds, mode=mode,
+                    align=align, max_bits=max_bits, use_pca=True, seed=seed)
+    return SAQ.fit(data, cfg)

@@ -1,0 +1,163 @@
+"""Core datatypes for the SAQ quantization stack.
+
+Everything here is a pytree (registered dataclass) so quantized datasets,
+plans and factors flow through jit/pjit/shard_map unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pytree_dataclass(cls):
+    """Register a dataclass as a JAX pytree.
+
+    Fields whose name is listed in ``cls.STATIC_FIELDS`` are treated as
+    static (aux) data; everything else is a child.
+    """
+    cls = dataclasses.dataclass(cls)
+    static = tuple(getattr(cls, "STATIC_FIELDS", ()))
+    fields = [f.name for f in dataclasses.fields(cls)]
+    dyn = [f for f in fields if f not in static]
+
+    def flatten(obj):
+        children = tuple(getattr(obj, f) for f in dyn)
+        aux = tuple(getattr(obj, f) for f in static)
+        return children, aux
+
+    def unflatten(aux, children):
+        kwargs = dict(zip(dyn, children))
+        kwargs.update(dict(zip(static, aux)))
+        return cls(**kwargs)
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+@pytree_dataclass
+class SegmentSpec:
+    """One (Seg, B) tuple of a quantization plan (static metadata)."""
+
+    STATIC_FIELDS = ("start", "stop", "bits")
+    start: int = 0
+    stop: int = 0
+    bits: int = 0
+
+    @property
+    def width(self) -> int:
+        return self.stop - self.start
+
+    def __repr__(self) -> str:  # compact for plan dumps
+        return f"Seg[{self.start}:{self.stop})x{self.bits}b"
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPlan:
+    """A full quantization plan P = {(Seg_i, B_i)} (static; not a pytree).
+
+    ``segments`` are contiguous, ordered, and cover [0, dim). Segments with
+    ``bits == 0`` are *dropped* (stored nowhere; estimator contributes 0).
+    """
+
+    dim: int
+    segments: Tuple[SegmentSpec, ...]
+
+    def __post_init__(self):
+        pos = 0
+        for s in self.segments:
+            if s.start != pos:
+                raise ValueError(f"non-contiguous plan at {s} (expected start={pos})")
+            if s.stop <= s.start:
+                raise ValueError(f"empty segment {s}")
+            pos = s.stop
+        if pos != self.dim:
+            raise ValueError(f"plan covers [0,{pos}) but dim={self.dim}")
+
+    @property
+    def total_bits(self) -> int:
+        return sum(s.bits * s.width for s in self.segments)
+
+    @property
+    def stored_segments(self) -> Tuple[SegmentSpec, ...]:
+        return tuple(s for s in self.segments if s.bits > 0)
+
+    @property
+    def avg_bits(self) -> float:
+        return self.total_bits / float(self.dim)
+
+    @staticmethod
+    def uniform(dim: int, bits: int) -> "QuantPlan":
+        return QuantPlan(dim=dim, segments=(SegmentSpec(0, dim, bits),))
+
+    def describe(self) -> str:
+        segs = ", ".join(repr(s) for s in self.segments)
+        return f"QuantPlan(dim={self.dim}, avg_bits={self.avg_bits:.3f}, [{segs}])"
+
+
+@pytree_dataclass
+class SegmentCode:
+    """CAQ codes + per-vector factors for one dimension segment.
+
+    codes:  (N, width) unsigned ints in [0, 2^bits)
+    vmax:   (N,) per-vector grid half-range
+    o_norm_sq: (N,) ||o_seg||^2 (pre-quantization, post-rotation)
+    ip_xo:  (N,) <x_bar, o_seg>  -- quantized/original inner product
+    x_norm_sq: (N,) ||x_bar||^2  -- quantized vector squared norm
+    bits, start, stop: static segment metadata
+    """
+
+    STATIC_FIELDS = ("bits", "start", "stop")
+    codes: jnp.ndarray = None
+    vmax: jnp.ndarray = None
+    o_norm_sq: jnp.ndarray = None
+    ip_xo: jnp.ndarray = None
+    x_norm_sq: jnp.ndarray = None
+    bits: int = 0
+    start: int = 0
+    stop: int = 0
+
+    @property
+    def n(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.stop - self.start
+
+    @property
+    def delta(self) -> jnp.ndarray:
+        return (2.0 * self.vmax) / (1 << self.bits)
+
+
+@pytree_dataclass
+class QuantizedDataset:
+    """A SAQ-quantized vector dataset.
+
+    transforms: the (PCA x rotation) pipeline parameters live in
+    ``Transform`` objects (see saq.py); stored here opaquely as pytrees.
+    """
+
+    STATIC_FIELDS = ("plan",)
+    segments: Any = None            # tuple[SegmentCode]
+    o_norm_sq_total: Any = None     # (N,) total ||o||^2 over ALL dims (incl. dropped)
+    plan: Any = None                # QuantPlan (static)
+
+    @property
+    def n(self) -> int:
+        return self.segments[0].n if self.segments else 0
+
+
+def bits_dtype(bits: int):
+    if bits <= 8:
+        return jnp.uint8
+    if bits <= 16:
+        return jnp.uint16
+    return jnp.uint32
+
+
+def as_f32(x) -> jnp.ndarray:
+    return jnp.asarray(x, dtype=jnp.float32)

@@ -1,0 +1,5 @@
+"""Data substrate: synthetic vector datasets (offline stand-ins for
+DEEP/GIST/MSMARCO/OpenAI-1536) and a deterministic sharded token pipeline
+for LM training."""
+from .synthetic import DATASETS, SyntheticSpec, make_dataset, make_queries  # noqa: F401
+from .tokens import TokenPipeline  # noqa: F401

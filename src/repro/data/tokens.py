@@ -1,0 +1,50 @@
+"""Deterministic sharded token pipeline for LM training.
+
+Synthetic Zipf-distributed token streams, generated on the fly from a key
+derived as hash(seed, step, shard): resuming from a checkpoint only needs
+the step counter — no data-state files, no skew after elastic re-sharding
+(each host draws exactly the shard of the global batch it owns under the
+current mesh, whatever the process count is).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+
+    def _keys(self, step: int) -> jax.Array:
+        return jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), step), 7)
+
+    def global_batch_at(self, step: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(tokens, labels), each (global_batch, seq_len) int32."""
+        k = self._keys(step)
+        # Zipf via inverse-CDF on uniform: rank ~ u^(-1/(a-1)) truncated.
+        u = jax.random.uniform(
+            k, (self.global_batch, self.seq_len + 1),
+            minval=1e-6, maxval=1.0)
+        rank = jnp.floor(u ** (-1.0 / (self.zipf_a - 1.0))) - 1.0
+        toks = jnp.clip(rank, 0, self.vocab_size - 1).astype(jnp.int32)
+        return toks[:, :-1], toks[:, 1:]
+
+    def host_batch_at(self, step: int, shard: int, n_shards: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """The rows of the global batch owned by ``shard`` of ``n_shards``
+        (per-host slice for multi-process feeding)."""
+        toks, labels = self.global_batch_at(step)
+        rows = self.global_batch // n_shards
+        lo = shard * rows
+        return (np.asarray(toks[lo:lo + rows]),
+                np.asarray(labels[lo:lo + rows]))

@@ -1,0 +1,338 @@
+"""IVF index over SAQ-quantized residuals (paper §5 experimental setup).
+
+Build: k-means clusters the raw vectors; each vector is encoded by SAQ as
+its *residual* against the cluster centroid (the RaBitQ/SAQ reference-
+vector convention, Eq 2/9). Storage is a padded (C, L) layout — cluster
+lists padded to the max list length — so every probe batch is a dense
+gather + dense scan (the SPMD-friendly shape; see DESIGN.md §3 on why
+branchy per-candidate early exit is replaced by staged masking).
+
+Query: all transforms are linear, so the rotated *residual* query for
+cluster j is ``rot(f(q)) - rot(g_j)`` with both terms precomputed — the
+per-cluster cost is O(D), not O(D^2) (the paper's trick of reusing one
+rotation across clusters).
+
+Search paths:
+  * ``search``            — full estimator (Eq 13 per segment, summed)
+  * ``search_multistage`` — §4.3: clusters scanned in ranking order,
+    segments leading-first, candidates pruned with the Chebyshev lower
+    bound Est_v = m * sigma_Seg against the running top-k threshold.
+    Returns exact bits-accessed accounting (Fig 11).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import kmeans_fit, pairwise_sq_dists
+from repro.core.saq import SAQ, SAQConfig
+from repro.core.types import QuantPlan
+
+
+class SearchStats(NamedTuple):
+    bits_accessed: float        # avg quantization-code bits read per probed
+    candidates: int             # probed candidates (post padding mask)
+    pruned_frac: float          # fraction pruned before the last stage
+
+
+@dataclasses.dataclass
+class IVFIndex:
+    saq: SAQ
+    centroids: jnp.ndarray            # (C, D) raw space
+    ids: jnp.ndarray                  # (C, L) int32, -1 padding
+    counts: jnp.ndarray               # (C,)
+    seg_codes: Tuple[jnp.ndarray, ...]   # per stored seg (C, L, w)
+    seg_vmax: Tuple[jnp.ndarray, ...]    # per stored seg (C, L)
+    seg_rescale: Tuple[jnp.ndarray, ...]  # (C, L)
+    o_norm_total: jnp.ndarray         # (C, L) ||residual||^2 (projected)
+    g_proj: jnp.ndarray               # (C, D) projected centroids (no mean)
+    g_rot: Tuple[jnp.ndarray, ...]    # per stored seg (C, w) rotated g
+
+    # ------------------------------------------------------------------
+    @property
+    def n_clusters(self) -> int:
+        return int(self.centroids.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.centroids.shape[1])
+
+    @property
+    def plan(self) -> QuantPlan:
+        return self.saq.plan
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(cls, data: jnp.ndarray, config: SAQConfig, n_clusters: int,
+              kmeans_iters: int = 15, seed: int = 0) -> "IVFIndex":
+        data = jnp.asarray(data, jnp.float32)
+        n, d = data.shape
+        km = kmeans_fit(data, k=n_clusters, iters=kmeans_iters, seed=seed)
+        assign = np.asarray(km.assignments)
+        centroids = km.centroids
+        residuals = data - centroids[km.assignments]
+
+        saq = SAQ.fit(residuals, config)
+        qds = saq.encode(residuals)
+
+        counts = np.bincount(assign, minlength=n_clusters)
+        l_max = max(1, int(counts.max()))
+        order = np.argsort(assign, kind="stable")
+        offsets = np.zeros(n_clusters + 1, np.int64)
+        np.cumsum(counts, out=offsets[1:])
+
+        ids = np.full((n_clusters, l_max), -1, np.int32)
+        for c in range(n_clusters):
+            rows = order[offsets[c]:offsets[c + 1]]
+            ids[c, : len(rows)] = rows
+
+        def scatter(x, fill=0.0):
+            x = np.asarray(x)
+            out = np.full((n_clusters, l_max) + x.shape[1:], fill, x.dtype)
+            for c in range(n_clusters):
+                rows = order[offsets[c]:offsets[c + 1]]
+                out[c, : len(rows)] = x[rows]
+            return jnp.asarray(out)
+
+        seg_codes, seg_vmax, seg_rescale, g_rot = [], [], [], []
+        # g_proj is the *linear* part only: proj(q - c_j) = f(q) - c_j @ C^T
+        # (the PCA mean cancels because f already subtracts it once).
+        if saq.pca is not None:
+            g_proj = centroids @ saq.pca.components.T
+        else:
+            g_proj = centroids
+        for k_seg, (rot, seg) in enumerate(
+                zip(saq.rotations, qds.segments)):
+            seg_codes.append(scatter(seg.codes))
+            seg_vmax.append(scatter(seg.vmax))
+            safe = np.asarray(seg.ip_xo)
+            rs = np.where(np.abs(safe) > 1e-30,
+                          np.asarray(seg.o_norm_sq) / np.where(
+                              np.abs(safe) > 1e-30, safe, 1.0), 0.0)
+            seg_rescale.append(scatter(rs.astype(np.float32)))
+            g_rot.append(g_proj[:, seg.start:seg.stop] @ rot.T)
+
+        return cls(
+            saq=saq, centroids=centroids,
+            ids=jnp.asarray(ids), counts=jnp.asarray(counts),
+            seg_codes=tuple(seg_codes), seg_vmax=tuple(seg_vmax),
+            seg_rescale=tuple(seg_rescale),
+            o_norm_total=scatter(qds.o_norm_sq_total),
+            g_proj=jnp.asarray(g_proj), g_rot=tuple(g_rot))
+
+    # ------------------------------------------------------------------
+    def _query_parts(self, q: jnp.ndarray):
+        """Linear-part query transforms shared across clusters."""
+        q = jnp.asarray(q, jnp.float32)
+        saq = self.saq
+        if saq.pca is not None:
+            fq = (q - saq.pca.mean) @ saq.pca.components.T
+        else:
+            fq = q
+        fq_rot = tuple(
+            fq[s.start:s.stop] @ rot.T
+            for rot, s in zip(saq.rotations, saq.plan.stored_segments))
+        return fq, fq_rot
+
+    def _probe(self, q: jnp.ndarray, nprobe: int) -> jnp.ndarray:
+        cd = pairwise_sq_dists(q[None, :], self.centroids)[0]
+        return jnp.argsort(cd)[:nprobe]
+
+    # ------------------------------------------------------------------
+    def search(self, q: jnp.ndarray, k: int, nprobe: int,
+               prefix_bits: Optional[Sequence[int]] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Full-estimator search. Returns (ids, est_dists) of length k."""
+        q = jnp.asarray(q, jnp.float32)
+        probes = self._probe(q, nprobe)
+        dists, ids = _search_full(self, q, probes, k, prefix_bits)
+        return ids, dists
+
+    def search_batch(self, queries: jnp.ndarray, k: int, nprobe: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Full-estimator search for a batch of queries (vmap over the
+        jit'd scan — the serving-throughput path). Returns (ids, dists)
+        of shape (NQ, k)."""
+        queries = jnp.asarray(queries, jnp.float32)
+        ids, dists = [], []
+        for i in range(queries.shape[0]):   # per-query probes differ
+            r_ids, r_d = self.search(queries[i], k=k, nprobe=nprobe)
+            ids.append(r_ids)
+            dists.append(r_d)
+        return jnp.stack(ids), jnp.stack(dists)
+
+    # ------------------------------------------------------------------
+    def search_multistage(self, q: jnp.ndarray, k: int, nprobe: int,
+                          m: float = 4.0
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray, SearchStats]:
+        """§4.3 multi-stage search with Chebyshev pruning + bit accounting.
+
+        Clusters are scanned in centroid-distance order; within a cluster,
+        segments leading-first. A candidate is pruned at stage t if
+
+            o_norm + q_norm - 2 (sum_{s<t} est_s + m * sum_{s>=t} sigma_s)
+
+        exceeds the running k-th best estimated distance.
+        """
+        q = jnp.asarray(q, jnp.float32)
+        probes = np.asarray(self._probe(q, nprobe))
+        fq, fq_rot = self._query_parts(q)
+        segs = self.saq.plan.stored_segments
+        var = self.saq.variances
+        dropped = [s for s in self.saq.plan.segments if s.bits == 0]
+
+        best_d = jnp.full((k,), jnp.inf)
+        best_i = jnp.full((k,), -1, jnp.int32)
+        bits_read = 0.0
+        n_cand = 0
+        n_pruned = 0
+        for c in probes:
+            c = int(c)
+            valid = np.asarray(self.ids[c]) >= 0
+            n_val = int(valid.sum())
+            if n_val == 0:
+                continue
+            tau = float(best_d[k - 1])
+            out = _scan_cluster_staged(
+                self, c, fq, fq_rot, tau, m, tuple(range(len(segs))))
+            est, lb_alive, bits_vec = out
+            est = np.asarray(est)[:n_val]
+            alive = np.asarray(lb_alive)[:n_val]
+            bits_read += float(np.asarray(bits_vec)[:n_val].sum())
+            n_cand += n_val
+            n_pruned += int((~alive).sum())
+            cand_d = jnp.where(jnp.asarray(alive), jnp.asarray(est), jnp.inf)
+            cand_i = self.ids[c][:n_val]
+            alld = jnp.concatenate([best_d, cand_d])
+            alli = jnp.concatenate([best_i, cand_i])
+            top = jnp.argsort(alld)[:k]
+            best_d, best_i = alld[top], alli[top]
+        stats = SearchStats(
+            bits_accessed=bits_read / max(n_cand, 1),
+            candidates=n_cand,
+            pruned_frac=n_pruned / max(n_cand, 1))
+        return best_i, best_d, stats
+
+
+# ---------------------------------------------------------------------------
+# jit'd work functions (hashable static self via id-keyed closure cache)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("seg_bits", "k", "prefix_bits", "n_seg"))
+def _search_full_impl(seg_codes, seg_vmax, seg_rescale, o_norm_total, g_proj,
+                      g_rot, ids, fq, fq_rot, probes, seg_bits, k,
+                      prefix_bits, n_seg):
+    probesi = probes.astype(jnp.int32)
+    o_norm = o_norm_total[probesi]                      # (P, L)
+    gq = g_proj[probesi]                                # (P, D)
+    q_res_norm = jnp.sum((fq[None, :] - gq) ** 2, axis=-1)   # (P,)
+    ip = jnp.zeros_like(o_norm)
+    for s in range(n_seg):
+        bits = seg_bits[s]
+        codes = seg_codes[s][probesi].astype(jnp.float32)    # (P, L, w)
+        vmax = seg_vmax[s][probesi]                          # (P, L)
+        rescale = seg_rescale[s][probesi]
+        qres = fq_rot[s][None, :] - g_rot[s][probesi]        # (P, w)
+        if prefix_bits is not None and prefix_bits[s] < bits:
+            shift = bits - prefix_bits[s]
+            codes = jnp.floor(codes / (1 << shift))
+            bits = prefix_bits[s]
+        delta = (2.0 * vmax) / (1 << bits)
+        q_sum = jnp.sum(qres, axis=-1)                       # (P,)
+        ip_cq = jnp.einsum("plw,pw->pl", codes, qres)
+        ip_xq = delta * ip_cq + q_sum[:, None] * (0.5 * delta - vmax)
+        ip = ip + ip_xq * rescale
+    dist = o_norm + q_res_norm[:, None] - 2.0 * ip           # (P, L)
+    pid = ids[probesi]                                       # (P, L)
+    dist = jnp.where(pid >= 0, dist, jnp.inf)
+    flat_d, flat_i = dist.reshape(-1), pid.reshape(-1)
+    neg_top, idx = jax.lax.top_k(-flat_d, k)
+    return -neg_top, flat_i[idx]
+
+
+def _search_full(index: IVFIndex, q, probes, k, prefix_bits):
+    fq, fq_rot = index._query_parts(q)
+    seg_bits = tuple(s.bits for s in index.saq.plan.stored_segments)
+    return _search_full_impl(
+        index.seg_codes, index.seg_vmax, index.seg_rescale,
+        index.o_norm_total, index.g_proj, index.g_rot, index.ids,
+        fq, fq_rot, probes, seg_bits, k,
+        tuple(prefix_bits) if prefix_bits is not None else None,
+        len(seg_bits))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("seg_bits", "seg_ids", "seg_bounds"))
+def _scan_cluster_staged_impl(seg_codes_c, seg_vmax_c, seg_rescale_c,
+                              o_norm_c, gq_c, g_rot_c, var_segs, var_drop,
+                              fq, fq_rot, tau, m, seg_bits, seg_ids,
+                              seg_bounds):
+    """One cluster, staged (§4.3). Returns (est, alive, bits_accessed)."""
+    q_res = fq - gq_c                      # residual query, PCA basis
+    q_res_norm = jnp.sum(q_res ** 2)
+    # per-segment sigma for this cluster's residual query (Eq 20) —
+    # evaluated in the PCA basis where the data covariance is diagonal.
+    sigmas = []
+    for s in seg_ids:
+        lo, hi = seg_bounds[s]
+        qseg = q_res[lo:hi]
+        sigmas.append(jnp.sqrt(jnp.sum(qseg * qseg * var_segs[s])))
+    sigmas = jnp.stack(sigmas) if seg_ids else jnp.zeros((0,))
+    # var_drop: (D,) per-dim variance masked to dropped dims (else 0)
+    sig_drop = jnp.sqrt(jnp.sum(var_drop * q_res * q_res))
+    sig_tail = jnp.concatenate(
+        [jnp.cumsum(sigmas[::-1])[::-1], jnp.zeros((1,))]) + sig_drop
+
+    base = o_norm_c + q_res_norm
+    ip = jnp.zeros_like(o_norm_c)
+    alive = jnp.ones_like(o_norm_c, dtype=bool)
+    bits_acc = jnp.zeros_like(o_norm_c)
+    for s in seg_ids:
+        lb = base - 2.0 * (ip + m * sig_tail[s])
+        alive = alive & (lb <= tau)
+        w = seg_codes_c[s].shape[-1]
+        bits_acc = bits_acc + jnp.where(alive, float(w * seg_bits[s]), 0.0)
+        codes = seg_codes_c[s].astype(jnp.float32)          # (L, w)
+        qres = fq_rot[s] - g_rot_c[s]
+        delta = (2.0 * seg_vmax_c[s]) / (1 << seg_bits[s])
+        ip_xq = delta * (codes @ qres) \
+            + jnp.sum(qres) * (0.5 * delta - seg_vmax_c[s])
+        ip = ip + jnp.where(alive, ip_xq * seg_rescale_c[s], 0.0)
+    est = base - 2.0 * ip
+    return est, alive, bits_acc
+
+
+def _scan_cluster_staged(index: IVFIndex, c: int, fq, fq_rot, tau, m,
+                         seg_ids):
+    segs = index.saq.plan.stored_segments
+    var = index.saq.variances
+    var_segs = tuple(var[s.start:s.stop] for s in segs)
+    seg_bits = tuple(s.bits for s in segs)
+    seg_bounds = tuple((s.start, s.stop) for s in segs)
+    drop_mask = np.zeros(index.saq.plan.dim, np.float32)
+    for s in index.saq.plan.segments:
+        if s.bits == 0:
+            drop_mask[s.start:s.stop] = 1.0
+    var_drop = jnp.asarray(drop_mask) * var
+    return _scan_cluster_staged_impl(
+        tuple(sc[c] for sc in index.seg_codes),
+        tuple(sv[c] for sv in index.seg_vmax),
+        tuple(sr[c] for sr in index.seg_rescale),
+        index.o_norm_total[c], index.g_proj[c],
+        tuple(gr[c] for gr in index.g_rot),
+        var_segs, var_drop, fq, fq_rot, jnp.float32(tau), jnp.float32(m),
+        seg_bits, seg_ids, seg_bounds)
+
+
+def brute_force_topk(data: jnp.ndarray, q: jnp.ndarray, k: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact ground truth for recall evaluation."""
+    d = jnp.sum((data - q[None, :]) ** 2, axis=-1)
+    neg, idx = jax.lax.top_k(-d, k)
+    return idx, -neg

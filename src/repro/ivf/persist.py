@@ -1,0 +1,97 @@
+"""IVF index persistence: save/load the full index (codes, factors,
+transforms, plan) to a directory — the vector-database ops story
+(build offline, serve from a restored snapshot).
+
+Format: one .npy per array + manifest.json for the static metadata
+(plan segments, SAQ config). Atomic via tmp + rename, same discipline
+as repro/ckpt.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+from typing import Any, Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rotation import PCA
+from repro.core.saq import SAQ, SAQConfig
+from repro.core.types import QuantPlan, SegmentSpec
+from .index import IVFIndex
+
+
+def _save_arrays(d: str, arrays: Dict[str, Any]) -> None:
+    for name, arr in arrays.items():
+        np.save(os.path.join(d, f"{name}.npy"), np.asarray(arr))
+
+
+def save_index(index: IVFIndex, path: str) -> None:
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    saq = index.saq
+    manifest = {
+        "config": dataclasses.asdict(saq.config) | {"plan": None},
+        "plan": [[s.start, s.stop, s.bits] for s in saq.plan.segments],
+        "dim": saq.plan.dim,
+        "n_segments": len(index.seg_codes),
+        "has_pca": saq.pca is not None,
+    }
+    arrays: Dict[str, Any] = {
+        "centroids": index.centroids, "ids": index.ids,
+        "counts": index.counts, "o_norm_total": index.o_norm_total,
+        "g_proj": index.g_proj, "variances": saq.variances,
+    }
+    for i, (c, vm, rs, gr, rot) in enumerate(zip(
+            index.seg_codes, index.seg_vmax, index.seg_rescale,
+            index.g_rot, saq.rotations)):
+        arrays[f"seg{i}_codes"] = c
+        arrays[f"seg{i}_vmax"] = vm
+        arrays[f"seg{i}_rescale"] = rs
+        arrays[f"seg{i}_grot"] = gr
+        arrays[f"seg{i}_rotation"] = rot
+    if saq.pca is not None:
+        arrays["pca_mean"] = saq.pca.mean
+        arrays["pca_components"] = saq.pca.components
+        arrays["pca_variances"] = saq.pca.variances
+    _save_arrays(tmp, arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+
+
+def load_index(path: str) -> IVFIndex:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    def arr(name):
+        return jnp.asarray(np.load(os.path.join(path, f"{name}.npy")))
+
+    cfg_d = dict(manifest["config"])
+    cfg_d.pop("plan", None)
+    config = SAQConfig(**cfg_d)
+    plan = QuantPlan(
+        dim=manifest["dim"],
+        segments=tuple(SegmentSpec(a, b, c)
+                       for a, b, c in manifest["plan"]))
+    pca = None
+    if manifest["has_pca"]:
+        pca = PCA(mean=arr("pca_mean"), components=arr("pca_components"),
+                  variances=arr("pca_variances"))
+    n_seg = manifest["n_segments"]
+    rotations = tuple(arr(f"seg{i}_rotation") for i in range(n_seg))
+    saq = SAQ(config, pca, plan, rotations, arr("variances"))
+    return IVFIndex(
+        saq=saq, centroids=arr("centroids"), ids=arr("ids"),
+        counts=arr("counts"),
+        seg_codes=tuple(arr(f"seg{i}_codes") for i in range(n_seg)),
+        seg_vmax=tuple(arr(f"seg{i}_vmax") for i in range(n_seg)),
+        seg_rescale=tuple(arr(f"seg{i}_rescale") for i in range(n_seg)),
+        o_norm_total=arr("o_norm_total"), g_proj=arr("g_proj"),
+        g_rot=tuple(arr(f"seg{i}_grot") for i in range(n_seg)))

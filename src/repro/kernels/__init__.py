@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+Kernels (each <name>.py has the pl.pallas_call + BlockSpec; ops.py holds
+the jit wrappers; ref.py the pure-jnp oracles):
+
+* ``caq_adjust`` — Algorithm 1 coordinate-descent encode loop
+* ``ivf_scan``   — quantized-domain distance scan (Eq 13/5), MXU dot
+* ``fwht``       — structured rotation (dimension balancing)
+* ``saq_attend`` — decode attention over the SAQ-quantized KV cache
+* ``caq_encode`` — fused bulk encode (init + Jacobi adjust + factors)
+"""
+from . import ops, ref  # noqa: F401
+from .caq_adjust import caq_adjust_pallas  # noqa: F401
+from .fwht import fwht_pallas  # noqa: F401
+from .ivf_scan import ivf_scan_pallas  # noqa: F401
+from .saq_attend import saq_attend_pallas  # noqa: F401
+from .caq_encode import caq_encode_pallas  # noqa: F401

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for CAQ code adjustment (Algorithm 1 hot loop).
+
+TPU adaptation (see DESIGN.md §3): the paper's AVX512 code vectorizes
+*within* one vector; coordinate descent is sequential per vector but
+embarrassingly parallel *across* vectors. We therefore tile ``V_TILE``
+vectors into VMEM and sweep dimensions sequentially with every VPU lane
+working on a different vector — the O(1)-per-dim accumulator update of
+the paper carried in registers:
+
+    grid  = (ceil(N / V_TILE),)
+    block = o (V_TILE, D) f32, codes (V_TILE, D) f32, vmax (V_TILE, 1)
+    loop  = rounds * D steps of: load column d, score {-1, 0, +1} moves
+            against carried (ip, sq), commit the best.
+
+The dim-sequential loop is the algorithm, not a limitation: each step is
+a (V_TILE,)-wide VPU op, so utilization is V_TILE lanes regardless of D.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_V_TILE = 256
+
+
+def _adjust_kernel(o_ref, codes_ref, vmax_ref, out_ref, *, bits: int,
+                   rounds: int, dim: int):
+    o = o_ref[...]                                  # (V, D) f32
+    codes = codes_ref[...].astype(jnp.float32)      # (V, D)
+    vmax = vmax_ref[...][:, 0]                      # (V,)
+    levels = float((1 << bits) - 1)
+    delta = (2.0 * vmax) / (1 << bits)              # (V,)
+
+    x0 = delta[:, None] * (codes + 0.5) - vmax[:, None]
+    ip0 = jnp.sum(x0 * o, axis=-1)
+    sq0 = jnp.sum(x0 * x0, axis=-1)
+
+    def dim_step(d, carry):
+        codes, ip, sq = carry
+        c = jax.lax.dynamic_slice_in_dim(codes, d, 1, axis=1)[:, 0]
+        od = jax.lax.dynamic_slice_in_dim(o, d, 1, axis=1)[:, 0]
+        v = delta * (c + 0.5) - vmax
+        best_f = ip * jax.lax.rsqrt(jnp.maximum(sq, 1e-30))
+        best_c, best_ip, best_sq = c, ip, sq
+        for dc in (-1.0, 1.0):                      # static unroll
+            c2 = jnp.clip(c + dc, 0.0, levels)
+            v2 = delta * (c2 + 0.5) - vmax
+            ip2 = ip + (v2 - v) * od
+            sq2 = sq + v2 * v2 - v * v
+            f2 = ip2 * jax.lax.rsqrt(jnp.maximum(sq2, 1e-30))
+            take = f2 > best_f
+            best_f = jnp.where(take, f2, best_f)
+            best_c = jnp.where(take, c2, best_c)
+            best_ip = jnp.where(take, ip2, best_ip)
+            best_sq = jnp.where(take, sq2, best_sq)
+        codes = jax.lax.dynamic_update_slice_in_dim(
+            codes, best_c[:, None], d, axis=1)
+        return codes, best_ip, best_sq
+
+    def round_body(_, carry):
+        return jax.lax.fori_loop(0, dim, dim_step, carry)
+
+    codes, _, _ = jax.lax.fori_loop(0, rounds, round_body, (codes, ip0, sq0))
+    out_ref[...] = codes.astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "rounds", "v_tile", "interpret"))
+def caq_adjust_pallas(o: jnp.ndarray, codes: jnp.ndarray, vmax: jnp.ndarray,
+                      bits: int, rounds: int,
+                      v_tile: int = DEFAULT_V_TILE,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Adjusted codes (N, D) int32. Pads N up to a multiple of v_tile."""
+    n, d = o.shape
+    v_tile = min(v_tile, max(8, n))
+    n_pad = -n % v_tile
+    o_p = jnp.pad(o.astype(jnp.float32), ((0, n_pad), (0, 0)))
+    c_p = jnp.pad(codes.astype(jnp.int32), ((0, n_pad), (0, 0)))
+    v_p = jnp.pad(vmax.astype(jnp.float32), ((0, n_pad),),
+                  constant_values=1.0)[:, None]
+    grid = ((n + n_pad) // v_tile,)
+    out = pl.pallas_call(
+        functools.partial(_adjust_kernel, bits=bits, rounds=rounds, dim=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v_tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((v_tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((v_tile, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((v_tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, d), jnp.int32),
+        interpret=interpret,
+    )(o_p, c_p, v_p)
+    return out[:n]

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused CAQ encode (LVQ init + Jacobi code adjustment
++ estimator factors) — the bulk-encode hot path (KV-cache prefill
+quantization, gradient compression, dataset ingestion).
+
+One HBM read of the (V_TILE, D) block, everything else in VMEM:
+  1. per-row vmax, symmetric-grid init (Eq 10);
+  2. ``rounds`` Jacobi adjustment rounds: every dim proposes its best
+     +-1 move against the frozen (ip, sq) accumulators, all improving
+     moves apply, an exact acceptance test guards interference with a
+     single-best-move fallback (= core.caq.adjust_jacobi at
+     apply_frac=1.0 — same codebook as Algorithm 1, no D-length
+     sequential chain);
+  3. one store of codes + the per-vector factors (vmax, <x,o>, ||x||^2,
+     ||o||^2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_V_TILE = 256
+
+
+def _encode_kernel(o_ref, codes_ref, fac_ref, *, bits: int, rounds: int):
+    o = o_ref[...].astype(jnp.float32)                    # (V, D)
+    levels = float((1 << bits) - 1)
+    vmax = jnp.maximum(jnp.max(jnp.abs(o), axis=-1), 1e-30)  # (V,)
+    delta = (2.0 * vmax) / (1 << bits)
+    vm = vmax[:, None]
+    dl = delta[:, None]
+    codes = jnp.clip(jnp.floor((o + vm) / dl), 0.0, levels)
+
+    def cos2(ip, sq):
+        return jnp.sign(ip) * ip * ip / jnp.maximum(sq, 1e-30)
+
+    def one_round(_, codes):
+        x = dl * (codes + 0.5) - vm
+        ip = jnp.sum(x * o, axis=-1, keepdims=True)
+        sq = jnp.sum(x * x, axis=-1, keepdims=True)
+        base = cos2(ip, sq)
+        best_gain = jnp.full(o.shape, -jnp.inf)
+        best_dc = jnp.zeros(o.shape)
+        for dc in (-1.0, 1.0):
+            c2 = jnp.clip(codes + dc, 0.0, levels)
+            v2 = dl * (c2 + 0.5) - vm
+            ip2 = ip + (v2 - x) * o
+            sq2 = sq + v2 * v2 - x * x
+            gain = cos2(ip2, sq2) - base
+            take = gain > best_gain
+            best_gain = jnp.where(take, gain, best_gain)
+            best_dc = jnp.where(take, c2 - codes, best_dc)
+        improving = best_gain > 0
+        cand = codes + jnp.where(improving, best_dc, 0.0)
+        xc = dl * (cand + 0.5) - vm
+        ipc = jnp.sum(xc * o, axis=-1, keepdims=True)
+        sqc = jnp.sum(xc * xc, axis=-1, keepdims=True)
+        ok = cos2(ipc, sqc) >= base
+        gmask = jnp.where(improving, best_gain, -jnp.inf)
+        one_hot = gmask >= jnp.max(gmask, axis=-1, keepdims=True)
+        single = codes + jnp.where(one_hot & improving, best_dc, 0.0)
+        return jnp.where(ok, cand, single)
+
+    codes = jax.lax.fori_loop(0, rounds, one_round, codes)
+    x = dl * (codes + 0.5) - vm
+    codes_ref[...] = codes.astype(jnp.int32)
+    fac_ref[...] = jnp.stack(
+        [vmax,
+         jnp.sum(x * o, axis=-1),          # <x, o>
+         jnp.sum(x * x, axis=-1),          # ||x||^2
+         jnp.sum(o * o, axis=-1)],         # ||o||^2
+        axis=-1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "rounds", "v_tile", "interpret"))
+def caq_encode_pallas(o: jnp.ndarray, bits: int, rounds: int = 4,
+                      v_tile: int = DEFAULT_V_TILE,
+                      interpret: bool = False):
+    """Encode rows of ``o``. Returns (codes i32 (N, D),
+    factors f32 (N, 4) = [vmax, ip_xo, x_norm_sq, o_norm_sq])."""
+    n, d = o.shape
+    v_tile = min(v_tile, max(8, n))
+    n_pad = -n % v_tile
+    o_p = jnp.pad(o.astype(jnp.float32), ((0, n_pad), (0, 0)),
+                  constant_values=1.0)
+    grid = ((n + n_pad) // v_tile,)
+    codes, fac = pl.pallas_call(
+        functools.partial(_encode_kernel, bits=bits, rounds=rounds),
+        grid=grid,
+        in_specs=[pl.BlockSpec((v_tile, d), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((v_tile, d), lambda i: (i, 0)),
+                   pl.BlockSpec((v_tile, 4), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n + n_pad, d), jnp.int32),
+                   jax.ShapeDtypeStruct((n + n_pad, 4), jnp.float32)],
+        interpret=interpret,
+    )(o_p)
+    return codes[:n], fac[:n]

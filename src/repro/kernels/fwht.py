@@ -1,0 +1,52 @@
+"""Pallas TPU kernel for the fast Walsh-Hadamard transform.
+
+Used by the structured-rotation path (dimension balancing for very wide
+segments and gradient compression, DESIGN.md §3). One HBM->VMEM load per
+(V_TILE, D) block, all log2(D) butterfly stages computed in VMEM, one
+store — vs. the XLA lowering of the reshape/concat formulation which can
+materialize intermediate stages. Every stage is a contiguous
+reshape + add/sub: no gathers, VPU-only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_V_TILE = 256
+
+
+def _fwht_kernel(x_ref, out_ref, *, dim: int):
+    x = x_ref[...]                                   # (V, D) f32
+    v = x.shape[0]
+    h = 1
+    while h < dim:                                   # static python loop
+        xr = x.reshape(v, dim // (2 * h), 2, h)
+        a = xr[:, :, 0, :]
+        b = xr[:, :, 1, :]
+        x = jnp.concatenate([a + b, a - b], axis=-1).reshape(v, dim)
+        h *= 2
+    out_ref[...] = x * (1.0 / (dim ** 0.5))
+
+
+@functools.partial(jax.jit, static_argnames=("v_tile", "interpret"))
+def fwht_pallas(x: jnp.ndarray, v_tile: int = DEFAULT_V_TILE,
+                interpret: bool = False) -> jnp.ndarray:
+    """Normalized FWHT along the last axis; x: (N, D), D a power of two."""
+    n, d = x.shape
+    assert d & (d - 1) == 0, f"FWHT needs power-of-two length, got {d}"
+    v_tile = min(v_tile, max(8, n))
+    n_pad = -n % v_tile
+    x_p = jnp.pad(x.astype(jnp.float32), ((0, n_pad), (0, 0)))
+    grid = ((n + n_pad) // v_tile,)
+    out = pl.pallas_call(
+        functools.partial(_fwht_kernel, dim=d),
+        grid=grid,
+        in_specs=[pl.BlockSpec((v_tile, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((v_tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, d), jnp.float32),
+        interpret=interpret,
+    )(x_p)
+    return out[:n]

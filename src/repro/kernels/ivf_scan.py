@@ -1,0 +1,74 @@
+"""Pallas TPU kernel for the quantized-domain IVF distance scan.
+
+The paper's AVX512 integer dot products map to the MXU (DESIGN.md §3):
+codes are stored as u8 rows, upcast per (N_TILE, D) VMEM block, and
+contracted against the rotated query in one ``jnp.dot`` with
+``preferred_element_type=float32`` — the systolic array does <codes, q>
+while the VPU applies the per-vector affine correction of Eq (13) and the
+rescale factor of Eq (5) fused in the same kernel:
+
+    dist^2 = o_norm_sq + ||q||^2
+             - 2 * rescale * (delta <codes,q> + q_sum (delta/2 - vmax))
+
+Tiling: grid over N; the query (D, 1) stays resident in VMEM across all
+grid steps (constant index_map), codes stream through HBM->VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_N_TILE = 512
+
+
+def _scan_kernel(codes_ref, fac_ref, q_ref, qs_ref, out_ref, *, bits: int):
+    codes = codes_ref[...].astype(jnp.float32)      # (N_TILE, D)
+    q = q_ref[...]                                  # (D, 1) f32
+    q_sum = qs_ref[0, 0]
+    q_sq = qs_ref[0, 1]
+    vmax = fac_ref[...][:, 0]                       # (N_TILE,)
+    rescale = fac_ref[...][:, 1]
+    o_norm_sq = fac_ref[...][:, 2]
+    delta = (2.0 * vmax) / (1 << bits)
+    ip_cq = jnp.dot(codes, q,
+                    preferred_element_type=jnp.float32)[:, 0]  # MXU
+    ip_xq = delta * ip_cq + q_sum * (0.5 * delta - vmax)
+    out_ref[...] = (o_norm_sq + q_sq
+                    - 2.0 * ip_xq * rescale)[:, None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "n_tile", "interpret"))
+def ivf_scan_pallas(codes: jnp.ndarray, vmax: jnp.ndarray,
+                    rescale: jnp.ndarray, o_norm_sq: jnp.ndarray,
+                    q: jnp.ndarray, bits: int,
+                    n_tile: int = DEFAULT_N_TILE,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Estimated squared distances (N,) f32."""
+    n, d = codes.shape
+    n_tile = min(n_tile, max(8, n))
+    n_pad = -n % n_tile
+    codes_p = jnp.pad(codes, ((0, n_pad), (0, 0)))
+    fac = jnp.stack([vmax, rescale, o_norm_sq], axis=-1).astype(jnp.float32)
+    fac_p = jnp.pad(fac, ((0, n_pad), (0, 0)), constant_values=1.0)
+    q = q.astype(jnp.float32)
+    q_col = q[:, None]
+    q_stats = jnp.array([[jnp.sum(q), jnp.sum(q * q)]], jnp.float32)
+    grid = ((n + n_pad) // n_tile,)
+    out = pl.pallas_call(
+        functools.partial(_scan_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((n_tile, 3), lambda i: (i, 0)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),   # query resident
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_tile, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(codes_p, fac_p, q_col, q_stats)
+    return out[:n, 0]

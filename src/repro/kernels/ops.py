@@ -1,0 +1,58 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute with ``interpret=True`` — the
+kernel body runs as plain JAX, validating the exact TPU program. On a TPU
+backend the same call sites compile to Mosaic. ``force_interpret`` exists
+so tests can pin the mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .caq_adjust import caq_adjust_pallas
+from .fwht import fwht_pallas
+from .ivf_scan import ivf_scan_pallas
+from .caq_encode import caq_encode_pallas
+from .saq_attend import saq_attend_pallas
+
+_FORCE_INTERPRET: bool | None = None
+
+
+def _interpret() -> bool:
+    if _FORCE_INTERPRET is not None:
+        return _FORCE_INTERPRET
+    return jax.default_backend() == "cpu"
+
+
+def caq_adjust(o: jnp.ndarray, codes: jnp.ndarray, vmax: jnp.ndarray,
+               bits: int, rounds: int) -> jnp.ndarray:
+    """Kernel-backed Algorithm 1; same contract as ref.caq_adjust_ref."""
+    return caq_adjust_pallas(o, codes, vmax, bits, rounds,
+                             interpret=_interpret())
+
+
+def ivf_scan(codes: jnp.ndarray, vmax: jnp.ndarray, rescale: jnp.ndarray,
+             o_norm_sq: jnp.ndarray, q: jnp.ndarray, bits: int
+             ) -> jnp.ndarray:
+    """Kernel-backed quantized distance scan; see ref.ivf_scan_ref."""
+    return ivf_scan_pallas(codes, vmax, rescale, o_norm_sq, q, bits,
+                           interpret=_interpret())
+
+
+def fwht(x: jnp.ndarray) -> jnp.ndarray:
+    """Kernel-backed normalized FWHT; see ref.fwht_ref."""
+    return fwht_pallas(x, interpret=_interpret())
+
+
+def saq_attend(q, k_codes, k_vmax, k_rescale, v_codes, v_vmax, pos,
+               bits: int):
+    """Kernel-backed quantized-cache decode attention; see
+    ref.saq_attend_ref."""
+    return saq_attend_pallas(q, k_codes, k_vmax, k_rescale, v_codes,
+                             v_vmax, pos, bits, interpret=_interpret())
+
+
+def caq_encode(o: jnp.ndarray, bits: int, rounds: int = 4):
+    """Kernel-backed fused CAQ encode; see ref.caq_encode_ref."""
+    return caq_encode_pallas(o, bits, rounds, interpret=_interpret())

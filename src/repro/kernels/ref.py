@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` function defines the exact semantics its kernel must
+reproduce; tests sweep shapes/dtypes and assert allclose between the
+kernel (interpret=True on CPU) and these references.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# caq_adjust: Algorithm 1 (Gauss-Seidel coordinate descent on cosine)
+# ---------------------------------------------------------------------------
+
+def caq_adjust_ref(o: jnp.ndarray, codes: jnp.ndarray, vmax: jnp.ndarray,
+                   bits: int, rounds: int) -> jnp.ndarray:
+    """Reference semantics for the adjustment kernel.
+
+    o: (N, D) f32; codes: (N, D) integer grid codes; vmax: (N,) f32.
+    Returns adjusted codes (N, D) int32. Must match
+    repro.core.caq.adjust_scan exactly (same sweep order, same tie rule:
+    a move is taken only on strict improvement, -1 tried before +1).
+    """
+    from repro.core.caq import adjust_scan
+    return adjust_scan(o.astype(jnp.float32), codes, vmax.astype(jnp.float32),
+                       bits, rounds).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# ivf_scan: quantized-domain distance estimation (Eq 13 + Eq 5)
+# ---------------------------------------------------------------------------
+
+def ivf_scan_ref(codes: jnp.ndarray, vmax: jnp.ndarray, rescale: jnp.ndarray,
+                 o_norm_sq: jnp.ndarray, q: jnp.ndarray, bits: int
+                 ) -> jnp.ndarray:
+    """Estimated ||o - q||^2 for every coded row.
+
+    codes: (N, D) uint; vmax/rescale/o_norm_sq: (N,); q: (D,) f32.
+        delta   = 2 * vmax / 2^bits
+        <x,q>   = delta * <codes, q> + q_sum * (delta/2 - vmax)
+        est_ip  = <x,q> * rescale
+        dist^2  = o_norm_sq + ||q||^2 - 2 est_ip
+    """
+    q = q.astype(jnp.float32)
+    q_sum = jnp.sum(q)
+    q_sq = jnp.sum(q * q)
+    delta = (2.0 * vmax) / (1 << bits)
+    ip_xq = delta * (codes.astype(jnp.float32) @ q) \
+        + q_sum * (0.5 * delta - vmax)
+    return o_norm_sq + q_sq - 2.0 * ip_xq * rescale
+
+
+# ---------------------------------------------------------------------------
+# fwht: fast Walsh-Hadamard transform (normalized)
+# ---------------------------------------------------------------------------
+
+def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Normalized FWHT along the last axis (length must be a power of 2):
+    y = H x / sqrt(D), H the +-1 Hadamard matrix. Orthonormal."""
+    from repro.core.rotation import fwht
+    d = x.shape[-1]
+    return fwht(x.astype(jnp.float32)) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# saq_attend: decode attention over the SAQ-quantized KV cache
+# ---------------------------------------------------------------------------
+
+def saq_attend_ref(q, k_codes, k_vmax, k_rescale, v_codes, v_vmax, pos,
+                   bits: int):
+    """Reference semantics: models/kvcache.attend_saq (Eq 13/5 logits +
+    masked softmax + code-domain value reconstruction)."""
+    from repro.models.kvcache import attend_saq
+    return attend_saq(q, (k_codes, k_vmax, k_rescale, v_codes, v_vmax),
+                      pos, bits)
+
+
+# ---------------------------------------------------------------------------
+# caq_encode: fused LVQ init + Jacobi adjustment + factors
+# ---------------------------------------------------------------------------
+
+def caq_encode_ref(o: jnp.ndarray, bits: int, rounds: int):
+    """Reference: lvq_symmetric_init + adjust_jacobi(apply_frac=1.0) +
+    factor computation. Returns (codes i32, factors (N,4))."""
+    from repro.core.caq import adjust_jacobi
+    from repro.core.lvq import lvq_symmetric_init
+    o = o.astype(jnp.float32)
+    init = lvq_symmetric_init(o, bits)
+    codes, vmax = init.codes, init.vmax
+    if rounds > 0:
+        codes = adjust_jacobi(o, codes, vmax, bits, rounds,
+                              apply_frac=1.0)
+    delta = (2.0 * vmax) / (1 << bits)
+    x = delta[:, None] * (codes.astype(jnp.float32) + 0.5) - vmax[:, None]
+    fac = jnp.stack([vmax, jnp.sum(x * o, -1), jnp.sum(x * x, -1),
+                     jnp.sum(o * o, -1)], axis=-1)
+    return codes.astype(jnp.int32), fac

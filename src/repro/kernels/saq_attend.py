@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: decode attention over the SAQ-quantized KV cache.
+
+The pure-JAX path (models/kvcache.attend_saq) materializes an f32 upcast
+of the u8 codes in HBM before the dots — 4 bytes/element of traffic for
+a 1-byte cache. This kernel streams u8 code blocks HBM->VMEM, upcasts in
+VMEM, and runs the Eq 13/5 estimator + online softmax + the affine value
+reconstruction entirely on-chip: HBM traffic = the codes themselves (+
+the per-token factors), which is the whole point of quantizing the cache.
+
+Layout: grid = (B, S/BS); sequence blocks are visited sequentially per
+batch row (TPU grid order), carrying running (m, l, acc) in VMEM scratch;
+the output block (H, hd) is written on the last S-block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_S_BLOCK = 1024
+
+
+def _attend_kernel(pos_ref, q_ref, kc_ref, kf_ref, vc_ref, vf_ref, out_ref,
+                   m_ref, l_ref, acc_ref, *, bits: int, s_block: int,
+                   n_sblocks: int, hkv: int, g: int, hd: int):
+    si = pl.program_id(1)
+    pos = pos_ref[0]
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _unpack(c):
+        if bits != 4:
+            return c.astype(jnp.float32)
+        lo = (c & 0xF).astype(jnp.float32)
+        hi = (c >> 4).astype(jnp.float32)
+        return jnp.stack([lo, hi], axis=-1).reshape(
+            c.shape[:-1] + (c.shape[-1] * 2,))
+
+    q = q_ref[0].reshape(hkv, g, hd).astype(jnp.float32)
+    q_sum = jnp.sum(q, axis=-1)                            # (Hkv, G)
+    kc = _unpack(kc_ref[0])                                # (BS, Hkv, hd)
+    kvm = kf_ref[0][:, :, 0]                               # (BS, Hkv)
+    krs = kf_ref[0][:, :, 1]
+    delta_k = (2.0 * kvm) / (1 << bits)
+    # Eq 13: <k, q> = rescale * (delta <c,q> + q_sum (delta/2 - vmax))
+    ip_cq = jnp.einsum("hgd,shd->hgs", q, kc,
+                       preferred_element_type=jnp.float32)  # MXU
+    ip_kq = delta_k.T[:, None, :] * ip_cq \
+        + q_sum[..., None] * (0.5 * delta_k - kvm).T[:, None, :]
+    logits = ip_kq * krs.T[:, None, :] / (hd ** 0.5)       # (Hkv, G, BS)
+    span = si * s_block + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, s_block), 2)
+    valid = span <= pos
+    logits = jnp.where(valid, logits, -jnp.inf)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(valid, jnp.exp(logits - m_safe[..., None]), 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    # value read-back in the code domain:
+    #   sum_t p_t v_t = (p * delta_v) @ c_v + sum_t p_t (0.5 delta_v - vmax)
+    vc = _unpack(vc_ref[0])
+    vvm = vf_ref[0][:, :, 0]
+    delta_v = ((2.0 * vvm) / (1 << bits)).T                # (Hkv, BS)
+    pw = p * delta_v[:, None, :]
+    pv = jnp.einsum("hgs,shd->hgd", pw, vc,
+                    preferred_element_type=jnp.float32)
+    pv = pv + jnp.sum(p * (0.5 * delta_v - vvm.T)[:, None, :],
+                      axis=-1)[..., None]
+    acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(si == n_sblocks - 1)
+    def _fini():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        out_ref[...] = out.reshape(1, hkv * g, hd).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "s_block",
+                                             "interpret"))
+def saq_attend_pallas(q: jnp.ndarray, k_codes: jnp.ndarray,
+                      k_vmax: jnp.ndarray, k_rescale: jnp.ndarray,
+                      v_codes: jnp.ndarray, v_vmax: jnp.ndarray,
+                      pos: jnp.ndarray, bits: int,
+                      s_block: int = DEFAULT_S_BLOCK,
+                      interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, hd); codes: (B, S, Hkv, hd) u8 — PACKED two-per-byte
+    (B, S, Hkv, hd/2) when bits == 4; factors: (B, S, Hkv);
+    pos: () int32. Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    s, hkv = k_codes.shape[1], k_codes.shape[2]
+    hd_stored = k_codes.shape[3]
+    g = h // hkv
+    s_block = min(s_block, s)
+    assert s % s_block == 0, (s, s_block)
+    n_sblocks = s // s_block
+    kf = jnp.stack([k_vmax, k_rescale], axis=-1)           # (B, S, Hkv, 2)
+    vf = v_vmax[..., None]                                 # (B, S, Hkv, 1)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (1,))
+    out = pl.pallas_call(
+        functools.partial(_attend_kernel, bits=bits, s_block=s_block,
+                          n_sblocks=n_sblocks, hkv=hkv, g=g, hd=hd),
+        grid=(b, n_sblocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, si: (0,)),
+            pl.BlockSpec((1, h, hd), lambda bi, si: (bi, 0, 0)),
+            pl.BlockSpec((1, s_block, hkv, hd_stored),
+                         lambda bi, si: (bi, si, 0, 0)),
+            pl.BlockSpec((1, s_block, hkv, 2),
+                         lambda bi, si: (bi, si, 0, 0)),
+            pl.BlockSpec((1, s_block, hkv, hd_stored),
+                         lambda bi, si: (bi, si, 0, 0)),
+            pl.BlockSpec((1, s_block, hkv, 1),
+                         lambda bi, si: (bi, si, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda bi, si: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, g), jnp.float32),
+            pltpu.VMEM((hkv, g), jnp.float32),
+            pltpu.VMEM((hkv, g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, q, k_codes, kf, v_codes, vf)
+    return out

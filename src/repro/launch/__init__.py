@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, sharding assembly, dry-run, drivers."""

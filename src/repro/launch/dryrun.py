@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# initialization. The dry-run (and ONLY the dry-run) builds the 512-chip
+# production meshes out of host placeholder devices.
+
+# Multi-pod dry-run: lower + compile every (architecture x input shape)
+# cell on the production meshes and extract memory / cost / roofline.
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b \
+#         --shape train_4k --mesh single
+#     PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+#         --out experiments/dryrun
+#
+# Every cell must compile on the 16x16 (single-pod) mesh AND the 2x16x16
+# multi-pod mesh. Failures (sharding mismatch, unsupported collective) are
+# bugs in the framework, not in the script.
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, applicable, get_config, input_specs
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_axes, make_production_mesh
+from repro.launch.sharding import (abstract_decode_caches, abstract_opt_state,
+                                   abstract_params, batch_specs, named)
+from repro.models import ModelConfig
+from repro.serve import ServeConfig, make_decode_step, make_prefill_step
+from repro.train import AdamWConfig, make_train_step
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               kv_bits: int = 8, opt_bits: int = 8,
+               serve_fsdp: bool = True, seq_shard: bool = True,
+               microbatches: int = 1) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the report dict."""
+    import dataclasses
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = make_axes(mesh)
+    shape_probe = SHAPES[shape_name]
+    if shape_probe.kind in ("prefill", "decode") and not serve_fsdp:
+        axes = dataclasses.replace(axes, shard_params_fsdp=False)
+    if not seq_shard:
+        axes = dataclasses.replace(axes, seq_shard=False)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped",
+                "reason": "full-attention arch; long_500k requires "
+                          "sub-quadratic decode (DESIGN.md §5)"}
+
+    specs = input_specs(cfg, shape)
+    jax.set_mesh(mesh)   # bare-PartitionSpec constraints resolve here
+    params_struct, params_spec = abstract_params(cfg, axes)
+    p_sh = named(params_spec, mesh, like=params_struct)
+    b_spec = batch_specs(cfg, axes, shape.kind, shape.global_batch)
+    b_sh = {k: named(b_spec[k], mesh) for k in specs}
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt = AdamWConfig(quant_bits=opt_bits)
+        opt_struct, opt_spec = abstract_opt_state(params_struct, opt,
+                                                  params_spec, axes)
+        o_sh = named(opt_spec, mesh, like=opt_struct)
+        step = make_train_step(cfg, opt, axes, mesh,
+                               microbatches=microbatches)
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_struct, opt_struct, specs)
+        mf = rl.model_flops_train(cfg, shape.global_batch, shape.seq_len)
+    elif shape.kind == "prefill":
+        serve = ServeConfig(max_seq=shape.seq_len, kv_bits=kv_bits)
+        step = make_prefill_step(cfg, serve, axes, mesh)
+        _, cache_spec = abstract_decode_caches(
+            cfg, axes, shape.global_batch, shape.seq_len, kv_bits)
+        lsp = (P(axes.bp(shape.global_batch), None, axes.tp(cfg.vocab_size))
+               if cfg.family == "audio" else
+               P(axes.bp(shape.global_batch), axes.tp(cfg.vocab_size)))
+        logits_sh = named(lsp, mesh)
+        cache_sh = jax.tree_util.tree_map(
+            lambda s: named(s, mesh), cache_spec,
+            is_leaf=lambda s: isinstance(s, P))
+        jitted = jax.jit(step, in_shardings=(p_sh,) + tuple(
+            b_sh[k] for k in ("tokens",) + (
+                ("img_embeds",) if cfg.family == "vlm" else ())),
+            out_shardings=(logits_sh, cache_sh))
+        args = [params_struct, specs["tokens"]]
+        if cfg.family == "vlm":
+            args.append(specs["img_embeds"])
+        lowered = jitted.lower(*args)
+        mf = rl.model_flops_train(cfg, shape.global_batch, shape.seq_len) / 3
+    else:  # decode
+        serve = ServeConfig(max_seq=shape.seq_len, kv_bits=kv_bits)
+        cache_struct, cache_spec = abstract_decode_caches(
+            cfg, axes, shape.global_batch, shape.seq_len, kv_bits)
+        c_sh = named(cache_spec, mesh, like=cache_struct)
+        step = make_decode_step(cfg, serve, axes, mesh)
+        in_sh = [p_sh, b_sh["token"], b_sh["pos"], c_sh]
+        args = [params_struct, specs["token"], specs["pos"], cache_struct]
+        if cfg.family == "vlm":
+            in_sh.append(b_sh["img_embeds"])
+            args.append(specs["img_embeds"])
+        jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                         donate_argnums=(3,))
+        lowered = jitted.lower(*args)
+        mf = rl.model_flops_decode(cfg, shape.global_batch)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    roof = rl.roofline(compiled)
+    roof["useful_flops_ratio"] = (
+        mf / (roof["flops_per_chip"] * mesh.size)
+        if roof["flops_per_chip"] else 0.0)
+    report = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "n_devices": mesh.size,
+        "kv_bits": kv_bits if shape.kind == "decode" else None,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_per_device": getattr(
+                mem, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(
+                mem, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(
+                mem, "temp_size_in_bytes", None),
+            "peak_bytes_per_device": (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        "model_flops_global": mf,
+        "roofline": roof,
+    }
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape name or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--kv-bits", type=int, default=8)
+    ap.add_argument("--opt-bits", type=int, default=8)
+    ap.add_argument("--out", default=None, help="JSON output directory")
+    args = ap.parse_args(argv)
+
+    archs = list(ARCHS) if (args.all or args.arch in (None, "all")) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape in (None, "all")) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+                try:
+                    rep = lower_cell(arch, shape, mp,
+                                     kv_bits=args.kv_bits,
+                                     opt_bits=args.opt_bits)
+                except Exception as e:  # report and continue
+                    traceback.print_exc()
+                    rep = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                line = {k: rep.get(k) for k in
+                        ("arch", "shape", "mesh", "status", "compile_s")}
+                if rep.get("status") == "ok":
+                    r = rep["roofline"]
+                    line.update(dominant=r["dominant"],
+                                t_comp=f"{r['t_comp_s']:.4f}",
+                                t_mem=f"{r['t_mem_s']:.4f}",
+                                t_coll=f"{r['t_coll_s']:.4f}",
+                                peak_gb=round(rep["memory"][
+                                    "peak_bytes_per_device"] / 2**30, 2))
+                print(json.dumps(line))
+                sys.stdout.flush()
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    name = f"{arch}__{shape}__" \
+                        f"{'multi' if mp else 'single'}.json"
+                    with open(os.path.join(args.out, name), "w") as f:
+                        json.dump(rep, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

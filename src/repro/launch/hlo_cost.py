@@ -1,0 +1,339 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts each while-loop *body* once — for a
+scan-over-layers transformer that undercounts FLOPs/bytes/collective
+traffic by the layer count (x microbatch x remat). This module parses the
+post-optimization HLO text and rebuilds the totals with loop multipliers:
+
+  1. split the module into named computations;
+  2. parse every instruction: result type, opcode, operands;
+  3. extract each while loop's trip count from its condition computation
+     (the s32 constant feeding the LT compare — the canonical lax.scan /
+     fori_loop shape);
+  4. propagate multipliers over the call graph (while body/cond: x trip;
+     fusion/call: x 1), then sum per-instruction costs x multiplier.
+
+Costs per top-level instruction (fusion boundaries = materialized
+buffers, the standard HBM-traffic approximation):
+
+  flops  — dot instructions (wherever they live, incl. inside fusions):
+           2 * numel(result) * contraction_size. MXU convention:
+           elementwise flops ignored.
+  bytes  — result bytes + operand bytes of every top-level instruction
+           (skipping tuple plumbing); dynamic-(update-)slice counted at
+           slice granularity (in-place semantics).
+  coll   — result bytes of all-gather / all-reduce / reduce-scatter /
+           all-to-all / collective-permute(-start) instructions.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OPCODE_RE = re.compile(r"\b([a-z][a-z0-9\-]*)\(")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_CALLED_SINGLE_RE = re.compile(
+    r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_CALLED_MULTI_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?')
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES = {"tuple", "get-tuple-element", "parameter", "constant",
+               "bitcast", "while", "after-all", "opt-barrier", "call",
+               "conditional"}
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(x) for x in dims.split(",") if x]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _numel(type_str: str) -> int:
+    shapes = _shape_dims(type_str)
+    if not shapes:
+        return 0
+    n = 1
+    for d in shapes[0][1]:
+        n *= d
+    return n
+
+
+class Instr(NamedTuple):
+    name: str
+    type_str: str
+    opcode: str
+    rhs: str
+    operands: List[str]
+
+
+class Computation(NamedTuple):
+    name: str
+    instrs: List[Instr]
+    by_name: Dict[str, Instr]
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur_name: Optional[str] = None
+    instrs: List[Instr] = []
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        m = _COMP_HDR_RE.match(line)
+        if m and line.endswith("{"):
+            cur_name = m.group(1)
+            instrs = []
+            continue
+        if line.startswith("}"):
+            if cur_name is not None:
+                comps[cur_name] = Computation(
+                    cur_name, instrs, {i.name: i for i in instrs})
+            cur_name = None
+            continue
+        if cur_name is None or "=" not in line:
+            continue
+        lhs, rhs = line.split("=", 1)
+        name = lhs.strip().lstrip("%").split(" ")[0]
+        rhs = rhs.strip()
+        om = _OPCODE_RE.search(rhs)
+        if not om:
+            continue
+        opcode = om.group(1)
+        type_str = rhs[: om.start()].strip()
+        paren = rhs[om.end():]
+        depth, end = 1, 0
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = [o.lstrip("%")
+                    for o in _OPERAND_RE.findall(paren[:end])]
+        instrs.append(Instr(name, type_str, opcode, rhs, operands))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Bound of the canonical (i = 0; i < N; ++i) condition."""
+    # constants defined in the condition computation
+    consts: Dict[str, int] = {}
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.rhs)
+            if m and ins.type_str.strip().startswith(("s32", "s64", "u32")):
+                consts[ins.name] = int(m.group(1))
+    for ins in cond.instrs:
+        if "direction=LT" in ins.rhs or ins.opcode in ("compare", "fusion"):
+            for op in ins.operands:
+                if op in consts:
+                    return max(1, consts[op])
+    if consts:
+        return max(1, max(consts.values()))
+    return 1
+
+
+class CostTotals(NamedTuple):
+    flops: float
+    bytes: float
+    collective_bytes: float
+    collectives: Dict[str, float]
+    trip_counts: Dict[str, int]
+
+
+def analyze(hlo: str, entry: Optional[str] = None,
+            collect: Optional[List] = None) -> CostTotals:
+    comps = parse_module(hlo)
+    # entry = computation not referenced by anyone
+    referenced = set()
+    callers: Dict[str, List[Tuple[str, float]]] = {c: [] for c in comps}
+    trip_of_body: Dict[str, int] = {}
+    for cname, comp in comps.items():
+        for ins in comp.instrs:
+            called = [m.group(1)
+                      for m in _CALLED_SINGLE_RE.finditer(ins.rhs)]
+            for m in _CALLED_MULTI_RE.finditer(ins.rhs):
+                called.extend(nm.strip().lstrip("%")
+                              for nm in m.group(1).split(","))
+            if ins.opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.rhs)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.rhs)
+                tm = _TRIP_RE.search(ins.rhs)   # XLA-annotated, preferred
+                if bm and cm and cm.group(1) in comps:
+                    trip = (int(tm.group(1)) if tm
+                            else _trip_count(comps[cm.group(1)]))
+                    trip_of_body[bm.group(1)] = trip
+                    trip_of_body[cm.group(1)] = trip
+            for nm in called:
+                if nm in comps:
+                    referenced.add(nm)
+                    callers[nm].append((cname, 1.0))
+    if entry is None:
+        roots = [c for c in comps if c not in referenced]
+        entry = roots[-1] if roots else next(iter(comps))
+
+    # multiplier propagation (memoized DFS from each computation up)
+    mult_cache: Dict[str, float] = {entry: 1.0}
+
+    def mult(cname: str, stack=()) -> float:
+        if cname in mult_cache:
+            return mult_cache[cname]
+        if cname in stack:
+            return 1.0
+        total = 0.0
+        for parent, _ in callers.get(cname, []):
+            total += mult(parent, stack + (cname,))
+        if not callers.get(cname):
+            total = 1.0 if cname == entry else 0.0
+        total *= trip_of_body.get(cname, 1)
+        mult_cache[cname] = total
+        return total
+
+    # ------------------------------------------------------------------
+    # Fusion-aware byte accounting. A fusion's HBM traffic is:
+    #   reads  — per operand: if the corresponding fusion parameter is
+    #            consumed ONLY through dynamic-slice/gather, the slice
+    #            result bytes (loop-invariant buffers indexed per
+    #            iteration read a slice, not the array); else full size.
+    #   writes — if the fusion ROOT is a dynamic-update-slice (the
+    #            in-place scan update), 2x the update slice (RMW); if a
+    #            tuple, the sum of its elements by the same rule; else
+    #            the result bytes.
+    # ------------------------------------------------------------------
+    def _write_bytes(fcomp: Computation, r: Instr) -> float:
+        if r.opcode == "dynamic-update-slice" and len(r.operands) >= 2:
+            upd = fcomp.by_name.get(r.operands[1])
+            return 2.0 * _shape_bytes(upd.type_str) if upd \
+                else _shape_bytes(r.type_str)
+        if r.opcode == "tuple":
+            return sum(_write_bytes(fcomp, fcomp.by_name[o])
+                       for o in r.operands if o in fcomp.by_name)
+        if r.opcode in ("copy", "bitcast") and r.operands \
+                and r.operands[0] in fcomp.by_name:
+            return _write_bytes(fcomp, fcomp.by_name[r.operands[0]])
+        return float(_shape_bytes(r.type_str))
+
+    def fusion_bytes(comp: Computation, ins: Instr) -> float:
+        fm = re.search(r"calls=%?([\w.\-]+)", ins.rhs)
+        fcomp = comps.get(fm.group(1)) if fm else None
+        if fcomp is None or not fcomp.instrs:
+            b = float(_shape_bytes(ins.type_str))
+            for op in ins.operands:
+                src = comp.by_name.get(op)
+                if src is not None and src.opcode != "constant":
+                    b += _shape_bytes(src.type_str)
+            return b
+        param_idx: Dict[str, int] = {}
+        consumers: Dict[str, List[Instr]] = {}
+        for fi in fcomp.instrs:
+            if fi.opcode == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", fi.rhs)
+                if pm:
+                    param_idx[fi.name] = int(pm.group(1))
+            for op in fi.operands:
+                consumers.setdefault(op, []).append(fi)
+        read = 0.0
+        for pname, pidx in param_idx.items():
+            cons = consumers.get(pname, [])
+            sliced = 0.0
+            full = False
+            for c in cons:
+                if c.opcode in ("dynamic-slice", "gather"):
+                    sliced += _shape_bytes(c.type_str)
+                elif c.opcode == "dynamic-update-slice" and c.operands \
+                        and c.operands[0] == pname:
+                    pass  # aliased in-place target: covered by the write
+                else:
+                    full = True
+                    break
+            if cons and not full:
+                read += sliced
+            elif pidx < len(ins.operands):
+                src = comp.by_name.get(ins.operands[pidx])
+                if src is not None and src.opcode != "constant":
+                    read += _shape_bytes(src.type_str)
+        return read + _write_bytes(fcomp, fcomp.instrs[-1])
+
+    flops = 0.0
+    byts = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    for cname, comp in comps.items():
+        m = mult(cname)
+        if m <= 0:
+            continue
+        is_subfusion = cname.endswith("_computation") \
+            or cname.startswith("fused_") or cname.startswith("wrapped_")
+        for ins in comp.instrs:
+            # flops: dots anywhere (incl. fusion computations)
+            if ins.opcode == "dot":
+                lhs_dims_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}",
+                                       ins.rhs)
+                csize = 1
+                if lhs_dims_m and ins.operands:
+                    lhs = comp.by_name.get(ins.operands[0])
+                    if lhs is not None:
+                        shapes = _shape_dims(lhs.type_str)
+                        if shapes:
+                            dims = shapes[0][1]
+                            for idx in lhs_dims_m.group(1).split(","):
+                                if idx and int(idx) < len(dims):
+                                    csize *= dims[int(idx)]
+                flops += m * 2.0 * _numel(ins.type_str) * csize
+            # bytes: top-level materialization only
+            if not is_subfusion and ins.opcode not in _SKIP_BYTES:
+                if ins.opcode == "fusion":
+                    contrib = m * fusion_bytes(comp, ins)
+                elif ins.opcode in ("dynamic-update-slice",
+                                    "dynamic-slice", "gather"):
+                    if ins.opcode == "dynamic-update-slice" \
+                            and len(ins.operands) >= 2:
+                        upd = comp.by_name.get(ins.operands[1])
+                        b = _shape_bytes(upd.type_str) if upd else 0
+                    else:
+                        b = _shape_bytes(ins.type_str)
+                    contrib = m * 2.0 * b
+                else:
+                    b = _shape_bytes(ins.type_str)
+                    for op in ins.operands:
+                        src = comp.by_name.get(op)
+                        if src is not None and src.opcode != "constant":
+                            b += _shape_bytes(src.type_str)
+                    contrib = m * b
+                byts += contrib
+                if collect is not None and contrib > 0:
+                    collect.append((contrib, cname, ins.opcode,
+                                    ins.type_str[:80]))
+            # collectives
+            for kind in _COLLECTIVES:
+                if ins.opcode in (kind, kind + "-start"):
+                    coll[kind] += m * _shape_bytes(ins.type_str)
+                    break
+    return CostTotals(flops=flops, bytes=byts,
+                      collective_bytes=float(sum(coll.values())),
+                      collectives=coll, trip_counts=dict(trip_of_body))
+

@@ -1,0 +1,46 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — the pod
+axis extends FSDP/batch sharding across the (slower) inter-pod links;
+the model axis stays within a pod (ICI).
+
+A FUNCTION, not a module constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+from repro.models import MeshAxes
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_axes(mesh: Mesh) -> MeshAxes:
+    """MeshAxes (logical->physical mapping + sizes) for a mesh built by
+    make_production_mesh — or any mesh with a 'model' axis and one or two
+    batch axes."""
+    names = mesh.axis_names
+    fsdp = tuple(n for n in names if n != "model")
+    fsdp_size = 1
+    for n in fsdp:
+        fsdp_size *= mesh.shape[n]
+    return MeshAxes(fsdp=fsdp, tensor="model",
+                    tensor_size=mesh.shape.get("model", 1),
+                    fsdp_size=fsdp_size)
+
+
+def make_test_mesh(n_devices: int = 0) -> Mesh:
+    """Small mesh over whatever devices exist (unit tests)."""
+    n = n_devices or len(jax.devices())
+    model = 2 if n % 2 == 0 and n > 1 else 1
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

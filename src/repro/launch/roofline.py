@@ -1,0 +1,176 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per chip). The compiled module is the post-SPMD per-device program,
+so its FLOPs/bytes are per-chip numbers and the three terms are
+
+    t_comp = flops_per_chip / 197e12
+    t_mem  = bytes_per_chip / 819e9
+    t_coll = collective_bytes_per_chip / 50e9
+
+(equal to the global-numerator / (chips * rate) form in the assignment).
+
+``cost_analysis`` provides flops and bytes; collective bytes are parsed
+from the compiled HLO text: we sum the *result* buffer sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (the standard operand-bytes convention —
+for all-reduce result == operand; for all-gather the result is the
+gathered buffer actually moved through the links, up to the (P-1)/P ring
+factor which we fold into the documented ~50 GB/s effective rate).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes of the (per-device) module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        rhs = rhs.strip()
+        for kind in _COLLECTIVES:
+            # match the opcode at the start of the rhs expression, e.g.
+            #   %ag = bf16[...] all-gather(...)  -- opcode after the type
+            if re.search(rf"(^|\s){kind}(-start|-done)?\(", rhs):
+                # result type string sits between '=' and the opcode
+                type_part = rhs.split(kind)[0]
+                if kind + "-done(" in rhs:
+                    continue   # -done carries the same buffer as -start
+                out[kind] += _shape_bytes(type_part)
+                break
+    return out
+
+
+def roofline(compiled, model_flops: Optional[float] = None) -> Dict:
+    """Three-term roofline for one compiled (arch x shape x mesh) cell.
+
+    Uses the trip-count-aware HLO analyzer (hlo_cost.py): the stock
+    ``cost_analysis()`` counts while-loop bodies once, undercounting a
+    scan-over-layers program by the layer count (validated in
+    test_hlo_cost.py). cost_analysis values are kept as cross-checks.
+    """
+    from . import hlo_cost
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):           # older jax returns [dict]
+        ca = ca[0]
+    totals = hlo_cost.analyze(compiled.as_text())
+    flops = float(totals.flops)
+    byts = float(totals.bytes)
+    coll = {k: float(v) for k, v in totals.collectives.items()}
+    coll_total = float(totals.collective_bytes)
+    t_comp = flops / PEAK_FLOPS
+    t_mem = byts / HBM_BW
+    t_coll = coll_total / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    out = {
+        "flops_per_chip": flops,
+        "bytes_per_chip": byts,
+        "collective_bytes_per_chip": coll_total,
+        "collectives": coll,
+        "loop_trip_counts": totals.trip_counts,
+        "xla_cost_analysis_flops_per_iter": float(ca.get("flops", 0.0)),
+        "xla_cost_analysis_bytes_per_iter": float(
+            ca.get("bytes accessed", 0.0)),
+        "t_comp_s": t_comp,
+        "t_mem_s": t_mem,
+        "t_coll_s": t_coll,
+        "dominant": dominant,
+        "step_time_lb_s": bound,
+        # fraction of the roofline the dominant term allows assuming
+        # perfect overlap of the other two
+        "roofline_fraction": t_comp / bound if bound > 0 else 0.0,
+    }
+    if model_flops is not None:
+        out["model_flops_global"] = model_flops
+        out["useful_flops_ratio"] = (
+            model_flops / (flops * compiled_num_devices(compiled))
+            if flops else 0.0)
+    return out
+
+
+def compiled_num_devices(compiled) -> int:
+    try:
+        return compiled.input_shardings[0][0].mesh.size  # best effort
+    except Exception:
+        return 1
+
+
+def model_flops_train(cfg, batch: int, seq: int) -> float:
+    """6 * N_active * D tokens heuristic (dense) — the §Roofline
+    MODEL_FLOPS reference."""
+    n = active_params(cfg)
+    return 6.0 * n * batch * seq
+
+
+def model_flops_decode(cfg, batch: int) -> float:
+    n = active_params(cfg)
+    return 2.0 * n * batch
+
+
+def active_params(cfg) -> float:
+    """Parameter count that touches each token (MoE: top-k experts)."""
+    d, f, L, v = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab_size
+    if cfg.family == "ssm":
+        di, ns = cfg.d_inner, cfg.ssm_state
+        per_layer = d * 2 * di + di * cfg.ssm_conv \
+            + di * (cfg.dt_rank_ + 2 * ns) + cfg.dt_rank_ * di + di * d
+        return L * per_layer + 2 * v * d
+    hd = cfg.hd
+    attn = d * (cfg.n_heads * hd) + 2 * d * (cfg.n_kv_heads * hd) \
+        + (cfg.n_heads * hd) * d
+    if cfg.family == "moe":
+        ffn = 3 * d * f * cfg.experts_per_token
+        if cfg.moe_dense_residual:
+            ffn += 3 * d * f
+    else:
+        ffn = 3 * d * f
+    if cfg.family == "hybrid":
+        di, ns = cfg.d_inner, cfg.ssm_state
+        nh = di // cfg.ssm_head_dim
+        mamba_pl = d * (2 * di + 2 * ns + nh) + di * cfg.ssm_conv + di * d
+        n_groups = L // cfg.attn_every
+        return L * mamba_pl + n_groups * (attn + ffn) + 2 * v * d
+    per_layer = attn + ffn
+    total = L * per_layer
+    if cfg.family == "vlm":
+        n_groups = L // cfg.cross_attn_every
+        total += n_groups * (attn + ffn)
+    if cfg.family == "audio":
+        return total + 2 * cfg.n_codebooks * v * d
+    return total + 2 * v * d

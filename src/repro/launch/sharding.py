@@ -1,0 +1,166 @@
+"""Sharding assembly for the dry-run and the real drivers: abstract param
+/ optimizer / cache structures (jax.eval_shape — zero allocation) plus
+their NamedSharding trees.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import MeshAxes, ModelConfig, init_params
+from repro.models import kvcache as kvc
+from repro.models.mamba import init_mamba_state
+from repro.models.model import PrefillCaches, hybrid_groups, vlm_groups
+from repro.runtime.elastic import make_shardings
+from repro.train.optimizer import AdamWConfig, adamw_init
+
+
+def abstract_params(cfg: ModelConfig, axes: MeshAxes
+                    ) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct tree, PartitionSpec tree) without allocating.
+
+    The spec side of init_params is pure python (dims only), so we
+    capture it as a side effect of the abstract trace.
+    """
+    captured = []
+
+    def init_only(key):
+        p, s = init_params(key, cfg, axes)
+        captured.append(s)
+        return p
+
+    struct = jax.eval_shape(init_only, jax.random.PRNGKey(0))
+    return struct, captured[0]
+
+
+def abstract_opt_state(params_struct: Any, opt: AdamWConfig,
+                       param_spec: Any, axes: MeshAxes) -> Tuple[Any, Any]:
+    struct = jax.eval_shape(functools.partial(adamw_init, cfg=opt),
+                            params_struct)
+    if not opt.quant_bits:
+        spec = type(struct)(step=P(), m=param_spec, v=param_spec)
+        return struct, spec
+    # quantized moments: inherit the param sharding on the preserved
+    # leading axes (zero-resharding update chain); block axes replicated
+    from repro.train.optimizer import QMoment
+
+    def mspec(q: QMoment, pspec: P) -> QMoment:
+        n_lead = q.codes.ndim - 2
+        lead = tuple(pspec)[:n_lead] if pspec is not None else ()
+        lead = (lead + (None,) * n_lead)[:n_lead]
+        return QMoment(codes=P(*(lead + (None, None))),
+                       vmax=P(*(lead + (None,))),
+                       size=q.size, shape=q.shape)
+
+    def build(moments):
+        return jax.tree_util.tree_map(
+            mspec, moments, param_spec,
+            is_leaf=lambda x: isinstance(x, (QMoment, P)))
+
+    spec = type(struct)(step=P(), m=build(struct.m), v=build(struct.v))
+    return struct, spec
+
+
+def _kv_cache_struct(cfg: ModelConfig, n_layers: int, batch: int,
+                     max_seq: int, bits: int):
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    if bits > 0:
+        return jax.eval_shape(
+            functools.partial(kvc.init_saq, n_layers, batch, max_seq,
+                              hkv, hd, bits=bits))
+    return jax.eval_shape(
+        functools.partial(kvc.init_bf16, n_layers, batch, max_seq, hkv, hd))
+
+
+def _kv_cache_spec(cfg: ModelConfig, axes: MeshAxes, batch: int,
+                   max_seq: int, bits: int):
+    """Cache layout: batch over fsdp axes, SEQUENCE over the model axis
+    (context parallelism for decode: each model shard holds S/16 of the
+    cache; softmax reductions lower to the matching collectives)."""
+    bsp = axes.bp(batch)
+    ssp = axes.sp(max_seq)
+    big = P(None, bsp, ssp, None, None)
+    small = P(None, bsp, ssp, None)
+    if bits > 0:
+        return kvc.KVCacheSAQ(k_codes=big, k_vmax=small, k_rescale=small,
+                              v_codes=big, v_vmax=small, bits=bits)
+    return kvc.KVCacheBF16(k=big, v=big)
+
+
+def abstract_decode_caches(cfg: ModelConfig, axes: MeshAxes, batch: int,
+                           max_seq: int, kv_bits: int = 0
+                           ) -> Tuple[Any, Any]:
+    """(struct, spec) of PrefillCaches for a decode step."""
+    bsp = axes.bp(batch)
+    if cfg.family in ("dense", "moe", "audio"):
+        kv = _kv_cache_struct(cfg, cfg.n_layers, batch, max_seq, kv_bits)
+        kv_s = _kv_cache_spec(cfg, axes, batch, max_seq, kv_bits)
+        return (PrefillCaches(kv=kv),
+                PrefillCaches(kv=kv_s))
+    if cfg.family == "ssm":
+        st = jax.eval_shape(
+            lambda: jax.tree_util.tree_map(
+                lambda x: jnp.stack([x] * cfg.n_layers),
+                init_mamba_state(cfg, batch)))
+        di = cfg.d_inner
+        if cfg.mamba_version == 1:
+            h_spec = P(None, bsp, axes.tp(di), None)
+        else:
+            h_spec = P(None, bsp, axes.tp(di // cfg.ssm_head_dim),
+                       None, None)
+        st_spec = type(st)(h=h_spec, conv=P(None, bsp, None, axes.tp(di)))
+        return PrefillCaches(ssm=st), PrefillCaches(ssm=st_spec)
+    if cfg.family == "hybrid":
+        n_groups, g = hybrid_groups(cfg)
+        st = jax.eval_shape(
+            lambda: jax.tree_util.tree_map(
+                lambda x: jnp.stack([jnp.stack([x] * g)] * n_groups),
+                init_mamba_state(cfg, batch)))
+        di = cfg.d_inner
+        nh = di // cfg.ssm_head_dim
+        st_spec = type(st)(
+            h=P(None, None, bsp, axes.tp(nh), None, None),
+            conv=P(None, None, bsp, None, axes.tp(di)))
+        kv = _kv_cache_struct(cfg, n_groups, batch, max_seq, kv_bits)
+        kv_s = _kv_cache_spec(cfg, axes, batch, max_seq, kv_bits)
+        return (PrefillCaches(ssm=st, shared_kv=kv),
+                PrefillCaches(ssm=st_spec, shared_kv=kv_s))
+    if cfg.family == "vlm":
+        n_groups, g = vlm_groups(cfg)
+        kv = _kv_cache_struct(cfg, cfg.n_layers, batch, max_seq, kv_bits)
+        kv_s = _kv_cache_spec(cfg, axes, batch, max_seq, kv_bits)
+        ck = jax.ShapeDtypeStruct(
+            (n_groups, batch, cfg.n_img_tokens, cfg.n_kv_heads, cfg.hd),
+            jnp.bfloat16)
+        ck_s = P(None, axes.bp(batch), None,
+                 axes.tp(cfg.n_kv_heads) if cfg.attn_tp else None, None)
+        return (PrefillCaches(kv=kv, cross_kv=(ck, ck)),
+                PrefillCaches(kv=kv_s, cross_kv=(ck_s, ck_s)))
+    raise ValueError(cfg.family)
+
+
+def batch_specs(cfg: ModelConfig, axes: MeshAxes, kind: str, batch: int
+                ) -> Dict[str, P]:
+    bsp = axes.bp(batch)
+    out: Dict[str, P] = {}
+    if kind == "train":
+        tok = P(bsp, None, None) if cfg.family == "audio" else P(bsp, None)
+        out["tokens"] = tok
+        out["labels"] = tok
+    elif kind == "prefill":
+        out["tokens"] = (P(bsp, None, None) if cfg.family == "audio"
+                         else P(bsp, None))
+    elif kind == "decode":
+        out["token"] = (P(bsp, None) if cfg.family == "audio" else P(bsp))
+        out["pos"] = P()
+    if cfg.family == "vlm":
+        out["img_embeds"] = P(bsp, None, None)
+    return out
+
+
+def named(tree_spec: Any, mesh: Mesh, like: Any = None) -> Any:
+    return make_shardings(tree_spec, mesh, like=like)

@@ -1,0 +1,94 @@
+"""Training driver: config-selected arch, deterministic token pipeline,
+supervised loop (checkpoint/restart, straggler monitor), optional mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-20b \
+        --smoke --steps 50 --ckpt-dir /tmp/ckpt
+
+On the production fleet the same driver runs under the 16x16 / 2x16x16
+meshes (--mesh single|multi); on this container it runs the reduced
+configs on CPU. Resume is automatic: if the checkpoint dir has a step,
+training continues from it (the pipeline is step-keyed).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.data import TokenPipeline
+from repro.models import MeshAxes
+from repro.runtime import StragglerMonitor, Supervisor
+from repro.train import AdamWConfig, adamw_init, make_train_step
+from repro.models.model import init_params
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-20b", choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--opt-bits", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(
+        args.arch)
+    axes = MeshAxes()
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 20),
+                      total_steps=args.steps, quant_bits=args.opt_bits)
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         global_batch=args.batch, seed=args.seed)
+    params, _ = init_params(jax.random.PRNGKey(args.seed), cfg)
+    opt_state = adamw_init(params, opt)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"arch={cfg.arch_id} params={n_params/1e6:.1f}M "
+          f"steps={args.steps} batch={args.batch}x{args.seq}")
+
+    step_jit = jax.jit(make_train_step(cfg, opt, axes))
+
+    def step_fn(state, step):
+        params, opt_state = state
+        tokens, labels = pipe.global_batch_at(step)
+        if cfg.family == "audio":
+            k = cfg.n_codebooks
+            tokens = jnp.stack([tokens] * k, axis=-1)
+            labels = jnp.stack([labels] * k, axis=-1)
+        params, opt_state, metrics = step_jit(
+            params, opt_state, {"tokens": tokens, "labels": labels})
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+        return (params, opt_state), metrics
+
+    sup = Supervisor(step_fn=step_fn,
+                     ckpt=CheckpointManager(args.ckpt_dir, keep=3),
+                     ckpt_every=args.ckpt_every,
+                     straggler=StragglerMonitor())
+    t0 = time.time()
+    (params, opt_state), hist = sup.run((params, opt_state), args.steps)
+    dt = time.time() - t0
+    toks = args.steps * args.batch * args.seq
+    print(f"done: {args.steps} steps in {dt:.1f}s "
+          f"({toks/dt:.0f} tok/s); restarts={hist['restarts']}; "
+          f"stragglers={hist['stragglers']}")
+    if hist["loss"]:
+        print(f"loss {hist['loss'][0]:.4f} -> {hist['loss'][-1]:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,6 @@
+"""Model zoo: one config-driven implementation covering the 10 assigned
+architectures (dense / MoE / SSM / hybrid / VLM / audio families)."""
+from .common import MeshAxes, ModelConfig  # noqa: F401
+from .model import (PrefillCaches, decode_step, embed, forward,  # noqa: F401
+                    init_params, logits_fn)
+from . import kvcache  # noqa: F401

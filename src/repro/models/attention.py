@@ -1,0 +1,322 @@
+"""Attention: GQA/MQA/MHA with optional qk-norm and biases, RoPE,
+flash-style chunked softmax (pure JAX, online-softmax over kv chunks so a
+32k-token prefill never materializes an S x S score matrix), plus the
+single-token decode path over a (possibly SAQ-quantized) KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import (MeshAxes, ModelConfig, apply_rope, dense_init,
+                     init_rms, rms_norm, shard)
+
+
+def init_attention(key, cfg: ModelConfig, axes: MeshAxes,
+                   cross: bool = False) -> Tuple[Dict, Dict]:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    tq = axes.tp(h) if cfg.attn_tp else None
+    tkv = axes.tp(hkv) if cfg.attn_tp else None
+    ks = jax.random.split(key, 8)
+    params = {
+        "wq": dense_init(ks[0], (d, h, hd), cfg.dtype),
+        "wk": dense_init(ks[1], (d, hkv, hd), cfg.dtype),
+        "wv": dense_init(ks[2], (d, hkv, hd), cfg.dtype),
+        "wo": dense_init(ks[3], (h, hd, d), cfg.dtype, fan_in=h * hd),
+    }
+    spec = {
+        "wq": P(axes.fp(d), tq, None),
+        "wk": P(axes.fp(d), tkv, None),
+        "wv": P(axes.fp(d), tkv, None),
+        "wo": P(tq, None, axes.fp(d)),
+    }
+    if cfg.attn_bias:
+        params["bq"] = jnp.zeros((h, hd), cfg.dtype)
+        params["bk"] = jnp.zeros((hkv, hd), cfg.dtype)
+        params["bv"] = jnp.zeros((hkv, hd), cfg.dtype)
+        spec["bq"] = P(tq, None)
+        spec["bk"] = P(tkv, None)
+        spec["bv"] = P(tkv, None)
+    if cfg.qk_norm:
+        params["q_norm"] = init_rms(hd, cfg.dtype)
+        params["k_norm"] = init_rms(hd, cfg.dtype)
+        spec["q_norm"] = P(None)
+        spec["k_norm"] = P(None)
+    return params, spec
+
+
+def qkv(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+        positions: Optional[jnp.ndarray], rope: bool = True
+        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> q (B, S, H, hd), k/v (B, S, Hkv, hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.attn_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool, q_chunk: int, kv_chunk: int,
+                      q_offset: int = 0,
+                      axes: Optional[MeshAxes] = None,
+                      attn_tp: bool = True) -> jnp.ndarray:
+    """Online-softmax attention over a STATIC list of (q-chunk, kv-chunk)
+    block pairs.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, Hkv, hd); returns (B, Sq, H, hd).
+
+    Perf notes (EXPERIMENTS.md §Perf, command-r cell):
+    * causal masking enumerates ONLY the lower-triangular block pairs —
+      the scan-all-kv-blocks-per-q-chunk formulation computes (and reads/
+      writes) 2x the blocks, all masked to zero above the diagonal;
+    * the probability blocks (the dominant HBM stream at long S) are
+      cast to bf16 before the PV contraction, and the QK/PV dots take
+      bf16 operands with f32 accumulation (flash numerics);
+    * jax.checkpoint on the pair body keeps the backward at O(block)
+      memory (recompute, never save, the (Cq, Ckv) probabilities).
+    """
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / (hd ** 0.5)
+    orig_sq = sq
+    chunk = min(q_chunk, kv_chunk)
+    pad_q = -sq % chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        sq = sq + pad_q
+    pad_kv = -skv % chunk
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    skv_p = skv + pad_kv
+    nq, nkv = sq // chunk, skv_p // chunk
+
+    # Block layout: slice FIRST on the chunk axis, transpose only the
+    # small block inside the step — a global pre-transpose gets fused
+    # into the pair loop and re-reads the full tensor every step
+    # (EXPERIMENTS.md §Perf I10, arctic regression).
+    qc = q.reshape(b, nq, chunk, hkv, g, hd)
+    kc = k.reshape(b, nkv, chunk, hkv, hd)
+    vc = v.reshape(b, nkv, chunk, hkv, hd)
+
+    kv_valid = (jnp.arange(skv_p) < skv).reshape(nkv, chunk)
+
+    if not attn_tp:
+        # Indivisible head counts (arctic's 56 on a 16-way axis): the
+        # pair loop's cross-chunk carry indexing conflicts with the
+        # sharding XLA propagates from the SP residual, producing
+        # per-step gathers (§Perf I10). The rectangular form has no
+        # cross-chunk carry — it trades ~2x causal block waste for
+        # collective-free scans.
+        out = _attention_rect(qc, kc, vc, kv_valid, causal, q_offset,
+                              chunk, nq, nkv, b, hkv, g, hd, scale)
+        return out[:, :orig_sq].astype(q.dtype)
+
+    # static block-pair list: lower triangle for causal, dense otherwise
+    if causal and q_offset == 0 and sq == skv_p:
+        pairs = [(qi, ki) for qi in range(nq) for ki in range(qi + 1)]
+    else:
+        pairs = [(qi, ki) for qi in range(nq) for ki in range(nkv)]
+    pairs_arr = jnp.asarray(pairs, jnp.int32)
+
+    def pair_step(carry, pair):
+        m, l, acc = carry              # (B,H,nq,C) / (B,H,nq,C,hd)
+        qi, ki = pair[0], pair[1]
+        qblk = jax.lax.dynamic_index_in_dim(qc, qi, axis=1,
+                                            keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kc, ki, axis=1,
+                                            keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vc, ki, axis=1,
+                                            keepdims=False)
+        # qblk: (B, C, hkv, g, hd); kblk/vblk: (B, C, hkv, hd)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk.astype(jnp.bfloat16),
+                       kblk.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32) * scale
+        mask = jax.lax.dynamic_index_in_dim(
+            kv_valid, ki, axis=0, keepdims=False)[None, None, None, None]
+        if causal:
+            q_pos = q_offset + qi * chunk + jnp.arange(chunk)
+            kv_pos = ki * chunk + jnp.arange(chunk)
+            mask = mask & (kv_pos[None, None, None, None, :]
+                           <= q_pos[None, None, None, :, None])
+        s = jnp.where(mask, s, -jnp.inf)
+        m_prev = jax.lax.dynamic_index_in_dim(
+            m, qi, axis=2, keepdims=False).reshape(b, hkv, g, chunk)
+        l_prev = jax.lax.dynamic_index_in_dim(
+            l, qi, axis=2, keepdims=False).reshape(b, hkv, g, chunk)
+        a_prev = jax.lax.dynamic_index_in_dim(
+            acc, qi, axis=2, keepdims=False).reshape(b, hkv, g, chunk, hd)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev),
+                         jnp.exp(m_prev - m_safe), 0.0)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(jnp.bfloat16),
+                        vblk.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+        a_new = a_prev * corr[..., None] + pv
+        m = jax.lax.dynamic_update_index_in_dim(
+            m, m_new.reshape(b, h, chunk), qi, axis=2)
+        l = jax.lax.dynamic_update_index_in_dim(
+            l, l_new.reshape(b, h, chunk), qi, axis=2)
+        acc = jax.lax.dynamic_update_index_in_dim(
+            acc, a_new.reshape(b, h, chunk, hd), qi, axis=2)
+        return (m, l, acc), None
+
+    init = (jnp.full((b, h, nq, chunk), -jnp.inf),
+            jnp.zeros((b, h, nq, chunk)),
+            jnp.zeros((b, h, nq, chunk, hd)))
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(pair_step), init,
+                                  pairs_arr)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (B, H(=hkv*g), nq, C, hd) -> (B, S, H, hd)
+    out = out.transpose(0, 2, 3, 1, 4).reshape(b, sq, h, hd)
+    return out[:, :orig_sq].astype(q.dtype)
+
+
+def attention_block(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                    positions: jnp.ndarray, axes: MeshAxes,
+                    causal: bool = True,
+                    kv_override: Optional[Tuple] = None) -> jnp.ndarray:
+    """Full attention sub-block: qkv -> chunked attn -> out proj.
+
+    kv_override: (k, v, kv_positions) for cross-attention (keys/values come
+    from another stream, e.g. image tokens).
+    """
+    if kv_override is None:
+        q, k, v = qkv(params, cfg, x, positions)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+        if cfg.attn_bias:
+            q = q + params["bq"]
+        if cfg.qk_norm:
+            q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k, v = kv_override[0], kv_override[1]
+    tq = axes.tp(q.shape[2]) if cfg.attn_tp else None
+    q = shard(q, P(axes.batch, None, tq, None))
+    k = shard(k, P(axes.batch, None, None, None))
+    out = chunked_attention(q, k, v, causal=causal,
+                            q_chunk=cfg.attn_q_chunk,
+                            kv_chunk=cfg.attn_kv_chunk,
+                            axes=axes, attn_tp=cfg.attn_tp)
+    out = shard(out, P(axes.batch, None, tq, None))
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def cross_kv(params: Dict, cfg: ModelConfig, ctx: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """K/V projections of a context stream (no RoPE — image tokens)."""
+    k = jnp.einsum("bsd,dhk->bshk", ctx, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", ctx, params["wv"])
+    if cfg.attn_bias:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, H, hd); caches: (B, Smax, Hkv, hd); pos: () current length.
+
+    Attends over cache[0:pos] (mask), full-cache read — the honest decode
+    memory cost. Returns (B, H, hd).
+    """
+    b, h, hd = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / (hd ** 0.5)
+    valid = (jnp.arange(k_cache.shape[1]) <= pos)[None, None, None, :]
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def _attention_rect(qc, kc, vc, kv_valid, causal, q_offset, chunk, nq,
+                    nkv, b, hkv, g, hd, scale):
+    """q-chunk outer scan x kv-chunk inner scan; per-q-chunk carry only
+    (no dynamic carry indexing — safe under any sharding). bf16
+    probability blocks, f32 accumulation.
+
+    Blocks are pre-transposed to the einsum-native layout OUTSIDE the
+    loops (one materialized copy) — per-step transposes of unsharded
+    blocks re-copy the full tensors every iteration."""
+    # (B, Hkv, G, nq, C, hd) / (B, Hkv, nkv, C, hd)
+    qt = qc.transpose(0, 3, 4, 1, 2, 5).astype(jnp.bfloat16)
+    kt = kc.transpose(0, 3, 1, 2, 4).astype(jnp.bfloat16)
+    vt = vc.transpose(0, 3, 1, 2, 4).astype(jnp.bfloat16)
+
+    def q_step(_, qi):
+        qblk = jax.lax.dynamic_index_in_dim(qt, qi, axis=3,
+                                            keepdims=False)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_index_in_dim(kt, ki, axis=2,
+                                                keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vt, ki, axis=2,
+                                                keepdims=False)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jax.lax.dynamic_index_in_dim(
+                kv_valid, ki, axis=0,
+                keepdims=False)[None, None, None, None]
+            if causal:
+                q_pos = q_offset + qi * chunk + jnp.arange(chunk)
+                kv_pos = ki * chunk + jnp.arange(chunk)
+                mask = mask & (kv_pos[None, None, None, None, :]
+                               <= q_pos[None, None, None, :, None])
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bhkd->bhgqd",
+                            p.astype(jnp.bfloat16), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, hkv, g, chunk), -jnp.inf),
+                jnp.zeros((b, hkv, g, chunk)),
+                jnp.zeros((b, hkv, g, chunk, hd)))
+        # checkpoint the inner body as well: without it the kv scan
+        # stacks every probability block as a backward residual
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), init,
+                                      jnp.arange(nkv))
+        return None, acc / jnp.maximum(l, 1e-30)[..., None]
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None, jnp.arange(nq))
+    # (nq, B, hkv, g, C, hd) -> (B, S, H, hd)
+    sq = nq * chunk
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, hkv * g, hd)

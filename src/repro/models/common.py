@@ -1,0 +1,207 @@
+"""Shared model components: config, norms, RoPE, initializers, sharding
+axes. Pure-functional (params are nested dicts of jnp arrays); no
+framework dependency. Every module has an ``init_*`` returning (params,
+spec) where spec mirrors params with jax.sharding.PartitionSpec leaves —
+the single source of truth for FSDP/TP/EP placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config covers all 10 assigned architectures (family switches)."""
+
+    arch_id: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 => d_model // n_heads
+    qk_norm: bool = False
+    attn_bias: bool = False     # qwen1.5-style qkv bias
+    attn_tp: bool = True        # False: replicate attention heads (e.g.
+                                # arctic's 56 heads on a 16-way axis)
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_dense_residual: bool = False
+    capacity_factor: float = 1.25
+    # --- SSM (mamba) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    mamba_version: int = 1
+    dt_rank: int = 0            # 0 => ceil(d_model / 16)
+    ssm_head_dim: int = 64      # mamba2 heads
+    attn_every: int = 0         # hybrid: shared attn after every k ssm layers
+    # --- VLM ---
+    cross_attn_every: int = 0   # cross-attn layer after every k self layers
+    n_img_tokens: int = 0
+    # --- audio ---
+    n_codebooks: int = 0
+    # --- numerics ---
+    dtype: Any = jnp.bfloat16
+    # --- runtime (not architecture) ---
+    remat: bool = True
+    attn_q_chunk: int = 512
+    attn_kv_chunk: int = 1024
+    ssm_chunk: int = 128
+    loss_vocab_chunk: int = 0   # 0 => no seq chunking in the loss
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode: SSM state instead of a full-attention KV
+        cache over the whole context."""
+        return self.family in ("ssm", "hybrid")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical->physical axis mapping. ``fsdp`` may be a tuple of mesh axes
+    (('pod','data') on the multi-pod mesh). ``tensor_size`` is the size of
+    the tensor axis on the target mesh — spec builders use it to fall back
+    to replication for dims that don't divide (e.g. 8 KV heads on a
+    16-way model axis)."""
+
+    fsdp: Tuple[str, ...] = ("data",)
+    tensor: str = "model"
+    tensor_size: int = 1
+    fsdp_size: int = 1
+    # Serving mode: drop the FSDP factor on PARAMS ONLY (batch stays
+    # data-sharded). Decode steps otherwise all-gather every layer's
+    # weights per token — the dominant decode collective.
+    shard_params_fsdp: bool = True
+    # Sequence parallelism for the residual stream. Off => rely on
+    # microbatching for activation memory; no SP boundary collectives.
+    seq_shard: bool = True
+
+    @property
+    def batch(self) -> Tuple[str, ...]:
+        return self.fsdp          # batch is sharded over the same axes
+
+    def tp(self, dim: int) -> Optional[str]:
+        """tensor axis if ``dim`` divides it, else None (replicate)."""
+        if self.tensor_size <= 1 or dim % self.tensor_size == 0:
+            return self.tensor
+        return None
+
+    def fp(self, dim: int):
+        """fsdp axes if ``dim`` divides their product, else None."""
+        if not self.shard_params_fsdp:
+            return None
+        if self.fsdp_size <= 1 or dim % self.fsdp_size == 0:
+            return self.fsdp
+        return None
+
+    def bp(self, dim: int):
+        """batch axes if the global batch divides them, else None
+        (e.g. the batch=1 long-context decode)."""
+        if self.fsdp_size <= 1 or dim % self.fsdp_size == 0:
+            return self.fsdp
+        return None
+
+    def sp(self, dim: int) -> Optional[str]:
+        """Sequence-parallel axis for the residual stream (Megatron-SP:
+        activations seq-sharded on the tensor axis *between* blocks,
+        gathered within). None when the seq dim doesn't divide."""
+        if not self.seq_shard:
+            return None
+        if self.tensor_size <= 1 or dim % self.tensor_size != 0:
+            return None
+        return self.tensor
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan_in = fan_in or shape[0]
+    scale = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dt)
+
+
+def init_rms(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                     # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+def shard(x: jnp.ndarray, spec: P) -> jnp.ndarray:
+    """Activation sharding hint; inert off-mesh (e.g. unit tests)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def tree_spec(params: Dict, spec: Dict):
+    """Sanity: spec tree must mirror the param tree."""
+    jax.tree_util.tree_map(lambda a, b: None, params, spec)
+    return spec

@@ -1,0 +1,202 @@
+"""KV caches for decode: bf16 reference and SAQ-quantized (the paper's
+technique as a first-class serving feature).
+
+Quantized layout (per layer slice): K and V are CAQ-coded per (token,
+head) vector of length head_dim — one segment, per-vector symmetric grid,
+``bits`` bits (default 8 = 2x HBM saving vs bf16; 4 = 4x). Attention
+scores are computed *in the integer code domain* with the paper's
+estimator (Eq 13 + Eq 5):
+
+    <k, q> ~= rescale * (delta <c_k, q> + q_sum (delta/2 - vmax))
+
+and the value read-back uses the same affine identity, so the cache is
+never densified. Encoding uses the Jacobi variant of code adjustment
+(parallel over the 128 dims — right shape for one-token appends).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.caq import adjust_jacobi
+from repro.core.lvq import lvq_symmetric_init
+
+
+class KVCacheBF16(NamedTuple):
+    """Per-layer-stacked dense cache. k/v: (L, B, S, Hkv, hd) bf16."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class KVCacheSAQ:
+    """Per-layer-stacked quantized cache.
+
+    codes: (L, B, S, Hkv, hd) uint8 for bits=8; bits=4 codes are PACKED
+    two-per-byte -> (L, B, S, Hkv, hd/2) (half the cache HBM of q8).
+    k_vmax/k_rescale/v_vmax: (L, B, S, Hkv) f32
+    ``bits`` is static pytree aux data (jit-safe branch selector).
+    """
+    k_codes: jnp.ndarray
+    k_vmax: jnp.ndarray
+    k_rescale: jnp.ndarray
+    v_codes: jnp.ndarray
+    v_vmax: jnp.ndarray
+    bits: int
+
+
+jax.tree_util.register_pytree_node(
+    KVCacheSAQ,
+    lambda c: ((c.k_codes, c.k_vmax, c.k_rescale, c.v_codes, c.v_vmax),
+               (c.bits,)),
+    lambda aux, ch: KVCacheSAQ(*ch, bits=aux[0]))
+
+
+KVCache = Union[KVCacheBF16, KVCacheSAQ]
+
+
+def init_bf16(n_layers: int, batch: int, max_seq: int, n_kv: int, hd: int
+              ) -> KVCacheBF16:
+    shape = (n_layers, batch, max_seq, n_kv, hd)
+    return KVCacheBF16(k=jnp.zeros(shape, jnp.bfloat16),
+                       v=jnp.zeros(shape, jnp.bfloat16))
+
+
+def pack_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """bits=4: pack pairs of codes along the last axis into one byte."""
+    if bits != 4:
+        return codes
+    lo = codes[..., 0::2]
+    hi = codes[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_codes(packed: jnp.ndarray, bits: int) -> jnp.ndarray:
+    if bits != 4:
+        return packed
+    lo = packed & 0xF
+    hi = packed >> 4
+    return jnp.stack([lo, hi], axis=-1).reshape(
+        packed.shape[:-1] + (packed.shape[-1] * 2,))
+
+
+def init_saq(n_layers: int, batch: int, max_seq: int, n_kv: int, hd: int,
+             bits: int = 8) -> KVCacheSAQ:
+    hd_stored = hd // 2 if bits == 4 else hd
+    shape = (n_layers, batch, max_seq, n_kv, hd_stored)
+    fshape = (n_layers, batch, max_seq, n_kv)
+    return KVCacheSAQ(
+        k_codes=jnp.zeros(shape, jnp.uint8),
+        k_vmax=jnp.ones(fshape, jnp.float32),
+        k_rescale=jnp.zeros(fshape, jnp.float32),
+        v_codes=jnp.zeros(shape, jnp.uint8),
+        v_vmax=jnp.ones(fshape, jnp.float32),
+        bits=bits)
+
+
+# ---------------------------------------------------------------------------
+# Encoding one token's K/V (B, Hkv, hd)
+# ---------------------------------------------------------------------------
+
+def _encode_rows(x: jnp.ndarray, bits: int, rounds: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(..., D) vectors -> (codes u8, vmax, rescale) with the same
+    leading dims (sharding-preserving: no flatten/reshape)."""
+    x = x.astype(jnp.float32)
+    init = lvq_symmetric_init(x, bits)
+    codes, vmax = init.codes, init.vmax
+    if rounds > 0:
+        codes = adjust_jacobi(x, codes, vmax, bits, rounds)
+    delta = (2.0 * vmax) / (1 << bits)
+    xbar = delta[..., None] * (codes.astype(jnp.float32) + 0.5) \
+        - vmax[..., None]
+    ip = jnp.sum(xbar * x, axis=-1)
+    nrm = jnp.sum(x * x, axis=-1)
+    rescale = jnp.where(jnp.abs(ip) > 1e-30, nrm / jnp.where(
+        jnp.abs(ip) > 1e-30, ip, 1.0), 0.0)
+    return codes.astype(jnp.uint8), vmax, rescale
+
+
+def quantize_kv(k_t: jnp.ndarray, v_t: jnp.ndarray, bits: int,
+                rounds: int = 2):
+    """k_t/v_t: (..., Hkv, hd) K/V vectors -> quantized pieces (leading
+    dims preserved — works for one decode token or a whole prefill)."""
+    kc, kv_, kr = _encode_rows(k_t, bits, rounds)
+    vc, vv, _ = _encode_rows(v_t, bits, rounds)
+    return kc, kv_, kr, vc, vv
+
+
+# ---------------------------------------------------------------------------
+# Per-layer append + attend (used inside the decode layer scan)
+# ---------------------------------------------------------------------------
+
+def _upd(buf, val, pos):
+    """dynamic_update_slice at sequence position ``pos`` (axis 1)."""
+    val = val[:, None].astype(buf.dtype)
+    idx = (jnp.zeros((), jnp.int32),) * 0
+    return jax.lax.dynamic_update_slice_in_dim(buf, val, pos, axis=1)
+
+
+def append_bf16(slice_kv: Tuple[jnp.ndarray, jnp.ndarray], k_t, v_t, pos):
+    k_buf, v_buf = slice_kv
+    return _upd(k_buf, k_t, pos), _upd(v_buf, v_t, pos)
+
+
+def attend_bf16(q: jnp.ndarray, k_buf: jnp.ndarray, v_buf: jnp.ndarray,
+                pos) -> jnp.ndarray:
+    """q: (B, H, hd); bufs: (B, S, Hkv, hd). Masked full-cache attention."""
+    from .attention import decode_attention
+    return decode_attention(q, k_buf, v_buf, pos)
+
+
+def append_saq(slice_kv, k_t, v_t, pos, bits: int, rounds: int = 2):
+    """slice_kv: per-layer (k_codes, k_vmax, k_rescale, v_codes, v_vmax)
+    with shapes (B, S, Hkv, hd[/2 packed]) / (B, S, Hkv)."""
+    kc_b, kvm_b, krs_b, vc_b, vvm_b = slice_kv
+    kc, kvm, krs, vc, vvm = quantize_kv(k_t, v_t, bits, rounds)
+    kc, vc = pack_codes(kc, bits), pack_codes(vc, bits)
+    return (_upd(kc_b, kc, pos), _upd(kvm_b, kvm, pos),
+            _upd(krs_b, krs, pos), _upd(vc_b, vc, pos), _upd(vvm_b, vvm, pos))
+
+
+def attend_saq(q: jnp.ndarray, slice_kv, pos, bits: int) -> jnp.ndarray:
+    """Integer-domain attention over the quantized cache.
+
+    q: (B, H, hd); codes: (B, S, Hkv, hd) u8. Logits use the Eq 13/5
+    estimator of <k_t, q>; values are reconstructed through the same
+    affine identity inside the weighted sum (never densified to bf16).
+    """
+    kc, kvm, krs, vc, vvm = slice_kv
+    kc = unpack_codes(kc, bits)
+    vc = unpack_codes(vc, bits)
+    b, s, hkv, hd = kc.shape
+    h = q.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    q_sum = jnp.sum(qg, axis=-1)                              # (B, Hkv, G)
+    delta_k = (2.0 * kvm) / (1 << bits)                       # (B, S, Hkv)
+    ip_cq = jnp.einsum("bhgd,bshd->bhgs", qg,
+                       kc.astype(jnp.float32))
+    ip_kq = delta_k.transpose(0, 2, 1)[:, :, None, :] * ip_cq \
+        + q_sum[..., None] * (0.5 * delta_k - kvm).transpose(
+            0, 2, 1)[:, :, None, :]
+    logits = ip_kq * krs.transpose(0, 2, 1)[:, :, None, :] / (hd ** 0.5)
+    valid = (jnp.arange(s) <= pos)[None, None, None, :]
+    logits = jnp.where(valid, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)                       # (B,Hkv,G,S)
+    # values: v_t = delta_v (c + 0.5) - vmax  =>
+    # sum_t p_t v_t = (p*delta_v) @ c + sum_t p_t (0.5 delta_v - vmax)
+    delta_v = ((2.0 * vvm) / (1 << bits)).transpose(0, 2, 1)  # (B,Hkv,S)
+    vvm_t = vvm.transpose(0, 2, 1)
+    pw = p * delta_v[:, :, None, :]
+    out = jnp.einsum("bhgs,bshd->bhgd", pw, vc.astype(jnp.float32))
+    corr = jnp.sum(p * (0.5 * delta_v - vvm_t)[:, :, None, :],
+                   axis=-1)                                   # (B,Hkv,G)
+    out = out + corr[..., None]
+    return out.reshape(b, h, hd).astype(q.dtype)

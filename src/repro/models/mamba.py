@@ -1,0 +1,376 @@
+"""Mamba blocks: Mamba1 (falcon-mamba, per-channel diagonal A) and Mamba2
+(zamba2, scalar-per-head A) with TPU-friendly scans.
+
+* Mamba1 — chunked selective scan: lax.scan over S/Q chunks carrying the
+  (B, d_inner, n) state; within a chunk, jax.lax.associative_scan on the
+  (B, Q, d, n) transition pairs. All decay factors are exp(dt*A) in (0,1]
+  — no exploding terms (the e^{-L} pitfall of the naive prefix form).
+* Mamba2 — SSD block decomposition (scalar A makes the (Q, Q) intra-chunk
+  form cheap): intra-chunk attention-like term + inter-chunk state carry.
+* Decode — O(1) per token: one state update, no history.
+
+TP: d_inner (or heads) sharded over the tensor axis; in_proj column-
+parallel, out_proj row-parallel — the Megatron pattern applied to SSM.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import MeshAxes, ModelConfig, dense_init, shard
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig, axes: MeshAxes) -> Tuple[Dict, Dict]:
+    d, di, n, ck = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    if cfg.mamba_version == 1:
+        dtr = cfg.dt_rank_
+        params = {
+            "in_proj": dense_init(ks[0], (d, 2 * di), cfg.dtype),
+            "conv_w": dense_init(ks[1], (ck, di), cfg.dtype, fan_in=ck),
+            "conv_b": jnp.zeros((di,), cfg.dtype),
+            "x_proj": dense_init(ks[2], (di, dtr + 2 * n), cfg.dtype),
+            "dt_w": dense_init(ks[3], (dtr, di), cfg.dtype),
+            "dt_b": jnp.full((di,), -4.6, jnp.float32),  # softplus ~ 0.01
+            "a_log": jnp.log(jnp.tile(
+                jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))),
+            "d_skip": jnp.ones((di,), jnp.float32),
+            "out_proj": dense_init(ks[4], (di, d), cfg.dtype, fan_in=di),
+        }
+        spec = {
+            "in_proj": P(axes.fp(d), axes.tp(2 * di)),
+            "conv_w": P(None, axes.tp(di)),
+            "conv_b": P(axes.tp(di)),
+            "x_proj": P(axes.tp(di), None),
+            "dt_w": P(None, axes.tp(di)),
+            "dt_b": P(axes.tp(di)),
+            "a_log": P(axes.tp(di), None),
+            "d_skip": P(axes.tp(di)),
+            "out_proj": P(axes.tp(di), axes.fp(d)),
+        }
+    else:  # mamba2
+        nh = di // cfg.ssm_head_dim
+        params = {
+            # [z(di) | x(di) | B(n) | C(n) | dt(nh)]
+            "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + nh),
+                                  cfg.dtype),
+            "conv_w": dense_init(ks[1], (ck, di), cfg.dtype, fan_in=ck),
+            "conv_b": jnp.zeros((di,), cfg.dtype),
+            "dt_b": jnp.zeros((nh,), jnp.float32),
+            "a_log": jnp.zeros((nh,), jnp.float32),
+            "d_skip": jnp.ones((nh,), jnp.float32),
+            "norm_w": jnp.ones((di,), cfg.dtype),
+            "out_proj": dense_init(ks[4], (di, d), cfg.dtype, fan_in=di),
+        }
+        spec = {
+            "in_proj": P(axes.fp(d), None),
+            "conv_w": P(None, axes.tp(di)),
+            "conv_b": P(axes.tp(di)),
+            "dt_b": P(axes.tp(nh)),
+            "a_log": P(axes.tp(nh)),
+            "d_skip": P(axes.tp(nh)),
+            "norm_w": P(axes.tp(di)),
+            "out_proj": P(axes.tp(di), axes.fp(d)),
+        }
+    return params, spec
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                ) -> jnp.ndarray:
+    """x: (B, S, C); w: (K, C) depthwise; left-padded causal."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :]
+
+
+def causal_conv_step(x_t: jnp.ndarray, buf: jnp.ndarray, w: jnp.ndarray,
+                     b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step. x_t: (B, C); buf: (B, K-1, C) past inputs."""
+    window = jnp.concatenate([buf, x_t[:, None, :]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b[None, :]
+    return out, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 selective scan (chunked associative scan)
+# ---------------------------------------------------------------------------
+
+def selective_scan(u: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                   bc: jnp.ndarray, cc: jnp.ndarray, d_skip: jnp.ndarray,
+                   chunk: int, h0: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = exp(dt_t a) h_{t-1} + dt_t u_t B_t ;  y_t = <h_t, C_t> + D u_t
+
+    u, dt: (B, S, d); a: (d, n) (negative); bc, cc: (B, S, n).
+    Returns (y (B, S, d), h_final (B, d, n)).
+    """
+    b, s, d = u.shape
+    n = a.shape[-1]
+    pad = -s % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bc = jnp.pad(bc, ((0, 0), (0, pad), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    uc = u.reshape(b, nc, chunk, d)
+    dtc = dt.reshape(b, nc, chunk, d)
+    bcc = bc.reshape(b, nc, chunk, n)
+    ccc = cc.reshape(b, nc, chunk, n)
+    if h0 is None:
+        h0 = jnp.zeros((b, d, n), jnp.float32)
+
+    def chunk_step(h, ci):
+        du = (dtc[:, ci] * uc[:, ci]).astype(jnp.float32)     # (B, Q, d)
+        decay = jnp.exp(dtc[:, ci].astype(jnp.float32)[..., None]
+                        * a[None, None])                      # (B, Q, d, n)
+        drive = du[..., None] * bcc[:, ci].astype(
+            jnp.float32)[:, :, None, :]                       # (B, Q, d, n)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        pa, pb = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+        h_all = pa * h[:, None] + pb                          # (B, Q, d, n)
+        y = jnp.einsum("bqdn,bqn->bqd", h_all,
+                       ccc[:, ci].astype(jnp.float32))
+        y = y + d_skip[None, None, :] * uc[:, ci].astype(jnp.float32)
+        return h_all[:, -1], y
+
+    h_fin, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                             jnp.arange(nc))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s + pad, d)[:, :s]
+    return y, h_fin
+
+
+def selective_scan_step(h: jnp.ndarray, u_t: jnp.ndarray, dt_t: jnp.ndarray,
+                        a: jnp.ndarray, b_t: jnp.ndarray, c_t: jnp.ndarray,
+                        d_skip: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step. h: (B, d, n); u_t/dt_t: (B, d); b_t/c_t: (B, n)."""
+    decay = jnp.exp(dt_t.astype(jnp.float32)[..., None] * a[None])
+    h = decay * h + (dt_t * u_t).astype(
+        jnp.float32)[..., None] * b_t[:, None, :].astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32)) \
+        + d_skip[None, :] * u_t.astype(jnp.float32)
+    return h, y
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD scan (scalar A per head)
+# ---------------------------------------------------------------------------
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+             bc: jnp.ndarray, cc: jnp.ndarray, d_skip: jnp.ndarray,
+             chunk: int, h0: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mamba2 state-space dual form.
+
+    x: (B, S, nh, dh); dt: (B, S, nh); a: (nh,) negative; bc, cc: (B, S, n).
+    h: (B, nh, dh, n). Returns (y (B, S, nh, dh), h_final).
+    """
+    b, s, nh, dh = x.shape
+    n = bc.shape[-1]
+    pad = -s % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bc = jnp.pad(bc, ((0, 0), (0, pad), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    xc = x.reshape(b, nc, chunk, nh, dh)
+    dtc = dt.reshape(b, nc, chunk, nh).astype(jnp.float32)
+    bcc = bc.reshape(b, nc, chunk, n).astype(jnp.float32)
+    ccc = cc.reshape(b, nc, chunk, n).astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, dh, n), jnp.float32)
+
+    def chunk_step(h, ci):
+        dtq = dtc[:, ci]                                  # (B, Q, nh)
+        lq = jnp.cumsum(dtq * a[None, None, :], axis=1)   # log decay prefix
+        xq = xc[:, ci].astype(jnp.float32)                # (B, Q, nh, dh)
+        bq, cq = bcc[:, ci], ccc[:, ci]                   # (B, Q, n)
+        # intra-chunk: y_t += sum_{s<=t} C_t.B_s e^{L_t - L_s} dt_s x_s
+        # The (Q, Q) tensors dominate HBM traffic for this cell
+        # (EXPERIMENTS.md §Perf): decay weights are computed in f32 for
+        # exp-range safety, then the quadratic operands are cast to bf16
+        # and contracted with f32 accumulation (flash-style precision).
+        rel = lq[:, :, None, :] - lq[:, None, :, :]       # (B, Q, Q, nh)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)
+        cb = jnp.einsum("bqn,bsn->bqs", cq, bq)           # (B, Q, Q)
+        att = (cb[..., None] * w).astype(jnp.bfloat16)    # (B, Q, Q, nh)
+        xdt = (dtq[..., None] * xq).astype(jnp.bfloat16)  # (B, Q, nh, dh)
+        y_in = jnp.einsum("bqsh,bshd->bqhd", att, xdt,
+                          preferred_element_type=jnp.float32)
+        # inter-chunk: contribution of the carried state
+        y_h = jnp.einsum("bqn,bhdn,bqh->bqhd", cq, h, jnp.exp(lq))
+        # state update: h' = e^{L_Q} h + sum_s e^{L_Q - L_s} dt_s x_s B_s
+        tail = jnp.exp(lq[:, -1][:, None, :] - lq)        # (B, Q, nh)
+        xtail = (tail[..., None] * dtq[..., None] * xq).astype(
+            jnp.bfloat16)
+        h_new = jnp.exp(lq[:, -1])[:, :, None, None] * h + jnp.einsum(
+            "bshd,bsn->bhdn", xtail, bq.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32)
+        y = y_in + y_h + d_skip[None, None, :, None] * xq
+        return h_new, y
+
+    h_fin, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                             jnp.arange(nc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s + pad, nh, dh)[:, :s]
+    return y, h_fin
+
+
+def ssd_step(h: jnp.ndarray, x_t: jnp.ndarray, dt_t: jnp.ndarray,
+             a: jnp.ndarray, b_t: jnp.ndarray, c_t: jnp.ndarray,
+             d_skip: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode step. h: (B, nh, dh, n); x_t: (B, nh, dh); dt_t: (B, nh)."""
+    dt_t = dt_t.astype(jnp.float32)
+    decay = jnp.exp(dt_t * a[None, :])                    # (B, nh)
+    h = decay[..., None, None] * h + jnp.einsum(
+        "bh,bhd,bn->bhdn", dt_t, x_t.astype(jnp.float32),
+        b_t.astype(jnp.float32))
+    y = jnp.einsum("bhdn,bn->bhd", h, c_t.astype(jnp.float32)) \
+        + d_skip[None, :, None] * x_t.astype(jnp.float32)
+    return h, y
+
+
+# ---------------------------------------------------------------------------
+# Full blocks
+# ---------------------------------------------------------------------------
+
+class MambaState(NamedTuple):
+    h: jnp.ndarray        # (B, d, n) or (B, nh, dh, n)
+    conv: jnp.ndarray     # (B, K-1, d_inner)
+
+
+def mamba_inputs(params: Dict, cfg: ModelConfig, x: jnp.ndarray):
+    """Shared in-proj/split logic for scan and step paths. x: (B, S, D)."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    proj = x @ params["in_proj"]
+    if cfg.mamba_version == 1:
+        xi, z = jnp.split(proj, [di], axis=-1)
+        return xi, z, None, None, None
+    nh = di // cfg.ssm_head_dim
+    z = proj[..., :di]
+    xi = proj[..., di:2 * di]
+    bct = proj[..., 2 * di:2 * di + n]
+    cct = proj[..., 2 * di + n:2 * di + 2 * n]
+    dtt = proj[..., 2 * di + 2 * n:]
+    return xi, z, bct, cct, dtt
+
+
+def mamba_block(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                state: Optional[MambaState] = None,
+                axes: Optional[MeshAxes] = None
+                ) -> Tuple[jnp.ndarray, Optional[MambaState]]:
+    """Sequence form. x: (B, S, D) -> (B, S, D); optional initial state
+    (prefill continuation) and final state out."""
+    b, s, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xi, z, bct, cct, dtt = mamba_inputs(params, cfg, x)
+
+    def sh(t, dim_axis=-1):
+        # batch over fsdp, d_inner (or heads) over tensor
+        if axes is None:
+            return t
+        spec = [None] * t.ndim
+        spec[0] = axes.bp(t.shape[0])
+        spec[dim_axis] = axes.tp(t.shape[dim_axis])
+        return shard(t, P(*spec))
+
+    xi, z = sh(xi), sh(z)
+    h0 = state.h if state is not None else None
+    u = jax.nn.silu(causal_conv(xi, params["conv_w"], params["conv_b"]))
+    u = sh(u)
+    if cfg.mamba_version == 1:
+        dtr = cfg.dt_rank_
+        xp = u @ params["x_proj"]
+        dt = jax.nn.softplus(xp[..., :dtr] @ params["dt_w"]
+                             + params["dt_b"])
+        bct = xp[..., dtr:dtr + n]
+        cct = xp[..., dtr + n:]
+        a = -jnp.exp(params["a_log"])
+        dt = sh(dt)
+        y, h_fin = selective_scan(u, dt, a, bct, cct, params["d_skip"],
+                                  cfg.ssm_chunk, h0)
+        y = sh(y)
+    else:
+        nh = di // cfg.ssm_head_dim
+        dt = jax.nn.softplus(dtt.astype(jnp.float32) + params["dt_b"])
+        a = -jnp.exp(params["a_log"])
+        xh = u.reshape(b, s, nh, cfg.ssm_head_dim)
+        xh = sh(xh, dim_axis=2)
+        dt = sh(dt)
+        y, h_fin = ssd_scan(xh, dt, a, bct, cct, params["d_skip"],
+                            cfg.ssm_chunk, h0)
+        y = y.reshape(b, s, di)
+        y = sh(y)
+        from .common import rms_norm
+        y = rms_norm(y, params["norm_w"], cfg.norm_eps)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["out_proj"]
+    new_state = None
+    if state is not None:
+        conv_buf = jnp.concatenate(
+            [state.conv, xi.astype(state.conv.dtype)],
+            axis=1)[:, -(cfg.ssm_conv - 1):, :]
+        new_state = MambaState(h=h_fin, conv=conv_buf)
+    return out, new_state
+
+
+def mamba_step(params: Dict, cfg: ModelConfig, x_t: jnp.ndarray,
+               state: MambaState) -> Tuple[jnp.ndarray, MambaState]:
+    """Decode form. x_t: (B, D) one token; O(1) state update."""
+    b, _ = x_t.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xi, z, bct, cct, dtt = mamba_inputs(params, cfg, x_t[:, None, :])
+    xi, z = xi[:, 0], z[:, 0]
+    u, conv_buf = causal_conv_step(xi, state.conv, params["conv_w"],
+                                   params["conv_b"])
+    u = jax.nn.silu(u)
+    if cfg.mamba_version == 1:
+        dtr = cfg.dt_rank_
+        xp = u @ params["x_proj"]
+        dt = jax.nn.softplus(xp[..., :dtr] @ params["dt_w"]
+                             + params["dt_b"])
+        a = -jnp.exp(params["a_log"])
+        h, y = selective_scan_step(state.h, u, dt, a, xp[..., dtr:dtr + n],
+                                   xp[..., dtr + n:], params["d_skip"])
+    else:
+        nh = di // cfg.ssm_head_dim
+        dt = jax.nn.softplus(dtt[:, 0].astype(jnp.float32) + params["dt_b"])
+        a = -jnp.exp(params["a_log"])
+        h, y = ssd_step(state.h, u.reshape(b, nh, cfg.ssm_head_dim), dt, a,
+                        bct[:, 0], cct[:, 0], params["d_skip"])
+        y = y.reshape(b, di)
+        from .common import rms_norm
+        y = rms_norm(y, params["norm_w"], cfg.norm_eps)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype)
+    return y @ params["out_proj"], MambaState(h=h, conv=conv_buf)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> MambaState:
+    di, n = cfg.d_inner, cfg.ssm_state
+    if cfg.mamba_version == 1:
+        h = jnp.zeros((batch, di, n), jnp.float32)
+    else:
+        nh = di // cfg.ssm_head_dim
+        h = jnp.zeros((batch, nh, cfg.ssm_head_dim, n), jnp.float32)
+    conv = jnp.zeros((batch, cfg.ssm_conv - 1, di), jnp.float32)
+    return MambaState(h=h, conv=conv)

@@ -1,0 +1,532 @@
+"""Config-driven model assembly for the 10 assigned architectures.
+
+Five structural families, one code path each, all built from the shared
+blocks (attention.py / moe.py / mamba.py):
+
+  dense | moe | audio : uniform pre-norm decoder stack (scan over layers)
+  ssm                 : uniform mamba stack (falcon-mamba)
+  hybrid              : groups of mamba layers + ONE shared attention
+                        block re-applied after each group (zamba2)
+  vlm                 : groups of self-attn layers + a cross-attention
+                        layer per group over image tokens (llama-3.2-v)
+
+Layer parameters are stacked on a leading axis and iterated with
+lax.scan (+ optional jax.checkpoint) so compile time and HLO size are
+O(1) in depth. Every ``init_*`` returns (params, PartitionSpec tree).
+
+Modes: ``forward`` (teacher-forced sequences; optionally emits the KV
+cache / SSM states for prefill) and ``decode_step`` (one token against
+caches — bf16 or SAQ-quantized).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import kvcache as kvc
+from .attention import (attention_block, cross_kv, decode_attention,
+                        init_attention, qkv)
+from .common import (MeshAxes, ModelConfig, apply_rope, dense_init,
+                     init_rms, rms_norm, shard)
+from .mamba import (MambaState, init_mamba, init_mamba_state, mamba_block,
+                    mamba_step)
+from .moe import init_moe, moe_block
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _init_ffn(key, cfg: ModelConfig, axes: MeshAxes):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    params = {"w1": dense_init(ks[0], (d, f), cfg.dtype),
+              "w3": dense_init(ks[1], (d, f), cfg.dtype),
+              "w2": dense_init(ks[2], (f, d), cfg.dtype, fan_in=f)}
+    spec = {"w1": P(axes.fp(d), axes.tp(f)),
+            "w3": P(axes.fp(d), axes.tp(f)),
+            "w2": P(axes.tp(f), axes.fp(d))}
+    return params, spec
+
+
+def _init_attn_layer(key, cfg: ModelConfig, axes: MeshAxes,
+                     cross: bool = False):
+    ka, kf = jax.random.split(key)
+    attn_p, attn_s = init_attention(ka, cfg, axes, cross=cross)
+    if cfg.family == "moe" and not cross:
+        mlp_p, mlp_s = init_moe(kf, cfg, axes)
+    else:
+        mlp_p, mlp_s = _init_ffn(kf, cfg, axes)
+    params = {"attn": attn_p, "mlp": mlp_p,
+              "ln1": init_rms(cfg.d_model, cfg.dtype),
+              "ln2": init_rms(cfg.d_model, cfg.dtype)}
+    spec = {"attn": attn_s, "mlp": mlp_s, "ln1": P(None), "ln2": P(None)}
+    if cross:
+        params["gate"] = jnp.zeros((), jnp.float32)
+        spec["gate"] = P()
+    return params, spec
+
+
+def _init_mamba_layer(key, cfg: ModelConfig, axes: MeshAxes):
+    mp, ms = init_mamba(key, cfg, axes)
+    return ({"mamba": mp, "ln": init_rms(cfg.d_model, cfg.dtype)},
+            {"mamba": ms, "ln": P(None)})
+
+
+def _stack(inits):
+    """Stack a list of (params, spec) into leading-axis arrays + specs."""
+    params = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *
+                                    [p for p, _ in inits])
+    spec0 = inits[0][1]
+    spec = jax.tree_util.tree_map(
+        lambda s: P(*((None,) + tuple(s))), spec0,
+        is_leaf=lambda s: isinstance(s, P))
+    return params, spec
+
+
+def hybrid_groups(cfg: ModelConfig) -> Tuple[int, int]:
+    g = cfg.attn_every
+    assert cfg.n_layers % g == 0, \
+        f"hybrid n_layers {cfg.n_layers} must divide attn_every {g}"
+    return cfg.n_layers // g, g
+
+
+def vlm_groups(cfg: ModelConfig) -> Tuple[int, int]:
+    g = cfg.cross_attn_every
+    assert cfg.n_layers % g == 0
+    return cfg.n_layers // g, g
+
+
+def init_params(key, cfg: ModelConfig, axes: MeshAxes = MeshAxes()
+                ) -> Tuple[Dict, Dict]:
+    keys = jax.random.split(key, cfg.n_layers + 8)
+    params: Dict[str, Any] = {}
+    spec: Dict[str, Any] = {}
+
+    # --- embeddings / heads ---
+    if cfg.family == "audio":
+        params["embed"] = dense_init(
+            keys[-1], (cfg.n_codebooks, cfg.vocab_size, cfg.d_model),
+            cfg.dtype, fan_in=cfg.d_model)
+        spec["embed"] = P(None, axes.tp(cfg.vocab_size),
+                          axes.fp(cfg.d_model))
+        params["head"] = dense_init(
+            keys[-2], (cfg.n_codebooks, cfg.d_model, cfg.vocab_size),
+            cfg.dtype)
+        spec["head"] = P(None, axes.fp(cfg.d_model),
+                         axes.tp(cfg.vocab_size))
+    else:
+        params["embed"] = dense_init(
+            keys[-1], (cfg.vocab_size, cfg.d_model), cfg.dtype,
+            fan_in=cfg.d_model)
+        spec["embed"] = P(axes.tp(cfg.vocab_size), axes.fp(cfg.d_model))
+        if not cfg.tie_embeddings:
+            params["head"] = dense_init(
+                keys[-2], (cfg.d_model, cfg.vocab_size), cfg.dtype)
+            spec["head"] = P(axes.fp(cfg.d_model), axes.tp(cfg.vocab_size))
+    params["final_norm"] = init_rms(cfg.d_model, cfg.dtype)
+    spec["final_norm"] = P(None)
+
+    # --- layer stacks ---
+    if cfg.family in ("dense", "moe", "audio"):
+        stacked = [_init_attn_layer(keys[i], cfg, axes)
+                   for i in range(cfg.n_layers)]
+        params["layers"], spec["layers"] = _stack(stacked)
+    elif cfg.family == "ssm":
+        stacked = [_init_mamba_layer(keys[i], cfg, axes)
+                   for i in range(cfg.n_layers)]
+        params["layers"], spec["layers"] = _stack(stacked)
+    elif cfg.family == "hybrid":
+        n_groups, g = hybrid_groups(cfg)
+        stacked = [_stack([_init_mamba_layer(keys[i * g + j], cfg, axes)
+                           for j in range(g)]) for i in range(n_groups)]
+        params["layers"], spec["layers"] = _stack(stacked)
+        sa_p, sa_s = _init_attn_layer(keys[-3], cfg, axes)
+        params["shared_attn"], spec["shared_attn"] = sa_p, sa_s
+    elif cfg.family == "vlm":
+        n_groups, g = vlm_groups(cfg)
+        stacked = [_stack([_init_attn_layer(keys[i * g + j], cfg, axes)
+                           for j in range(g)]) for i in range(n_groups)]
+        params["layers"], spec["layers"] = _stack(stacked)
+        crosses = [_init_attn_layer(keys[cfg.n_layers + i], cfg, axes,
+                                    cross=True) for i in range(n_groups)]
+        params["cross_layers"], spec["cross_layers"] = _stack(crosses)
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return params, spec
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray
+          ) -> jnp.ndarray:
+    if cfg.family == "audio":
+        # tokens: (B, S, K) — sum of per-codebook embeddings
+        parts = [params["embed"][k][tokens[..., k]]
+                 for k in range(cfg.n_codebooks)]
+        return functools.reduce(jnp.add, parts)
+    return params["embed"][tokens]
+
+
+def logits_fn(params: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.family == "audio":
+        return jnp.einsum("bsd,kdv->bskv", x, params["head"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return x @ head
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies (sequence mode)
+# ---------------------------------------------------------------------------
+
+def _attn_layer_seq(lp: Dict, cfg: ModelConfig, axes: MeshAxes,
+                    x: jnp.ndarray, positions: jnp.ndarray, mesh,
+                    return_kv: bool):
+    # Megatron-SP boundary: the residual is seq-sharded between blocks;
+    # the post-norm activation is gathered to full sequence HERE, in
+    # bf16 (the norm runs seq-sharded; gathering its f32 internals costs
+    # 2x the bytes — EXPERIMENTS.md §Perf, command-r cell).
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps).astype(cfg.dtype)
+    h = shard(h, P(axes.batch, None, None))
+    if return_kv:
+        q, k, v = qkv(lp["attn"], cfg, h, positions)
+        from .attention import chunked_attention
+        att = chunked_attention(q, k, v, causal=True,
+                                q_chunk=cfg.attn_q_chunk,
+                                kv_chunk=cfg.attn_kv_chunk,
+                                axes=axes, attn_tp=cfg.attn_tp)
+        att = jnp.einsum("bshk,hkd->bsd", att, lp["attn"]["wo"])
+        cache_spec = P(axes.bp(k.shape[0]), axes.sp(k.shape[1]),
+                       None, None)
+        kv_out = (shard(k, cache_spec), shard(v, cache_spec))
+    else:
+        att = attention_block(lp["attn"], cfg, h, positions, axes)
+        kv_out = None
+    att = shard(att, P(axes.batch, axes.sp(x.shape[1]), None))
+    x = x + att
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps).astype(cfg.dtype)
+    h = shard(h, P(axes.batch, None, None))
+    if cfg.family == "moe":
+        x = x + moe_block(lp["mlp"], cfg, h, axes, mesh)
+    else:
+        hh = jax.nn.silu(h @ lp["mlp"]["w1"]) * (h @ lp["mlp"]["w3"])
+        hh = shard(hh, P(axes.batch, None, axes.tp(hh.shape[-1])))
+        ff = hh @ lp["mlp"]["w2"]
+        ff = shard(ff, P(axes.batch, axes.sp(x.shape[1]), None))
+        x = x + ff
+    x = shard(x, P(axes.batch, axes.sp(x.shape[1]), None))
+    return x, kv_out
+
+
+def _cross_layer_seq(lp: Dict, cfg: ModelConfig, axes: MeshAxes,
+                     x: jnp.ndarray, positions: jnp.ndarray,
+                     img: jnp.ndarray):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    k, v = cross_kv(lp["attn"], cfg, img)
+    att = attention_block(lp["attn"], cfg, h, positions, axes,
+                          causal=False, kv_override=(k, v, None))
+    x = x + (jnp.tanh(lp["gate"]) * att.astype(jnp.float32)).astype(x.dtype)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    hh = jax.nn.silu(h @ lp["mlp"]["w1"]) * (h @ lp["mlp"]["w3"])
+    x = x + hh @ lp["mlp"]["w2"]
+    return x
+
+
+def _mamba_layer_seq(lp: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                     state: Optional[MambaState], return_state: bool,
+                     axes: Optional[MeshAxes] = None):
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    y, new_state = mamba_block(lp["mamba"], cfg, h,
+                               state if return_state else None, axes=axes)
+    x = x + y
+    if axes is not None:
+        x = shard(x, P(axes.bp(x.shape[0]), axes.sp(x.shape[1]), None))
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+class PrefillCaches(NamedTuple):
+    """Whatever the family needs to continue decoding."""
+    kv: Optional[Any] = None          # KVCacheBF16 | KVCacheSAQ (L-stacked)
+    ssm: Optional[Any] = None         # MambaState stacked (L or (G, g))
+    shared_kv: Optional[Any] = None   # hybrid: (G, ...) shared-attn cache
+    cross_kv: Optional[Any] = None    # vlm: (G, B, n_img, hkv, hd) k & v
+
+
+def _maybe_remat(f, cfg: ModelConfig):
+    return jax.checkpoint(f) if cfg.remat else f
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            axes: MeshAxes = MeshAxes(), mesh=None,
+            img_embeds: Optional[jnp.ndarray] = None,
+            collect_cache: bool = False, cache_max_seq: int = 0,
+            cache_bits: int = 0
+            ) -> Tuple[jnp.ndarray, Optional[PrefillCaches]]:
+    """Teacher-forced pass. tokens: (B, S) (audio: (B, S, K)).
+
+    Returns (hidden (B, S, d), caches?). With ``collect_cache`` the KV/SSM
+    caches are emitted, padded to ``cache_max_seq`` (>= S); ``cache_bits``
+    > 0 selects the SAQ-quantized cache.
+    """
+    x = embed(params, cfg, tokens)
+    b, s = x.shape[0], x.shape[1]
+    x = shard(x, P(axes.batch, axes.sp(s), None))
+    positions = jnp.arange(s)[None, :]
+    max_seq = max(cache_max_seq, s) if collect_cache else s
+
+    def pad_cache(k):  # (..., S, Hkv, hd) -> (..., max_seq, Hkv, hd)
+        if max_seq == s:
+            return k
+        pads = [(0, 0)] * k.ndim
+        pads[-3] = (0, max_seq - s)
+        return jnp.pad(k, pads)
+
+    caches = None
+
+    if cfg.family in ("dense", "moe", "audio"):
+        def body(x, lp):
+            x, kv = _attn_layer_seq(lp, cfg, axes, x, positions, mesh,
+                                    return_kv=collect_cache)
+            return x, kv
+        x, kvs = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+        if collect_cache:
+            k_all, v_all = kvs      # (L, B, S, Hkv, hd)
+            caches = PrefillCaches(kv=_make_kv_cache(
+                pad_cache(k_all), pad_cache(v_all), cache_bits))
+
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            st = init_mamba_state(cfg, b) if collect_cache else None
+            x, new_st = _mamba_layer_seq(lp, cfg, x, st, collect_cache,
+                                         axes)
+            return x, new_st
+        x, states = jax.lax.scan(_maybe_remat(body, cfg), x,
+                                 params["layers"])
+        if collect_cache:
+            caches = PrefillCaches(ssm=states)
+
+    elif cfg.family == "hybrid":
+        n_groups, g = hybrid_groups(cfg)
+        sa = params["shared_attn"]
+
+        def group(x, glp):
+            def inner(x, lp):
+                st = init_mamba_state(cfg, b) if collect_cache else None
+                x, new_st = _mamba_layer_seq(lp, cfg, x, st, collect_cache,
+                                             axes)
+                return x, new_st
+            # per-layer remat inside the group: the backward recompute
+            # re-saves only layer inputs, not the SSD chunk internals.
+            # The GROUP is not remat-wrapped — double remat would add a
+            # whole extra forward pass (EXPERIMENTS.md §Perf, refuted).
+            x, states = jax.lax.scan(_maybe_remat(inner, cfg), x, glp)
+            x, kv = _attn_layer_seq(sa, cfg, axes, x, positions, mesh,
+                                    return_kv=collect_cache)
+            return x, (states, kv)
+        x, (states, kvs) = jax.lax.scan(group, x, params["layers"])
+        if collect_cache:
+            k_all, v_all = kvs      # (G, B, S, Hkv, hd)
+            caches = PrefillCaches(
+                ssm=states,
+                shared_kv=_make_kv_cache(
+                    pad_cache(k_all), pad_cache(v_all), cache_bits))
+
+    elif cfg.family == "vlm":
+        n_groups, g = vlm_groups(cfg)
+        assert img_embeds is not None, "vlm needs img_embeds"
+
+        def group(x, gp):
+            glp, clp = gp
+            def inner(x, lp):
+                x, kv = _attn_layer_seq(lp, cfg, axes, x, positions, mesh,
+                                        return_kv=collect_cache)
+                return x, kv
+            x, kvs = jax.lax.scan(inner, x, glp)
+            ck, cv = cross_kv(clp["attn"], cfg, img_embeds)
+            x = _cross_layer_seq(clp, cfg, axes, x, positions, img_embeds)
+            return x, (kvs, (ck, cv))
+        x, (kvs, crosses) = jax.lax.scan(
+            _maybe_remat(group, cfg), x,
+            (params["layers"], params["cross_layers"]))
+        if collect_cache:
+            k_all, v_all = kvs      # (G, g, B, S, Hkv, hd)
+            k_flat = pad_cache(k_all)
+            v_flat = pad_cache(v_all)
+            k_flat = k_flat.reshape((-1,) + k_flat.shape[2:])   # (L, ...)
+            v_flat = v_flat.reshape((-1,) + v_flat.shape[2:])
+            caches = PrefillCaches(
+                kv=_make_kv_cache(k_flat, v_flat, cache_bits),
+                cross_kv=crosses)
+    else:
+        raise ValueError(cfg.family)
+
+    return x, caches
+
+
+def _make_kv_cache(k_all: jnp.ndarray, v_all: jnp.ndarray, bits: int):
+    """(L, B, S, Hkv, hd) pair -> cache struct (quantized if bits > 0).
+    Quantization keeps the (L, B, S, Hkv) layout — sharding-preserving."""
+    if bits <= 0:
+        return kvc.KVCacheBF16(k=k_all.astype(jnp.bfloat16),
+                               v=v_all.astype(jnp.bfloat16))
+    kc, kvm, krs, vc, vvm = kvc.quantize_kv(k_all, v_all, bits)
+    kc, vc = kvc.pack_codes(kc, bits), kvc.pack_codes(vc, bits)
+    return kvc.KVCacheSAQ(k_codes=kc, k_vmax=kvm, k_rescale=krs,
+                          v_codes=vc, v_vmax=vvm, bits=bits)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token)
+# ---------------------------------------------------------------------------
+
+def _attn_decode(lp: Dict, cfg: ModelConfig, axes: MeshAxes,
+                 x_t: jnp.ndarray, pos, kv_slice, bits: int):
+    """x_t: (B, d). kv_slice: per-layer cache pieces. Returns (x, slice)."""
+    h = rms_norm(x_t[:, None, :], lp["ln1"], cfg.norm_eps)
+    q, k, v = qkv(lp["attn"], cfg, h, pos[None, None])
+    q, k_t, v_t = q[:, 0], k[:, 0], v[:, 0]
+    if bits > 0:
+        kv_slice = kvc.append_saq(kv_slice, k_t, v_t, pos, bits)
+        att = kvc.attend_saq(q, kv_slice, pos, bits)
+    else:
+        kb, vb = kvc.append_bf16(kv_slice, k_t, v_t, pos)
+        kv_slice = (kb, vb)
+        att = decode_attention(q, kb, vb, pos)
+    att = jnp.einsum("bhk,hkd->bd", att, lp["attn"]["wo"])
+    x_t = x_t + att
+    h = rms_norm(x_t[:, None, :], lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        x_t = x_t + moe_block(lp["mlp"], cfg, h, axes, None)[:, 0]
+    else:
+        hh = jax.nn.silu(h @ lp["mlp"]["w1"]) * (h @ lp["mlp"]["w3"])
+        x_t = x_t + (hh @ lp["mlp"]["w2"])[:, 0]
+    return x_t, kv_slice
+
+
+def _kv_slices(cache):
+    if isinstance(cache, kvc.KVCacheBF16):
+        return (cache.k, cache.v)
+    return (cache.k_codes, cache.k_vmax, cache.k_rescale,
+            cache.v_codes, cache.v_vmax)
+
+
+def _rebuild_cache(cache, slices):
+    if isinstance(cache, kvc.KVCacheBF16):
+        return kvc.KVCacheBF16(k=slices[0], v=slices[1])
+    return kvc.KVCacheSAQ(*slices, bits=cache.bits)
+
+
+def decode_step(params: Dict, cfg: ModelConfig, token: jnp.ndarray,
+                pos, caches: PrefillCaches, axes: MeshAxes = MeshAxes(),
+                img_embeds: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, PrefillCaches]:
+    """token: (B,) (audio: (B, K)); pos: () int32 write index.
+
+    Returns (logits (B, V) or (B, K, V), updated caches).
+    """
+    if cfg.family == "audio":
+        x_t = functools.reduce(jnp.add, [
+            params["embed"][k][token[:, k]] for k in range(cfg.n_codebooks)])
+    else:
+        x_t = params["embed"][token]
+    pos = jnp.asarray(pos, jnp.int32)
+    bits = caches.kv.bits if isinstance(caches.kv, kvc.KVCacheSAQ) else (
+        caches.shared_kv.bits
+        if isinstance(caches.shared_kv, kvc.KVCacheSAQ) else 0)
+
+    if cfg.family in ("dense", "moe", "audio"):
+        def body(x_t, inputs):
+            lp, kv_slice = inputs
+            x_t, kv_slice = _attn_decode(lp, cfg, axes, x_t, pos, kv_slice,
+                                         bits)
+            return x_t, kv_slice
+        x_t, new_slices = jax.lax.scan(
+            body, x_t, (params["layers"], _kv_slices(caches.kv)))
+        caches = caches._replace(kv=_rebuild_cache(caches.kv, new_slices))
+
+    elif cfg.family == "ssm":
+        def body(x_t, inputs):
+            lp, st = inputs
+            h = rms_norm(x_t[:, None, :], lp["ln"], cfg.norm_eps)[:, 0]
+            y, st = mamba_step(lp["mamba"], cfg, h, st)
+            return x_t + y, st
+        x_t, states = jax.lax.scan(body, x_t,
+                                   (params["layers"], caches.ssm))
+        caches = caches._replace(ssm=states)
+
+    elif cfg.family == "hybrid":
+        sa = params["shared_attn"]
+        def group(x_t, inputs):
+            glp, st, kv_slice = inputs
+            def inner(x_t, inputs2):
+                lp, st1 = inputs2
+                h = rms_norm(x_t[:, None, :], lp["ln"], cfg.norm_eps)[:, 0]
+                y, st1 = mamba_step(lp["mamba"], cfg, h, st1)
+                return x_t + y, st1
+            x_t, st = jax.lax.scan(inner, x_t, (glp, st))
+            x_t, kv_slice = _attn_decode(sa, cfg, axes, x_t, pos, kv_slice,
+                                         bits)
+            return x_t, (st, kv_slice)
+        x_t, (states, new_slices) = jax.lax.scan(
+            group, x_t,
+            (params["layers"], caches.ssm, _kv_slices(caches.shared_kv)))
+        caches = caches._replace(
+            ssm=states,
+            shared_kv=_rebuild_cache(caches.shared_kv, new_slices))
+
+    elif cfg.family == "vlm":
+        def group(x_t, inputs):
+            (glp, clp), kv_slice, ckv = inputs
+            def inner(x_t, inputs2):
+                lp, kvs = inputs2
+                x_t, kvs = _attn_decode(lp, cfg, axes, x_t, pos, kvs, bits)
+                return x_t, kvs
+            x_t, kv_slice = jax.lax.scan(inner, x_t, (glp, kv_slice))
+            # cross attention over static image kv
+            h = rms_norm(x_t[:, None, :], clp["ln1"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", h, clp["attn"]["wq"])[:, 0]
+            if cfg.qk_norm:
+                q = rms_norm(q, clp["attn"]["q_norm"], cfg.norm_eps)
+            ck, cv = ckv
+            att = decode_attention(q, ck, cv,
+                                   jnp.asarray(ck.shape[1] - 1, jnp.int32))
+            att = jnp.einsum("bhk,hkd->bd", att, clp["attn"]["wo"])
+            x_t = x_t + (jnp.tanh(clp["gate"])
+                         * att.astype(jnp.float32)).astype(x_t.dtype)
+            h = rms_norm(x_t[:, None, :], clp["ln2"], cfg.norm_eps)
+            hh = jax.nn.silu(h @ clp["mlp"]["w1"]) * (h @ clp["mlp"]["w3"])
+            x_t = x_t + (hh @ clp["mlp"]["w2"])[:, 0]
+            return x_t, kv_slice
+        n_groups, g = vlm_groups(cfg)
+        kv_all = _kv_slices(caches.kv)
+        kv_grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, g) + a.shape[1:]), kv_all)
+        x_t, new_kv = jax.lax.scan(
+            group, x_t,
+            ((params["layers"], params["cross_layers"]), kv_grouped,
+             caches.cross_kv))
+        new_kv = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups * g,) + a.shape[2:]), new_kv)
+        caches = caches._replace(kv=_rebuild_cache(caches.kv, new_kv))
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x_t[:, None, :], params["final_norm"], cfg.norm_eps)
+    if cfg.family == "audio":
+        logits = jnp.einsum("bsd,kdv->bskv", x, params["head"])[:, 0]
+    else:
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        logits = (x @ head)[:, 0]
+    return logits, caches

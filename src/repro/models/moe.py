@@ -1,0 +1,161 @@
+"""Mixture-of-Experts block (dbrx-style fine-grained top-k, arctic-style
+many-expert top-2 + dense residual).
+
+TPU/SPMD adaptation (DESIGN.md §3): instead of GShard all-to-all dispatch
+we use *replicated-dispatch expert parallelism*: activations are already
+replicated across the tensor axis (batch is sharded over data/pod only),
+so each tensor shard routes its local tokens against the full router,
+keeps only tokens bound for its *local* experts, runs them through a
+padded (E_loc, C, d) capacity buffer (sort + index-scatter, dense shapes,
+no ragged compute), and the per-shard partial outputs combine with one
+psum over the tensor axis — the same collective volume as a TP FFN
+all-reduce, zero token all-to-all. Top-k is processed one slot at a time
+so the peak intermediate is O(T * d), not O(T * k * d).
+
+Outside a mesh (unit tests) the same code runs with E_loc = E, no psum.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from .common import MeshAxes, ModelConfig, dense_init
+
+
+def init_moe(key, cfg: ModelConfig, axes: MeshAxes) -> Tuple[Dict, Dict]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w1": dense_init(ks[1], (e, d, f), cfg.dtype),
+        "w3": dense_init(ks[2], (e, d, f), cfg.dtype),
+        "w2": dense_init(ks[3], (e, f, d), cfg.dtype, fan_in=f),
+    }
+    spec = {
+        "router": P(None, None),
+        "w1": P(axes.tp(e), axes.fp(d), None),
+        "w3": P(axes.tp(e), axes.fp(d), None),
+        "w2": P(axes.tp(e), None, axes.fp(d)),
+    }
+    if cfg.moe_dense_residual:
+        ks2 = jax.random.split(ks[4], 3)
+        params["dense"] = {
+            "w1": dense_init(ks2[0], (d, f), cfg.dtype),
+            "w3": dense_init(ks2[1], (d, f), cfg.dtype),
+            "w2": dense_init(ks2[2], (f, d), cfg.dtype, fan_in=f),
+        }
+        spec["dense"] = {
+            "w1": P(axes.fp(d), axes.tp(f)),
+            "w3": P(axes.fp(d), axes.tp(f)),
+            "w2": P(axes.tp(f), axes.fp(d)),
+        }
+    return params, spec
+
+
+def _moe_math(x_flat, router, w1, w3, w2, cfg: ModelConfig, e_lo,
+              e_loc: int, capacity: int) -> jnp.ndarray:
+    """Route T tokens, compute experts [e_lo, e_lo + e_loc). (T,d)->(T,d).
+
+    ``e_lo`` may be traced (lax.axis_index); e_loc/capacity are static.
+    """
+    t, d = x_flat.shape
+    k = cfg.experts_per_token
+    logits = x_flat.astype(jnp.float32) @ router              # (T, E)
+    top_val, top_idx = jax.lax.top_k(logits, k)               # (T, K)
+    gates = jax.nn.softmax(top_val, axis=-1)                  # renormalize
+    x_pad = jnp.concatenate(
+        [x_flat, jnp.zeros((1, d), x_flat.dtype)])            # row T = 0
+    out = jnp.zeros((t, d), jnp.float32)
+    for slot in range(k):                                     # static unroll
+        eids = top_idx[:, slot]
+        gate = gates[:, slot]
+        local_e = jnp.where((eids >= e_lo) & (eids < e_lo + e_loc),
+                            eids - e_lo, e_loc)               # e_loc = drop
+        order = jnp.argsort(local_e)
+        se, stok = local_e[order], order                      # token == row
+        start = jnp.searchsorted(se, jnp.arange(e_loc + 1))
+        pos = jnp.arange(t) - start[se]
+        keep = (se < e_loc) & (pos < capacity)
+        flat = jnp.where(keep, se * capacity + pos, e_loc * capacity)
+        buf_tok = jnp.full((e_loc * capacity + 1,), t, jnp.int32)
+        buf_tok = buf_tok.at[flat].set(stok.astype(jnp.int32), mode="drop")
+        buf = x_pad[buf_tok[:-1]].reshape(e_loc, capacity, d)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w1)) \
+            * jnp.einsum("ecd,edf->ecf", buf, w3)
+        y = jnp.einsum("ecf,efd->ecd", h, w2).reshape(-1, d)
+        y = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)])
+        contrib = y[flat] * jnp.where(keep, gate[order], 0.0)[:, None]
+        out = out.at[stok].add(contrib.astype(jnp.float32))
+    return out
+
+
+def _ffn_swiglu(x, w1, w3, w2):
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return (h @ w2).astype(jnp.float32)
+
+
+def moe_block(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+              axes: MeshAxes, mesh=None) -> jnp.ndarray:
+    """x: (B, S, d) -> (B, S, d). EP over ``axes.tensor`` when a mesh with
+    that axis (size > 1) is supplied; single-shard math otherwise."""
+    b, s, d = x.shape
+    x_flat = x.reshape(b * s, d)
+    e, k = cfg.n_experts, cfg.experts_per_token
+
+    tensor_size = 1
+    if mesh is not None and axes.tensor in getattr(mesh, "shape", {}):
+        tensor_size = mesh.shape[axes.tensor]
+
+    if tensor_size == 1:
+        # per-slot dispatch: each of the k slots routes T tokens once, so
+        # the expected per-expert load per slot is T/E (NOT T*k/E — that
+        # would overcompute expert FLOPs by k; see EXPERIMENTS.md §Perf)
+        capacity = max(1, -(-int(cfg.capacity_factor * b * s) // e))
+        y = _moe_math(x_flat, params["router"], params["w1"], params["w3"],
+                      params["w2"], cfg, 0, e, capacity)
+        if cfg.moe_dense_residual:
+            y = y + _ffn_swiglu(x_flat, **params["dense"])
+        return y.reshape(b, s, d).astype(x.dtype)
+
+    e_loc = e // tensor_size
+    fsdp_size = 1
+    for ax in axes.fsdp:
+        fsdp_size *= mesh.shape.get(ax, 1)
+    t_loc = (b * s) // fsdp_size
+    capacity = max(1, -(-int(cfg.capacity_factor * t_loc) // e))
+    dense = params.get("dense")
+
+    if dense is None:
+        def shard_body(x_loc, router, w1, w3, w2):
+            j = jax.lax.axis_index(axes.tensor)
+            y = _moe_math(x_loc, router, w1, w3, w2, cfg,
+                          j * e_loc, e_loc, capacity)
+            return jax.lax.psum(y, axes.tensor)
+        in_specs = (P(axes.fsdp, None), P(None, None),
+                    P(axes.tensor, None, None), P(axes.tensor, None, None),
+                    P(axes.tensor, None, None))
+        args = (x_flat, params["router"], params["w1"], params["w3"],
+                params["w2"])
+    else:
+        def shard_body(x_loc, router, w1, w3, w2, d1, d3, d2):
+            j = jax.lax.axis_index(axes.tensor)
+            y = _moe_math(x_loc, router, w1, w3, w2, cfg,
+                          j * e_loc, e_loc, capacity)
+            y = y + _ffn_swiglu(x_loc, d1, d3, d2)  # f TP-sharded partials
+            return jax.lax.psum(y, axes.tensor)
+        in_specs = (P(axes.fsdp, None), P(None, None),
+                    P(axes.tensor, None, None), P(axes.tensor, None, None),
+                    P(axes.tensor, None, None),
+                    P(None, axes.tensor), P(None, axes.tensor),
+                    P(axes.tensor, None))
+        args = (x_flat, params["router"], params["w1"], params["w3"],
+                params["w2"], dense["w1"], dense["w3"], dense["w2"])
+
+    fn = shard_map(shard_body, mesh=mesh, in_specs=in_specs,
+                   out_specs=P(axes.fsdp, None), check_vma=False)
+    y = fn(*args)
+    return y.reshape(b, s, d).astype(x.dtype)

@@ -1,0 +1,5 @@
+"""Distributed runtime: supervised step loop (checkpoint/restart under
+injected failures), elastic re-meshing, straggler detection."""
+from .supervisor import Supervisor, FailureInjector  # noqa: F401
+from .straggler import StragglerMonitor  # noqa: F401
+from .elastic import reshard_tree, make_shardings  # noqa: F401

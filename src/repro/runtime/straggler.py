@@ -1,0 +1,47 @@
+"""Straggler detection: per-step wall-time EMA + variance; a step (or a
+peer, when per-host timings are exchanged) is flagged when it exceeds
+mean + k * std. On a real fleet the flag feeds the scheduler (demote the
+host / re-shard around it); here it is surfaced in metrics and tested
+with synthetic delays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    alpha: float = 0.1         # EMA factor
+    k: float = 3.0             # flag threshold in stds
+    warmup: int = 5            # steps before flagging starts
+
+    _mean: float = 0.0
+    _var: float = 0.0
+    _n: int = 0
+    flagged_steps: List[int] = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Record a step time; returns True if it is a straggler."""
+        self._n += 1
+        if self._n == 1:
+            self._mean = seconds
+            self._var = 0.0
+            return False
+        is_straggler = False
+        std = math.sqrt(max(self._var, 1e-12))
+        if self._n > self.warmup and seconds > self._mean + self.k * std \
+                and seconds > 1.5 * self._mean:
+            is_straggler = True
+            self.flagged_steps.append(step)
+            # do NOT absorb outliers into the EMA
+            return True
+        d = seconds - self._mean
+        self._mean += self.alpha * d
+        self._var = (1 - self.alpha) * (self._var + self.alpha * d * d)
+        return is_straggler
+
+    @property
+    def mean(self) -> float:
+        return self._mean

@@ -1,0 +1,87 @@
+"""Supervised training loop: run steps, checkpoint on cadence, recover
+from failures by restoring the last durable checkpoint and replaying.
+
+``FailureInjector`` raises synthetic faults (the node-failure stand-in
+in this single-host container); the Supervisor's contract — tested in
+test_runtime.py — is that the final state equals a run with no failures:
+the data pipeline is step-keyed (repro.data.tokens), so replayed steps
+consume identical batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.ckpt import CheckpointManager
+from .straggler import StragglerMonitor
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministically fail at the listed steps (first occurrence)."""
+    fail_at: List[int] = dataclasses.field(default_factory=list)
+    _done: set = dataclasses.field(default_factory=set)
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self._done:
+            self._done.add(step)
+            raise InjectedFailure(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass
+class Supervisor:
+    """step_fn(state, step) -> (state, metrics). ``state`` is one pytree
+    (params + optimizer + anything else)."""
+
+    step_fn: Callable
+    ckpt: CheckpointManager
+    ckpt_every: int = 10
+    max_restarts: int = 10
+    straggler: StragglerMonitor = dataclasses.field(
+        default_factory=StragglerMonitor)
+    shardings: Optional[Any] = None
+
+    def run(self, state: Any, n_steps: int,
+            injector: Optional[FailureInjector] = None
+            ) -> tuple[Any, Dict]:
+        history: Dict[str, list] = {"loss": [], "restarts": 0,
+                                    "stragglers": []}
+        restarts = 0
+        step = 0
+        # resume if checkpoints exist
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            state = self.ckpt.restore(latest, state, self.shardings)
+            step = latest + 1
+        while step < n_steps:
+            try:
+                t0 = time.perf_counter()
+                if injector is not None:
+                    injector.maybe_fail(step)
+                state, metrics = self.step_fn(state, step)
+                dt = time.perf_counter() - t0
+                if self.straggler.observe(step, dt):
+                    history["stragglers"].append(step)
+                if "loss" in metrics:
+                    history["loss"].append(float(metrics["loss"]))
+                if step % self.ckpt_every == 0:
+                    self.ckpt.save(step, state)
+                step += 1
+            except InjectedFailure:
+                restarts += 1
+                history["restarts"] = restarts
+                if restarts > self.max_restarts:
+                    raise
+                latest = self.ckpt.latest_step()
+                if latest is None:
+                    step = 0          # cold restart
+                    continue
+                state = self.ckpt.restore(latest, state, self.shardings)
+                step = latest + 1
+        self.ckpt.wait()
+        return state, history

@@ -1,0 +1,5 @@
+"""Serving stack: batched prefill + decode over bf16 or SAQ-quantized KV
+caches, sampling, and the serve_step entry points the dry-run lowers."""
+from .engine import (ServeConfig, ServeState, make_prefill_step,  # noqa: F401
+                     make_decode_step, generate)
+from .sampling import sample_logits  # noqa: F401

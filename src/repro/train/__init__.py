@@ -1,0 +1,5 @@
+"""Training stack: sharded AdamW (fp32 or CAQ-8bit moments), chunked
+cross-entropy, microbatched train step, SAQ gradient compression."""
+from .optimizer import AdamWConfig, adamw_init, adamw_update, lr_schedule  # noqa: F401
+from .train_step import make_train_step, chunked_cross_entropy  # noqa: F401
+from .grad_compress import compressed_mean, make_dp_train_step  # noqa: F401

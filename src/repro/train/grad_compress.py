@@ -1,0 +1,129 @@
+"""SAQ gradient compression over the data axis (paper technique applied
+to distributed training — DESIGN.md §4.2).
+
+Scheme (quantized reduce-scatter + quantized all-gather):
+
+  1. each replica CAQ-quantizes its local gradient, segmented into P
+     equal shards (P = data-axis size), B bits + per-shard-block vmax;
+  2. all_to_all moves shard j of every replica to replica j;
+  3. replica j dequantizes the P received shards, averages in fp32,
+     re-quantizes the averaged shard;
+  4. all_gather broadcasts the averaged shards; every replica dequantizes.
+
+Bytes on the wire per replica: ~2 * n * B/8 vs ~8n for an fp32 ring
+all-reduce — a 4x (B=8) / 8x (B=4) reduction of the DP collective, the
+bandwidth term that dominates data-parallel scaling.
+
+Like the paper's CAQ, the per-block symmetric grid is unbiased (midpoint
+decode), so compression noise is zero-mean; the optional error-feedback
+buffer makes the scheme exact-in-expectation over steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+BLOCK = 256
+
+
+def _q_enc(x: jnp.ndarray, bits: int):
+    """x: (..., n) -> (codes u8, vmax) blockwise over the last axis."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    pad = -flat.shape[0] % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blk = flat.reshape(-1, BLOCK)
+    vmax = jnp.maximum(jnp.max(jnp.abs(blk), axis=-1), 1e-20)
+    delta = (2.0 * vmax) / (1 << bits)
+    c = jnp.clip(jnp.floor((blk + vmax[:, None]) / delta[:, None]),
+                 0, (1 << bits) - 1).astype(jnp.uint8)
+    return c, vmax, shape, pad
+
+
+def _q_dec(codes, vmax, shape, pad, bits: int):
+    delta = (2.0 * vmax) / (1 << bits)
+    x = delta[:, None] * (codes.astype(jnp.float32) + 0.5) - vmax[:, None]
+    flat = x.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def compressed_mean(g: jnp.ndarray, axis_name: str, bits: int = 8
+                    ) -> jnp.ndarray:
+    """Mean of ``g`` over ``axis_name`` using the quantized RS+AG scheme.
+    Must be called inside shard_map/pmap with that axis. g: any shape."""
+    p = jax.lax.axis_size(axis_name)
+    flat = g.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = -n % (p * BLOCK)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    shards = flat.reshape(p, -1)                        # (P, n/P)
+    codes, vmax, shape, _ = _q_enc(shards, bits)
+    blocks_per_shard = codes.shape[0] // p
+    codes = codes.reshape(p, blocks_per_shard, BLOCK)
+    vmax = vmax.reshape(p, blocks_per_shard)
+    # 2) exchange: shard j of every replica -> replica j
+    codes_x = jax.lax.all_to_all(codes, axis_name, 0, 0, tiled=False)
+    vmax_x = jax.lax.all_to_all(vmax, axis_name, 0, 0, tiled=False)
+    # 3) dequant + average my shard
+    mine = _q_dec(codes_x.reshape(-1, BLOCK), vmax_x.reshape(-1),
+                  (p, blocks_per_shard * BLOCK), 0, bits)
+    avg = jnp.mean(mine, axis=0)                        # (n/P,)
+    c2, v2, s2, p2 = _q_enc(avg, bits)
+    # 4) broadcast averaged shards
+    c_all = jax.lax.all_gather(c2, axis_name)           # (P, blocks, BLOCK)
+    v_all = jax.lax.all_gather(v2, axis_name)
+    out = _q_dec(c_all.reshape(-1, BLOCK), v_all.reshape(-1),
+                 (flat.shape[0],), 0, bits)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(g.shape)
+
+
+def make_dp_train_step(loss_fn: Callable, mesh: Mesh, axis: str,
+                       opt_update: Callable, bits: int = 8,
+                       error_feedback: bool = True) -> Callable:
+    """Pure-DP train step with compressed gradient averaging.
+
+    params replicated; batch sharded over ``axis``. ``opt_update(grads,
+    state, params) -> (params, state, metrics)``. The error-feedback
+    buffer (same pytree as params) carries the compression residual.
+    """
+    def step(params, opt_state, ef, tokens, labels):
+        def body(params, opt_state, ef, tokens, labels):
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens,
+                                                      labels)
+            def comp(g, e):
+                g32 = g.astype(jnp.float32) + (e if error_feedback else 0.0)
+                gq = compressed_mean(g32, axis, bits)
+                e_new = g32 - gq if error_feedback else e
+                return gq, e_new
+            pairs = jax.tree_util.tree_map(comp, grads, ef)
+            grads_c = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                             is_leaf=lambda t: isinstance(
+                                                 t, tuple))
+            ef_new = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                            is_leaf=lambda t: isinstance(
+                                                t, tuple))
+            loss = jax.lax.pmean(loss, axis)
+            params, opt_state, metrics = opt_update(grads_c, opt_state,
+                                                    params)
+            metrics["loss"] = loss
+            return params, opt_state, ef_new, metrics
+
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(), P(), P(axis), P(axis)),
+            out_specs=(P(), P(), P(), P()),
+            check_vma=False)
+        return fn(params, opt_state, ef, tokens, labels)
+
+    return jax.jit(step)

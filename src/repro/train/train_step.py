@@ -1,0 +1,122 @@
+"""Train step: chunked cross-entropy (vocab-sharded-safe), microbatch
+gradient accumulation, AdamW. The returned step function is pjit-ready:
+pure, pytree-in/pytree-out, all sharding expressed by in/out shardings
+plus the model's internal constraints.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, MeshAxes, forward, logits_fn
+from repro.models.common import rms_norm
+from .optimizer import AdamWConfig, AdamWState, adamw_update
+
+
+def chunked_cross_entropy(params: Dict, cfg: ModelConfig, hidden: jnp.ndarray,
+                          labels: jnp.ndarray, chunk: int = 0) -> jnp.ndarray:
+    """Mean CE over (B, S[, K]) labels without materializing (B, S, V)
+    at once: the head matmul + logsumexp run over S-chunks.
+
+    Works with a vocab-sharded head: max/logsumexp/label-pick over the
+    sharded vocab dim lower to the appropriate collectives under SPMD.
+    """
+    x = rms_norm(hidden, params["final_norm"], cfg.norm_eps)
+    b, s = x.shape[0], x.shape[1]
+    if cfg.family == "audio":
+        head = params["head"]                       # (K, d, V)
+    else:
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    if chunk <= 0:
+        # auto: bound the live logits chunk to ~2^22 f32 elements per row
+        chunk = max(64, min(s, (1 << 22) // max(cfg.vocab_size, 1)))
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)) + ((0, 0),) * (
+            labels.ndim - 2), constant_values=-1)
+    xc = x.reshape(b, n_chunks, chunk, -1).swapaxes(0, 1)
+    lc = labels.reshape((b, n_chunks, chunk) + labels.shape[2:]).swapaxes(0, 1)
+
+    vocab_iota = jnp.arange(cfg.vocab_size, dtype=jnp.int32)
+
+    def one(carry, args):
+        xs, ls = args
+        if cfg.family == "audio":
+            logits = jnp.einsum("bsd,kdv->bskv", xs, head)
+        else:
+            logits = xs @ head
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # Label pick as a masked sum — elementwise on the (possibly
+        # vocab-sharded) logits + one reduction; a gather here would make
+        # SPMD replicate the full logits chunk.
+        onehot = (vocab_iota == ls[..., None].astype(jnp.int32))
+        pick = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+        valid = ls >= 0
+        nll = jnp.where(valid, lse - pick, 0.0)
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(one, (jnp.float32(0), jnp.float32(0)),
+                                 (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig, axes: MeshAxes, mesh=None
+                 ) -> Callable:
+    def loss_fn(params, tokens, labels, img_embeds=None):
+        hidden, _ = forward(params, cfg, tokens, axes=axes, mesh=mesh,
+                            img_embeds=img_embeds)
+        return chunked_cross_entropy(params, cfg, hidden, labels,
+                                     chunk=cfg.loss_vocab_chunk)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig,
+                    axes: MeshAxes = MeshAxes(), mesh=None,
+                    microbatches: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). ``batch`` = {tokens, labels[, img_embeds]} with leading
+    global-batch dim; with microbatches > 1 the batch is split and
+    gradients accumulated in fp32 (sequential scan — memory, not flops).
+    """
+    loss_fn = make_loss_fn(cfg, axes, mesh)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state: AdamWState, batch: Dict):
+        img = batch.get("img_embeds")
+        if microbatches == 1:
+            loss, grads = grad_fn(params, batch["tokens"], batch["labels"],
+                                  img)
+        else:
+            def split(x):
+                return x.reshape((microbatches, -1) + x.shape[1:])
+            mb = {k: split(v) for k, v in batch.items()}
+
+            def acc_step(carry, mbi):
+                loss_acc, grads_acc = carry
+                loss, grads = grad_fn(params, mbi["tokens"], mbi["labels"],
+                                      mbi.get("img_embeds"))
+                grads = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32),
+                    grads_acc, grads)
+                return (loss_acc + loss, grads), None
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.float32(0), zero), mb)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches,
+                                           grads)
+        params, opt_state, metrics = adamw_update(grads, opt_state, params,
+                                                  opt)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,17 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def decaying_data(n, d, alpha=0.7, seed=0):
+    """Gaussian data with power-law spectrum, rotated (PCA non-trivial)."""
+    r = np.random.default_rng(seed)
+    s = (np.arange(1, d + 1) ** -alpha).astype(np.float32)
+    g = r.standard_normal((d, d))
+    q, rr = np.linalg.qr(g)
+    rot = (q * np.sign(np.diag(rr))).astype(np.float32)
+    return ((r.standard_normal((n, d)).astype(np.float32) * s) @ rot.T)

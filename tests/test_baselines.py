@@ -1,0 +1,80 @@
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines.erabitq import erabitq_encode
+from repro.core.baselines.pca_drop import PCADrop
+from repro.core.baselines.pq import PQ
+from repro.core.caq import caq_encode, estimate_dist_sq
+from conftest import decaying_data
+
+
+def test_erabitq_b1_is_sign_quantization():
+    o = decaying_data(30, 16, seed=0)
+    code = erabitq_encode(o, bits=1)
+    # codes 0/1 matching sign
+    c = np.asarray(code.codes)
+    assert set(np.unique(c)) <= {0, 1}
+    np.testing.assert_array_equal(c, (o >= 0).astype(c.dtype))
+
+
+def brute_force_best_cosine(o, bits):
+    """Exact argmax over the full E-RaBitQ codebook (tiny D only)."""
+    levels = np.arange(1 << bits) - ((1 << bits) - 1) / 2.0
+    best = -1.0
+    for combo in itertools.product(levels, repeat=o.shape[0]):
+        y = np.asarray(combo)
+        c = (y @ o) / (np.linalg.norm(y) * np.linalg.norm(o) + 1e-30)
+        best = max(best, c)
+    return best
+
+
+@pytest.mark.parametrize("bits", [2, 3])
+def test_erabitq_exact_on_tiny(bits):
+    rng = np.random.default_rng(42)
+    for _ in range(5):
+        o = rng.standard_normal((1, 4)).astype(np.float32)
+        code = erabitq_encode(o, bits=bits)
+        got = float(np.asarray(code.cosine())[0])
+        want = brute_force_best_cosine(o[0], bits)
+        assert got >= want - 1e-4, (got, want)
+
+
+def test_caq_matches_erabitq_error():
+    o = decaying_data(400, 48, seed=3)
+    q = decaying_data(1, 48, seed=5)[0]
+    true = ((o - q) ** 2).sum(-1)
+    def err(code):
+        est = np.asarray(estimate_dist_sq(code, jnp.asarray(q)))
+        return (np.abs(est - true) / np.maximum(true, 1e-9)).mean()
+    e_caq = err(caq_encode(o, bits=4, rounds=8))
+    e_erq = err(erabitq_encode(o, bits=4))
+    assert e_caq < e_erq * 1.15       # paper: identical error class
+
+
+def test_pq_roundtrip_and_adc():
+    x = decaying_data(600, 32, seed=7)
+    pq = PQ.fit(x, m=8, nbits=6, iters=8)
+    codes = pq.encode(x)
+    dec = np.asarray(pq.decode(codes))
+    assert dec.shape == x.shape
+    q = decaying_data(1, 32, seed=9)[0]
+    est = np.asarray(pq.estimate_dist_sq(codes, jnp.asarray(q)))
+    ref = ((dec - q) ** 2).sum(-1)
+    np.testing.assert_allclose(est, ref, rtol=2e-2, atol=2e-2)
+
+
+def test_pca_drop_keeps_leading():
+    x = decaying_data(600, 32, alpha=1.2, seed=11)
+    pd = PCADrop.fit(x, avg_bits=8.0)       # keep 8 of 32
+    kept, tail = pd.encode(x)
+    assert kept.shape[1] == pd.keep == 8
+    q = decaying_data(1, 32, seed=13)[0]
+    d_plain = np.asarray(pd.estimate_dist_sq(kept, tail, jnp.asarray(q)))
+    d_tail = np.asarray(pd.estimate_dist_sq(kept, tail, jnp.asarray(q),
+                                            use_tail=True))
+    true = ((x - q) ** 2).sum(-1)
+    # tail-corrected is closer on average
+    assert np.abs(d_tail - true).mean() <= np.abs(d_plain - true).mean()

@@ -1,0 +1,67 @@
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, applicable, get_config, input_specs
+from repro.data import DATASETS, TokenPipeline, make_dataset, make_queries
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_configs_divisible_by_mesh(arch):
+    cfg = get_config(arch)
+    assert cfg.vocab_size % 16 == 0, "vocab must shard over model=16"
+    if cfg.family not in ("ssm",):
+        assert cfg.d_model % 16 == 0
+    assert cfg.n_layers > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_shapes(arch, shape):
+    cfg = get_config(arch)
+    sp = SHAPES[shape]
+    if not applicable(cfg, sp):
+        assert sp.name == "long_500k" and not cfg.supports_long_context
+        return
+    specs = input_specs(cfg, sp)
+    if sp.kind == "train":
+        assert specs["tokens"].shape[0] == sp.global_batch
+        assert specs["tokens"].shape[1] == sp.seq_len
+    elif sp.kind == "decode":
+        assert specs["token"].shape[0] == sp.global_batch
+    if cfg.family == "vlm":
+        assert specs["img_embeds"].shape[1] == cfg.n_img_tokens
+
+
+def test_long_500k_skips_exactly_full_attention():
+    runs = [a for a in ARCHS
+            if applicable(get_config(a), SHAPES["long_500k"])]
+    assert sorted(runs) == ["falcon-mamba-7b", "zamba2-1.2b"]
+
+
+def test_synthetic_spectrum_decays():
+    spec = DATASETS["gist"]
+    x = make_dataset(spec, n=2000)
+    assert x.shape == (2000, 960)
+    cov_eigs = np.linalg.eigvalsh(np.cov(x[:, :64].T))
+    assert np.isfinite(x).all()
+    q = make_queries(spec, 10)
+    assert q.shape == (10, 960)
+    assert not np.allclose(q[0], x[0])
+
+
+def test_token_pipeline_deterministic_and_sharded():
+    pipe = TokenPipeline(vocab_size=1000, seq_len=32, global_batch=8,
+                         seed=3)
+    t1, l1 = pipe.global_batch_at(5)
+    t2, l2 = pipe.global_batch_at(5)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(t1[:, 1:]),
+                                  np.asarray(l1[:, :-1]))
+    h0, _ = pipe.host_batch_at(5, 0, 4)
+    h3, _ = pipe.host_batch_at(5, 3, 4)
+    np.testing.assert_array_equal(h0, np.asarray(t1[:2]))
+    np.testing.assert_array_equal(h3, np.asarray(t1[6:]))
+    t9, _ = pipe.global_batch_at(9)
+    assert not np.array_equal(np.asarray(t1), np.asarray(t9))
+    assert int(np.asarray(t1).max()) < 1000

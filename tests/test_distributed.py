@@ -1,0 +1,131 @@
+"""Multi-device semantics: run in a subprocess with 8 host devices."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(code: str, n: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_distributed_scan_equals_brute_force():
+    out = run_with_devices(textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.core.caq import caq_encode
+        from repro.ivf import distributed_scan
+        from repro.ivf.index import brute_force_topk
+        rng = np.random.default_rng(0)
+        X = rng.standard_normal((512, 32)).astype(np.float32)
+        q = rng.standard_normal(32).astype(np.float32)
+        code = caq_encode(X, bits=8, rounds=3)
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        ids = jnp.arange(512, dtype=jnp.int32)
+        d, i = distributed_scan(mesh, ("data", "model"), code.codes,
+                                code.vmax, code.rescale, code.o_norm_sq,
+                                ids, jnp.asarray(q), 8, 10)
+        # single-shard reference: same math without the mesh
+        from repro.kernels.ref import ivf_scan_ref
+        dd = np.asarray(ivf_scan_ref(code.codes, code.vmax, code.rescale,
+                                     code.o_norm_sq, jnp.asarray(q), 8))
+        want = set(np.argsort(dd)[:10].tolist())
+        got = set(np.asarray(i).tolist())
+        print("OVERLAP", len(want & got))
+    """))
+    assert "OVERLAP 10" in out
+
+
+def test_compressed_mean_and_moe_parity():
+    out = run_with_devices(textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType, PartitionSpec as P
+        from jax import shard_map
+        from repro.train.grad_compress import compressed_mean
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(AxisType.Auto,))
+        g = jax.random.normal(jax.random.PRNGKey(0), (8, 3000))
+        fn = shard_map(lambda x: compressed_mean(x[0], "data", 8)[None],
+                       mesh=mesh, in_specs=(P("data"),),
+                       out_specs=P("data"), check_vma=False)
+        out = jax.jit(fn)(g)
+        ref = jnp.mean(g, axis=0)
+        err = float(jnp.max(jnp.abs(out[0] - ref))
+                    / (jnp.max(jnp.abs(ref)) + 1e-9))
+        print("ERR", err)
+
+        # MoE: sharded EP output == single-shard math
+        from repro.models import ModelConfig
+        from repro.models.moe import init_moe, moe_block
+        from repro.models.common import MeshAxes
+        cfg = ModelConfig(arch_id="m", family="moe", n_layers=1,
+                          d_model=32, n_heads=4, n_kv_heads=2, d_ff=16,
+                          vocab_size=64, n_experts=4, experts_per_token=2,
+                          capacity_factor=8.0)
+        mesh2 = jax.make_mesh((2, 4), ("data", "model"),
+                              axis_types=(AxisType.Auto,) * 2)
+        axes = MeshAxes(fsdp=("data",), tensor="model", tensor_size=4,
+                        fsdp_size=2)
+        params, _ = init_moe(jax.random.PRNGKey(1), cfg, axes)
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 8, 32),
+                              jnp.float32)
+        y_local = moe_block(params, cfg, x, axes, mesh=None)
+        with jax.set_mesh(mesh2):
+            y_dist = jax.jit(
+                lambda p, x: moe_block(p, cfg, x, axes, mesh=mesh2)
+            )(params, x)
+        diff = float(jnp.max(jnp.abs(y_local.astype(jnp.float32)
+                                     - y_dist.astype(jnp.float32))))
+        print("MOEDIFF", diff)
+    """))
+    lines = dict(l.split() for l in out.strip().splitlines())
+    assert float(lines["ERR"]) < 0.02
+    assert float(lines["MOEDIFF"]) < 2e-2
+
+
+def test_dp_train_step_with_compression_converges():
+    out = run_with_devices(textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import AxisType
+        from repro.models import ModelConfig, init_params
+        from repro.train import AdamWConfig, adamw_init
+        from repro.train.optimizer import adamw_update
+        from repro.train.grad_compress import make_dp_train_step
+        from repro.train.train_step import make_loss_fn
+        cfg = ModelConfig(arch_id="m", family="dense", n_layers=2,
+                          d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                          vocab_size=64, attn_q_chunk=8, attn_kv_chunk=8,
+                          loss_vocab_chunk=8, remat=False)
+        params, _ = init_params(jax.random.PRNGKey(0), cfg)
+        opt = AdamWConfig(lr=5e-3, warmup_steps=1, total_steps=40)
+        state = adamw_init(params, opt)
+        mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        loss_fn = make_loss_fn(cfg, axes=None or __import__(
+            "repro.models.common", fromlist=["MeshAxes"]).MeshAxes())
+        step = make_dp_train_step(
+            lambda p, t, l: loss_fn(p, t, l), mesh, "data",
+            lambda g, s, p: adamw_update(g, s, p, opt), bits=8)
+        ef = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (16, 16), 0, 64)
+        labels = jnp.roll(toks, -1, axis=1)
+        losses = []
+        for i in range(6):
+            params, state, ef, m = step(params, state, ef, toks, labels)
+            losses.append(float(m["loss"]))
+        print("L0", losses[0], "L5", losses[-1])
+        assert losses[-1] < losses[0]
+    """))
+    assert "L5" in out

@@ -1,0 +1,87 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kmeans import kmeans_fit
+from repro.core.saq import SAQConfig
+from repro.ivf import IVFIndex
+from repro.ivf.index import brute_force_topk
+from conftest import decaying_data
+
+
+@pytest.fixture(scope="module")
+def built():
+    x = decaying_data(4000, 48, alpha=0.7, seed=0)
+    idx = IVFIndex.build(
+        x, SAQConfig(avg_bits=4, rounds=3, align=8, max_bits=9),
+        n_clusters=24)
+    return x, idx
+
+
+def test_kmeans_reduces_inertia():
+    x = decaying_data(1000, 16, seed=1)
+    r1 = kmeans_fit(jnp.asarray(x), k=8, iters=1)
+    r20 = kmeans_fit(jnp.asarray(x), k=8, iters=20)
+    assert float(r20.inertia) < float(r1.inertia)
+    assert len(np.unique(np.asarray(r20.assignments))) > 4
+
+
+def test_ivf_recall(built):
+    x, idx = built
+    qs = decaying_data(8, 48, alpha=0.7, seed=50)
+    recalls = []
+    for i in range(qs.shape[0]):
+        gt, _ = brute_force_topk(jnp.asarray(x), jnp.asarray(qs[i]), 10)
+        ids, _ = idx.search(qs[i], k=10, nprobe=8)
+        recalls.append(len(set(np.asarray(gt).tolist())
+                           & set(np.asarray(ids).tolist())) / 10)
+    assert np.mean(recalls) >= 0.8, recalls
+
+
+def test_multistage_matches_full_and_prunes(built):
+    x, idx = built
+    qs = decaying_data(5, 48, alpha=0.7, seed=60)
+    for i in range(qs.shape[0]):
+        ids_f, _ = idx.search(qs[i], k=10, nprobe=8)
+        ids_m, _, stats = idx.search_multistage(qs[i], k=10, nprobe=8,
+                                                m=4.0)
+        overlap = len(set(np.asarray(ids_f).tolist())
+                      & set(np.asarray(ids_m).tolist()))
+        assert overlap >= 8, overlap
+        assert stats.bits_accessed < idx.plan.total_bits
+        assert 0.0 <= stats.pruned_frac <= 1.0
+
+
+def test_progressive_search(built):
+    x, idx = built
+    q = decaying_data(1, 48, alpha=0.7, seed=70)[0]
+    n_seg = len(idx.plan.stored_segments)
+    pb = [max(1, s.bits // 2) for s in idx.plan.stored_segments]
+    ids, dists = idx.search(q, k=10, nprobe=8, prefix_bits=pb)
+    gt, _ = brute_force_topk(jnp.asarray(x), jnp.asarray(q), 10)
+    overlap = len(set(np.asarray(gt).tolist())
+                  & set(np.asarray(ids).tolist()))
+    assert overlap >= 5
+
+
+def test_index_save_load_roundtrip(built, tmp_path):
+    from repro.ivf import load_index, save_index
+    x, idx = built
+    q = decaying_data(1, 48, alpha=0.7, seed=99)[0]
+    ids_a, d_a = idx.search(q, k=5, nprobe=8)
+    save_index(idx, str(tmp_path / "index"))
+    idx2 = load_index(str(tmp_path / "index"))
+    ids_b, d_b = idx2.search(q, k=5, nprobe=8)
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    np.testing.assert_allclose(np.asarray(d_a), np.asarray(d_b),
+                               rtol=1e-5)
+
+
+def test_search_batch(built):
+    x, idx = built
+    qs = decaying_data(4, 48, alpha=0.7, seed=77)
+    ids, dists = idx.search_batch(qs, k=5, nprobe=8)
+    assert ids.shape == (4, 5) and dists.shape == (4, 5)
+    for i in range(4):
+        a, _ = idx.search(qs[i], k=5, nprobe=8)
+        np.testing.assert_array_equal(np.asarray(ids[i]), np.asarray(a))

@@ -1,0 +1,106 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.caq import caq_encode
+from repro.core.lvq import lvq_symmetric_init
+from repro.kernels import ops, ref
+from conftest import decaying_data
+
+
+def _cosine(codes, o, vmax, bits):
+    delta = (2.0 * vmax) / (1 << bits)
+    x = delta[:, None] * (codes.astype(np.float32) + 0.5) - vmax[:, None]
+    num = (x * o).sum(-1)
+    den = np.sqrt((x * x).sum(-1) * (o * o).sum(-1)) + 1e-30
+    return num / den
+
+
+@pytest.mark.parametrize("n,d", [(16, 8), (100, 48), (257, 64), (33, 128)])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_caq_adjust_kernel_vs_oracle(n, d, bits):
+    o = decaying_data(n, d, seed=n + bits)
+    init = lvq_symmetric_init(o, bits)
+    ker = np.asarray(ops.caq_adjust(jnp.asarray(o), init.codes, init.vmax,
+                                    bits, 3))
+    orc = np.asarray(ref.caq_adjust_ref(jnp.asarray(o), init.codes,
+                                        init.vmax, bits, 3))
+    # identical up to fp tie-breaks on 1-ulp improvements; quality equal
+    agree = (ker == orc).mean()
+    assert agree >= 0.97, agree
+    vmax = np.asarray(init.vmax)
+    ck = _cosine(ker, o, vmax, bits)
+    co = _cosine(orc, o, vmax, bits)
+    assert (ck >= co - 1e-5).all()
+
+
+@pytest.mark.parametrize("n,d", [(64, 32), (500, 96), (129, 256)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_ivf_scan_kernel_vs_oracle(n, d, bits):
+    o = decaying_data(n, d, seed=n)
+    code = caq_encode(o, bits=bits, rounds=2)
+    q = decaying_data(1, d, seed=n + 1)[0]
+    ker = np.asarray(ops.ivf_scan(code.codes, code.vmax, code.rescale,
+                                  code.o_norm_sq, jnp.asarray(q), bits))
+    orc = np.asarray(ref.ivf_scan_ref(code.codes, code.vmax, code.rescale,
+                                      code.o_norm_sq, jnp.asarray(q), bits))
+    np.testing.assert_allclose(ker, orc, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,d", [(8, 16), (100, 64), (31, 512)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_fwht_kernel_vs_oracle(n, d, dtype):
+    x = np.random.default_rng(d).standard_normal((n, d)).astype(dtype)
+    ker = np.asarray(ops.fwht(jnp.asarray(x, jnp.float32)))
+    orc = np.asarray(ref.fwht_ref(jnp.asarray(x, jnp.float32)))
+    np.testing.assert_allclose(ker, orc, rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_backed_encode_matches_scan_mode():
+    o = decaying_data(60, 32, seed=21)
+    a = caq_encode(o, bits=4, rounds=3, mode="scan")
+    b = caq_encode(o, bits=4, rounds=3, mode="kernel")
+    np.testing.assert_array_equal(np.asarray(a.codes), np.asarray(b.codes))
+
+
+@pytest.mark.parametrize("b,s,h,hkv,hd", [(2, 64, 8, 4, 32),
+                                          (1, 128, 4, 4, 64),
+                                          (3, 96, 8, 2, 16)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_saq_attend_kernel_vs_oracle(b, s, h, hkv, hd, bits):
+    from repro.models import kvcache as kvc
+    rng = np.random.default_rng(b * s + bits)
+    k = rng.normal(size=(b, s, hkv, hd)).astype(np.float32)
+    v = rng.normal(size=(b, s, hkv, hd)).astype(np.float32)
+    q = rng.normal(size=(b, h, hd)).astype(np.float32)
+    kc, kvm, krs, vc, vvm = kvc.quantize_kv(jnp.asarray(k),
+                                            jnp.asarray(v), bits)
+    kc, vc = kvc.pack_codes(kc, bits), kvc.pack_codes(vc, bits)
+    pos = jnp.asarray(s * 3 // 4, jnp.int32)
+    got = np.asarray(ops.saq_attend(jnp.asarray(q), kc, kvm, krs, vc,
+                                    vvm, pos, bits))
+    want = np.asarray(ref.saq_attend_ref(jnp.asarray(q), kc, kvm, krs,
+                                         vc, vvm, pos, bits))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,d", [(10, 16), (100, 64), (33, 96)])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("rounds", [0, 3])
+def test_caq_encode_kernel_vs_oracle(n, d, bits, rounds):
+    o = decaying_data(n, d, seed=n * bits + rounds)
+    ck, fk = ops.caq_encode(jnp.asarray(o), bits, rounds)
+    cr, fr = ref.caq_encode_ref(jnp.asarray(o), bits, rounds)
+    agree = (np.asarray(ck) == np.asarray(cr)).mean()
+    assert agree >= 0.97, agree          # fp tie-breaks only
+    np.testing.assert_allclose(np.asarray(fk)[:, 0], np.asarray(fr)[:, 0],
+                               rtol=1e-5)                     # vmax exact
+    np.testing.assert_allclose(np.asarray(fk)[:, 3], np.asarray(fr)[:, 3],
+                               rtol=1e-4)                     # ||o||^2
+    # factor quality: kernel cosine >= oracle cosine - eps
+    cos_k = np.asarray(fk)[:, 1] / np.sqrt(
+        np.asarray(fk)[:, 2] * np.asarray(fk)[:, 3] + 1e-30)
+    cos_r = np.asarray(fr)[:, 1] / np.sqrt(
+        np.asarray(fr)[:, 2] * np.asarray(fr)[:, 3] + 1e-30)
+    assert (cos_k >= cos_r - 1e-4).all()

@@ -1,0 +1,83 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.caq import adjust_jacobi, adjust_scan, caq_encode, caq_prefix
+from repro.core.caq import estimate_dist_sq, estimate_ip
+from repro.core.lvq import lvq_encode, lvq_distance_sq, lvq_symmetric_init
+from conftest import decaying_data
+
+
+def test_lvq_roundtrip_bound():
+    x = np.random.default_rng(0).standard_normal((50, 32)).astype(np.float32)
+    code = lvq_encode(x, bits=6)
+    err = np.abs(np.asarray(code.decode()) - x)
+    step = np.asarray(code.step)
+    assert (err <= step[:, None] * 0.5 + 1e-5).all()
+
+
+def test_lvq_distance_estimator_consistent():
+    x = np.random.default_rng(1).standard_normal((40, 16)).astype(np.float32)
+    q = np.random.default_rng(2).standard_normal(16).astype(np.float32)
+    code = lvq_encode(x, bits=8)
+    est = np.asarray(lvq_distance_sq(code, jnp.asarray(q)))
+    ref = ((np.asarray(code.decode()) - q) ** 2).sum(-1)
+    np.testing.assert_allclose(est, ref, rtol=1e-3, atol=1e-3)
+
+
+def test_symmetric_grid_midpoints():
+    x = np.random.default_rng(3).standard_normal((20, 8)).astype(np.float32)
+    g = lvq_symmetric_init(x, bits=5)
+    dec = np.asarray(g.decode())
+    delta = np.asarray(g.delta)
+    assert (np.abs(dec - x) <= delta[:, None] * 0.5 + 1e-5).all()
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_adjust_improves_cosine(bits):
+    o = decaying_data(100, 48, seed=bits)
+    code0 = caq_encode(o, bits=bits, rounds=0)
+    code6 = caq_encode(o, bits=bits, rounds=6)
+    c0 = np.asarray(code0.cosine())
+    c6 = np.asarray(code6.cosine())
+    assert (c6 >= c0 - 1e-6).all()
+    assert c6.mean() > c0.mean()
+
+
+def test_jacobi_matches_scan_quality():
+    o = decaying_data(200, 32, seed=7)
+    cs = np.asarray(caq_encode(o, bits=4, rounds=6, mode="scan").cosine())
+    cj = np.asarray(caq_encode(o, bits=4, rounds=6, mode="jacobi").cosine())
+    assert cj.mean() > cs.mean() - 5e-4       # same quality class
+
+
+def test_prefix_is_valid_code():
+    o = decaying_data(50, 24, seed=9)
+    full = caq_encode(o, bits=8, rounds=4)
+    pre = caq_prefix(full, 3)
+    assert pre.bits == 3
+    assert int(np.asarray(pre.codes).max()) < 8
+    np.testing.assert_array_equal(np.asarray(pre.codes),
+                                  np.asarray(full.codes) >> 5)
+
+
+def test_estimator_tracks_true_distance():
+    o = decaying_data(500, 64, seed=11)
+    q = decaying_data(1, 64, seed=13)[0]
+    code = caq_encode(o, bits=8, rounds=4)
+    est = np.asarray(estimate_dist_sq(code, jnp.asarray(q)))
+    true = ((o - q) ** 2).sum(-1)
+    rel = np.abs(est - true) / np.maximum(true, 1e-9)
+    assert rel.mean() < 0.01
+
+
+def test_estimator_scale_invariance():
+    # Eq 5: scaling x_bar does not change the estimate -> prefix with
+    # reused factors must track the same inner products
+    o = decaying_data(100, 32, seed=17)
+    q = decaying_data(1, 32, seed=19)[0]
+    code = caq_encode(o, bits=8, rounds=4)
+    ip8 = np.asarray(estimate_ip(code, jnp.asarray(q)))
+    true_ip = o @ q
+    assert np.abs(ip8 - true_ip).mean() < np.abs(true_ip).mean() * 0.05

@@ -1,0 +1,73 @@
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.plan import plan_error, search_plan
+from repro.core.types import QuantPlan, SegmentSpec
+
+
+def brute_force_best(variances, quota, align, max_bits):
+    d = len(variances)
+    bounds = list(range(0, d, align)) + [d]
+    bounds = sorted(set(bounds))
+    best = (np.inf, None)
+    positions = bounds[1:-1]
+    for r in range(len(positions) + 1):
+        for cuts in itertools.combinations(positions, r):
+            edges = [0] + list(cuts) + [d]
+            segs = [(edges[i], edges[i + 1]) for i in range(len(edges) - 1)]
+            for bits in itertools.product(range(max_bits + 1),
+                                          repeat=len(segs)):
+                cost = sum(b * (e - s) for (s, e), b in zip(segs, bits))
+                if cost > quota:
+                    continue
+                plan = QuantPlan(d, tuple(
+                    SegmentSpec(s, e, b) for (s, e), b in zip(segs, bits)))
+                err = plan_error(plan, variances)
+                if err < best[0]:
+                    best = (err, plan)
+    return best
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_dp_matches_brute_force(seed):
+    r = np.random.default_rng(seed)
+    d, align, max_bits = 8, 2, 3
+    variances = np.sort(r.uniform(0.01, 1.0, d))[::-1].copy()
+    quota = 2 * d
+    plan = search_plan(variances, quota, align=align, max_bits=max_bits)
+    err = plan_error(plan, variances)
+    best_err, _ = brute_force_best(variances, quota, align, max_bits)
+    assert err <= best_err * 1.001 + 1e-12
+    assert plan.total_bits <= quota
+
+
+def test_quota_respected():
+    v = (np.arange(1, 65) ** -0.8)[::-1].copy()
+    for avg in [0.5, 2, 4, 9]:
+        plan = search_plan(v, int(avg * 64), align=8, max_bits=12)
+        assert plan.total_bits <= int(avg * 64)
+
+
+def test_flat_spectrum_single_segment():
+    v = np.ones(64)
+    plan = search_plan(v, 4 * 64, align=8, max_bits=8)
+    # uniform spectrum: one segment at uniform bits is optimal (paper §4.2)
+    assert len(plan.segments) == 1
+    assert plan.segments[0].bits == 4
+
+
+def test_decaying_spectrum_allocates_more_to_leading():
+    v = (np.arange(1, 129, dtype=np.float64) ** -1.5)
+    plan = search_plan(v, 4 * 128, align=16, max_bits=12)
+    bits = [s.bits for s in plan.segments]
+    assert bits == sorted(bits, reverse=True)
+    assert bits[0] > bits[-1]
+
+
+def test_plan_validation():
+    with np.testing.assert_raises(ValueError):
+        QuantPlan(10, (SegmentSpec(0, 4, 2), SegmentSpec(5, 10, 2)))
+    with np.testing.assert_raises(ValueError):
+        QuantPlan(10, (SegmentSpec(0, 4, 2),))

@@ -1,0 +1,107 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.caq import caq_encode, caq_prefix
+from repro.core.lvq import lvq_symmetric_init
+from repro.core.plan import plan_error, search_plan
+from repro.core.rotation import fwht
+
+finite_f32 = st.floats(-1e3, 1e3, allow_nan=False, allow_infinity=False,
+                       width=32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 24), st.integers(1, 8),
+       st.integers(0, 2 ** 31 - 1))
+def test_symmetric_grid_roundtrip_bound(n, d, bits, seed):
+    x = np.random.default_rng(seed).uniform(-10, 10, (n, d)) \
+        .astype(np.float32)
+    g = lvq_symmetric_init(x, bits)
+    err = np.abs(np.asarray(g.decode()) - x)
+    delta = np.asarray(g.delta)
+    assert (err <= delta[:, None] * 0.5 + 1e-4).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 10), st.integers(4, 16), st.integers(2, 6),
+       st.integers(0, 2 ** 31 - 1))
+def test_adjustment_never_reduces_cosine(n, d, bits, seed):
+    x = np.random.default_rng(seed).standard_normal((n, d)) \
+        .astype(np.float32)
+    c0 = np.asarray(caq_encode(x, bits=bits, rounds=0).cosine())
+    c4 = np.asarray(caq_encode(x, bits=bits, rounds=4).cosine())
+    assert (c4 >= c0 - 1e-5).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 7), st.integers(0, 2 ** 31 - 1))
+def test_prefix_shift_identity(b, seed):
+    x = np.random.default_rng(seed).standard_normal((6, 12)) \
+        .astype(np.float32)
+    full = caq_encode(x, bits=8, rounds=2)
+    pre = caq_prefix(full, b)
+    np.testing.assert_array_equal(
+        np.asarray(pre.codes), np.asarray(full.codes) >> (8 - b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 32), st.floats(0.0, 2.0), st.integers(1, 10),
+       st.integers(0, 2 ** 31 - 1))
+def test_plan_respects_quota_and_coverage(d, alpha, avg_bits, seed):
+    v = (np.arange(1, d + 1, dtype=np.float64) ** -alpha)
+    rng = np.random.default_rng(seed)
+    v = v * rng.uniform(0.5, 2.0, d)
+    v = np.sort(v)[::-1].copy()
+    quota = avg_bits * d
+    plan = search_plan(v, quota, align=max(1, d // 4), max_bits=12)
+    assert plan.total_bits <= quota
+    assert plan.segments[0].start == 0
+    assert plan.segments[-1].stop == d
+    assert plan_error(plan, v) >= 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([4, 8, 16, 32, 64]), st.integers(1, 6),
+       st.integers(0, 2 ** 31 - 1))
+def test_fwht_preserves_norm(d, n, seed):
+    x = np.random.default_rng(seed).standard_normal((n, d)) \
+        .astype(np.float32)
+    y = np.asarray(fwht(jnp.asarray(x))) / np.sqrt(d)
+    np.testing.assert_allclose((y ** 2).sum(-1), (x ** 2).sum(-1),
+                               rtol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(2, 16), st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_roundtrip(n, half_d, seed):
+    from repro.models.kvcache import pack_codes, unpack_codes
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 16, (n, half_d * 2)), jnp.uint8)
+    packed = pack_codes(codes, 4)
+    assert packed.shape[-1] == half_d
+    np.testing.assert_array_equal(np.asarray(unpack_codes(packed, 4)),
+                                  np.asarray(codes))
+    # bits=8 passthrough
+    np.testing.assert_array_equal(np.asarray(pack_codes(codes, 8)),
+                                  np.asarray(codes))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(4, 32), st.integers(1, 8),
+       st.integers(0, 2 ** 31 - 1))
+def test_optimizer_moment_quantization_roundtrip(n, d, bits_pow,
+                                                 seed):
+    from repro.train.optimizer import _q_decode, _q_encode
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)) * 10, jnp.float32)
+    q = _q_encode(x, 8)
+    back = _q_decode(q, 8)
+    assert back.shape == x.shape
+    # blockwise midpoint grid: error bounded by delta/2 per block
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    vmax = np.asarray(q.vmax)
+    # every element's error <= its block's delta (loose: delta = 2vmax/256)
+    assert err.max() <= vmax.max() * 2 / 256 + 1e-5

@@ -1,0 +1,53 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rotation import (PCA, DenseRotation, FWHTRotation, fwht,
+                                 random_orthonormal)
+from conftest import decaying_data
+
+
+def test_random_orthonormal():
+    r = np.asarray(random_orthonormal(jax.random.PRNGKey(0), 32))
+    np.testing.assert_allclose(r @ r.T, np.eye(32), atol=1e-5)
+
+
+def test_dense_rotation_preserves_ip():
+    rot = DenseRotation(24, seed=1)
+    x = np.random.default_rng(0).standard_normal((5, 24)).astype(np.float32)
+    y = np.asarray(rot.apply(x))
+    np.testing.assert_allclose(x @ x.T, y @ y.T, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(rot.inverse(y)), x, atol=1e-4)
+
+
+def test_fwht_orthonormal_and_involution():
+    x = np.random.default_rng(1).standard_normal((3, 64)).astype(np.float32)
+    y = np.asarray(fwht(jnp.asarray(x))) / 8.0     # normalized
+    np.testing.assert_allclose((y ** 2).sum(-1), (x ** 2).sum(-1), rtol=1e-4)
+    # H/sqrt(D) is an involution
+    z = np.asarray(fwht(jnp.asarray(y))) / 8.0
+    np.testing.assert_allclose(z, x, atol=1e-4)
+
+
+def test_fwht_rotation_padding():
+    rot = FWHTRotation(48, seed=0)            # pads to 64
+    x = np.random.default_rng(2).standard_normal((4, 48)).astype(np.float32)
+    y = np.asarray(rot.apply(jnp.asarray(x)))
+    assert y.shape == (4, 64)
+    np.testing.assert_allclose((y ** 2).sum(-1), (x ** 2).sum(-1), rtol=1e-4)
+    back = np.asarray(rot.inverse(jnp.asarray(y)))
+    np.testing.assert_allclose(back, x, atol=1e-4)
+
+
+def test_pca_orders_variance():
+    x = decaying_data(2000, 24, alpha=1.0)
+    pca = PCA.fit(jnp.asarray(x))
+    v = np.asarray(pca.variances)
+    assert (np.diff(v) <= 1e-5).all()
+    proj = np.asarray(pca.apply(jnp.asarray(x)))
+    emp = proj.var(axis=0)
+    np.testing.assert_allclose(emp, v, rtol=0.05, atol=1e-4)
+    # distances preserved
+    d0 = ((x[0] - x[1]) ** 2).sum()
+    d1 = ((proj[0] - proj[1]) ** 2).sum()
+    np.testing.assert_allclose(d0, d1, rtol=1e-3)

@@ -1,0 +1,82 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.saq import SAQ, SAQConfig, fit_caq, fit_saq
+from conftest import decaying_data
+
+
+@pytest.fixture(scope="module")
+def data():
+    return decaying_data(1500, 64, alpha=0.8, seed=0)
+
+
+@pytest.fixture(scope="module")
+def queries():
+    return decaying_data(6, 64, alpha=0.8, seed=100)
+
+
+def rel_err(est, true):
+    return np.abs(est - true) / np.maximum(true, 1e-9)
+
+
+def test_saq_beats_caq(data, queries):
+    errs = {}
+    for name, q in [("caq", fit_caq(data, bits=4, rounds=4)),
+                    ("saq", fit_saq(data, avg_bits=4, rounds=4, align=8,
+                                    max_bits=10))]:
+        qds = q.encode(data)
+        e = []
+        for i in range(queries.shape[0]):
+            qc = q.preprocess_query(jnp.asarray(queries[i]))
+            est = np.asarray(q.estimate_dist_sq(qds, qc))
+            true = ((data - queries[i]) ** 2).sum(-1)
+            e.append(rel_err(est, true).mean())
+        errs[name] = np.mean(e)
+    assert errs["saq"] < errs["caq"] * 0.8, errs
+
+
+def test_saq_decode_roundtrip(data):
+    saq = fit_saq(data[:200], avg_bits=8, rounds=4, align=8, max_bits=12)
+    qds = saq.encode(data[:200])
+    rec = np.asarray(saq.unproject(saq.decode(qds)))
+    rel = np.abs(rec - data[:200]).mean() / np.abs(data[:200]).mean()
+    assert rel < 0.02
+
+
+def test_multistage_bound_is_lower_bound(data, queries):
+    saq = fit_saq(data, avg_bits=4, rounds=4, align=8, max_bits=10)
+    qds = saq.encode(data)
+    q = jnp.asarray(queries[0])
+    qc = saq.preprocess_query(q)
+    est_full = np.asarray(saq.estimate_dist_sq(qds, qc))
+    n_seg = len(qds.segments)
+    for stage in range(n_seg):
+        lb = np.asarray(saq.dist_bounds(qds, qc, stage, m=4.0))
+        # Chebyshev bound (m=4 -> >=93.75% per segment); allow small
+        # violation count
+        frac_viol = float((lb > est_full + 1e-5).mean())
+        assert frac_viol < 0.05, (stage, frac_viol)
+
+
+def test_progressive_prefix_errors_close_to_native(data, queries):
+    saq = fit_caq(data, bits=8, rounds=4)
+    qds8 = saq.encode(data)
+    q = jnp.asarray(queries[0])
+    qc = saq.preprocess_query(q)
+    true = ((data - queries[0]) ** 2).sum(-1)
+    e_prefix = rel_err(np.asarray(
+        saq.estimate_dist_sq(qds8, qc, prefix_bits=[4])), true).mean()
+    caq4 = fit_caq(data, bits=4, rounds=4)
+    qds4 = caq4.encode(data)
+    qc4 = caq4.preprocess_query(q)
+    e_native = rel_err(np.asarray(
+        caq4.estimate_dist_sq(qds4, qc4)), true).mean()
+    assert e_prefix < e_native * 2.5      # Fig 12: close, slightly larger
+
+
+def test_flat_spectrum_falls_back_to_caq():
+    r = np.random.default_rng(5)
+    flat = r.standard_normal((800, 32)).astype(np.float32)
+    saq = fit_saq(flat, avg_bits=4, rounds=2, align=8, max_bits=8)
+    assert len(saq.plan.segments) <= 2

@@ -1,0 +1,83 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig, init_params
+from repro.serve import ServeConfig, generate
+from repro.train import AdamWConfig, adamw_init, make_train_step
+from repro.train.train_step import chunked_cross_entropy
+from repro.models import forward
+
+
+def mini_cfg(**kw):
+    base = dict(arch_id="mini", family="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=100,
+                attn_q_chunk=8, attn_kv_chunk=8, loss_vocab_chunk=8)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_loss_decreases_fp32_and_quantized_moments():
+    cfg = mini_cfg()
+    key = jax.random.PRNGKey(0)
+    toks = jax.random.randint(key, (4, 16), 0, 100)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    for qb in (0, 8):
+        params, _ = init_params(key, cfg)
+        opt = AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=50,
+                          quant_bits=qb)
+        state = adamw_init(params, opt)
+        step = jax.jit(make_train_step(cfg, opt))
+        losses = []
+        for _ in range(6):
+            params, state, m = step(params, state, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] * 0.7, (qb, losses)
+
+
+def test_microbatching_matches_full_batch_loss():
+    cfg = mini_cfg(remat=False)
+    key = jax.random.PRNGKey(0)
+    params, _ = init_params(key, cfg)
+    opt = AdamWConfig(lr=0.0, weight_decay=0.0, warmup_steps=1,
+                      total_steps=10)
+    toks = jax.random.randint(key, (4, 16), 0, 100)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    s1 = jax.jit(make_train_step(cfg, opt, microbatches=1))
+    s2 = jax.jit(make_train_step(cfg, opt, microbatches=2))
+    _, _, m1 = s1(params, adamw_init(params, opt), batch)
+    _, _, m2 = s2(params, adamw_init(params, opt), batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-3)
+
+
+def test_chunked_ce_matches_unchunked():
+    cfg = mini_cfg()
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 100)
+    hidden, _ = forward(params, cfg, toks)
+    labels = jnp.roll(toks, -1, axis=1)
+    l_full = chunked_cross_entropy(params, cfg, hidden, labels, chunk=16)
+    l_chunk = chunked_cross_entropy(params, cfg, hidden, labels, chunk=4)
+    np.testing.assert_allclose(float(l_full), float(l_chunk), rtol=1e-5)
+
+
+def test_generate_quantized_cache_agrees():
+    cfg = mini_cfg()
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 100)
+    out_bf = generate(params, cfg, ServeConfig(max_seq=32, kv_bits=0),
+                      prompt, 5)
+    out_q8 = generate(params, cfg, ServeConfig(max_seq=32, kv_bits=8),
+                      prompt, 5)
+    assert float((out_bf == out_q8).mean()) >= 0.8
+
+
+def test_generate_sampling_modes():
+    cfg = mini_cfg()
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, 100)
+    sv = ServeConfig(max_seq=32, kv_bits=0, temperature=1.0, top_k=10)
+    out = generate(params, cfg, sv, prompt, 4, seed=3)
+    assert out.shape == (1, 4)
+    assert int(out.max()) < 100
