@@ -1,0 +1,63 @@
+"""Batched serving throughput: queries/sec of the IVF index across batch
+sizes, per-query loop vs the single jit'd device-resident batch path.
+
+The packed-layout refactor turns ``search_batch`` into ONE jit'd call
+(probe selection + transform + fused multi-segment scan + top-k); this
+benchmark measures what that buys at serving batch sizes {1, 8, 64, 256}.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.saq import SAQConfig
+from repro.ivf import IVFIndex
+from .common import bench_datasets, emit, save_json
+
+BATCH_SIZES = (1, 8, 64, 256)
+
+
+def _timed(fn, repeats: int = 3) -> float:
+    fn()          # warmup (jit compile)
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(fast: bool = True) -> dict:
+    data = bench_datasets(fast)
+    x, queries = data["deep"]
+    n = min(len(x), 6000 if fast else len(x))
+    x = x[:n]
+    idx = IVFIndex.build(
+        x, SAQConfig(avg_bits=4, rounds=3, align=64, max_bits=12),
+        n_clusters=32)
+    k, nprobe = 10, 8
+    rng = np.random.default_rng(0)
+    rows = []
+    for bs in BATCH_SIZES:
+        if fast and bs > 64:
+            continue
+        qb = queries[rng.integers(0, len(queries), bs)].astype(np.float32)
+
+        t_batch = _timed(lambda: idx.search_batch(qb, k=k, nprobe=nprobe))
+
+        def loop():
+            outs = [idx.search(qb[i], k=k, nprobe=nprobe)
+                    for i in range(bs)]
+            return [o[0] for o in outs]
+
+        t_loop = _timed(loop)
+        row = {"dataset": "deep", "batch": bs,
+               "qps_batched": round(bs / t_batch, 1),
+               "qps_loop": round(bs / t_loop, 1),
+               "speedup": round(t_loop / max(t_batch, 1e-9), 2)}
+        rows.append(row)
+        emit("batch_qps", row)
+    save_json("batch_qps", rows)
+    return {"batch_qps": rows}

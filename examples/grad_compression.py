@@ -15,7 +15,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh, set_mesh
 
 from repro.models import ModelConfig, MeshAxes
 from repro.models.model import init_params
@@ -34,7 +34,7 @@ def main():
     params, _ = init_params(jax.random.PRNGKey(0), cfg)
     opt = AdamWConfig(lr=5e-3, warmup_steps=2, total_steps=40)
     state = adamw_init(params, opt)
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
     loss_fn = make_loss_fn(cfg, MeshAxes())
     step = make_dp_train_step(
         lambda p, t, l: loss_fn(p, t, l), mesh, "data",

@@ -1,0 +1,96 @@
+"""Version-compatibility shims for the jax surface this repo touches.
+
+The repo targets the modern ``jax.shard_map`` API (keyword
+``check_vma``); older jax releases ship ``shard_map`` under
+``jax.experimental.shard_map`` with the keyword spelled ``check_rep``.
+Import :func:`shard_map` from here everywhere so both work.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+try:  # jax >= 0.6: public API
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x: experimental API, check_rep keyword
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: Any = None, **kwargs):
+    """``jax.shard_map`` with the replication-check flag normalized.
+
+    ``check_vma`` maps onto whichever keyword (``check_vma`` /
+    ``check_rep``) the installed jax understands; ``None`` keeps the
+    library default.
+    """
+    if check_vma is not None:
+        kwargs[_CHECK_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` fallback: on old jax, count participants
+    with a psum of 1 over the named axis."""
+    import jax
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+try:  # jax >= 0.6
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:
+    import enum
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Placeholder for ``jax.sharding.AxisType`` on old jax, where
+        every mesh axis behaves as Auto."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(axis_shapes, axis_names, axis_types=None):
+    """``jax.make_mesh`` accepting ``axis_types`` on every jax version
+    (silently dropped where unsupported — old jax is Auto-only)."""
+    import inspect
+
+    import jax
+
+    if axis_types is not None and \
+            "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=axis_types)
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+class _MeshScope:
+    """Context-manager view of an already-entered legacy mesh scope."""
+
+    def __init__(self, mesh):
+        self._mesh = mesh
+
+    def __enter__(self):
+        return self._mesh
+
+    def __exit__(self, *exc):
+        return self._mesh.__exit__(*exc)
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` fallback: on old jax, enter the legacy ``Mesh``
+    resource scope (which is what resolves bare PartitionSpecs there).
+
+    Usable both as a statement (sets for the rest of the program) and as
+    ``with set_mesh(m): ...`` (scoped).
+    """
+    import jax
+
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    mesh.__enter__()
+    return _MeshScope(mesh)

@@ -1,7 +1,8 @@
 """Paper core: SAQ vector quantization (code adjustment + dimension
 segmentation) and the reproduced baselines."""
-from .types import (QuantPlan, QuantizedDataset, SegmentCode,  # noqa: F401
-                    SegmentSpec, bits_dtype)
+from .types import (PackedCodes, PackedLayout, QuantPlan,  # noqa: F401
+                    QuantizedDataset, SegmentCode, SegmentSpec,
+                    bits_dtype, packed_layout, safe_rescale)
 from .rotation import (PCA, DenseRotation, FWHTRotation, fwht,  # noqa: F401
                        make_rotation, random_orthonormal)
 from .lvq import (LVQCode, SymmetricGrid, lvq_encode,  # noqa: F401

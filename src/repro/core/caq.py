@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from .lvq import lvq_symmetric_init
-from .types import bits_dtype
+from .types import bits_dtype, safe_rescale
 
 
 class CAQCode(NamedTuple):
@@ -59,9 +59,7 @@ class CAQCode(NamedTuple):
     @property
     def rescale(self) -> jnp.ndarray:
         """||o||^2 / <x_bar, o> — the estimator factor of Eq (5)."""
-        safe = jnp.where(jnp.abs(self.ip_xo) > 1e-30, self.ip_xo, 1.0)
-        return jnp.where(jnp.abs(self.ip_xo) > 1e-30,
-                         self.o_norm_sq / safe, 0.0)
+        return safe_rescale(self.o_norm_sq, self.ip_xo)
 
     def cosine(self) -> jnp.ndarray:
         """cos(x_bar, o) — the quantity Algorithm 1 maximizes."""

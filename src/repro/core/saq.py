@@ -11,8 +11,16 @@ per-segment unbiased inner-product estimates (Eq 13 per segment). The
 multi-stage estimator (§4.3) scans segments leading-first and prunes with
 the Chebyshev bound Est_v(Seg) = m * sigma_Seg (Eq 20/21).
 
-Everything after `fit` is jit-safe: the plan is static metadata, all
-transforms are arrays, and the per-segment loop is a static unroll.
+Storage is the unified packed layout (:class:`repro.core.types.PackedCodes`):
+one contiguous ``(N, d_stored)`` code buffer (all stored segments'
+columns concatenated) plus one ``(N, S, 3)`` factor buffer. All stored
+segments' per-segment transforms are assembled into a single
+``(dim, d_stored)`` matrix, so encode/query rotation is ONE matmul, and
+the estimator computes every segment's partial dot product in one
+contraction against a segment-masked query (see ``PackedLayout``).
+
+Everything after `fit` is jit-safe: the plan/layout is static metadata
+and all transforms are arrays.
 """
 from __future__ import annotations
 
@@ -23,11 +31,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import caq as caq_mod
-from .caq import CAQCode, caq_encode
+from .caq import caq_encode
 from .plan import fractional_quota, search_plan
 from .rotation import PCA, random_orthonormal
-from .types import QuantPlan, QuantizedDataset, SegmentCode, SegmentSpec
+from .types import (FACTOR_RESCALE, FACTOR_VMAX, N_FACTORS, PackedCodes,
+                    PackedLayout, QuantPlan, packed_layout)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,14 +54,18 @@ class SAQConfig:
 
 
 class QueryCache(NamedTuple):
-    """Per-query precomputation shared across all candidates (§3.2, §4.3)."""
+    """Per-query precomputation shared across all candidates (§3.2, §4.3).
 
-    q_rot: Tuple[jnp.ndarray, ...]     # rotated query slice per stored segment
-    q_sum: jnp.ndarray                 # (S,) sum of rotated slice
-    q_sq: jnp.ndarray                  # (S,) ||q_seg||^2
-    q_norm_sq: jnp.ndarray             # () total ||q'||^2 across ALL dims
-    sigma_seg: jnp.ndarray             # (S,) sqrt(Var<o_seg,q_seg>) (Eq 20)
-    sigma_dropped: jnp.ndarray         # () bound term for dropped dims
+    All fields support an optional leading query-batch axis ``(NQ, ...)``
+    — :meth:`SAQ.preprocess_queries` builds the batched form in one shot.
+    """
+
+    q_rot: jnp.ndarray                 # (..., d_stored) packed rotated query
+    q_sum: jnp.ndarray                 # (..., S) per-segment sum of q_rot
+    q_sq: jnp.ndarray                  # (..., S) per-segment ||q_seg||^2
+    q_norm_sq: jnp.ndarray             # (...,) total ||q'||^2 across ALL dims
+    sigma_seg: jnp.ndarray             # (..., S) sqrt(Var<o_seg,q_seg>) (Eq 20)
+    sigma_dropped: jnp.ndarray         # (...,) bound term for dropped dims
 
 
 class SAQ:
@@ -68,6 +80,26 @@ class SAQ:
         self.plan = plan
         self.rotations = rotations        # aligned with plan.stored_segments
         self.variances = variances        # per-dim sigma_i^2 in code basis
+        self._packed_rot = None           # (dim, d_stored), built lazily
+
+    @property
+    def layout(self) -> PackedLayout:
+        return packed_layout(self.plan)
+
+    @property
+    def packed_rot(self) -> jnp.ndarray:
+        """(dim, d_stored) block matrix assembling every stored segment's
+        rotation: ``proj @ packed_rot`` rotates + packs all segments in
+        one matmul. Dropped segments contribute no columns."""
+        if self._packed_rot is None:
+            lay = self.layout
+            m = np.zeros((self.plan.dim, lay.d_stored), np.float32)
+            for s, rot in enumerate(self.rotations):
+                lo, hi = lay.col_bounds(s)
+                m[lay.seg_starts[s]:lay.seg_stops[s], lo:hi] = \
+                    np.asarray(rot).T
+            self._packed_rot = jnp.asarray(m)
+        return self._packed_rot
 
     # ------------------------------------------------------------------ fit
     @classmethod
@@ -102,107 +134,132 @@ class SAQ:
         x = jnp.asarray(x, jnp.float32)
         return self.pca.apply(x) if self.pca is not None else x
 
-    def encode(self, data: jnp.ndarray) -> QuantizedDataset:
-        proj = self.project(data)
-        o_norm_sq_total = jnp.sum(proj * proj, axis=-1)
-        segs = []
-        for rot, spec in zip(self.rotations, self.plan.stored_segments):
-            o_s = proj[:, spec.start:spec.stop] @ rot.T
-            code = caq_encode(o_s, bits=spec.bits, rounds=self.config.rounds,
-                              mode=self.config.mode)
-            segs.append(SegmentCode(
-                codes=code.codes, vmax=code.vmax, o_norm_sq=code.o_norm_sq,
-                ip_xo=code.ip_xo, x_norm_sq=code.x_norm_sq,
-                bits=spec.bits, start=spec.start, stop=spec.stop))
-        return QuantizedDataset(segments=tuple(segs),
-                                o_norm_sq_total=o_norm_sq_total,
-                                plan=self.plan)
+    def rotate_packed(self, proj: jnp.ndarray) -> jnp.ndarray:
+        """PCA-basis rows -> packed per-segment-rotated rows
+        ``(..., d_stored)``."""
+        return proj @ self.packed_rot
 
-    def decode(self, qds: QuantizedDataset) -> jnp.ndarray:
+    def encode(self, data: jnp.ndarray) -> PackedCodes:
+        proj = self.project(data)
+        n = proj.shape[0]
+        lay = self.layout
+        o_norm_sq_total = jnp.sum(proj * proj, axis=-1)
+        codes = jnp.zeros((n, lay.d_stored), lay.dtype)
+        factors = jnp.zeros((n, lay.n_segments, N_FACTORS), jnp.float32)
+        rotated = self.rotate_packed(proj)
+        for s in range(lay.n_segments):
+            lo, hi = lay.col_bounds(s)
+            code = caq_encode(rotated[:, lo:hi], bits=lay.seg_bits[s],
+                              rounds=self.config.rounds,
+                              mode=self.config.mode)
+            codes = codes.at[:, lo:hi].set(code.codes.astype(lay.dtype))
+            fac = jnp.stack([code.vmax, code.rescale, code.o_norm_sq],
+                            axis=-1)
+            factors = factors.at[:, s, :].set(fac)
+        return PackedCodes(codes=codes, factors=factors,
+                           o_norm_sq_total=o_norm_sq_total, plan=self.plan)
+
+    def decode(self, qds: PackedCodes) -> jnp.ndarray:
         """Reconstruct (approximately) the PCA-projected vectors.
 
         Dropped segments decode to 0 (their mean in the centered basis).
         Each stored segment is decoded on its grid, rescaled by the
-        estimator factor (unbiased direction-consistent reconstruction),
-        and rotated back.
+        stored estimator factor (unbiased direction-consistent
+        reconstruction), and rotated back — all segments at once through
+        the packed rotation.
         """
-        n = qds.n
-        out = jnp.zeros((n, self.plan.dim), jnp.float32)
-        for rot, seg in zip(self.rotations, qds.segments):
-            delta = (2.0 * seg.vmax) / (1 << seg.bits)
-            x = delta[:, None] * (seg.codes.astype(jnp.float32) + 0.5) \
-                - seg.vmax[:, None]
-            safe = jnp.where(jnp.abs(seg.ip_xo) > 1e-30, seg.ip_xo, 1.0)
-            rescale = jnp.where(jnp.abs(seg.ip_xo) > 1e-30,
-                                seg.o_norm_sq / safe, 0.0)
-            x = x * rescale[:, None]
-            out = out.at[:, seg.start:seg.stop].set(x @ rot)
-        return out
+        lay = self.layout
+        codes = qds.codes.astype(jnp.float32)
+        x = jnp.zeros_like(codes)
+        for s in range(lay.n_segments):
+            lo, hi = lay.col_bounds(s)
+            vmax = qds.factors[:, s, FACTOR_VMAX]
+            delta = (2.0 * vmax) / (1 << lay.seg_bits[s])
+            xs = delta[:, None] * (codes[:, lo:hi] + 0.5) - vmax[:, None]
+            x = x.at[:, lo:hi].set(
+                xs * qds.factors[:, s, FACTOR_RESCALE][:, None])
+        # packed_rot columns are orthonormal per block, so its transpose
+        # inverts the packed rotation (dropped dims decode to 0).
+        return x @ self.packed_rot.T
 
     def unproject(self, proj: jnp.ndarray) -> jnp.ndarray:
         return self.pca.inverse(proj) if self.pca is not None else proj
 
     # ---------------------------------------------------------------- query
-    def preprocess_query(self, q: jnp.ndarray) -> QueryCache:
-        qp = self.project(q[None, :])[0]
-        q_rot, q_sum, q_sq, sig = [], [], [], []
+    def preprocess_queries(self, qs: jnp.ndarray) -> QueryCache:
+        """Batched query preprocessing: ``(NQ, dim)`` raw queries -> one
+        QueryCache with a leading NQ axis, fully device-resident."""
+        qp = self.project(jnp.asarray(qs, jnp.float32))
+        lay = self.layout
+        onehot = jnp.asarray(lay.seg_onehot())          # (d_stored, S)
+        q_rot = self.rotate_packed(qp)                  # (NQ, d_stored)
+        q_sum = q_rot @ onehot                          # (NQ, S)
+        q_sq = (q_rot * q_rot) @ onehot                 # (NQ, S)
+        # Eq (20): Var<o_seg, q_seg> = sum q_i^2 sigma_i^2 — invariant
+        # under the per-segment rotation; computed in the PCA basis.
         var = self.variances
-        for rot, spec in zip(self.rotations, self.plan.stored_segments):
-            qs = qp[spec.start:spec.stop] @ rot.T
-            q_rot.append(qs)
-            q_sum.append(jnp.sum(qs))
-            q_sq.append(jnp.sum(qs * qs))
-            # Eq (20): Var<o_seg, q_seg> = sum q_i^2 sigma_i^2 — invariant
-            # under the per-segment rotation; computed in the PCA basis.
-            qseg = qp[spec.start:spec.stop]
-            sig.append(jnp.sum(qseg * qseg * var[spec.start:spec.stop]))
-        dropped = [s for s in self.plan.segments if s.bits == 0]
-        sig_drop = sum((jnp.sum(qp[s.start:s.stop] ** 2
-                                * var[s.start:s.stop]) for s in dropped),
-                       jnp.float32(0.0))
-        q_norm_sq = jnp.sum(qp * qp)
+        wq = qp * qp * var[None, :]
+        sig, drop_mask = [], np.ones((self.plan.dim,), np.float32)
+        for s in range(lay.n_segments):
+            lo, hi = lay.seg_starts[s], lay.seg_stops[s]
+            sig.append(jnp.sum(wq[:, lo:hi], axis=-1))
+            drop_mask[lo:hi] = 0.0
+        sigma_seg = (jnp.sqrt(jnp.stack(sig, axis=-1)) if sig
+                     else jnp.zeros(qp.shape[:1] + (0,)))
+        sig_drop = jnp.sqrt(wq @ jnp.asarray(drop_mask))
         return QueryCache(
-            q_rot=tuple(q_rot),
-            q_sum=jnp.stack(q_sum) if q_sum else jnp.zeros((0,)),
-            q_sq=jnp.stack(q_sq) if q_sq else jnp.zeros((0,)),
-            q_norm_sq=q_norm_sq,
-            sigma_seg=jnp.sqrt(jnp.stack(sig)) if sig else jnp.zeros((0,)),
-            sigma_dropped=jnp.sqrt(sig_drop))
+            q_rot=q_rot, q_sum=q_sum, q_sq=q_sq,
+            q_norm_sq=jnp.sum(qp * qp, axis=-1),
+            sigma_seg=sigma_seg, sigma_dropped=sig_drop)
+
+    def preprocess_query(self, q: jnp.ndarray) -> QueryCache:
+        """Single-query convenience wrapper over
+        :meth:`preprocess_queries`."""
+        qc = self.preprocess_queries(jnp.asarray(q, jnp.float32)[None, :])
+        return QueryCache(*(x[0] for x in qc))
 
     # ------------------------------------------------------------ estimators
-    def segment_ip(self, qds: QuantizedDataset, qc: QueryCache,
+    def segment_ip(self, qds: PackedCodes, qc: QueryCache,
                    prefix_bits: Optional[Sequence[int]] = None) -> jnp.ndarray:
-        """Per-segment unbiased estimates of <o_seg, q_seg>: (N, S).
+        """Per-segment unbiased estimates of <o_seg, q_seg>: (N, S) —
+        or (NQ, N, S) for a batched QueryCache.
+
+        One fused contraction over the packed code buffer: the query is
+        masked per segment (``q[..., :, None] * onehot``) so a single
+        matmul yields every segment's raw dot product; the per-segment
+        affine correction (Eq 13) + rescale (Eq 5) then applies via the
+        factor buffer.
 
         prefix_bits: optional per-segment progressive precision b_s <= B_s
         (uses the first b_s bits of each code, §3.2).
         """
-        cols = []
-        for i, seg in enumerate(qds.segments):
-            codes, bits = seg.codes, seg.bits
-            if prefix_bits is not None and prefix_bits[i] < seg.bits:
-                b = prefix_bits[i]
-                codes = (codes >> (seg.bits - b))
-                bits = b
-            delta = (2.0 * seg.vmax) / (1 << bits)
-            ip_xq = delta * (codes.astype(jnp.float32) @ qc.q_rot[i]) \
-                + qc.q_sum[i] * (delta * 0.5 - seg.vmax)
-            safe = jnp.where(jnp.abs(seg.ip_xo) > 1e-30, seg.ip_xo, 1.0)
-            rescale = jnp.where(jnp.abs(seg.ip_xo) > 1e-30,
-                                seg.o_norm_sq / safe, 0.0)
-            cols.append(ip_xq * rescale)
-        if not cols:
-            return jnp.zeros((qds.n, 0))
-        return jnp.stack(cols, axis=-1)
+        lay = qds.layout
+        if lay.n_segments == 0:
+            return jnp.zeros(qc.q_rot.shape[:-1] + (qds.n, 0))
+        codes = qds.codes.astype(jnp.float32)
+        if prefix_bits is not None:
+            codes = jnp.floor(
+                codes * jnp.asarray(lay.col_scale(prefix_bits)))
+        onehot = jnp.asarray(lay.seg_onehot())              # (d_stored, S)
+        qmask = qc.q_rot[..., :, None] * onehot             # (..., Ds, S)
+        raw = jnp.einsum("nd,...ds->...ns", codes, qmask)   # (..., N, S)
+        pow2 = jnp.asarray(
+            [1 << b for b in lay.effective_bits(prefix_bits)], jnp.float32)
+        vmax = qds.factors[..., FACTOR_VMAX]                # (N, S)
+        delta = (2.0 * vmax) / pow2
+        ip_xq = delta * raw \
+            + qc.q_sum[..., None, :] * (0.5 * delta - vmax)
+        return ip_xq * qds.factors[..., FACTOR_RESCALE]
 
-    def estimate_dist_sq(self, qds: QuantizedDataset, qc: QueryCache,
+    def estimate_dist_sq(self, qds: PackedCodes, qc: QueryCache,
                          prefix_bits: Optional[Sequence[int]] = None
                          ) -> jnp.ndarray:
-        """||o - q||^2 estimate for every encoded vector: (N,)."""
+        """||o - q||^2 estimate for every encoded vector: (N,) — or
+        (NQ, N) for a batched QueryCache."""
         ip = jnp.sum(self.segment_ip(qds, qc, prefix_bits), axis=-1)
-        return qds.o_norm_sq_total + qc.q_norm_sq - 2.0 * ip
+        return qds.o_norm_sq_total + qc.q_norm_sq[..., None] - 2.0 * ip
 
-    def dist_bounds(self, qds: QuantizedDataset, qc: QueryCache,
+    def dist_bounds(self, qds: PackedCodes, qc: QueryCache,
                     n_stages: int, m: float = 4.0) -> jnp.ndarray:
         """Multi-stage lower bound after processing the first ``n_stages``
         segments (§4.3): unprocessed segments are credited their Chebyshev
@@ -210,11 +267,13 @@ class SAQ:
 
             dist^2 >= ||o||^2 + ||q||^2 - 2 (sum_done est + m * sum_rest sigma)
         """
-        s_total = len(qds.segments)
         ip = self.segment_ip(qds, qc)
-        done = jnp.sum(ip[:, :n_stages], axis=-1) if n_stages else 0.0
-        rest = (jnp.sum(qc.sigma_seg[n_stages:]) + qc.sigma_dropped) * m
-        return qds.o_norm_sq_total + qc.q_norm_sq - 2.0 * (done + rest)
+        done = (jnp.sum(ip[..., :n_stages], axis=-1) if n_stages
+                else jnp.zeros(ip.shape[:-1]))
+        rest = (jnp.sum(qc.sigma_seg[..., n_stages:], axis=-1)
+                + qc.sigma_dropped) * m
+        return qds.o_norm_sq_total \
+            + (qc.q_norm_sq - 2.0 * rest)[..., None] - 2.0 * done
 
 
 # ---------------------------------------------------------------------------

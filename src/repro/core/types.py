@@ -6,6 +6,7 @@ plans and factors flow through jit/pjit/shard_map unchanged.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
@@ -133,22 +134,198 @@ class SegmentCode:
         return (2.0 * self.vmax) / (1 << self.bits)
 
 
-@pytree_dataclass
-class QuantizedDataset:
-    """A SAQ-quantized vector dataset.
+# Factor-buffer column layout (per stored segment): PackedCodes.factors
+# is (..., S, N_FACTORS) with these indices along the last axis.
+FACTOR_VMAX = 0       # per-vector grid half-range
+FACTOR_RESCALE = 1    # ||o_seg||^2 / <x_bar, o_seg>  (Eq 5 estimator factor)
+FACTOR_ONORM = 2      # ||o_seg||^2 (pre-quantization, post-rotation)
+N_FACTORS = 3
 
-    transforms: the (PCA x rotation) pipeline parameters live in
-    ``Transform`` objects (see saq.py); stored here opaquely as pytrees.
+
+@dataclasses.dataclass(frozen=True)
+class PackedLayout:
+    """Static column layout of a packed code buffer, derived from a plan.
+
+    Stored segments are concatenated along the last axis of one
+    contiguous code buffer of width ``d_stored``; ``col_offsets[s]`` is
+    the first column of stored segment ``s`` (len S+1, prefix sums of
+    segment widths). Dropped (0-bit) segments own no columns.
+    """
+
+    col_offsets: Tuple[int, ...]     # len S+1, offsets into [0, d_stored]
+    seg_bits: Tuple[int, ...]        # len S, bits of each stored segment
+    seg_starts: Tuple[int, ...]      # len S, source dim of each segment
+    seg_stops: Tuple[int, ...]
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.seg_bits)
+
+    @property
+    def d_stored(self) -> int:
+        return self.col_offsets[-1]
+
+    @property
+    def dtype(self):
+        """Buffer dtype policy: one dtype wide enough for every segment."""
+        return bits_dtype(max(self.seg_bits, default=1))
+
+    def col_bounds(self, s: int) -> Tuple[int, int]:
+        return self.col_offsets[s], self.col_offsets[s + 1]
+
+    def seg_onehot(self) -> np.ndarray:
+        return make_seg_onehot(self.col_offsets)
+
+    def col_scale(self, prefix_bits: Optional[Sequence[int]] = None
+                  ) -> np.ndarray:
+        return make_col_scale(self.col_offsets, self.seg_bits, prefix_bits)
+
+    def effective_bits(self, prefix_bits: Optional[Sequence[int]] = None
+                       ) -> Tuple[int, ...]:
+        return make_effective_bits(self.seg_bits, prefix_bits)
+
+
+def make_seg_onehot(col_offsets: Sequence[int]) -> np.ndarray:
+    """(d_stored, S) f32 segment-membership matrix.
+
+    ``codes @ (q[:, None] * onehot)`` computes all S per-segment
+    partial dot products in ONE matmul — the fused-scan primitive.
+    """
+    d_stored, n_seg = col_offsets[-1], len(col_offsets) - 1
+    m = np.zeros((d_stored, n_seg), np.float32)
+    for s in range(n_seg):
+        m[col_offsets[s]:col_offsets[s + 1], s] = 1.0
+    return m
+
+
+def make_col_scale(col_offsets: Sequence[int], seg_bits: Sequence[int],
+                   prefix_bits: Optional[Sequence[int]] = None
+                   ) -> np.ndarray:
+    """(d_stored,) f32 per-column code prescale for progressive reads.
+
+    ``floor(codes * col_scale)`` equals the per-segment prefix shift
+    ``codes >> (B_s - b_s)`` (exact in f32: codes < 2^16, power-of-2
+    scale). All-ones when no truncation is requested.
+    """
+    scale = np.ones((col_offsets[-1],), np.float32)
+    if prefix_bits is not None:
+        for s, b in enumerate(seg_bits):
+            eff = min(prefix_bits[s], b)
+            scale[col_offsets[s]:col_offsets[s + 1]] = 2.0 ** -(b - eff)
+    return scale
+
+
+def make_effective_bits(seg_bits: Sequence[int],
+                        prefix_bits: Optional[Sequence[int]] = None
+                        ) -> Tuple[int, ...]:
+    if prefix_bits is None:
+        return tuple(seg_bits)
+    return tuple(min(p, b) for p, b in zip(prefix_bits, seg_bits))
+
+
+def packed_layout(plan: "QuantPlan") -> PackedLayout:
+    """The (cached) packed-storage layout of a plan's stored segments."""
+    return _packed_layout(tuple(
+        (s.start, s.stop, s.bits) for s in plan.stored_segments))
+
+
+@functools.lru_cache(maxsize=None)
+def _packed_layout(stored: Tuple[Tuple[int, int, int], ...]) -> PackedLayout:
+    offs = [0]
+    for start, stop, _ in stored:
+        offs.append(offs[-1] + (stop - start))
+    return PackedLayout(
+        col_offsets=tuple(offs),
+        seg_bits=tuple(b for _, _, b in stored),
+        seg_starts=tuple(a for a, _, _ in stored),
+        seg_stops=tuple(b for _, b, _ in stored))
+
+
+@pytree_dataclass
+class PackedCodes:
+    """Unified packed storage for a SAQ-quantized vector set.
+
+    One contiguous code buffer plus one factor buffer — the layout every
+    consumer (estimators, IVF lists, Pallas scan, persistence, sharded
+    scan) shares:
+
+    codes:   (..., d_stored) uint8/uint16 (``PackedLayout.dtype``); the
+             stored segments' columns concatenated per ``packed_layout``.
+    factors: (..., S, N_FACTORS) f32; per-segment [vmax, rescale,
+             o_norm_sq] (see FACTOR_* indices).
+    o_norm_sq_total: (...,) total ||o||^2 over ALL dims (incl. dropped).
+    plan:    static QuantPlan.
+
+    Leading axes are free: ``(N, ...)`` flat datasets and ``(C, L, ...)``
+    padded IVF lists use the same container.
     """
 
     STATIC_FIELDS = ("plan",)
-    segments: Any = None            # tuple[SegmentCode]
-    o_norm_sq_total: Any = None     # (N,) total ||o||^2 over ALL dims (incl. dropped)
-    plan: Any = None                # QuantPlan (static)
+    codes: Any = None
+    factors: Any = None
+    o_norm_sq_total: Any = None
+    plan: Any = None
+
+    @property
+    def layout(self) -> PackedLayout:
+        return packed_layout(self.plan)
 
     @property
     def n(self) -> int:
-        return self.segments[0].n if self.segments else 0
+        return self.codes.shape[0] if self.codes is not None else 0
+
+    @property
+    def vmax(self) -> jnp.ndarray:          # (..., S)
+        return self.factors[..., FACTOR_VMAX]
+
+    @property
+    def rescale(self) -> jnp.ndarray:       # (..., S)
+        return self.factors[..., FACTOR_RESCALE]
+
+    @property
+    def o_norm_sq(self) -> jnp.ndarray:     # (..., S)
+        return self.factors[..., FACTOR_ONORM]
+
+    def seg_codes(self, s: int) -> jnp.ndarray:
+        lo, hi = self.layout.col_bounds(s)
+        return self.codes[..., lo:hi]
+
+    @property
+    def segments(self) -> Tuple["SegmentCode", ...]:
+        """Per-segment views (compat / inspection; storage stays packed).
+
+        ``ip_xo`` is derived from the stored rescale (``o_norm / rescale``
+        where defined); ``x_norm_sq`` is not materialized.
+        """
+        out = []
+        lay = self.layout
+        for s in range(lay.n_segments):
+            o_n = self.factors[..., s, FACTOR_ONORM]
+            rs = self.factors[..., s, FACTOR_RESCALE]
+            ip_xo = jnp.where(jnp.abs(rs) > 1e-30, o_n / jnp.where(
+                jnp.abs(rs) > 1e-30, rs, 1.0), 0.0)
+            out.append(SegmentCode(
+                codes=self.seg_codes(s),
+                vmax=self.factors[..., s, FACTOR_VMAX],
+                o_norm_sq=o_n, ip_xo=ip_xo, x_norm_sq=None,
+                bits=lay.seg_bits[s], start=lay.seg_starts[s],
+                stop=lay.seg_stops[s]))
+        return tuple(out)
+
+
+# Backwards-compatible name: the quantized-dataset container IS the
+# packed layout now.
+QuantizedDataset = PackedCodes
+
+
+def safe_rescale(o_norm_sq: jnp.ndarray, ip_xo: jnp.ndarray,
+                 eps: float = 1e-30) -> jnp.ndarray:
+    """The Eq (5) estimator factor ``||o||^2 / <x_bar, o>`` with the
+    degenerate-denominator convention shared by every consumer: a
+    (near-)zero inner product yields factor 0, not inf/nan.
+    """
+    ok = jnp.abs(ip_xo) > eps
+    return jnp.where(ok, o_norm_sq / jnp.where(ok, ip_xo, 1.0), 0.0)
 
 
 def bits_dtype(bits: int):

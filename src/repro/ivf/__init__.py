@@ -1,5 +1,5 @@
 """IVF index substrate: k-means clustering, SAQ-coded inverted lists,
 single-host and shard_map-distributed search."""
 from .index import IVFIndex, SearchStats  # noqa: F401
-from .distributed import distributed_scan  # noqa: F401
+from .distributed import distributed_scan, distributed_scan_packed  # noqa: F401
 from .persist import load_index, save_index  # noqa: F401

@@ -5,6 +5,18 @@ This is the multi-pod serving path for the vector index: with rows over
 ('pod', 'data') every chip scans its shard (MXU dot over the code block),
 and only k candidates per shard cross the ICI — collective bytes are
 O(devices * k), independent of database size.
+
+Two entry points (both memoize the jitted shard_map program per static
+(mesh, axes, layout, k) key, so repeated serving calls hit the compile
+cache):
+
+* ``distributed_scan``        — single segment, single query (legacy
+  flat layout; kept for ablations).
+* ``distributed_scan_packed`` — the packed layout (``PackedCodes``) with
+  a ``(NQ, d_stored)`` query batch: every shard runs ONE fused
+  multi-segment multi-query scan (kernel semantics of
+  ``repro.kernels.ref.saq_scan_ref``), local top-k per query, then one
+  all-gather of k candidates per (shard, query).
 """
 from __future__ import annotations
 
@@ -13,8 +25,9 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
 
 
 def _local_scan(codes, vmax, rescale, o_norm_sq, ids, q, bits: int, k: int):
@@ -32,14 +45,8 @@ def _local_scan(codes, vmax, rescale, o_norm_sq, ids, q, bits: int, k: int):
     return -neg, ids[idx]
 
 
-def distributed_scan(mesh: Mesh, axis, codes: jnp.ndarray, vmax: jnp.ndarray,
-                     rescale: jnp.ndarray, o_norm_sq: jnp.ndarray,
-                     ids: jnp.ndarray, q: jnp.ndarray, bits: int, k: int
-                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Global top-k over row-sharded codes. ``axis`` may be a name or a
-    tuple of names (e.g. ('pod', 'data')). Returns replicated (dists, ids).
-    """
-    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+@functools.lru_cache(maxsize=None)
+def _scan_fn(mesh: Mesh, axes: Tuple[str, ...], bits: int, k: int):
     row = P(axes)
 
     def body(codes, vmax, rescale, o_norm_sq, ids, q):
@@ -51,9 +58,71 @@ def distributed_scan(mesh: Mesh, axis, codes: jnp.ndarray, vmax: jnp.ndarray,
         neg, idx = jax.lax.top_k(-d, k)
         return -neg, i[idx]
 
-    fn = shard_map(
+    return jax.jit(shard_map(
         body, mesh=mesh,
         in_specs=(row, row, row, row, row, P()),
         out_specs=(P(), P()),
-        check_vma=False)
-    return jax.jit(fn)(codes, vmax, rescale, o_norm_sq, ids, q)
+        check_vma=False))
+
+
+def distributed_scan(mesh: Mesh, axis, codes: jnp.ndarray, vmax: jnp.ndarray,
+                     rescale: jnp.ndarray, o_norm_sq: jnp.ndarray,
+                     ids: jnp.ndarray, q: jnp.ndarray, bits: int, k: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Global top-k over row-sharded codes. ``axis`` may be a name or a
+    tuple of names (e.g. ('pod', 'data')). Returns replicated (dists, ids).
+    """
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    fn = _scan_fn(mesh, axes, bits, k)
+    return fn(codes, vmax, rescale, o_norm_sq, ids, q)
+
+
+@functools.lru_cache(maxsize=None)
+def _packed_scan_fn(mesh: Mesh, axes: Tuple[str, ...],
+                    col_offsets: Tuple[int, ...],
+                    seg_bits: Tuple[int, ...], k: int):
+    from repro.kernels.ref import saq_scan_ref
+
+    row = P(axes)
+
+    def body(pk, ids, q, qn):
+        dist = saq_scan_ref(pk.codes, pk.factors, pk.o_norm_sq_total, q,
+                            col_offsets, seg_bits,
+                            q_norm_sq=qn)                    # (NQ, n_loc)
+        dist = jnp.where(ids[None, :] >= 0, dist, jnp.inf)
+        neg, idx = jax.lax.top_k(-dist, k)                   # (NQ, k)
+        d, i = -neg, ids[idx]
+        # gather k candidates per query from every shard along all axes
+        for ax in axes:
+            d = jax.lax.all_gather(d, ax, axis=1, tiled=True)
+            i = jax.lax.all_gather(i, ax, axis=1, tiled=True)
+        neg, idx = jax.lax.top_k(-d, k)
+        return -neg, jnp.take_along_axis(i, idx, axis=1)
+
+    # a single row spec is a pytree prefix: it row-shards every leaf of
+    # the PackedCodes container together (the plan is static aux data)
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(row, row, P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False))
+
+
+def distributed_scan_packed(mesh: Mesh, axis, packed, ids: jnp.ndarray,
+                            queries: jnp.ndarray, k: int,
+                            q_norm_sq: jnp.ndarray = None
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Global per-query top-k over row-sharded packed codes.
+
+    packed:  flat ``PackedCodes`` (codes (N, Ds), factors (N, S, 3));
+             the static plan rides along as pytree aux data.
+    queries: (NQ, d_stored) packed rotated queries, replicated.
+    Returns replicated (dists, ids), each (NQ, k).
+    """
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    lay = packed.layout
+    queries = jnp.asarray(queries, jnp.float32)
+    if q_norm_sq is None:
+        q_norm_sq = jnp.sum(queries * queries, axis=-1)
+    fn = _packed_scan_fn(mesh, axes, lay.col_offsets, lay.seg_bits, k)
+    return fn(packed, ids, queries, q_norm_sq)

@@ -2,10 +2,12 @@
 
 Build: k-means clusters the raw vectors; each vector is encoded by SAQ as
 its *residual* against the cluster centroid (the RaBitQ/SAQ reference-
-vector convention, Eq 2/9). Storage is a padded (C, L) layout — cluster
-lists padded to the max list length — so every probe batch is a dense
-gather + dense scan (the SPMD-friendly shape; see DESIGN.md §3 on why
-branchy per-candidate early exit is replaced by staged masking).
+vector convention, Eq 2/9). Storage is the unified packed layout
+(:class:`repro.core.types.PackedCodes`) with a padded ``(C, L, ...)``
+leading shape — cluster lists padded to the max list length — so every
+probe batch is a dense gather + ONE fused multi-segment contraction (the
+SPMD-friendly shape; see DESIGN.md §3 on why branchy per-candidate early
+exit is replaced by staged masking).
 
 Query: all transforms are linear, so the rotated *residual* query for
 cluster j is ``rot(f(q)) - rot(g_j)`` with both terms precomputed — the
@@ -13,11 +15,17 @@ per-cluster cost is O(D), not O(D^2) (the paper's trick of reusing one
 rotation across clusters).
 
 Search paths:
-  * ``search``            — full estimator (Eq 13 per segment, summed)
+  * ``search`` / ``search_batch`` — full estimator (Eq 13 per segment,
+    summed). ``search_batch`` is ONE jit'd device-resident call for the
+    whole ``(NQ, D)`` batch: probe selection, query transform, gather,
+    fused multi-segment scan and top-k all happen on device with no
+    Python-level per-query loop (the serving-throughput path).
   * ``search_multistage`` — §4.3: clusters scanned in ranking order,
     segments leading-first, candidates pruned with the Chebyshev lower
     bound Est_v = m * sigma_Seg against the running top-k threshold.
-    Returns exact bits-accessed accounting (Fig 11).
+    Returns exact bits-accessed accounting (Fig 11). Adaptive by design:
+    the cluster loop stays on the host (the pruning threshold is data-
+    dependent), but each cluster's staged scan is a jit'd packed scan.
 """
 from __future__ import annotations
 
@@ -31,7 +39,9 @@ import numpy as np
 
 from repro.core.kmeans import kmeans_fit, pairwise_sq_dists
 from repro.core.saq import SAQ, SAQConfig
-from repro.core.types import QuantPlan
+from repro.core.types import (FACTOR_RESCALE, FACTOR_VMAX, PackedCodes,
+                              QuantPlan, make_col_scale, make_effective_bits,
+                              make_seg_onehot)
 
 
 class SearchStats(NamedTuple):
@@ -46,12 +56,9 @@ class IVFIndex:
     centroids: jnp.ndarray            # (C, D) raw space
     ids: jnp.ndarray                  # (C, L) int32, -1 padding
     counts: jnp.ndarray               # (C,)
-    seg_codes: Tuple[jnp.ndarray, ...]   # per stored seg (C, L, w)
-    seg_vmax: Tuple[jnp.ndarray, ...]    # per stored seg (C, L)
-    seg_rescale: Tuple[jnp.ndarray, ...]  # (C, L)
-    o_norm_total: jnp.ndarray         # (C, L) ||residual||^2 (projected)
+    packed: PackedCodes               # codes (C, L, Ds), factors (C, L, S, 3)
     g_proj: jnp.ndarray               # (C, D) projected centroids (no mean)
-    g_rot: Tuple[jnp.ndarray, ...]    # per stored seg (C, w) rotated g
+    g_rot: jnp.ndarray                # (C, Ds) packed rotated centroids
 
     # ------------------------------------------------------------------
     @property
@@ -78,7 +85,7 @@ class IVFIndex:
         residuals = data - centroids[km.assignments]
 
         saq = SAQ.fit(residuals, config)
-        qds = saq.encode(residuals)
+        flat = saq.encode(residuals)      # PackedCodes, (N, ...) leading
 
         counts = np.bincount(assign, minlength=n_clusters)
         l_max = max(1, int(counts.max()))
@@ -99,31 +106,24 @@ class IVFIndex:
                 out[c, : len(rows)] = x[rows]
             return jnp.asarray(out)
 
-        seg_codes, seg_vmax, seg_rescale, g_rot = [], [], [], []
+        packed = PackedCodes(
+            codes=scatter(flat.codes),
+            factors=scatter(flat.factors),
+            o_norm_sq_total=scatter(flat.o_norm_sq_total),
+            plan=saq.plan)
+
         # g_proj is the *linear* part only: proj(q - c_j) = f(q) - c_j @ C^T
         # (the PCA mean cancels because f already subtracts it once).
         if saq.pca is not None:
             g_proj = centroids @ saq.pca.components.T
         else:
             g_proj = centroids
-        for k_seg, (rot, seg) in enumerate(
-                zip(saq.rotations, qds.segments)):
-            seg_codes.append(scatter(seg.codes))
-            seg_vmax.append(scatter(seg.vmax))
-            safe = np.asarray(seg.ip_xo)
-            rs = np.where(np.abs(safe) > 1e-30,
-                          np.asarray(seg.o_norm_sq) / np.where(
-                              np.abs(safe) > 1e-30, safe, 1.0), 0.0)
-            seg_rescale.append(scatter(rs.astype(np.float32)))
-            g_rot.append(g_proj[:, seg.start:seg.stop] @ rot.T)
+        g_rot = saq.rotate_packed(g_proj)
 
         return cls(
             saq=saq, centroids=centroids,
             ids=jnp.asarray(ids), counts=jnp.asarray(counts),
-            seg_codes=tuple(seg_codes), seg_vmax=tuple(seg_vmax),
-            seg_rescale=tuple(seg_rescale),
-            o_norm_total=scatter(qds.o_norm_sq_total),
-            g_proj=jnp.asarray(g_proj), g_rot=tuple(g_rot))
+            packed=packed, g_proj=jnp.asarray(g_proj), g_rot=g_rot)
 
     # ------------------------------------------------------------------
     def _query_parts(self, q: jnp.ndarray):
@@ -134,10 +134,7 @@ class IVFIndex:
             fq = (q - saq.pca.mean) @ saq.pca.components.T
         else:
             fq = q
-        fq_rot = tuple(
-            fq[s.start:s.stop] @ rot.T
-            for rot, s in zip(saq.rotations, saq.plan.stored_segments))
-        return fq, fq_rot
+        return fq, saq.rotate_packed(fq)
 
     def _probe(self, q: jnp.ndarray, nprobe: int) -> jnp.ndarray:
         cd = pairwise_sq_dists(q[None, :], self.centroids)[0]
@@ -148,23 +145,32 @@ class IVFIndex:
                prefix_bits: Optional[Sequence[int]] = None
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Full-estimator search. Returns (ids, est_dists) of length k."""
-        q = jnp.asarray(q, jnp.float32)
-        probes = self._probe(q, nprobe)
-        dists, ids = _search_full(self, q, probes, k, prefix_bits)
-        return ids, dists
+        ids, dists = self.search_batch(
+            jnp.asarray(q, jnp.float32)[None, :], k=k, nprobe=nprobe,
+            prefix_bits=prefix_bits)
+        return ids[0], dists[0]
 
-    def search_batch(self, queries: jnp.ndarray, k: int, nprobe: int
+    def search_batch(self, queries: jnp.ndarray, k: int, nprobe: int,
+                     prefix_bits: Optional[Sequence[int]] = None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Full-estimator search for a batch of queries (vmap over the
-        jit'd scan — the serving-throughput path). Returns (ids, dists)
-        of shape (NQ, k)."""
+        """Batched full-estimator search: ONE jit'd call for the whole
+        query batch (probe selection + transform + fused packed scan +
+        top-k, all device-resident). Returns (ids, dists) of shape
+        (NQ, k)."""
         queries = jnp.asarray(queries, jnp.float32)
-        ids, dists = [], []
-        for i in range(queries.shape[0]):   # per-query probes differ
-            r_ids, r_d = self.search(queries[i], k=k, nprobe=nprobe)
-            ids.append(r_ids)
-            dists.append(r_d)
-        return jnp.stack(ids), jnp.stack(dists)
+        saq = self.saq
+        lay = self.packed.layout
+        pca_mean = saq.pca.mean if saq.pca is not None else None
+        pca_comp = saq.pca.components if saq.pca is not None else None
+        dists, ids = _search_batch_impl(
+            queries, self.centroids, pca_mean, pca_comp, saq.packed_rot,
+            self.packed.codes, self.packed.factors,
+            self.packed.o_norm_sq_total, self.g_proj, self.g_rot, self.ids,
+            col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
+            prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
+                         else None),
+            k=k, nprobe=nprobe)
+        return ids, dists
 
     # ------------------------------------------------------------------
     def search_multistage(self, q: jnp.ndarray, k: int, nprobe: int,
@@ -182,9 +188,7 @@ class IVFIndex:
         q = jnp.asarray(q, jnp.float32)
         probes = np.asarray(self._probe(q, nprobe))
         fq, fq_rot = self._query_parts(q)
-        segs = self.saq.plan.stored_segments
-        var = self.saq.variances
-        dropped = [s for s in self.saq.plan.segments if s.bits == 0]
+        n_seg = self.packed.layout.n_segments
 
         best_d = jnp.full((k,), jnp.inf)
         best_i = jnp.full((k,), -1, jnp.int32)
@@ -199,7 +203,7 @@ class IVFIndex:
                 continue
             tau = float(best_d[k - 1])
             out = _scan_cluster_staged(
-                self, c, fq, fq_rot, tau, m, tuple(range(len(segs))))
+                self, c, fq, fq_rot, tau, m, tuple(range(n_seg)))
             est, lb_alive, bits_vec = out
             est = np.asarray(est)[:n_val]
             alive = np.asarray(lb_alive)[:n_val]
@@ -220,62 +224,89 @@ class IVFIndex:
 
 
 # ---------------------------------------------------------------------------
-# jit'd work functions (hashable static self via id-keyed closure cache)
+# jit'd work functions
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit,
-                   static_argnames=("seg_bits", "k", "prefix_bits", "n_seg"))
-def _search_full_impl(seg_codes, seg_vmax, seg_rescale, o_norm_total, g_proj,
-                      g_rot, ids, fq, fq_rot, probes, seg_bits, k,
-                      prefix_bits, n_seg):
+def _fused_probe_scan(codes, factors, o_norm, g_proj, g_rot, ids,
+                      fq, fq_rot, probes, onehot, colscale, pow2):
+    """One query's probe scan over packed (C, L, ...) storage.
+
+    The per-probe residual query is masked per segment so EVERY
+    segment's raw dot product comes out of one einsum over the packed
+    code block; Eq 13 affine corrections + Eq 5 rescales apply from the
+    gathered factor buffer.
+    """
     probesi = probes.astype(jnp.int32)
-    o_norm = o_norm_total[probesi]                      # (P, L)
-    gq = g_proj[probesi]                                # (P, D)
-    q_res_norm = jnp.sum((fq[None, :] - gq) ** 2, axis=-1)   # (P,)
-    ip = jnp.zeros_like(o_norm)
-    for s in range(n_seg):
-        bits = seg_bits[s]
-        codes = seg_codes[s][probesi].astype(jnp.float32)    # (P, L, w)
-        vmax = seg_vmax[s][probesi]                          # (P, L)
-        rescale = seg_rescale[s][probesi]
-        qres = fq_rot[s][None, :] - g_rot[s][probesi]        # (P, w)
-        if prefix_bits is not None and prefix_bits[s] < bits:
-            shift = bits - prefix_bits[s]
-            codes = jnp.floor(codes / (1 << shift))
-            bits = prefix_bits[s]
-        delta = (2.0 * vmax) / (1 << bits)
-        q_sum = jnp.sum(qres, axis=-1)                       # (P,)
-        ip_cq = jnp.einsum("plw,pw->pl", codes, qres)
-        ip_xq = delta * ip_cq + q_sum[:, None] * (0.5 * delta - vmax)
-        ip = ip + ip_xq * rescale
-    dist = o_norm + q_res_norm[:, None] - 2.0 * ip           # (P, L)
-    pid = ids[probesi]                                       # (P, L)
+    codes_p = codes[probesi].astype(jnp.float32)            # (P, L, Ds)
+    if colscale is not None:
+        codes_p = jnp.floor(codes_p * colscale)
+    fac_p = factors[probesi]                                # (P, L, S, 3)
+    qres = fq_rot[None, :] - g_rot[probesi]                 # (P, Ds)
+    qmask = qres[:, :, None] * onehot[None, :, :]           # (P, Ds, S)
+    raw = jnp.einsum("pld,pds->pls", codes_p, qmask)        # fused dot
+    vmax = fac_p[..., FACTOR_VMAX]                          # (P, L, S)
+    rescale = fac_p[..., FACTOR_RESCALE]
+    delta = (2.0 * vmax) / pow2
+    q_sum = qres @ onehot                                   # (P, S)
+    ip_xq = delta * raw + q_sum[:, None, :] * (0.5 * delta - vmax)
+    ip = jnp.sum(ip_xq * rescale, axis=-1)                  # (P, L)
+    q_res_norm = jnp.sum((fq[None, :] - g_proj[probesi]) ** 2, axis=-1)
+    dist = o_norm[probesi] + q_res_norm[:, None] - 2.0 * ip
+    pid = ids[probesi]                                      # (P, L)
     dist = jnp.where(pid >= 0, dist, jnp.inf)
-    flat_d, flat_i = dist.reshape(-1), pid.reshape(-1)
-    neg_top, idx = jax.lax.top_k(-flat_d, k)
-    return -neg_top, flat_i[idx]
-
-
-def _search_full(index: IVFIndex, q, probes, k, prefix_bits):
-    fq, fq_rot = index._query_parts(q)
-    seg_bits = tuple(s.bits for s in index.saq.plan.stored_segments)
-    return _search_full_impl(
-        index.seg_codes, index.seg_vmax, index.seg_rescale,
-        index.o_norm_total, index.g_proj, index.g_rot, index.ids,
-        fq, fq_rot, probes, seg_bits, k,
-        tuple(prefix_bits) if prefix_bits is not None else None,
-        len(seg_bits))
+    return dist.reshape(-1), pid.reshape(-1)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("seg_bits", "seg_ids", "seg_bounds"))
-def _scan_cluster_staged_impl(seg_codes_c, seg_vmax_c, seg_rescale_c,
-                              o_norm_c, gq_c, g_rot_c, var_segs, var_drop,
-                              fq, fq_rot, tau, m, seg_bits, seg_ids,
-                              seg_bounds):
-    """One cluster, staged (§4.3). Returns (est, alive, bits_accessed)."""
+                   static_argnames=("col_offsets", "seg_bits", "prefix_bits",
+                                    "k", "nprobe"))
+def _search_batch_impl(queries, centroids, pca_mean, pca_comp, packed_rot,
+                       codes, factors, o_norm, g_proj, g_rot, ids,
+                       col_offsets, seg_bits, prefix_bits, k, nprobe):
+    """End-to-end batched search: (NQ, D) raw queries -> (NQ, k)."""
+    onehot = jnp.asarray(make_seg_onehot(col_offsets))
+    eff_bits = make_effective_bits(seg_bits, prefix_bits)
+    colscale = (None if prefix_bits is None else
+                jnp.asarray(make_col_scale(col_offsets, seg_bits,
+                                           prefix_bits)))
+    pow2 = jnp.asarray([1 << b for b in eff_bits], jnp.float32)
+
+    # probe selection in raw space: ||q - c||^2 up to the shared ||q||^2
+    cd = jnp.sum(centroids * centroids, axis=-1)[None, :] \
+        - 2.0 * queries @ centroids.T                       # (NQ, C)
+    nprobe = min(nprobe, centroids.shape[0])
+    _, probes = jax.lax.top_k(-cd, nprobe)                  # (NQ, P)
+
+    if pca_mean is not None:
+        fq = (queries - pca_mean[None, :]) @ pca_comp.T
+    else:
+        fq = queries
+    fq_rot = fq @ packed_rot                                # (NQ, Ds)
+
+    def one(fq1, fqr1, probes1):
+        flat_d, flat_i = _fused_probe_scan(
+            codes, factors, o_norm, g_proj, g_rot, ids,
+            fq1, fqr1, probes1, onehot, colscale, pow2)
+        neg_top, idx = jax.lax.top_k(-flat_d, k)
+        return -neg_top, flat_i[idx]
+
+    return jax.vmap(one)(fq, fq_rot, probes)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("seg_bits", "seg_ids", "seg_bounds",
+                                    "col_offsets"))
+def _scan_cluster_staged_impl(codes_c, fac_c, o_norm_c, gq_c, g_rot_c,
+                              var_segs, var_drop, fq, fq_rot, tau, m,
+                              seg_bits, seg_ids, seg_bounds, col_offsets):
+    """One cluster, staged (§4.3). Returns (est, alive, bits_accessed).
+
+    codes_c: (L, Ds) packed; fac_c: (L, S, 3); the per-segment slices
+    come from the static column offsets.
+    """
     q_res = fq - gq_c                      # residual query, PCA basis
     q_res_norm = jnp.sum(q_res ** 2)
+    qres_rot = fq_rot - g_rot_c            # packed rotated residual query
     # per-segment sigma for this cluster's residual query (Eq 20) —
     # evaluated in the PCA basis where the data covariance is diagonal.
     sigmas = []
@@ -296,38 +327,38 @@ def _scan_cluster_staged_impl(seg_codes_c, seg_vmax_c, seg_rescale_c,
     for s in seg_ids:
         lb = base - 2.0 * (ip + m * sig_tail[s])
         alive = alive & (lb <= tau)
-        w = seg_codes_c[s].shape[-1]
-        bits_acc = bits_acc + jnp.where(alive, float(w * seg_bits[s]), 0.0)
-        codes = seg_codes_c[s].astype(jnp.float32)          # (L, w)
-        qres = fq_rot[s] - g_rot_c[s]
-        delta = (2.0 * seg_vmax_c[s]) / (1 << seg_bits[s])
+        lo, hi = col_offsets[s], col_offsets[s + 1]
+        bits_acc = bits_acc + jnp.where(
+            alive, float((hi - lo) * seg_bits[s]), 0.0)
+        codes = codes_c[:, lo:hi].astype(jnp.float32)       # (L, w)
+        qres = qres_rot[lo:hi]
+        vmax = fac_c[:, s, FACTOR_VMAX]
+        delta = (2.0 * vmax) / (1 << seg_bits[s])
         ip_xq = delta * (codes @ qres) \
-            + jnp.sum(qres) * (0.5 * delta - seg_vmax_c[s])
-        ip = ip + jnp.where(alive, ip_xq * seg_rescale_c[s], 0.0)
+            + jnp.sum(qres) * (0.5 * delta - vmax)
+        ip = ip + jnp.where(
+            alive, ip_xq * fac_c[:, s, FACTOR_RESCALE], 0.0)
     est = base - 2.0 * ip
     return est, alive, bits_acc
 
 
 def _scan_cluster_staged(index: IVFIndex, c: int, fq, fq_rot, tau, m,
                          seg_ids):
-    segs = index.saq.plan.stored_segments
+    lay = index.packed.layout
     var = index.saq.variances
-    var_segs = tuple(var[s.start:s.stop] for s in segs)
-    seg_bits = tuple(s.bits for s in segs)
-    seg_bounds = tuple((s.start, s.stop) for s in segs)
+    var_segs = tuple(var[lay.seg_starts[s]:lay.seg_stops[s]]
+                     for s in range(lay.n_segments))
+    seg_bounds = tuple(zip(lay.seg_starts, lay.seg_stops))
     drop_mask = np.zeros(index.saq.plan.dim, np.float32)
     for s in index.saq.plan.segments:
         if s.bits == 0:
             drop_mask[s.start:s.stop] = 1.0
     var_drop = jnp.asarray(drop_mask) * var
     return _scan_cluster_staged_impl(
-        tuple(sc[c] for sc in index.seg_codes),
-        tuple(sv[c] for sv in index.seg_vmax),
-        tuple(sr[c] for sr in index.seg_rescale),
-        index.o_norm_total[c], index.g_proj[c],
-        tuple(gr[c] for gr in index.g_rot),
+        index.packed.codes[c], index.packed.factors[c],
+        index.packed.o_norm_sq_total[c], index.g_proj[c], index.g_rot[c],
         var_segs, var_drop, fq, fq_rot, jnp.float32(tau), jnp.float32(m),
-        seg_bits, seg_ids, seg_bounds)
+        lay.seg_bits, seg_ids, seg_bounds, lay.col_offsets)
 
 
 def brute_force_topk(data: jnp.ndarray, q: jnp.ndarray, k: int

@@ -2,9 +2,12 @@
 transforms, plan) to a directory — the vector-database ops story
 (build offline, serve from a restored snapshot).
 
-Format: one .npy per array + manifest.json for the static metadata
-(plan segments, SAQ config). Atomic via tmp + rename, same discipline
-as repro/ckpt.
+Format v2 ("packed"): the unified packed layout is stored as-is — ONE
+codes array (C, L, d_stored), ONE factor array (C, L, S, 3), plus ids /
+centroids / transforms and manifest.json for static metadata (plan
+segments, SAQ config). Atomic via tmp + rename, same discipline as
+repro/ckpt. v1 directories (per-segment seg{i}_* arrays) still load:
+they are re-packed on read.
 """
 from __future__ import annotations
 
@@ -19,8 +22,11 @@ import numpy as np
 
 from repro.core.rotation import PCA
 from repro.core.saq import SAQ, SAQConfig
-from repro.core.types import QuantPlan, SegmentSpec
+from repro.core.types import (PackedCodes, QuantPlan, SegmentSpec,
+                              packed_layout)
 from .index import IVFIndex
+
+FORMAT_VERSION = 2
 
 
 def _save_arrays(d: str, arrays: Dict[str, Any]) -> None:
@@ -35,24 +41,23 @@ def save_index(index: IVFIndex, path: str) -> None:
     os.makedirs(tmp)
     saq = index.saq
     manifest = {
+        "format": FORMAT_VERSION,
         "config": dataclasses.asdict(saq.config) | {"plan": None},
         "plan": [[s.start, s.stop, s.bits] for s in saq.plan.segments],
         "dim": saq.plan.dim,
-        "n_segments": len(index.seg_codes),
+        "n_segments": index.packed.layout.n_segments,
         "has_pca": saq.pca is not None,
     }
     arrays: Dict[str, Any] = {
         "centroids": index.centroids, "ids": index.ids,
-        "counts": index.counts, "o_norm_total": index.o_norm_total,
-        "g_proj": index.g_proj, "variances": saq.variances,
+        "counts": index.counts,
+        "codes": index.packed.codes,
+        "factors": index.packed.factors,
+        "o_norm_total": index.packed.o_norm_sq_total,
+        "g_proj": index.g_proj, "g_rot": index.g_rot,
+        "variances": saq.variances,
     }
-    for i, (c, vm, rs, gr, rot) in enumerate(zip(
-            index.seg_codes, index.seg_vmax, index.seg_rescale,
-            index.g_rot, saq.rotations)):
-        arrays[f"seg{i}_codes"] = c
-        arrays[f"seg{i}_vmax"] = vm
-        arrays[f"seg{i}_rescale"] = rs
-        arrays[f"seg{i}_grot"] = gr
+    for i, rot in enumerate(saq.rotations):
         arrays[f"seg{i}_rotation"] = rot
     if saq.pca is not None:
         arrays["pca_mean"] = saq.pca.mean
@@ -87,11 +92,33 @@ def load_index(path: str) -> IVFIndex:
     n_seg = manifest["n_segments"]
     rotations = tuple(arr(f"seg{i}_rotation") for i in range(n_seg))
     saq = SAQ(config, pca, plan, rotations, arr("variances"))
+
+    if manifest.get("format", 1) >= 2:
+        packed = PackedCodes(
+            codes=arr("codes"), factors=arr("factors"),
+            o_norm_sq_total=arr("o_norm_total"), plan=plan)
+        g_rot = arr("g_rot")
+    else:  # v1: per-segment arrays -> pack on read
+        lay = packed_layout(plan)
+        seg_codes = [arr(f"seg{i}_codes") for i in range(n_seg)]
+        seg_vmax = [arr(f"seg{i}_vmax") for i in range(n_seg)]
+        seg_rescale = [arr(f"seg{i}_rescale") for i in range(n_seg)]
+        lead = seg_codes[0].shape[:-1] if n_seg else ()
+        codes = jnp.concatenate(
+            [c.astype(lay.dtype) for c in seg_codes], axis=-1) if n_seg \
+            else jnp.zeros(lead + (0,), lay.dtype)
+        # v1 stored no per-segment o_norm; keep it 0 (only vmax/rescale
+        # feed the estimator) — search results stay bit-identical.
+        factors = jnp.stack(
+            [jnp.stack([vm, rs, jnp.zeros_like(vm)], axis=-1)
+             for vm, rs in zip(seg_vmax, seg_rescale)], axis=-2) if n_seg \
+            else jnp.zeros(lead + (0, 3), jnp.float32)
+        packed = PackedCodes(codes=codes, factors=factors,
+                             o_norm_sq_total=arr("o_norm_total"), plan=plan)
+        g_rot = jnp.concatenate(
+            [arr(f"seg{i}_grot") for i in range(n_seg)], axis=-1)
+
     return IVFIndex(
         saq=saq, centroids=arr("centroids"), ids=arr("ids"),
-        counts=arr("counts"),
-        seg_codes=tuple(arr(f"seg{i}_codes") for i in range(n_seg)),
-        seg_vmax=tuple(arr(f"seg{i}_vmax") for i in range(n_seg)),
-        seg_rescale=tuple(arr(f"seg{i}_rescale") for i in range(n_seg)),
-        o_norm_total=arr("o_norm_total"), g_proj=arr("g_proj"),
-        g_rot=tuple(arr(f"seg{i}_grot") for i in range(n_seg)))
+        counts=arr("counts"), packed=packed,
+        g_proj=arr("g_proj"), g_rot=g_rot)

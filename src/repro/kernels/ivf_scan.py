@@ -1,7 +1,7 @@
-"""Pallas TPU kernel for the quantized-domain IVF distance scan.
+"""Pallas TPU kernels for the quantized-domain distance scan.
 
 The paper's AVX512 integer dot products map to the MXU (DESIGN.md §3):
-codes are stored as u8 rows, upcast per (N_TILE, D) VMEM block, and
+codes are stored as u8/u16 rows, upcast per (N_TILE, D) VMEM block, and
 contracted against the rotated query in one ``jnp.dot`` with
 ``preferred_element_type=float32`` — the systolic array does <codes, q>
 while the VPU applies the per-vector affine correction of Eq (13) and the
@@ -10,12 +10,26 @@ rescale factor of Eq (5) fused in the same kernel:
     dist^2 = o_norm_sq + ||q||^2
              - 2 * rescale * (delta <codes,q> + q_sum (delta/2 - vmax))
 
-Tiling: grid over N; the query (D, 1) stays resident in VMEM across all
-grid steps (constant index_map), codes stream through HBM->VMEM.
+Two kernels:
+
+* ``ivf_scan_pallas``  — single segment, single query (the original).
+* ``saq_scan_pallas``  — the fused multi-segment, multi-query scan over
+  the unified packed layout (``PackedCodes``): the (N_TILE, d_stored)
+  code block is read from VMEM ONCE and contracted against a
+  segment-masked query matrix (d_stored, S*NQ), so one MXU pass yields
+  every (segment, query) partial dot; every segment's Eq 13 affine
+  correction + Eq 5 rescale then applies from the packed factor buffer
+  in the same kernel. Progressive ``prefix_bits`` reads fold into a
+  per-column power-of-two prescale (exact ``>> shift`` in f32).
+
+Tiling: grid over N; queries/factor-layout operands stay resident in
+VMEM across all grid steps (constant index_map), codes stream
+HBM->VMEM.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,3 +86,106 @@ def ivf_scan_pallas(codes: jnp.ndarray, vmax: jnp.ndarray,
         interpret=interpret,
     )(codes_p, fac_p, q_col, q_stats)
     return out[:n, 0]
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-segment, multi-query scan over the packed layout
+# ---------------------------------------------------------------------------
+
+def _saq_scan_kernel(codes_ref, fac_ref, colscale_ref, qmat_ref, qstats_ref,
+                     out_ref, *, seg_bits: Tuple[int, ...], n_q: int):
+    """One (N_TILE, d_stored) code block vs ALL segments and ALL queries.
+
+    codes_ref:    (T, D) uint — packed code block
+    fac_ref:      (T, 3S+1) f32 — [vmax, rescale, o_norm]*S + o_norm_total
+    colscale_ref: (1, D) f32 — per-column prefix-bits prescale (2^-shift)
+    qmat_ref:     (D, S*NQ) f32 — segment-masked queries, segment-major
+    qstats_ref:   (S+1, NQ) f32 — per-segment residual q-sums + ||q||^2
+    out_ref:      (T, NQ) f32 — estimated squared distances
+    """
+    s_count = len(seg_bits)
+    # floor(codes * 2^-shift) == codes >> shift exactly (codes < 2^16,
+    # power-of-two scale); all-ones when no truncation.
+    codes = jnp.floor(codes_ref[...].astype(jnp.float32)
+                      * colscale_ref[...])                       # (T, D)
+    raw = jnp.dot(codes, qmat_ref[...],
+                  preferred_element_type=jnp.float32)            # MXU (T, S*NQ)
+    fac = fac_ref[...]
+    acc = jnp.zeros((codes.shape[0], n_q), jnp.float32)
+    for s in range(s_count):                                     # static unroll
+        vmax = fac[:, 3 * s + 0][:, None]                        # (T, 1)
+        rescale = fac[:, 3 * s + 1][:, None]
+        delta = (2.0 * vmax) / (1 << seg_bits[s])
+        raw_s = raw[:, s * n_q:(s + 1) * n_q]                    # (T, NQ)
+        q_sum = qstats_ref[s, :][None, :]                        # (1, NQ)
+        acc += rescale * (delta * raw_s + q_sum * (0.5 * delta - vmax))
+    o_norm = fac[:, 3 * s_count][:, None]
+    out_ref[...] = o_norm + qstats_ref[s_count, :][None, :] - 2.0 * acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("col_offsets", "seg_bits", "prefix_bits",
+                                    "n_tile", "interpret"))
+def saq_scan_pallas(codes: jnp.ndarray, factors: jnp.ndarray,
+                    o_norm_sq_total: jnp.ndarray, queries: jnp.ndarray,
+                    col_offsets: Tuple[int, ...],
+                    seg_bits: Tuple[int, ...],
+                    q_norm_sq: Optional[jnp.ndarray] = None,
+                    prefix_bits: Optional[Tuple[int, ...]] = None,
+                    n_tile: int = DEFAULT_N_TILE,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Fused packed-layout scan: estimated squared distances (NQ, N).
+
+    codes:   (N, d_stored) uint — packed codes (PackedCodes layout)
+    factors: (N, S, 3) f32 — [vmax, rescale, o_norm_sq] per segment
+    o_norm_sq_total: (N,) f32
+    queries: (NQ, d_stored) f32 — packed rotated queries
+    q_norm_sq: (NQ,) total ||q'||^2 (defaults to the packed-column norm;
+        pass the full-basis norm when the plan drops segments)
+    prefix_bits: optional per-segment progressive precision
+    """
+    from repro.core.types import (make_col_scale, make_effective_bits,
+                                  make_seg_onehot)
+
+    n, d = codes.shape
+    n_q = queries.shape[0]
+    s_count = len(seg_bits)
+    eff_bits = make_effective_bits(seg_bits, prefix_bits)
+
+    # Static layout operands (python-level, hashed into the jit cache).
+    onehot = make_seg_onehot(col_offsets)
+    colscale = make_col_scale(col_offsets, seg_bits, prefix_bits)[None, :]
+
+    queries = jnp.asarray(queries, jnp.float32)
+    # (D, S*NQ), segment-major: column s*NQ+j = query j masked to segment s.
+    qmat = (queries.T[:, None, :] * jnp.asarray(onehot)[:, :, None]
+            ).reshape(d, s_count * n_q)
+    q_sums = queries @ jnp.asarray(onehot)                     # (NQ, S)
+    if q_norm_sq is None:
+        q_norm_sq = jnp.sum(queries * queries, axis=-1)
+    qstats = jnp.concatenate(
+        [q_sums.T, q_norm_sq[None, :].astype(jnp.float32)])    # (S+1, NQ)
+
+    n_tile = min(n_tile, max(8, n))
+    n_pad = -n % n_tile
+    codes_p = jnp.pad(codes, ((0, n_pad), (0, 0)))
+    fac = jnp.concatenate(
+        [factors.reshape(n, s_count * 3),
+         o_norm_sq_total[:, None]], axis=-1).astype(jnp.float32)
+    fac_p = jnp.pad(fac, ((0, n_pad), (0, 0)), constant_values=1.0)
+    grid = ((n + n_pad) // n_tile,)
+    out = pl.pallas_call(
+        functools.partial(_saq_scan_kernel, seg_bits=eff_bits, n_q=n_q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((n_tile, 3 * s_count + 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),            # resident
+            pl.BlockSpec((d, s_count * n_q), lambda i: (0, 0)),  # resident
+            pl.BlockSpec((s_count + 1, n_q), lambda i: (0, 0)),  # resident
+        ],
+        out_specs=pl.BlockSpec((n_tile, n_q), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, n_q), jnp.float32),
+        interpret=interpret,
+    )(codes_p, fac_p, jnp.asarray(colscale), qmat, qstats)
+    return out[:n].T

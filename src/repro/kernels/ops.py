@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from .caq_adjust import caq_adjust_pallas
 from .fwht import fwht_pallas
-from .ivf_scan import ivf_scan_pallas
+from .ivf_scan import ivf_scan_pallas, saq_scan_pallas
 from .caq_encode import caq_encode_pallas
 from .saq_attend import saq_attend_pallas
 
@@ -38,6 +38,21 @@ def ivf_scan(codes: jnp.ndarray, vmax: jnp.ndarray, rescale: jnp.ndarray,
     """Kernel-backed quantized distance scan; see ref.ivf_scan_ref."""
     return ivf_scan_pallas(codes, vmax, rescale, o_norm_sq, q, bits,
                            interpret=_interpret())
+
+
+def saq_scan(packed, queries: jnp.ndarray, q_norm_sq=None,
+             prefix_bits=None) -> jnp.ndarray:
+    """Kernel-backed fused multi-segment multi-query scan over a
+    ``PackedCodes`` container (flat ``(N, ...)`` leading shape); see
+    ref.saq_scan_ref. queries: (NQ, d_stored) packed rotated queries.
+    Returns (NQ, N) estimated squared distances."""
+    lay = packed.layout
+    return saq_scan_pallas(
+        packed.codes, packed.factors, packed.o_norm_sq_total, queries,
+        col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
+        q_norm_sq=q_norm_sq,
+        prefix_bits=tuple(prefix_bits) if prefix_bits is not None else None,
+        interpret=_interpret())
 
 
 def fwht(x: jnp.ndarray) -> jnp.ndarray:

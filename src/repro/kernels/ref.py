@@ -53,6 +53,46 @@ def ivf_scan_ref(codes: jnp.ndarray, vmax: jnp.ndarray, rescale: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# saq_scan: fused multi-segment multi-query scan over the packed layout
+# ---------------------------------------------------------------------------
+
+def saq_scan_ref(codes: jnp.ndarray, factors: jnp.ndarray,
+                 o_norm_sq_total: jnp.ndarray, queries: jnp.ndarray,
+                 col_offsets, seg_bits, q_norm_sq=None, prefix_bits=None
+                 ) -> jnp.ndarray:
+    """Estimated ||o - q||^2 for every (query, packed row) pair: (NQ, N).
+
+    Per stored segment s (columns ``col_offsets[s]:col_offsets[s+1]``,
+    effective bits b_s = min(prefix_bits[s], seg_bits[s])):
+        codes_s = codes >> (B_s - b_s)                  (progressive read)
+        delta   = 2 * vmax_s / 2^b_s
+        <x,q>_s = delta * <codes_s, q_s> + q_sum_s * (delta/2 - vmax_s)
+        ip      = sum_s <x,q>_s * rescale_s
+        dist^2  = o_norm_sq_total + ||q||^2 - 2 ip
+    """
+    queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+    if q_norm_sq is None:
+        q_norm_sq = jnp.sum(queries * queries, axis=-1)
+    ip = jnp.zeros((queries.shape[0], codes.shape[0]), jnp.float32)
+    for s in range(len(seg_bits)):
+        lo, hi = col_offsets[s], col_offsets[s + 1]
+        c = codes[:, lo:hi]
+        bits = seg_bits[s]
+        if prefix_bits is not None and prefix_bits[s] < bits:
+            c = c >> (bits - prefix_bits[s])
+            bits = prefix_bits[s]
+        q_s = queries[:, lo:hi]
+        vmax = factors[:, s, 0]
+        rescale = factors[:, s, 1]
+        delta = (2.0 * vmax) / (1 << bits)
+        raw = q_s @ c.astype(jnp.float32).T                  # (NQ, N)
+        ip_xq = delta[None, :] * raw \
+            + jnp.sum(q_s, axis=-1)[:, None] * (0.5 * delta - vmax)[None, :]
+        ip = ip + ip_xq * rescale[None, :]
+    return o_norm_sq_total[None, :] + q_norm_sq[:, None] - 2.0 * ip
+
+
+# ---------------------------------------------------------------------------
 # fwht: fast Walsh-Hadamard transform (normalized)
 # ---------------------------------------------------------------------------
 

@@ -29,6 +29,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES, applicable, get_config, input_specs
 from repro.launch import roofline as rl
+from repro.compat import set_mesh
 from repro.launch.mesh import make_axes, make_production_mesh
 from repro.launch.sharding import (abstract_decode_caches, abstract_opt_state,
                                    abstract_params, batch_specs, named)
@@ -60,7 +61,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                           "sub-quadratic decode (DESIGN.md §5)"}
 
     specs = input_specs(cfg, shape)
-    jax.set_mesh(mesh)   # bare-PartitionSpec constraints resolve here
+    set_mesh(mesh)   # bare-PartitionSpec constraints resolve here
     params_struct, params_spec = abstract_params(cfg, axes)
     p_sh = named(params_spec, mesh, like=params_struct)
     b_spec = batch_specs(cfg, axes, shape.kind, shape.global_batch)

@@ -25,8 +25,9 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import axis_size, shard_map
 
 BLOCK = 256
 
@@ -59,7 +60,7 @@ def compressed_mean(g: jnp.ndarray, axis_name: str, bits: int = 8
                     ) -> jnp.ndarray:
     """Mean of ``g`` over ``axis_name`` using the quantized RS+AG scheme.
     Must be called inside shard_map/pmap with that axis. g: any shape."""
-    p = jax.lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     flat = g.reshape(-1).astype(jnp.float32)
     n = flat.shape[0]
     pad = -n % (p * BLOCK)

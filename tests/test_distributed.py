@@ -23,7 +23,7 @@ def run_with_devices(code: str, n: int = 8) -> str:
 def test_distributed_scan_equals_brute_force():
     out = run_with_devices(textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.core.caq import caq_encode
         from repro.ivf import distributed_scan
         from repro.ivf.index import brute_force_topk
@@ -31,7 +31,7 @@ def test_distributed_scan_equals_brute_force():
         X = rng.standard_normal((512, 32)).astype(np.float32)
         q = rng.standard_normal(32).astype(np.float32)
         code = caq_encode(X, bits=8, rounds=3)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
+        mesh = make_mesh((4, 2), ("data", "model"),
                              axis_types=(AxisType.Auto,) * 2)
         ids = jnp.arange(512, dtype=jnp.int32)
         d, i = distributed_scan(mesh, ("data", "model"), code.codes,
@@ -51,10 +51,11 @@ def test_distributed_scan_equals_brute_force():
 def test_compressed_mean_and_moe_parity():
     out = run_with_devices(textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType, PartitionSpec as P
-        from jax import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import AxisType, make_mesh, set_mesh
+        from repro.compat import shard_map
         from repro.train.grad_compress import compressed_mean
-        mesh = jax.make_mesh((8,), ("data",),
+        mesh = make_mesh((8,), ("data",),
                              axis_types=(AxisType.Auto,))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 3000))
         fn = shard_map(lambda x: compressed_mean(x[0], "data", 8)[None],
@@ -74,7 +75,7 @@ def test_compressed_mean_and_moe_parity():
                           d_model=32, n_heads=4, n_kv_heads=2, d_ff=16,
                           vocab_size=64, n_experts=4, experts_per_token=2,
                           capacity_factor=8.0)
-        mesh2 = jax.make_mesh((2, 4), ("data", "model"),
+        mesh2 = make_mesh((2, 4), ("data", "model"),
                               axis_types=(AxisType.Auto,) * 2)
         axes = MeshAxes(fsdp=("data",), tensor="model", tensor_size=4,
                         fsdp_size=2)
@@ -82,7 +83,7 @@ def test_compressed_mean_and_moe_parity():
         x = jax.random.normal(jax.random.PRNGKey(2), (4, 8, 32),
                               jnp.float32)
         y_local = moe_block(params, cfg, x, axes, mesh=None)
-        with jax.set_mesh(mesh2):
+        with set_mesh(mesh2):
             y_dist = jax.jit(
                 lambda p, x: moe_block(p, cfg, x, axes, mesh=mesh2)
             )(params, x)
@@ -98,7 +99,7 @@ def test_compressed_mean_and_moe_parity():
 def test_dp_train_step_with_compression_converges():
     out = run_with_devices(textwrap.dedent("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.models import ModelConfig, init_params
         from repro.train import AdamWConfig, adamw_init
         from repro.train.optimizer import adamw_update
@@ -111,7 +112,7 @@ def test_dp_train_step_with_compression_converges():
         params, _ = init_params(jax.random.PRNGKey(0), cfg)
         opt = AdamWConfig(lr=5e-3, warmup_steps=1, total_steps=40)
         state = adamw_init(params, opt)
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
         loss_fn = make_loss_fn(cfg, axes=None or __import__(
             "repro.models.common", fromlist=["MeshAxes"]).MeshAxes())
         step = make_dp_train_step(

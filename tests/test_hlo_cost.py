@@ -94,9 +94,10 @@ def test_collectives_counted_with_multiplier():
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType, PartitionSpec as P, NamedSharding
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.launch.hlo_cost import analyze
-        mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
         def f(x, w):
             def body(c, _):
                 y = c @ w
@@ -107,7 +108,7 @@ def test_collectives_counted_with_multiplier():
         x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
         w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
         sh = NamedSharding(mesh, P(None, "data"))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             c = jax.jit(f, in_shardings=(sh, sh)).lower(x, w).compile()
         t = analyze(c.as_text())
         print("TRIPS", sorted(t.trip_counts.values()))

@@ -22,16 +22,16 @@ def run_with_devices(code: str, n: int = 8) -> str:
 def test_train_step_lowers_on_small_mesh():
     out = run_with_devices(textwrap.dedent("""
         import jax, jax.numpy as jnp, dataclasses
-        from jax.sharding import AxisType
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.configs import get_smoke_config
         from repro.launch.mesh import make_axes
         from repro.launch.sharding import (abstract_params,
                                            abstract_opt_state,
                                            batch_specs, named)
         from repro.train import AdamWConfig, make_train_step
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
+        mesh = make_mesh((4, 2), ("data", "model"),
                              axis_types=(AxisType.Auto,) * 2)
-        jax.set_mesh(mesh)
+        set_mesh(mesh)
         axes = make_axes(mesh)
         cfg = get_smoke_config("qwen3-32b")
         p_struct, p_spec = abstract_params(cfg, axes)
@@ -55,16 +55,16 @@ def test_train_step_lowers_on_small_mesh():
 def test_decode_step_lowers_with_quantized_cache_on_mesh():
     out = run_with_devices(textwrap.dedent("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.configs import get_smoke_config
         from repro.launch.mesh import make_axes
         from repro.launch.sharding import (abstract_decode_caches,
                                            abstract_params, batch_specs,
                                            named)
         from repro.serve import ServeConfig, make_decode_step
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
+        mesh = make_mesh((4, 2), ("data", "model"),
                              axis_types=(AxisType.Auto,) * 2)
-        jax.set_mesh(mesh)
+        set_mesh(mesh)
         axes = make_axes(mesh)
         cfg = get_smoke_config("granite-20b")
         p_struct, p_spec = abstract_params(cfg, axes)
@@ -89,12 +89,13 @@ def test_decode_step_lowers_with_quantized_cache_on_mesh():
 def test_elastic_restore_across_meshes():
     out = run_with_devices(textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np, tempfile
-        from jax.sharding import AxisType, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.ckpt import CheckpointManager
         from repro.runtime.elastic import make_shardings
-        mesh_a = jax.make_mesh((8, 1), ("data", "model"),
+        mesh_a = make_mesh((8, 1), ("data", "model"),
                                axis_types=(AxisType.Auto,) * 2)
-        mesh_b = jax.make_mesh((2, 4), ("data", "model"),
+        mesh_b = make_mesh((2, 4), ("data", "model"),
                                axis_types=(AxisType.Auto,) * 2)
         tree = {"w": jnp.arange(64.0).reshape(8, 8)}
         spec = {"w": P("data", "model")}
