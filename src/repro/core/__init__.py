@@ -1,8 +1,9 @@
 """Paper core: SAQ vector quantization (code adjustment + dimension
 segmentation) and the reproduced baselines."""
 from .types import (PackedCodes, PackedLayout, QuantPlan,  # noqa: F401
-                    QuantizedDataset, SegmentCode, SegmentSpec,
-                    bits_dtype, packed_layout, safe_rescale)
+                    QuantizedDataset, SegmentCode, SegmentSpec, WordLayout,
+                    bits_dtype, pack_bits, packed_layout, safe_rescale,
+                    unpack_bits, word_layout)
 from .rotation import (PCA, DenseRotation, FWHTRotation, fwht,  # noqa: F401
                        make_rotation, random_orthonormal)
 from .lvq import (LVQCode, SymmetricGrid, lvq_encode,  # noqa: F401

@@ -139,7 +139,15 @@ class SAQ:
         ``(..., d_stored)``."""
         return proj @ self.packed_rot
 
-    def encode(self, data: jnp.ndarray) -> PackedCodes:
+    def encode(self, data: jnp.ndarray, *,
+               bitpacked: bool = True) -> PackedCodes:
+        """Quantize rows into a :class:`PackedCodes` container.
+
+        By default the code buffer is emitted bit-packed (each segment's
+        columns at exactly ``B_s`` bits inside per-row uint32 words —
+        the true space budget); pass ``bitpacked=False`` for the
+        column-per-dim uint8/uint16 buffer.
+        """
         proj = self.project(data)
         n = proj.shape[0]
         lay = self.layout
@@ -156,8 +164,9 @@ class SAQ:
             fac = jnp.stack([code.vmax, code.rescale, code.o_norm_sq],
                             axis=-1)
             factors = factors.at[:, s, :].set(fac)
-        return PackedCodes(codes=codes, factors=factors,
-                           o_norm_sq_total=o_norm_sq_total, plan=self.plan)
+        out = PackedCodes(codes=codes, factors=factors,
+                          o_norm_sq_total=o_norm_sq_total, plan=self.plan)
+        return out.pack() if bitpacked else out
 
     def decode(self, qds: PackedCodes) -> jnp.ndarray:
         """Reconstruct (approximately) the PCA-projected vectors.
@@ -169,7 +178,7 @@ class SAQ:
         the packed rotation.
         """
         lay = self.layout
-        codes = qds.codes.astype(jnp.float32)
+        codes = qds.code_matrix().astype(jnp.float32)
         x = jnp.zeros_like(codes)
         for s in range(lay.n_segments):
             lo, hi = lay.col_bounds(s)
@@ -236,10 +245,15 @@ class SAQ:
         lay = qds.layout
         if lay.n_segments == 0:
             return jnp.zeros(qc.q_rot.shape[:-1] + (qds.n, 0))
-        codes = qds.codes.astype(jnp.float32)
-        if prefix_bits is not None:
-            codes = jnp.floor(
-                codes * jnp.asarray(lay.col_scale(prefix_bits)))
+        if qds.bitpacked:
+            # integer-domain truncation during unpack == the f32
+            # floor-prescale below (both are exactly >> (B_s - b_s))
+            codes = qds.code_matrix(prefix_bits).astype(jnp.float32)
+        else:
+            codes = qds.codes.astype(jnp.float32)
+            if prefix_bits is not None:
+                codes = jnp.floor(
+                    codes * jnp.asarray(lay.col_scale(prefix_bits)))
         onehot = jnp.asarray(lay.seg_onehot())              # (d_stored, S)
         qmask = qc.q_rot[..., :, None] * onehot             # (..., Ds, S)
         raw = jnp.einsum("nd,...ds->...ns", codes, qmask)   # (..., N, S)

@@ -2,4 +2,4 @@
 single-host and shard_map-distributed search."""
 from .index import IVFIndex, SearchStats  # noqa: F401
 from .distributed import distributed_scan, distributed_scan_packed  # noqa: F401
-from .persist import load_index, save_index  # noqa: F401
+from .persist import CorruptIndexError, load_index, save_index  # noqa: F401

@@ -80,15 +80,19 @@ def distributed_scan(mesh: Mesh, axis, codes: jnp.ndarray, vmax: jnp.ndarray,
 @functools.lru_cache(maxsize=None)
 def _packed_scan_fn(mesh: Mesh, axes: Tuple[str, ...],
                     col_offsets: Tuple[int, ...],
-                    seg_bits: Tuple[int, ...], k: int):
+                    seg_bits: Tuple[int, ...], k: int, bitpacked: bool):
     from repro.kernels.ref import saq_scan_ref
 
     row = P(axes)
 
     def body(pk, ids, q, qn):
+        # a bit-packed shard carries (n_loc, n_words) uint32 rows; the
+        # word axis is replicated per row, so row-sharding is unchanged
+        # and each shard expands its own words locally
         dist = saq_scan_ref(pk.codes, pk.factors, pk.o_norm_sq_total, q,
                             col_offsets, seg_bits,
-                            q_norm_sq=qn)                    # (NQ, n_loc)
+                            q_norm_sq=qn,
+                            bitpacked=bitpacked)             # (NQ, n_loc)
         dist = jnp.where(ids[None, :] >= 0, dist, jnp.inf)
         neg, idx = jax.lax.top_k(-dist, k)                   # (NQ, k)
         d, i = -neg, ids[idx]
@@ -114,7 +118,8 @@ def distributed_scan_packed(mesh: Mesh, axis, packed, ids: jnp.ndarray,
                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Global per-query top-k over row-sharded packed codes.
 
-    packed:  flat ``PackedCodes`` (codes (N, Ds), factors (N, S, 3));
+    packed:  flat ``PackedCodes`` (codes (N, Ds) — or the bit-packed
+             (N, n_words) uint32 word buffer; both shard over rows);
              the static plan rides along as pytree aux data.
     queries: (NQ, d_stored) packed rotated queries, replicated.
     Returns replicated (dists, ids), each (NQ, k).
@@ -124,5 +129,6 @@ def distributed_scan_packed(mesh: Mesh, axis, packed, ids: jnp.ndarray,
     queries = jnp.asarray(queries, jnp.float32)
     if q_norm_sq is None:
         q_norm_sq = jnp.sum(queries * queries, axis=-1)
-    fn = _packed_scan_fn(mesh, axes, lay.col_offsets, lay.seg_bits, k)
+    fn = _packed_scan_fn(mesh, axes, lay.col_offsets, lay.seg_bits, k,
+                         packed.bitpacked)
     return fn(packed, ids, queries, q_norm_sq)

@@ -41,7 +41,8 @@ from repro.core.kmeans import kmeans_fit, pairwise_sq_dists
 from repro.core.saq import SAQ, SAQConfig
 from repro.core.types import (FACTOR_RESCALE, FACTOR_VMAX, PackedCodes,
                               QuantPlan, make_col_scale, make_effective_bits,
-                              make_seg_onehot)
+                              make_seg_onehot, prefix_trunc_shifts,
+                              unpack_words, word_layout)
 
 
 class SearchStats(NamedTuple):
@@ -106,11 +107,13 @@ class IVFIndex:
                 out[c, : len(rows)] = x[rows]
             return jnp.asarray(out)
 
+        # flat.codes is the bit-packed (N, n_words) uint32 word buffer;
+        # the padded-list scatter works on words and columns alike.
         packed = PackedCodes(
             codes=scatter(flat.codes),
             factors=scatter(flat.factors),
             o_norm_sq_total=scatter(flat.o_norm_sq_total),
-            plan=saq.plan)
+            plan=saq.plan, bitpacked=flat.bitpacked)
 
         # g_proj is the *linear* part only: proj(q - c_j) = f(q) - c_j @ C^T
         # (the PCA mean cancels because f already subtracts it once).
@@ -169,6 +172,7 @@ class IVFIndex:
             col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
             prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
                          else None),
+            bitpacked=self.packed.bitpacked,
             k=k, nprobe=nprobe)
         return ids, dists
 
@@ -228,18 +232,18 @@ class IVFIndex:
 # ---------------------------------------------------------------------------
 
 def _fused_probe_scan(codes, factors, o_norm, g_proj, g_rot, ids,
-                      fq, fq_rot, probes, onehot, colscale, pow2):
+                      fq, fq_rot, probes, onehot, expand_codes, pow2):
     """One query's probe scan over packed (C, L, ...) storage.
 
     The per-probe residual query is masked per segment so EVERY
     segment's raw dot product comes out of one einsum over the packed
     code block; Eq 13 affine corrections + Eq 5 rescales apply from the
-    gathered factor buffer.
+    gathered factor buffer. ``expand_codes`` maps the gathered code
+    buffer (word buffer when bit-packed) to f32 columns, applying any
+    progressive prefix truncation.
     """
     probesi = probes.astype(jnp.int32)
-    codes_p = codes[probesi].astype(jnp.float32)            # (P, L, Ds)
-    if colscale is not None:
-        codes_p = jnp.floor(codes_p * colscale)
+    codes_p = expand_codes(codes[probesi])                  # (P, L, Ds) f32
     fac_p = factors[probesi]                                # (P, L, S, 3)
     qres = fq_rot[None, :] - g_rot[probesi]                 # (P, Ds)
     qmask = qres[:, :, None] * onehot[None, :, :]           # (P, Ds, S)
@@ -259,17 +263,32 @@ def _fused_probe_scan(codes, factors, o_norm, g_proj, g_rot, ids,
 
 @functools.partial(jax.jit,
                    static_argnames=("col_offsets", "seg_bits", "prefix_bits",
-                                    "k", "nprobe"))
+                                    "bitpacked", "k", "nprobe"))
 def _search_batch_impl(queries, centroids, pca_mean, pca_comp, packed_rot,
                        codes, factors, o_norm, g_proj, g_rot, ids,
-                       col_offsets, seg_bits, prefix_bits, k, nprobe):
+                       col_offsets, seg_bits, prefix_bits, bitpacked,
+                       k, nprobe):
     """End-to-end batched search: (NQ, D) raw queries -> (NQ, k)."""
     onehot = jnp.asarray(make_seg_onehot(col_offsets))
     eff_bits = make_effective_bits(seg_bits, prefix_bits)
-    colscale = (None if prefix_bits is None else
-                jnp.asarray(make_col_scale(col_offsets, seg_bits,
-                                           prefix_bits)))
     pow2 = jnp.asarray([1 << b for b in eff_bits], jnp.float32)
+
+    if bitpacked:
+        wl = word_layout(col_offsets, seg_bits)
+        trunc = (prefix_trunc_shifts(col_offsets, seg_bits, prefix_bits)
+                 if prefix_bits is not None else None)
+
+        def expand_codes(cw):          # (..., W) u32 -> (..., Ds) f32
+            return unpack_words(cw, wl, trunc).astype(jnp.float32)
+    else:
+        colscale = (None if prefix_bits is None else
+                    jnp.asarray(make_col_scale(col_offsets, seg_bits,
+                                               prefix_bits)))
+
+        def expand_codes(c):
+            c = c.astype(jnp.float32)
+            # floor(c * 2^-shift) == c >> shift exactly (c < 2^16)
+            return c if colscale is None else jnp.floor(c * colscale)
 
     # probe selection in raw space: ||q - c||^2 up to the shared ||q||^2
     cd = jnp.sum(centroids * centroids, axis=-1)[None, :] \
@@ -286,7 +305,7 @@ def _search_batch_impl(queries, centroids, pca_mean, pca_comp, packed_rot,
     def one(fq1, fqr1, probes1):
         flat_d, flat_i = _fused_probe_scan(
             codes, factors, o_norm, g_proj, g_rot, ids,
-            fq1, fqr1, probes1, onehot, colscale, pow2)
+            fq1, fqr1, probes1, onehot, expand_codes, pow2)
         neg_top, idx = jax.lax.top_k(-flat_d, k)
         return -neg_top, flat_i[idx]
 
@@ -295,15 +314,19 @@ def _search_batch_impl(queries, centroids, pca_mean, pca_comp, packed_rot,
 
 @functools.partial(jax.jit,
                    static_argnames=("seg_bits", "seg_ids", "seg_bounds",
-                                    "col_offsets"))
+                                    "col_offsets", "bitpacked"))
 def _scan_cluster_staged_impl(codes_c, fac_c, o_norm_c, gq_c, g_rot_c,
                               var_segs, var_drop, fq, fq_rot, tau, m,
-                              seg_bits, seg_ids, seg_bounds, col_offsets):
+                              seg_bits, seg_ids, seg_bounds, col_offsets,
+                              bitpacked=False):
     """One cluster, staged (§4.3). Returns (est, alive, bits_accessed).
 
-    codes_c: (L, Ds) packed; fac_c: (L, S, 3); the per-segment slices
-    come from the static column offsets.
+    codes_c: (L, Ds) packed — or (L, W) uint32 words when ``bitpacked``
+    (expanded here once); fac_c: (L, S, 3); the per-segment slices come
+    from the static column offsets.
     """
+    if bitpacked:
+        codes_c = unpack_words(codes_c, word_layout(col_offsets, seg_bits))
     q_res = fq - gq_c                      # residual query, PCA basis
     q_res_norm = jnp.sum(q_res ** 2)
     qres_rot = fq_rot - g_rot_c            # packed rotated residual query
@@ -358,7 +381,8 @@ def _scan_cluster_staged(index: IVFIndex, c: int, fq, fq_rot, tau, m,
         index.packed.codes[c], index.packed.factors[c],
         index.packed.o_norm_sq_total[c], index.g_proj[c], index.g_rot[c],
         var_segs, var_drop, fq, fq_rot, jnp.float32(tau), jnp.float32(m),
-        lay.seg_bits, seg_ids, seg_bounds, lay.col_offsets)
+        lay.seg_bits, seg_ids, seg_bounds, lay.col_offsets,
+        bitpacked=index.packed.bitpacked)
 
 
 def brute_force_topk(data: jnp.ndarray, q: jnp.ndarray, k: int

@@ -2,12 +2,17 @@
 transforms, plan) to a directory — the vector-database ops story
 (build offline, serve from a restored snapshot).
 
-Format v2 ("packed"): the unified packed layout is stored as-is — ONE
-codes array (C, L, d_stored), ONE factor array (C, L, S, 3), plus ids /
+Format v3 ("bitpacked"): the code buffer is stored as the TRUE
+bitstring — ONE (C, L, n_words) uint32 word array with every segment's
+columns at exactly its own bit width (see ``repro.core.types.WordLayout``
+and docs/storage.md), ONE factor array (C, L, S, 3), plus ids /
 centroids / transforms and manifest.json for static metadata (plan
-segments, SAQ config). Atomic via tmp + rename, same discipline as
-repro/ckpt. v1 directories (per-segment seg{i}_* arrays) still load:
-they are re-packed on read.
+segments, SAQ config). On-disk bytes now equal the space budget Table 6
+reports. Atomic via tmp + rename, same discipline as repro/ckpt.
+
+Legacy directories still load and are auto-repacked to the bit-packed
+in-memory form: v2 (one widest-dtype codes array) and v1 (per-segment
+seg{i}_* arrays). A save after loading either writes v3.
 """
 from __future__ import annotations
 
@@ -23,10 +28,10 @@ import numpy as np
 from repro.core.rotation import PCA
 from repro.core.saq import SAQ, SAQConfig
 from repro.core.types import (PackedCodes, QuantPlan, SegmentSpec,
-                              packed_layout)
+                              pack_bits, packed_layout)
 from .index import IVFIndex
 
-FORMAT_VERSION = 2
+FORMAT_VERSION = 3
 
 
 def _save_arrays(d: str, arrays: Dict[str, Any]) -> None:
@@ -40,20 +45,26 @@ def save_index(index: IVFIndex, path: str) -> None:
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     saq = index.saq
+    lay = index.packed.layout
+    # v3 canonical form: the code buffer goes to disk bit-packed
+    packed = index.packed.pack()
     manifest = {
         "format": FORMAT_VERSION,
         "config": dataclasses.asdict(saq.config) | {"plan": None},
         "plan": [[s.start, s.stop, s.bits] for s in saq.plan.segments],
         "dim": saq.plan.dim,
-        "n_segments": index.packed.layout.n_segments,
+        "n_segments": lay.n_segments,
         "has_pca": saq.pca is not None,
+        "bitpacked": True,
+        "n_words": lay.n_words,
+        "total_code_bits": lay.total_code_bits,
     }
     arrays: Dict[str, Any] = {
         "centroids": index.centroids, "ids": index.ids,
         "counts": index.counts,
-        "codes": index.packed.codes,
-        "factors": index.packed.factors,
-        "o_norm_total": index.packed.o_norm_sq_total,
+        "codes": packed.codes,
+        "factors": packed.factors,
+        "o_norm_total": packed.o_norm_sq_total,
         "g_proj": index.g_proj, "g_rot": index.g_rot,
         "variances": saq.variances,
     }
@@ -71,12 +82,23 @@ def save_index(index: IVFIndex, path: str) -> None:
     os.replace(tmp, path)
 
 
+class CorruptIndexError(ValueError):
+    """The on-disk index is structurally inconsistent (truncated or
+    corrupted arrays) — refusing to serve garbage results."""
+
+
 def load_index(path: str) -> IVFIndex:
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
 
     def arr(name):
-        return jnp.asarray(np.load(os.path.join(path, f"{name}.npy")))
+        fp = os.path.join(path, f"{name}.npy")
+        try:
+            return jnp.asarray(np.load(fp))
+        except Exception as e:
+            raise CorruptIndexError(
+                f"failed to read {name}.npy from {path!r} — the file is "
+                f"truncated or corrupted ({e})") from e
 
     cfg_d = dict(manifest["config"])
     cfg_d.pop("plan", None)
@@ -93,10 +115,34 @@ def load_index(path: str) -> IVFIndex:
     rotations = tuple(arr(f"seg{i}_rotation") for i in range(n_seg))
     saq = SAQ(config, pca, plan, rotations, arr("variances"))
 
-    if manifest.get("format", 1) >= 2:
+    fmt = manifest.get("format", 1)
+    if fmt >= 3:  # v3: bit-packed word buffer on disk, stored as-is
+        lay = packed_layout(plan)
+        codes = arr("codes")
+        if codes.dtype != jnp.uint32:
+            raise CorruptIndexError(
+                f"v3 word buffer must be uint32, found {codes.dtype} "
+                f"in {path!r}")
+        if codes.shape[-1] != lay.n_words:
+            raise CorruptIndexError(
+                f"v3 word buffer has {codes.shape[-1]} words/row but the "
+                f"plan's layout needs {lay.n_words} — truncated or "
+                f"corrupted code buffer in {path!r}")
         packed = PackedCodes(
-            codes=arr("codes"), factors=arr("factors"),
-            o_norm_sq_total=arr("o_norm_total"), plan=plan)
+            codes=codes, factors=arr("factors"),
+            o_norm_sq_total=arr("o_norm_total"), plan=plan, bitpacked=True)
+        g_rot = arr("g_rot")
+    elif fmt == 2:  # v2: widest-dtype columns -> repack to words on read
+        lay = packed_layout(plan)
+        codes = arr("codes")
+        if codes.shape[-1] != lay.d_stored:
+            raise CorruptIndexError(
+                f"v2 code buffer has {codes.shape[-1]} columns but the "
+                f"plan's layout needs {lay.d_stored} — truncated or "
+                f"corrupted code buffer in {path!r}")
+        packed = PackedCodes(
+            codes=pack_bits(codes, lay), factors=arr("factors"),
+            o_norm_sq_total=arr("o_norm_total"), plan=plan, bitpacked=True)
         g_rot = arr("g_rot")
     else:  # v1: per-segment arrays -> pack on read
         lay = packed_layout(plan)
@@ -114,7 +160,8 @@ def load_index(path: str) -> IVFIndex:
              for vm, rs in zip(seg_vmax, seg_rescale)], axis=-2) if n_seg \
             else jnp.zeros(lead + (0, 3), jnp.float32)
         packed = PackedCodes(codes=codes, factors=factors,
-                             o_norm_sq_total=arr("o_norm_total"), plan=plan)
+                             o_norm_sq_total=arr("o_norm_total"),
+                             plan=plan).pack()
         g_rot = jnp.concatenate(
             [arr(f"seg{i}_grot") for i in range(n_seg)], axis=-1)
 

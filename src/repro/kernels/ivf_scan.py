@@ -92,22 +92,43 @@ def ivf_scan_pallas(codes: jnp.ndarray, vmax: jnp.ndarray,
 # Fused multi-segment, multi-query scan over the packed layout
 # ---------------------------------------------------------------------------
 
-def _saq_scan_kernel(codes_ref, fac_ref, colscale_ref, qmat_ref, qstats_ref,
-                     out_ref, *, seg_bits: Tuple[int, ...], n_q: int):
-    """One (N_TILE, d_stored) code block vs ALL segments and ALL queries.
+def _saq_scan_kernel(*refs, seg_bits: Tuple[int, ...], n_q: int,
+                     bitpacked: bool = False):
+    """One (N_TILE, ·) code block vs ALL segments and ALL queries.
 
-    codes_ref:    (T, D) uint — packed code block
+    codes_ref:    (T, D) uint — packed code block; with ``bitpacked``,
+                  (T, W) uint32 word block instead (each column stored
+                  at exactly its segment's bit width — see WordLayout)
     fac_ref:      (T, 3S+1) f32 — [vmax, rescale, o_norm]*S + o_norm_total
     colscale_ref: (1, D) f32 — per-column prefix-bits prescale (2^-shift)
     qmat_ref:     (D, S*NQ) f32 — segment-masked queries, segment-major
     qstats_ref:   (S+1, NQ) f32 — per-segment residual q-sums + ||q||^2
+    tab_ref:      (6, D) u32 — only with ``bitpacked``: per-column
+                  [w_lo, w_hi, shift, hi_shift, straddle_mask, field_mask]
+                  unpack tables
     out_ref:      (T, NQ) f32 — estimated squared distances
     """
     s_count = len(seg_bits)
+    if bitpacked:
+        (codes_ref, fac_ref, colscale_ref, qmat_ref, qstats_ref, tab_ref,
+         out_ref) = refs
+        words = codes_ref[...]                                   # (T, W) u32
+        tab = tab_ref[...]
+        # in-VMEM shift/mask expansion: gather each field's word(s) and
+        # cut the field out — (lo >> shift) | (hi << hi_shift) & smask
+        lo = jnp.take(words, tab[0].astype(jnp.int32), axis=1)   # (T, D)
+        hi = jnp.take(words, tab[1].astype(jnp.int32), axis=1)
+        vals = ((lo >> tab[2][None, :])
+                | ((hi << tab[3][None, :]) & tab[4][None, :])) \
+            & tab[5][None, :]
+        codes = vals.astype(jnp.float32)
+    else:
+        (codes_ref, fac_ref, colscale_ref, qmat_ref, qstats_ref,
+         out_ref) = refs
+        codes = codes_ref[...].astype(jnp.float32)
     # floor(codes * 2^-shift) == codes >> shift exactly (codes < 2^16,
     # power-of-two scale); all-ones when no truncation.
-    codes = jnp.floor(codes_ref[...].astype(jnp.float32)
-                      * colscale_ref[...])                       # (T, D)
+    codes = jnp.floor(codes * colscale_ref[...])                 # (T, D)
     raw = jnp.dot(codes, qmat_ref[...],
                   preferred_element_type=jnp.float32)            # MXU (T, S*NQ)
     fac = fac_ref[...]
@@ -123,20 +144,34 @@ def _saq_scan_kernel(codes_ref, fac_ref, colscale_ref, qmat_ref, qstats_ref,
     out_ref[...] = o_norm + qstats_ref[s_count, :][None, :] - 2.0 * acc
 
 
+def _unpack_tab(col_offsets: Tuple[int, ...],
+                seg_bits: Tuple[int, ...]):
+    """(6, d_stored) uint32 per-column unpack tables for the kernel
+    (single source of truth: ``repro.core.types.kernel_unpack_table``)."""
+    from repro.core.types import kernel_unpack_table, word_layout
+
+    wl = word_layout(col_offsets, seg_bits)
+    return kernel_unpack_table(wl), wl.n_words
+
+
 @functools.partial(jax.jit,
                    static_argnames=("col_offsets", "seg_bits", "prefix_bits",
-                                    "n_tile", "interpret"))
+                                    "bitpacked", "n_tile", "interpret"))
 def saq_scan_pallas(codes: jnp.ndarray, factors: jnp.ndarray,
                     o_norm_sq_total: jnp.ndarray, queries: jnp.ndarray,
                     col_offsets: Tuple[int, ...],
                     seg_bits: Tuple[int, ...],
                     q_norm_sq: Optional[jnp.ndarray] = None,
                     prefix_bits: Optional[Tuple[int, ...]] = None,
+                    bitpacked: bool = False,
                     n_tile: int = DEFAULT_N_TILE,
                     interpret: bool = False) -> jnp.ndarray:
     """Fused packed-layout scan: estimated squared distances (NQ, N).
 
-    codes:   (N, d_stored) uint — packed codes (PackedCodes layout)
+    codes:   (N, d_stored) uint — packed codes (PackedCodes layout) —
+             or, with ``bitpacked=True``, (N, n_words) uint32 bit-packed
+             words that the kernel expands in VMEM (shift/mask) so the
+             fused scan reads the true-space-budget buffer directly
     factors: (N, S, 3) f32 — [vmax, rescale, o_norm_sq] per segment
     o_norm_sq_total: (N,) f32
     queries: (NQ, d_stored) f32 — packed rotated queries
@@ -147,7 +182,8 @@ def saq_scan_pallas(codes: jnp.ndarray, factors: jnp.ndarray,
     from repro.core.types import (make_col_scale, make_effective_bits,
                                   make_seg_onehot)
 
-    n, d = codes.shape
+    n = codes.shape[0]
+    d = col_offsets[-1]
     n_q = queries.shape[0]
     s_count = len(seg_bits)
     eff_bits = make_effective_bits(seg_bits, prefix_bits)
@@ -174,18 +210,30 @@ def saq_scan_pallas(codes: jnp.ndarray, factors: jnp.ndarray,
          o_norm_sq_total[:, None]], axis=-1).astype(jnp.float32)
     fac_p = jnp.pad(fac, ((0, n_pad), (0, 0)), constant_values=1.0)
     grid = ((n + n_pad) // n_tile,)
+    code_w = codes.shape[1]
+    in_specs = [
+        pl.BlockSpec((n_tile, code_w), lambda i: (i, 0)),
+        pl.BlockSpec((n_tile, 3 * s_count + 1), lambda i: (i, 0)),
+        pl.BlockSpec((1, d), lambda i: (0, 0)),                # resident
+        pl.BlockSpec((d, s_count * n_q), lambda i: (0, 0)),    # resident
+        pl.BlockSpec((s_count + 1, n_q), lambda i: (0, 0)),    # resident
+    ]
+    operands = [codes_p, fac_p, jnp.asarray(colscale), qmat, qstats]
+    if bitpacked:
+        tab, n_words = _unpack_tab(col_offsets, seg_bits)
+        if code_w != n_words:
+            raise ValueError(
+                f"bitpacked codes have {code_w} words/row, layout "
+                f"expects {n_words}")
+        in_specs.append(pl.BlockSpec((6, d), lambda i: (0, 0)))  # resident
+        operands.append(jnp.asarray(tab))
     out = pl.pallas_call(
-        functools.partial(_saq_scan_kernel, seg_bits=eff_bits, n_q=n_q),
+        functools.partial(_saq_scan_kernel, seg_bits=eff_bits, n_q=n_q,
+                          bitpacked=bitpacked),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((n_tile, d), lambda i: (i, 0)),
-            pl.BlockSpec((n_tile, 3 * s_count + 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, d), lambda i: (0, 0)),            # resident
-            pl.BlockSpec((d, s_count * n_q), lambda i: (0, 0)),  # resident
-            pl.BlockSpec((s_count + 1, n_q), lambda i: (0, 0)),  # resident
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((n_tile, n_q), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n + n_pad, n_q), jnp.float32),
         interpret=interpret,
-    )(codes_p, fac_p, jnp.asarray(colscale), qmat, qstats)
+    )(*operands)
     return out[:n].T

@@ -45,14 +45,25 @@ def saq_scan(packed, queries: jnp.ndarray, q_norm_sq=None,
     """Kernel-backed fused multi-segment multi-query scan over a
     ``PackedCodes`` container (flat ``(N, ...)`` leading shape); see
     ref.saq_scan_ref. queries: (NQ, d_stored) packed rotated queries.
-    Returns (NQ, N) estimated squared distances."""
+    Bit-packed containers are scanned directly (the kernel expands the
+    uint32 word buffer in VMEM). Returns (NQ, N) estimated squared
+    distances."""
     lay = packed.layout
+    interpret = _interpret()
+    if packed.bitpacked and not interpret:
+        # The in-kernel word expansion gathers words by per-column index
+        # tables; that lowering is validated in interpret mode but not
+        # yet on compiled Mosaic/Triton backends, so compiled scans
+        # expand through XLA first and feed the kernel columns. Results
+        # are bit-identical either way (tests/test_bitpack_parity.py).
+        packed = packed.unpack()
     return saq_scan_pallas(
         packed.codes, packed.factors, packed.o_norm_sq_total, queries,
         col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
         q_norm_sq=q_norm_sq,
         prefix_bits=tuple(prefix_bits) if prefix_bits is not None else None,
-        interpret=_interpret())
+        bitpacked=packed.bitpacked,
+        interpret=interpret)
 
 
 def fwht(x: jnp.ndarray) -> jnp.ndarray:

@@ -58,8 +58,8 @@ def ivf_scan_ref(codes: jnp.ndarray, vmax: jnp.ndarray, rescale: jnp.ndarray,
 
 def saq_scan_ref(codes: jnp.ndarray, factors: jnp.ndarray,
                  o_norm_sq_total: jnp.ndarray, queries: jnp.ndarray,
-                 col_offsets, seg_bits, q_norm_sq=None, prefix_bits=None
-                 ) -> jnp.ndarray:
+                 col_offsets, seg_bits, q_norm_sq=None, prefix_bits=None,
+                 bitpacked: bool = False) -> jnp.ndarray:
     """Estimated ||o - q||^2 for every (query, packed row) pair: (NQ, N).
 
     Per stored segment s (columns ``col_offsets[s]:col_offsets[s+1]``,
@@ -69,7 +69,15 @@ def saq_scan_ref(codes: jnp.ndarray, factors: jnp.ndarray,
         <x,q>_s = delta * <codes_s, q_s> + q_sum_s * (delta/2 - vmax_s)
         ip      = sum_s <x,q>_s * rescale_s
         dist^2  = o_norm_sq_total + ||q||^2 - 2 ip
+
+    With ``bitpacked`` the codes operand is the (N, n_words) uint32 word
+    buffer; it is expanded through ``repro.core.types.unpack_bits``
+    before the scan (bit-identical to the unpacked path).
     """
+    if bitpacked:
+        from repro.core.types import unpack_words, word_layout
+        codes = unpack_words(
+            codes, word_layout(tuple(col_offsets), tuple(seg_bits)))
     queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
     if q_norm_sq is None:
         q_norm_sq = jnp.sum(queries * queries, axis=-1)

@@ -81,7 +81,8 @@ def test_fused_scan_kernel_matches_estimator(fitted, prefix):
     orc = np.asarray(ref.saq_scan_ref(
         qds.codes, qds.factors, qds.o_norm_sq_total, qcs.q_rot,
         lay.col_offsets, lay.seg_bits, q_norm_sq=qcs.q_norm_sq,
-        prefix_bits=tuple(pb) if pb else None))
+        prefix_bits=tuple(pb) if pb else None,
+        bitpacked=qds.bitpacked))
     np.testing.assert_allclose(ker, orc, rtol=1e-4, atol=1e-4)
     # and both match the (non-fused) estimator path per query
     for j in range(qs.shape[0]):
@@ -195,7 +196,8 @@ def test_distributed_scan_packed_multiquery():
         dd = np.asarray(saq_scan_ref(packed.codes, packed.factors,
                                      packed.o_norm_sq_total, qc.q_rot,
                                      lay.col_offsets, lay.seg_bits,
-                                     q_norm_sq=qc.q_norm_sq))
+                                     q_norm_sq=qc.q_norm_sq,
+                                     bitpacked=packed.bitpacked))
         ok = all(set(np.argsort(dd[j])[:10].tolist())
                  == set(np.asarray(i[j]).tolist()) for j in range(3))
         print("PACKED_TOPK", ok)

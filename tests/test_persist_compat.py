@@ -1,0 +1,158 @@
+"""Persistence compatibility: golden v1/v2 fixture directories load and
+auto-repack to the bit-packed v3 in-memory form, a save -> load -> save
+cycle is byte-stable, and corrupt/truncated word buffers raise a clear
+error instead of returning garbage results."""
+import dataclasses
+import filecmp
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.saq import SAQConfig
+from repro.ivf import IVFIndex, load_index, save_index
+from repro.ivf.persist import FORMAT_VERSION, CorruptIndexError
+from conftest import decaying_data
+
+
+@pytest.fixture(scope="module")
+def index():
+    x = decaying_data(600, 32, alpha=0.7, seed=5)
+    return x, IVFIndex.build(
+        x, SAQConfig(avg_bits=4, rounds=2, align=8, max_bits=8),
+        n_clusters=8)
+
+
+def _write_fixture(index, path, fmt):
+    """Emit a golden legacy directory exactly as the old writers did."""
+    os.makedirs(path)
+    saq = index.saq
+    lay = index.packed.layout
+    cols = index.packed.unpack()     # legacy formats store columns
+    arrays = {
+        "centroids": index.centroids, "ids": index.ids,
+        "counts": index.counts,
+        "o_norm_total": cols.o_norm_sq_total,
+        "g_proj": index.g_proj, "variances": saq.variances,
+    }
+    if fmt == 2:
+        arrays |= {"codes": cols.codes, "factors": cols.factors,
+                   "g_rot": index.g_rot}
+    else:   # v1: per-segment arrays
+        for s in range(lay.n_segments):
+            lo, hi = lay.col_bounds(s)
+            arrays[f"seg{s}_codes"] = cols.codes[..., lo:hi]
+            arrays[f"seg{s}_vmax"] = cols.factors[..., s, 0]
+            arrays[f"seg{s}_rescale"] = cols.factors[..., s, 1]
+            arrays[f"seg{s}_grot"] = index.g_rot[..., lo:hi]
+    for s, rot in enumerate(saq.rotations):
+        arrays[f"seg{s}_rotation"] = rot
+    if saq.pca is not None:
+        arrays |= {"pca_mean": saq.pca.mean,
+                   "pca_components": saq.pca.components,
+                   "pca_variances": saq.pca.variances}
+    for name, a in arrays.items():
+        np.save(os.path.join(path, f"{name}.npy"), np.asarray(a))
+    manifest = {
+        "format": fmt,
+        "config": dataclasses.asdict(saq.config) | {"plan": None},
+        "plan": [[s.start, s.stop, s.bits] for s in saq.plan.segments],
+        "dim": saq.plan.dim,
+        "n_segments": lay.n_segments,
+        "has_pca": saq.pca is not None,
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+@pytest.mark.parametrize("fmt", [1, 2])
+def test_golden_legacy_formats_load_and_repack(tmp_path, index, fmt):
+    x, idx = index
+    gold = str(tmp_path / f"v{fmt}")
+    _write_fixture(idx, gold, fmt)
+    loaded = load_index(gold)
+    # auto-repacked to the bit-packed in-memory form
+    assert loaded.packed.bitpacked
+    assert loaded.packed.codes.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(loaded.packed.codes),
+                                  np.asarray(idx.packed.codes))
+    # identical search results through the repacked buffer
+    qs = decaying_data(3, 32, alpha=0.7, seed=50)
+    ids_a, d_a = idx.search_batch(qs, k=5, nprobe=4)
+    ids_b, d_b = loaded.search_batch(qs, k=5, nprobe=4)
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    np.testing.assert_array_equal(np.asarray(d_a), np.asarray(d_b))
+    # and saving the loaded index upgrades it to v3 on disk
+    up = str(tmp_path / f"v{fmt}_resaved")
+    save_index(loaded, up)
+    with open(os.path.join(up, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["format"] == FORMAT_VERSION and m["bitpacked"]
+
+
+def test_save_load_save_byte_stable(tmp_path, index):
+    _, idx = index
+    p1, p2 = str(tmp_path / "a"), str(tmp_path / "b")
+    save_index(idx, p1)
+    save_index(load_index(p1), p2)
+    files = sorted(os.listdir(p1))
+    assert files == sorted(os.listdir(p2))
+    _, mismatch, errors = filecmp.cmpfiles(p1, p2, files, shallow=False)
+    assert not mismatch and not errors, (mismatch, errors)
+
+
+def test_v3_manifest_records_word_layout(tmp_path, index):
+    _, idx = index
+    p = str(tmp_path / "idx")
+    save_index(idx, p)
+    with open(os.path.join(p, "manifest.json")) as f:
+        m = json.load(f)
+    lay = idx.packed.layout
+    assert m["n_words"] == lay.n_words
+    assert m["total_code_bits"] == lay.total_code_bits
+    codes = np.load(os.path.join(p, "codes.npy"))
+    assert codes.dtype == np.uint32 and codes.shape[-1] == lay.n_words
+
+
+def test_truncated_word_buffer_raises(tmp_path, index):
+    _, idx = index
+    p = str(tmp_path / "idx")
+    save_index(idx, p)
+    fp = os.path.join(p, "codes.npy")
+    raw = open(fp, "rb").read()
+    with open(fp, "wb") as f:       # chop the file mid-array
+        f.write(raw[: max(64, len(raw) // 3)])
+    with pytest.raises(CorruptIndexError, match="truncated or corrupted"):
+        load_index(p)
+
+
+def test_wrong_word_count_raises(tmp_path, index):
+    _, idx = index
+    p = str(tmp_path / "idx")
+    save_index(idx, p)
+    codes = np.load(os.path.join(p, "codes.npy"))
+    np.save(os.path.join(p, "codes.npy"), codes[..., :-1])  # drop a word
+    with pytest.raises(CorruptIndexError, match="words/row"):
+        load_index(p)
+
+
+def test_wrong_dtype_raises(tmp_path, index):
+    _, idx = index
+    p = str(tmp_path / "idx")
+    save_index(idx, p)
+    codes = np.load(os.path.join(p, "codes.npy"))
+    np.save(os.path.join(p, "codes.npy"), codes.astype(np.uint16))
+    with pytest.raises(CorruptIndexError, match="uint32"):
+        load_index(p)
+
+
+def test_v2_wrong_column_count_raises(tmp_path, index):
+    _, idx = index
+    gold = str(tmp_path / "v2bad")
+    _write_fixture(idx, gold, 2)
+    codes = np.load(os.path.join(gold, "codes.npy"))
+    np.save(os.path.join(gold, "codes.npy"), codes[..., :-2])
+    with pytest.raises(CorruptIndexError, match="columns"):
+        load_index(gold)
