@@ -19,8 +19,12 @@ SUITES = ("accuracy", "quant_time", "anns", "space", "adjust_iters",
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true",
-                    help="paper-scale dataset sizes (slow)")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--full", action="store_true",
+                      help="paper-scale dataset sizes (slow)")
+    mode.add_argument("--fast", action="store_true",
+                      help="reduced sizes (the default; explicit flag "
+                           "for CI smoke jobs)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(SUITES))
     args = ap.parse_args(argv)
@@ -35,7 +39,7 @@ def main(argv=None) -> int:
     for name in wanted:
         t0 = time.time()
         print(f"=== {name} ===", flush=True)
-        mods[name].run(fast=not args.full)
+        mods[name].run(fast=args.fast or not args.full)
         print(f"=== {name} done in {time.time() - t0:.1f}s ===",
               flush=True)
     return 0

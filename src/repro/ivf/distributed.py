@@ -6,7 +6,7 @@ This is the multi-pod serving path for the vector index: with rows over
 and only k candidates per shard cross the ICI — collective bytes are
 O(devices * k), independent of database size.
 
-Two entry points (both memoize the jitted shard_map program per static
+Three entry points (all memoize the jitted shard_map program per static
 (mesh, axes, layout, k) key, so repeated serving calls hit the compile
 cache):
 
@@ -17,17 +17,33 @@ cache):
   multi-segment multi-query scan (kernel semantics of
   ``repro.kernels.ref.saq_scan_ref``), local top-k per query, then one
   all-gather of k candidates per (shard, query).
+* ``sharded_search_batch``    — the full IVF search path over the padded
+  ``(C, L, ...)`` list layout: clusters sharded over the mesh axis/axes,
+  probe selection + query transform replicated (bit-identical to the
+  single-device path), each shard runs the full probe list against its
+  LOCAL slab (out-of-shard probes index-clipped, masked to inf after
+  the scan — the static SPMD shapes match the single-device scan
+  exactly, which is what makes per-candidate distances bitwise
+  identical), local top-k, ONE all-gather of k candidates per
+  (shard, query), tie-stable global merge. Exposed as
+  ``IVFIndex.search_batch(..., mesh=...)``. What this scales today is
+  list *capacity* (each device stores C/shards of the index) and
+  collective traffic (O(devices * NQ * k), database-size independent);
+  per-shard scan FLOPs stay at the single-device worst case because a
+  query's probes can all land on one shard and SPMD shapes are static —
+  probe compaction is a ROADMAP follow-up.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+import math
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.compat import axis_size, shard_map
 
 
 def _local_scan(codes, vmax, rescale, o_norm_sq, ids, q, bits: int, k: int):
@@ -132,3 +148,145 @@ def distributed_scan_packed(mesh: Mesh, axis, packed, ids: jnp.ndarray,
     fn = _packed_scan_fn(mesh, axes, lay.col_offsets, lay.seg_bits, k,
                          packed.bitpacked)
     return fn(packed, ids, queries, q_norm_sq)
+
+
+# ---------------------------------------------------------------------------
+# Sharded IVF search over the padded (C, L, ...) list layout
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...],
+                       col_offsets: Tuple[int, ...],
+                       seg_bits: Tuple[int, ...],
+                       prefix_bits: Optional[Tuple[int, ...]],
+                       bitpacked: bool, k: int, nprobe: int, c_loc: int,
+                       probe_backend: str):
+    """jit'd shard_map program for the cluster-sharded IVF search.
+
+    Probe selection and the query transform run replicated OUTSIDE the
+    shard_map (the same ops as the single-device ``_search_batch_impl``,
+    so every shard agrees on the global probe list bit-for-bit); each
+    shard then maps global probe ids onto its local cluster slab and
+    runs the full (NQ, P) probe list through the SAME
+    ``_gathered_probe_dists`` body — out-of-shard probes index-clip
+    into the local slab and mask to inf after the scan. Scanning all P
+    per shard keeps the gathered shapes identical to the single-device
+    scan (bitwise-identical per-candidate distances) at the cost of
+    unscaled per-shard FLOPs; per-shard top-k then merges with one
+    all-gather per mesh axis.
+    """
+    from repro.ivf.index import (_gathered_probe_dists, _probe_select,
+                                 _transform_queries)
+
+    cluster = P(axes)
+
+    def scan_body(codes, factors, o_norm, g_proj, g_rot, ids,
+                  fq, fq_rot, probes):
+        # linearized shard index along the sharded cluster axis —
+        # axes iterate outer-to-inner, matching PartitionSpec((axes,))
+        idx = jnp.int32(0)
+        for ax in axes:
+            idx = idx * axis_size(ax) + jax.lax.axis_index(ax)
+        local = probes.astype(jnp.int32) - idx * c_loc          # (NQ, P)
+        in_range = (local >= 0) & (local < c_loc)
+        locc = jnp.clip(local, 0, c_loc - 1)
+        dist, pid = _gathered_probe_dists(
+            codes, factors, o_norm, g_proj, g_rot, ids, fq, fq_rot, locc,
+            col_offsets, seg_bits, prefix_bits, bitpacked, probe_backend)
+        dist = jnp.where(in_range[:, :, None], dist, jnp.inf)
+        pid = jnp.where(in_range[:, :, None], pid, -1)
+        nq = dist.shape[0]
+        neg, ix = jax.lax.top_k(-dist.reshape(nq, -1), k)
+        d = -neg
+        i = jnp.take_along_axis(pid.reshape(nq, -1), ix, axis=1)
+        # ix is each pick's probe-major flat position p*L+l — the SAME
+        # coordinate the single-device top_k ranks over (every in-range
+        # candidate lives on exactly one shard, so positions of finite
+        # candidates are globally unique per query)
+        pos = ix.astype(jnp.int32)
+        # ONE all-gather of k candidates per (shard, query) per axis
+        for ax in axes:
+            d = jax.lax.all_gather(d, ax, axis=1, tiled=True)
+            i = jax.lax.all_gather(i, ax, axis=1, tiled=True)
+            pos = jax.lax.all_gather(pos, ax, axis=1, tiled=True)
+        # merge by (dist, flat position): jax.lax.top_k breaks ties by
+        # lower index, so ranking the gathered candidates by position as
+        # the secondary key reproduces the single-device tie order even
+        # when equal distances land on different shards
+        perm = jnp.lexsort((pos, d), axis=1)[:, :k]
+        return (jnp.take_along_axis(d, perm, axis=1),
+                jnp.take_along_axis(i, perm, axis=1))
+
+    sharded = shard_map(
+        scan_body, mesh=mesh,
+        in_specs=(cluster,) * 6 + (P(), P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False)
+
+    def run(queries, centroids, pca_mean, pca_comp, packed_rot,
+            codes, factors, o_norm, g_proj, g_rot, ids):
+        probes = _probe_select(queries, centroids, nprobe)
+        fq, fq_rot = _transform_queries(queries, pca_mean, pca_comp,
+                                        packed_rot)
+        d, i = sharded(codes, factors, o_norm, g_proj, g_rot, ids,
+                       fq, fq_rot, probes)
+        return i, d
+
+    return jax.jit(run)
+
+
+def _pad_clusters(arr: jnp.ndarray, c_pad: int, fill) -> jnp.ndarray:
+    if c_pad == 0:
+        return arr
+    widths = [(0, c_pad)] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, widths, constant_values=fill)
+
+
+def sharded_search_batch(mesh: Mesh, axis, index, queries: jnp.ndarray,
+                         k: int, nprobe: int,
+                         prefix_bits: Optional[Sequence[int]] = None
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cluster-sharded ``IVFIndex.search_batch``: (ids, dists), (NQ, k).
+
+    ``axis`` may be one mesh axis name or a tuple of names; the padded
+    cluster lists (codes/factors/norms/ids/centroid projections) shard
+    over it, queries and probe metadata replicate. Cluster count is
+    padded to a multiple of the shard count with empty lists (the
+    unpadded centroids make them unreachable by probe selection).
+    Returns replicated results identical to the single-device path.
+    """
+    from repro.kernels import ops
+
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    n_shards = math.prod(mesh.shape[ax] for ax in axes)
+    queries = jnp.asarray(queries, jnp.float32)
+    index._validate_k(k, nprobe)
+    c = index.n_clusters
+    c_pad = -c % n_shards
+    c_loc = (c + c_pad) // n_shards
+    lay = index.packed.layout
+    saq = index.saq
+    pca_mean = saq.pca.mean if saq.pca is not None else None
+    pca_comp = saq.pca.components if saq.pca is not None else None
+    fn = _sharded_search_fn(
+        mesh, axes, lay.col_offsets, lay.seg_bits,
+        (tuple(prefix_bits) if prefix_bits is not None else None),
+        index.packed.bitpacked, k, min(nprobe, c), c_loc,
+        ops.probe_scan_backend())
+    # Padding copies the whole index, so memoize the padded operands on
+    # the index per shard count — the hot serving path then only pays
+    # the jit'd program call. (A rebuilt/reloaded index is a new object
+    # with a fresh cache.)
+    cache = index.__dict__.setdefault("_shard_pad_cache", {})
+    padded = cache.get(n_shards)
+    if padded is None:
+        padded = (
+            _pad_clusters(index.packed.codes, c_pad, 0),
+            _pad_clusters(index.packed.factors, c_pad, 0.0),
+            _pad_clusters(index.packed.o_norm_sq_total, c_pad, 0.0),
+            _pad_clusters(index.g_proj, c_pad, 0.0),
+            _pad_clusters(index.g_rot, c_pad, 0.0),
+            _pad_clusters(index.ids, c_pad, -1))
+        cache[n_shards] = padded
+    return fn(queries, index.centroids, pca_mean, pca_comp,
+              saq.packed_rot, *padded)

@@ -37,12 +37,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kmeans import kmeans_fit, pairwise_sq_dists
+from repro.core.kmeans import kmeans_fit
 from repro.core.saq import SAQ, SAQConfig
 from repro.core.types import (FACTOR_RESCALE, FACTOR_VMAX, PackedCodes,
-                              QuantPlan, make_col_scale, make_effective_bits,
-                              make_seg_onehot, prefix_trunc_shifts,
-                              unpack_words, word_layout)
+                              QuantPlan, unpack_words, word_layout)
 
 
 class SearchStats(NamedTuple):
@@ -90,21 +88,23 @@ class IVFIndex:
 
         counts = np.bincount(assign, minlength=n_clusters)
         l_max = max(1, int(counts.max()))
+        # Vectorized padded-list scatter: stable-sort rows by cluster,
+        # then every row's (cluster, slot) target is known in closed form
+        # — slot = rank within the sorted run — so the whole build is two
+        # O(N) fancy-index assignments instead of an O(C) Python loop.
         order = np.argsort(assign, kind="stable")
         offsets = np.zeros(n_clusters + 1, np.int64)
         np.cumsum(counts, out=offsets[1:])
+        sorted_assign = assign[order]
+        slot = np.arange(n, dtype=np.int64) - offsets[sorted_assign]
 
         ids = np.full((n_clusters, l_max), -1, np.int32)
-        for c in range(n_clusters):
-            rows = order[offsets[c]:offsets[c + 1]]
-            ids[c, : len(rows)] = rows
+        ids[sorted_assign, slot] = order
 
         def scatter(x, fill=0.0):
             x = np.asarray(x)
             out = np.full((n_clusters, l_max) + x.shape[1:], fill, x.dtype)
-            for c in range(n_clusters):
-                rows = order[offsets[c]:offsets[c + 1]]
-                out[c, : len(rows)] = x[rows]
+            out[sorted_assign, slot] = x[order]
             return jnp.asarray(out)
 
         # flat.codes is the bit-packed (N, n_words) uint32 word buffer;
@@ -130,18 +130,37 @@ class IVFIndex:
 
     # ------------------------------------------------------------------
     def _query_parts(self, q: jnp.ndarray):
-        """Linear-part query transforms shared across clusters."""
-        q = jnp.asarray(q, jnp.float32)
+        """Linear-part query transforms shared across clusters (the
+        single-query view of ``_transform_queries``)."""
         saq = self.saq
-        if saq.pca is not None:
-            fq = (q - saq.pca.mean) @ saq.pca.components.T
-        else:
-            fq = q
-        return fq, saq.rotate_packed(fq)
+        fq, fq_rot = _transform_queries(
+            jnp.asarray(q, jnp.float32)[None, :],
+            saq.pca.mean if saq.pca is not None else None,
+            saq.pca.components if saq.pca is not None else None,
+            saq.packed_rot)
+        return fq[0], fq_rot[0]
 
     def _probe(self, q: jnp.ndarray, nprobe: int) -> jnp.ndarray:
-        cd = pairwise_sq_dists(q[None, :], self.centroids)[0]
-        return jnp.argsort(cd)[:nprobe]
+        return _probe_select(jnp.asarray(q, jnp.float32)[None, :],
+                             self.centroids,
+                             min(nprobe, self.n_clusters))[0]
+
+    def _validate_k(self, k: int, nprobe: int) -> None:
+        """Fail loudly when ``k`` exceeds the padded candidate count
+        (the scan would silently pad with ``-1`` ids / ``inf`` dists)."""
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        if nprobe < 1:
+            raise ValueError(f"nprobe must be >= 1, got {nprobe}")
+        eff_probe = min(nprobe, self.n_clusters)
+        l_max = int(self.ids.shape[1])
+        cand = eff_probe * l_max
+        if k > cand:
+            raise ValueError(
+                f"k={k} exceeds the candidate capacity of this search: "
+                f"min(nprobe, C) * L = {eff_probe} * {l_max} = {cand} "
+                f"(C={self.n_clusters} clusters, lists padded to "
+                f"L={l_max}). Raise nprobe or lower k.")
 
     # ------------------------------------------------------------------
     def search(self, q: jnp.ndarray, k: int, nprobe: int,
@@ -154,13 +173,29 @@ class IVFIndex:
         return ids[0], dists[0]
 
     def search_batch(self, queries: jnp.ndarray, k: int, nprobe: int,
-                     prefix_bits: Optional[Sequence[int]] = None
+                     prefix_bits: Optional[Sequence[int]] = None,
+                     mesh=None, axis="data"
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Batched full-estimator search: ONE jit'd call for the whole
         query batch (probe selection + transform + fused packed scan +
         top-k, all device-resident). Returns (ids, dists) of shape
-        (NQ, k)."""
+        (NQ, k).
+
+        With ``mesh`` the padded cluster lists are sharded over the
+        mesh axis/axes named by ``axis`` (``shard_map``): probe
+        selection is replicated, each shard scans its local clusters,
+        and per-shard top-k merge with one all-gather — see
+        ``repro.ivf.distributed.sharded_search_batch``.
+        """
         queries = jnp.asarray(queries, jnp.float32)
+        self._validate_k(k, nprobe)
+        if mesh is not None:
+            from repro.ivf.distributed import sharded_search_batch
+            return sharded_search_batch(mesh, axis, self, queries, k=k,
+                                        nprobe=nprobe,
+                                        prefix_bits=prefix_bits)
+        from repro.kernels import ops
+
         saq = self.saq
         lay = self.packed.layout
         pca_mean = saq.pca.mean if saq.pca is not None else None
@@ -173,7 +208,7 @@ class IVFIndex:
             prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
                          else None),
             bitpacked=self.packed.bitpacked,
-            k=k, nprobe=nprobe)
+            k=k, nprobe=nprobe, probe_backend=ops.probe_scan_backend())
         return ids, dists
 
     # ------------------------------------------------------------------
@@ -231,85 +266,72 @@ class IVFIndex:
 # jit'd work functions
 # ---------------------------------------------------------------------------
 
-def _fused_probe_scan(codes, factors, o_norm, g_proj, g_rot, ids,
-                      fq, fq_rot, probes, onehot, expand_codes, pow2):
-    """One query's probe scan over packed (C, L, ...) storage.
-
-    The per-probe residual query is masked per segment so EVERY
-    segment's raw dot product comes out of one einsum over the packed
-    code block; Eq 13 affine corrections + Eq 5 rescales apply from the
-    gathered factor buffer. ``expand_codes`` maps the gathered code
-    buffer (word buffer when bit-packed) to f32 columns, applying any
-    progressive prefix truncation.
-    """
-    probesi = probes.astype(jnp.int32)
-    codes_p = expand_codes(codes[probesi])                  # (P, L, Ds) f32
-    fac_p = factors[probesi]                                # (P, L, S, 3)
-    qres = fq_rot[None, :] - g_rot[probesi]                 # (P, Ds)
-    qmask = qres[:, :, None] * onehot[None, :, :]           # (P, Ds, S)
-    raw = jnp.einsum("pld,pds->pls", codes_p, qmask)        # fused dot
-    vmax = fac_p[..., FACTOR_VMAX]                          # (P, L, S)
-    rescale = fac_p[..., FACTOR_RESCALE]
-    delta = (2.0 * vmax) / pow2
-    q_sum = qres @ onehot                                   # (P, S)
-    ip_xq = delta * raw + q_sum[:, None, :] * (0.5 * delta - vmax)
-    ip = jnp.sum(ip_xq * rescale, axis=-1)                  # (P, L)
-    q_res_norm = jnp.sum((fq[None, :] - g_proj[probesi]) ** 2, axis=-1)
-    dist = o_norm[probesi] + q_res_norm[:, None] - 2.0 * ip
-    pid = ids[probesi]                                      # (P, L)
-    dist = jnp.where(pid >= 0, dist, jnp.inf)
-    return dist.reshape(-1), pid.reshape(-1)
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("col_offsets", "seg_bits", "prefix_bits",
-                                    "bitpacked", "k", "nprobe"))
-def _search_batch_impl(queries, centroids, pca_mean, pca_comp, packed_rot,
-                       codes, factors, o_norm, g_proj, g_rot, ids,
-                       col_offsets, seg_bits, prefix_bits, bitpacked,
-                       k, nprobe):
-    """End-to-end batched search: (NQ, D) raw queries -> (NQ, k)."""
-    onehot = jnp.asarray(make_seg_onehot(col_offsets))
-    eff_bits = make_effective_bits(seg_bits, prefix_bits)
-    pow2 = jnp.asarray([1 << b for b in eff_bits], jnp.float32)
-
-    if bitpacked:
-        wl = word_layout(col_offsets, seg_bits)
-        trunc = (prefix_trunc_shifts(col_offsets, seg_bits, prefix_bits)
-                 if prefix_bits is not None else None)
-
-        def expand_codes(cw):          # (..., W) u32 -> (..., Ds) f32
-            return unpack_words(cw, wl, trunc).astype(jnp.float32)
-    else:
-        colscale = (None if prefix_bits is None else
-                    jnp.asarray(make_col_scale(col_offsets, seg_bits,
-                                               prefix_bits)))
-
-        def expand_codes(c):
-            c = c.astype(jnp.float32)
-            # floor(c * 2^-shift) == c >> shift exactly (c < 2^16)
-            return c if colscale is None else jnp.floor(c * colscale)
-
-    # probe selection in raw space: ||q - c||^2 up to the shared ||q||^2
+def _probe_select(queries, centroids, nprobe: int):
+    """Probe selection in raw space: top-nprobe clusters per query by
+    ||q - c||^2 (up to the shared ||q||^2 term). Returns (NQ, P) i32."""
     cd = jnp.sum(centroids * centroids, axis=-1)[None, :] \
         - 2.0 * queries @ centroids.T                       # (NQ, C)
-    nprobe = min(nprobe, centroids.shape[0])
     _, probes = jax.lax.top_k(-cd, nprobe)                  # (NQ, P)
+    return probes
 
+
+def _transform_queries(queries, pca_mean, pca_comp, packed_rot):
+    """Linear-part query transforms shared across clusters: projection
+    basis ``fq`` and packed rotated ``fq @ packed_rot``."""
     if pca_mean is not None:
         fq = (queries - pca_mean[None, :]) @ pca_comp.T
     else:
         fq = queries
-    fq_rot = fq @ packed_rot                                # (NQ, Ds)
+    return fq, fq @ packed_rot                              # (NQ, Ds)
 
-    def one(fq1, fqr1, probes1):
-        flat_d, flat_i = _fused_probe_scan(
-            codes, factors, o_norm, g_proj, g_rot, ids,
-            fq1, fqr1, probes1, onehot, expand_codes, pow2)
-        neg_top, idx = jax.lax.top_k(-flat_d, k)
-        return -neg_top, flat_i[idx]
 
-    return jax.vmap(one)(fq, fq_rot, probes)
+def _gathered_probe_dists(codes, factors, o_norm, g_proj, g_rot, ids,
+                          fq, fq_rot, probes, col_offsets, seg_bits,
+                          prefix_bits, bitpacked, probe_backend):
+    """Gather the probed (C, L, ...) slabs and scan them through the
+    backend-dispatched probe-scan primitive (Pallas kernel with in-VMEM
+    word expansion on TPU, fused XLA einsum elsewhere — see
+    ``repro.kernels.ops.probe_scan``). Padding lanes mask to inf.
+
+    Returns (dists, pids), both (NQ, P, L); this is the ONE scan body
+    shared by the single-device and the mesh-sharded search paths.
+    """
+    from repro.kernels import ops
+
+    probesi = probes.astype(jnp.int32)
+    codes_g = codes[probesi]                                # (NQ, P, L, ·)
+    fac_g = factors[probesi]                                # (NQ, P, L, S, 3)
+    o_g = o_norm[probesi]                                   # (NQ, P, L)
+    pid = ids[probesi]                                      # (NQ, P, L)
+    qres = fq_rot[:, None, :] - g_rot[probesi]              # (NQ, P, Ds)
+    # residual norm in the FULL projection basis (dropped dims count)
+    q_res_norm = jnp.sum((fq[:, None, :] - g_proj[probesi]) ** 2, axis=-1)
+    dist = ops.probe_scan(codes_g, fac_g, o_g, qres, q_res_norm,
+                          col_offsets=col_offsets, seg_bits=seg_bits,
+                          prefix_bits=prefix_bits, bitpacked=bitpacked,
+                          backend=probe_backend)
+    dist = jnp.where(pid >= 0, dist, jnp.inf)
+    return dist, pid
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("col_offsets", "seg_bits", "prefix_bits",
+                                    "bitpacked", "k", "nprobe",
+                                    "probe_backend"))
+def _search_batch_impl(queries, centroids, pca_mean, pca_comp, packed_rot,
+                       codes, factors, o_norm, g_proj, g_rot, ids,
+                       col_offsets, seg_bits, prefix_bits, bitpacked,
+                       k, nprobe, probe_backend):
+    """End-to-end batched search: (NQ, D) raw queries -> (NQ, k)."""
+    nprobe = min(nprobe, centroids.shape[0])
+    probes = _probe_select(queries, centroids, nprobe)
+    fq, fq_rot = _transform_queries(queries, pca_mean, pca_comp, packed_rot)
+    dist, pid = _gathered_probe_dists(
+        codes, factors, o_norm, g_proj, g_rot, ids, fq, fq_rot, probes,
+        col_offsets, seg_bits, prefix_bits, bitpacked, probe_backend)
+    nq = queries.shape[0]
+    neg_top, idx = jax.lax.top_k(-dist.reshape(nq, -1), k)
+    return -neg_top, jnp.take_along_axis(pid.reshape(nq, -1), idx, axis=1)
 
 
 @functools.partial(jax.jit,

@@ -10,7 +10,7 @@ rescale factor of Eq (5) fused in the same kernel:
     dist^2 = o_norm_sq + ||q||^2
              - 2 * rescale * (delta <codes,q> + q_sum (delta/2 - vmax))
 
-Two kernels:
+Three kernels:
 
 * ``ivf_scan_pallas``  — single segment, single query (the original).
 * ``saq_scan_pallas``  — the fused multi-segment, multi-query scan over
@@ -21,6 +21,14 @@ Two kernels:
   correction + Eq 5 rescale then applies from the packed factor buffer
   in the same kernel. Progressive ``prefix_bits`` reads fold into a
   per-column power-of-two prescale (exact ``>> shift`` in f32).
+* ``saq_probe_scan_pallas`` — the IVF *gathered* probe scan: per
+  (query, probe) pair the residual query differs (q' - g_rot[probe]),
+  so the grid runs one step per (query, probe) block and contracts that
+  probe's (L, d_stored) cluster slab against its own segment-masked
+  query. Reuses the exact ``_saq_scan_kernel`` body with NQ=1 per grid
+  step, including the in-VMEM word expansion for bit-packed lists.
+  ``saq_probe_scan_xla`` is the einsum fallback with identical
+  semantics; ``repro.kernels.ops.probe_scan`` dispatches between them.
 
 Tiling: grid over N; queries/factor-layout operands stay resident in
 VMEM across all grid steps (constant index_map), codes stream
@@ -237,3 +245,125 @@ def saq_scan_pallas(codes: jnp.ndarray, factors: jnp.ndarray,
         interpret=interpret,
     )(*operands)
     return out[:n].T
+
+
+# ---------------------------------------------------------------------------
+# Gathered probe scan: per-(query, probe) residual queries over padded
+# (C, L, ...) IVF lists
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("col_offsets", "seg_bits", "prefix_bits",
+                                    "bitpacked", "interpret"))
+def saq_probe_scan_pallas(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
+                          o_norm_g: jnp.ndarray, queries_g: jnp.ndarray,
+                          q_norm_g: jnp.ndarray,
+                          col_offsets: Tuple[int, ...],
+                          seg_bits: Tuple[int, ...],
+                          prefix_bits: Optional[Tuple[int, ...]] = None,
+                          bitpacked: bool = False,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Fused scan of gathered IVF probe slabs: (NQ, P, L) sq distances.
+
+    Unlike ``saq_scan_pallas`` (one query set vs ALL rows), every
+    (query, probe) pair here carries its OWN residual query
+    ``q_rot - g_rot[probe]``, so the grid is one step per (query, probe)
+    and each step contracts that probe's (L, d_stored) cluster slab
+    against its own segment-masked query — the same kernel body, NQ=1.
+
+    codes_g:   (NQ, P, L, d_stored) uint — gathered packed codes, or
+               (NQ, P, L, n_words) uint32 words with ``bitpacked``
+               (expanded in VMEM per slab)
+    factors_g: (NQ, P, L, S, 3) f32 gathered factor buffer
+    o_norm_g:  (NQ, P, L) f32 gathered total ||o||^2
+    queries_g: (NQ, P, d_stored) f32 per-probe rotated residual queries
+    q_norm_g:  (NQ, P) f32 per-probe FULL-basis residual query norms
+               (computed in the projection basis so dropped dims count)
+    """
+    from repro.core.types import (make_col_scale, make_effective_bits,
+                                  make_seg_onehot)
+
+    nq, p, l, code_w = codes_g.shape
+    d = col_offsets[-1]
+    s_count = len(seg_bits)
+    g = nq * p
+    eff_bits = make_effective_bits(seg_bits, prefix_bits)
+    onehot = jnp.asarray(make_seg_onehot(col_offsets))
+    colscale = make_col_scale(col_offsets, seg_bits, prefix_bits)[None, :]
+
+    codes_fl = codes_g.reshape(g * l, code_w)
+    fac_fl = jnp.concatenate(
+        [factors_g.reshape(g * l, s_count * 3),
+         o_norm_g.reshape(g * l)[:, None]], axis=-1).astype(jnp.float32)
+    q = queries_g.reshape(g, d).astype(jnp.float32)
+    # per-(query, probe) segment-masked query block, (G*D, S)
+    qmat_fl = (q[:, :, None] * onehot[None, :, :]).reshape(g * d, s_count)
+    qstats_fl = jnp.concatenate(
+        [q @ onehot, q_norm_g.reshape(g, 1).astype(jnp.float32)],
+        axis=-1).reshape(g * (s_count + 1), 1)
+
+    in_specs = [
+        pl.BlockSpec((l, code_w), lambda i: (i, 0)),
+        pl.BlockSpec((l, 3 * s_count + 1), lambda i: (i, 0)),
+        pl.BlockSpec((1, d), lambda i: (0, 0)),                # resident
+        pl.BlockSpec((d, s_count), lambda i: (i, 0)),
+        pl.BlockSpec((s_count + 1, 1), lambda i: (i, 0)),
+    ]
+    operands = [codes_fl, fac_fl, jnp.asarray(colscale), qmat_fl, qstats_fl]
+    if bitpacked:
+        tab, n_words = _unpack_tab(col_offsets, seg_bits)
+        if code_w != n_words:
+            raise ValueError(
+                f"bitpacked codes have {code_w} words/row, layout "
+                f"expects {n_words}")
+        in_specs.append(pl.BlockSpec((6, d), lambda i: (0, 0)))  # resident
+        operands.append(jnp.asarray(tab))
+    out = pl.pallas_call(
+        functools.partial(_saq_scan_kernel, seg_bits=eff_bits, n_q=1,
+                          bitpacked=bitpacked),
+        grid=(g,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((l, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g * l, 1), jnp.float32),
+        interpret=interpret,
+    )(*operands)
+    return out.reshape(nq, p, l)
+
+
+def saq_probe_scan_xla(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
+                       o_norm_g: jnp.ndarray, queries_g: jnp.ndarray,
+                       q_norm_g: jnp.ndarray,
+                       col_offsets: Tuple[int, ...],
+                       seg_bits: Tuple[int, ...],
+                       prefix_bits: Optional[Tuple[int, ...]] = None,
+                       bitpacked: bool = False) -> jnp.ndarray:
+    """XLA fallback for the gathered probe scan (same contract as
+    ``saq_probe_scan_pallas``): every segment's raw dot product comes
+    out of ONE fused einsum over the gathered code slabs, then the Eq 13
+    affine corrections + Eq 5 rescales apply from the factor buffer."""
+    from repro.core.types import (FACTOR_RESCALE, FACTOR_VMAX,
+                                  make_col_scale, make_effective_bits,
+                                  make_seg_onehot, unpack_words, word_layout)
+
+    eff_bits = make_effective_bits(seg_bits, prefix_bits)
+    onehot = jnp.asarray(make_seg_onehot(col_offsets))
+    colscale = jnp.asarray(make_col_scale(col_offsets, seg_bits,
+                                          prefix_bits))
+    if bitpacked:
+        wl = word_layout(tuple(col_offsets), tuple(seg_bits))
+        codes = unpack_words(codes_g, wl).astype(jnp.float32)
+    else:
+        codes = codes_g.astype(jnp.float32)
+    # floor(codes * 2^-shift) == codes >> shift exactly (codes < 2^16)
+    codes = jnp.floor(codes * colscale)
+    pow2 = jnp.asarray([1 << b for b in eff_bits], jnp.float32)
+    q = queries_g.astype(jnp.float32)
+    qmask = q[..., :, None] * onehot                        # (NQ, P, D, S)
+    raw = jnp.einsum("qpld,qpds->qpls", codes, qmask)       # fused dot
+    vmax = factors_g[..., FACTOR_VMAX]                      # (NQ, P, L, S)
+    rescale = factors_g[..., FACTOR_RESCALE]
+    delta = (2.0 * vmax) / pow2
+    q_sum = q @ onehot                                      # (NQ, P, S)
+    ip_xq = delta * raw + q_sum[..., None, :] * (0.5 * delta - vmax)
+    ip = jnp.sum(ip_xq * rescale, axis=-1)                  # (NQ, P, L)
+    return o_norm_g + q_norm_g[..., None] - 2.0 * ip

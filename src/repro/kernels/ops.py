@@ -12,7 +12,8 @@ import jax.numpy as jnp
 
 from .caq_adjust import caq_adjust_pallas
 from .fwht import fwht_pallas
-from .ivf_scan import ivf_scan_pallas, saq_scan_pallas
+from .ivf_scan import (ivf_scan_pallas, saq_probe_scan_pallas,
+                       saq_probe_scan_xla, saq_scan_pallas)
 from .caq_encode import caq_encode_pallas
 from .saq_attend import saq_attend_pallas
 
@@ -64,6 +65,68 @@ def saq_scan(packed, queries: jnp.ndarray, q_norm_sq=None,
         prefix_bits=tuple(prefix_bits) if prefix_bits is not None else None,
         bitpacked=packed.bitpacked,
         interpret=interpret)
+
+
+def probe_scan_backend() -> str:
+    """Backend dispatch policy for the gathered probe scan: the compiled
+    Pallas kernel on TPU, the interpret-mode kernel under
+    force-interpret (so parity tests can pin the kernel path on CPU),
+    and the XLA einsum fallback everywhere else (CPU/GPU serving stays
+    on fused XLA). The returned string fully determines the executed
+    program (including interpret mode); callers that jit around
+    ``probe_scan`` must resolve this OUTSIDE the jit and thread it as a
+    static arg, or a flipped force-interpret would silently hit the
+    stale compile cache."""
+    if _FORCE_INTERPRET:
+        return "pallas-interpret"
+    # _FORCE_INTERPRET=False means "compiled kernels" (as for every
+    # other kernel wrapper): the compiled Pallas path exists on TPU
+    # only, so elsewhere it still resolves to the XLA fallback.
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def probe_scan(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
+               o_norm_g: jnp.ndarray, queries_g: jnp.ndarray,
+               q_norm_g: jnp.ndarray, col_offsets, seg_bits,
+               prefix_bits=None, bitpacked: bool = False,
+               backend: str | None = None) -> jnp.ndarray:
+    """Backend-dispatched gathered IVF probe scan -> (NQ, P, L) sq dists.
+
+    The single scan primitive behind ``IVFIndex.search_batch`` (single
+    device AND sharded): gathered probe slabs (NQ, P, L, ...) against
+    per-(query, probe) residual queries. See
+    ``ivf_scan.saq_probe_scan_pallas`` for the operand contract.
+    ``backend``: "pallas" | "pallas-interpret" | "xla" | None (None
+    resolves via ``probe_scan_backend()``).
+    """
+    backend = backend or probe_scan_backend()
+    col_offsets = tuple(col_offsets)
+    seg_bits = tuple(seg_bits)
+    if backend in ("pallas", "pallas-interpret"):
+        if bitpacked and backend == "pallas":
+            # Same guard as saq_scan: the in-kernel word expansion is
+            # validated in interpret mode but not yet on compiled
+            # Mosaic/Triton, so compiled scans expand through XLA first
+            # and feed the kernel columns (bit-identical either way).
+            from repro.core.types import unpack_words, word_layout
+            codes_g = unpack_words(codes_g,
+                                   word_layout(col_offsets, seg_bits))
+            bitpacked = False
+        return saq_probe_scan_pallas(
+            codes_g, factors_g, o_norm_g, queries_g, q_norm_g,
+            col_offsets=col_offsets, seg_bits=seg_bits,
+            prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
+                         else None),
+            bitpacked=bitpacked,
+            interpret=(backend == "pallas-interpret"))
+    if backend != "xla":
+        raise ValueError(f"unknown probe_scan backend {backend!r}")
+    return saq_probe_scan_xla(
+        codes_g, factors_g, o_norm_g, queries_g, q_norm_g,
+        col_offsets=col_offsets, seg_bits=seg_bits,
+        prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
+                     else None),
+        bitpacked=bitpacked)
 
 
 def fwht(x: jnp.ndarray) -> jnp.ndarray:

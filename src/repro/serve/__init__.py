@@ -1,5 +1,8 @@
 """Serving stack: batched prefill + decode over bf16 or SAQ-quantized KV
-caches, sampling, and the serve_step entry points the dry-run lowers."""
+caches, sampling, the serve_step entry points the dry-run lowers, and
+the ANN serving engine (async admission + dynamic batching over the IVF
+index)."""
 from .engine import (ServeConfig, ServeState, make_prefill_step,  # noqa: F401
                      make_decode_step, generate)
 from .sampling import sample_logits  # noqa: F401
+from .ann_engine import AnnEngine, BatchPolicy, EngineStats  # noqa: F401

@@ -1,0 +1,310 @@
+"""ANN serving engine: async query admission + dynamic batching over
+``IVFIndex.search_batch``.
+
+The batched device-resident search path (PR 1/2) only pays off when the
+serving loop actually forms batches: per-request dispatch wastes the
+fused scan on batch=1 and thrashes the jit cache with ad-hoc shapes.
+``AnnEngine`` closes that gap:
+
+* **Admission** — ``submit`` enqueues a request and returns a
+  ``concurrent.futures.Future`` immediately; callers block only on
+  ``.result()``. Request validation (``k`` vs candidate capacity,
+  query dim) happens at admission so bad requests fail fast instead of
+  poisoning a batch.
+* **Coalescing** — a dispatcher thread collects requests per *tick*
+  under a :class:`BatchPolicy`: wait at most ``max_wait_us`` after the
+  first arrival, admit at most ``max_batch`` per tick.
+* **Bucketing** — requests are grouped by their dispatch key
+  ``(k, nprobe, prefix_bits)``; each group becomes one device-resident
+  ``search_batch`` call (mixed parameters never share a call, so the
+  jit'd program stays static).
+* **Static shapes** — every group pads up to the next size in
+  ``batch_shapes`` so the jit cache holds one executable per
+  (shape, key) instead of one per observed batch size. Padded rows are
+  zero queries whose results are dropped.
+* **Scale-out** — constructed with ``mesh=``, every dispatch routes
+  through the cluster-sharded search path
+  (``repro.ivf.distributed.sharded_search_batch``), which returns
+  bit-identical results to the single-device path.
+
+See ``docs/serving.md`` for the architecture and a throughput recipe;
+``benchmarks/batch_qps.py`` measures engine QPS under Poisson arrivals.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    """Dynamic batching knobs.
+
+    max_batch:    most requests admitted into one tick (across groups).
+    max_wait_us:  how long a tick waits for co-riders after its first
+                  request arrives. 0 = dispatch immediately (latency
+                  floor); larger values trade p50 latency for batch
+                  occupancy.
+    batch_shapes: the static shapes groups pad up to (ascending).
+                  Groups larger than the biggest shape dispatch in
+                  chunks of that size.
+    """
+
+    max_batch: int = 64
+    max_wait_us: int = 2000
+    batch_shapes: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_wait_us < 0:
+            raise ValueError(
+                f"max_wait_us must be >= 0, got {self.max_wait_us}")
+        shapes = tuple(sorted(set(int(s) for s in self.batch_shapes)))
+        if not shapes or shapes[0] < 1:
+            raise ValueError(f"bad batch_shapes {self.batch_shapes}")
+        object.__setattr__(self, "batch_shapes", shapes)
+
+    def pad_to(self, n: int) -> int:
+        """Smallest static shape >= n (n is pre-chunked to the max)."""
+        i = bisect.bisect_left(self.batch_shapes, n)
+        return self.batch_shapes[min(i, len(self.batch_shapes) - 1)]
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Cumulative serving counters (snapshot via ``AnnEngine.stats``)."""
+
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    ticks: int = 0
+    dispatches: int = 0        # search_batch calls issued
+    dispatched_rows: int = 0   # rows sent to the device incl. padding
+    padded_rows: int = 0       # rows that were padding
+    max_group: int = 0         # largest single dispatch group seen
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of dispatched rows that carried real queries."""
+        if self.dispatched_rows == 0:
+            return 0.0
+        return 1.0 - self.padded_rows / self.dispatched_rows
+
+
+@dataclasses.dataclass
+class _Request:
+    query: np.ndarray
+    key: Tuple               # (k, nprobe, prefix_bits) dispatch key
+    future: Future
+    t_submit: float
+
+
+class AnnEngine:
+    """Async serving front-end owning a built :class:`IVFIndex`.
+
+    Usage::
+
+        with AnnEngine(index, BatchPolicy(max_batch=64,
+                                          max_wait_us=2000)) as eng:
+            fut = eng.submit(q, k=10, nprobe=8)
+            ids, dists = fut.result()
+
+    Results per request are ``(ids, dists)`` numpy arrays of length
+    ``k`` — identical to ``index.search_batch(q[None])[.,0]`` (padding
+    never leaks across rows: every query's probe selection, scan and
+    top-k are row-independent).
+    """
+
+    def __init__(self, index, policy: Optional[BatchPolicy] = None,
+                 mesh=None, axis="data"):
+        self.index = index
+        self.policy = policy or BatchPolicy()
+        self.mesh = mesh
+        self.axis = axis
+        self._queue: "queue.Queue[_Request]" = queue.Queue()
+        self._stats = EngineStats()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> "AnnEngine":
+        if self.running:
+            return self
+        self._thread = None          # reap a thread whose join timed out
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._loop, name="ann-engine-dispatch", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: Optional[float] = None) -> None:
+        """Stop admission and drain: queued requests still complete."""
+        if self._thread is None:
+            return
+        # Setting the flag under the admission lock makes (flag check +
+        # enqueue) atomic against (flag set + drain): any submit that
+        # passed the check has already enqueued, so the sweep below
+        # catches it and no Future is ever left unresolved.
+        with self._lock:
+            self._stop.set()
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            # join timed out mid-dispatch: admission stays closed and the
+            # dispatcher keeps draining; a later stop()/start() resolves
+            # once it exits. Never run the sweep against a live thread.
+            return
+        self._thread = None
+        leftovers = []
+        while True:
+            try:
+                leftovers.append(self._queue.get_nowait())
+            except queue.Empty:
+                break
+        if leftovers:
+            self._dispatch_tick(leftovers)
+
+    def __enter__(self) -> "AnnEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def submit(self, query, k: int = 10, nprobe: int = 8,
+               prefix_bits: Optional[Sequence[int]] = None) -> Future:
+        """Admit one query; returns a Future of (ids, dists)."""
+        q = np.asarray(query, np.float32)
+        if q.ndim != 1 or q.shape[0] != self.index.dim:
+            raise ValueError(
+                f"query must be a ({self.index.dim},) vector, "
+                f"got shape {q.shape}")
+        # fail fast at admission, not inside a coalesced batch
+        self.index._validate_k(k, nprobe)
+        key = (int(k), int(nprobe),
+               tuple(prefix_bits) if prefix_bits is not None else None)
+        fut: Future = Future()
+        # the stop-flag check and the enqueue are atomic vs stop() (same
+        # lock), so a request is either rejected here or guaranteed to
+        # be dispatched by the drain
+        with self._lock:
+            if not self.running or self._stop.is_set():
+                raise RuntimeError(
+                    "AnnEngine is not running (call start())")
+            self._stats.submitted += 1
+            self._queue.put(_Request(q, key, fut, time.perf_counter()))
+        return fut
+
+    def search(self, query, k: int = 10, nprobe: int = 8,
+               prefix_bits: Optional[Sequence[int]] = None):
+        """Blocking single-query convenience over ``submit``."""
+        return self.submit(query, k=k, nprobe=nprobe,
+                           prefix_bits=prefix_bits).result()
+
+    def search_many(self, queries, k: int = 10, nprobe: int = 8,
+                    prefix_bits: Optional[Sequence[int]] = None):
+        """Submit a whole batch and gather (ids, dists) as (NQ, k)."""
+        futs = [self.submit(q, k=k, nprobe=nprobe, prefix_bits=prefix_bits)
+                for q in np.asarray(queries, np.float32)]
+        out = [f.result() for f in futs]
+        return (np.stack([o[0] for o in out]),
+                np.stack([o[1] for o in out]))
+
+    @property
+    def stats(self) -> EngineStats:
+        with self._lock:
+            return dataclasses.replace(self._stats)
+
+    def warmup(self, k: int = 10, nprobe: int = 8,
+               prefix_bits: Optional[Sequence[int]] = None) -> None:
+        """Pre-compile every static batch shape for one dispatch key."""
+        for s in self.policy.batch_shapes:
+            qb = np.zeros((s, self.index.dim), np.float32)
+            ids, dists = self.index.search_batch(
+                qb, k=k, nprobe=nprobe, prefix_bits=prefix_bits,
+                mesh=self.mesh, axis=self.axis)
+            jax.block_until_ready(ids)
+
+    # ------------------------------------------------------------------
+    # dispatcher
+    # ------------------------------------------------------------------
+    def _loop(self) -> None:
+        while not (self._stop.is_set() and self._queue.empty()):
+            try:
+                first = self._queue.get(timeout=0.02)
+            except queue.Empty:
+                continue
+            batch = [first]
+            deadline = first.t_submit + self.policy.max_wait_us * 1e-6
+            while len(batch) < self.policy.max_batch:
+                wait = deadline - time.perf_counter()
+                if wait <= 0:
+                    # past the deadline: only drain what is already here
+                    try:
+                        batch.append(self._queue.get_nowait())
+                    except queue.Empty:
+                        break
+                else:
+                    try:
+                        batch.append(self._queue.get(timeout=wait))
+                    except queue.Empty:
+                        break
+            self._dispatch_tick(batch)
+
+    def _dispatch_tick(self, batch) -> None:
+        groups: dict = {}
+        for r in batch:
+            groups.setdefault(r.key, []).append(r)
+        with self._lock:
+            self._stats.ticks += 1
+            self._stats.max_group = max(
+                self._stats.max_group,
+                max(len(g) for g in groups.values()))
+        cap = self.policy.batch_shapes[-1]
+        for key, reqs in groups.items():
+            for lo in range(0, len(reqs), cap):
+                self._dispatch_group(key, reqs[lo:lo + cap])
+
+    def _dispatch_group(self, key, reqs) -> None:
+        k, nprobe, prefix_bits = key
+        n = len(reqs)
+        shape = self.policy.pad_to(n)
+        qb = np.zeros((shape, self.index.dim), np.float32)
+        for j, r in enumerate(reqs):
+            qb[j] = r.query
+        try:
+            ids, dists = self.index.search_batch(
+                qb, k=k, nprobe=nprobe, prefix_bits=prefix_bits,
+                mesh=self.mesh, axis=self.axis)
+            ids = np.asarray(jax.block_until_ready(ids))
+            dists = np.asarray(dists)
+        except Exception as e:  # fail the whole group, keep serving
+            for r in reqs:
+                r.future.set_exception(e)
+            with self._lock:
+                self._stats.failed += n
+            return
+        for j, r in enumerate(reqs):
+            r.future.set_result((ids[j], dists[j]))
+        with self._lock:
+            self._stats.completed += n
+            self._stats.dispatches += 1
+            self._stats.dispatched_rows += shape
+            self._stats.padded_rows += shape - n

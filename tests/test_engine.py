@@ -1,0 +1,147 @@
+"""AnnEngine serving tests: parity with the direct batched path, mixed
+dispatch-group bucketing, batching-policy accounting, admission
+validation, lifecycle, and the empty-cluster / nprobe edge cases."""
+import numpy as np
+import pytest
+
+from repro.core.saq import SAQConfig
+from repro.ivf import IVFIndex
+from repro.serve import AnnEngine, BatchPolicy
+from conftest import decaying_data
+
+
+@pytest.fixture(scope="module")
+def built():
+    x = decaying_data(2500, 32, alpha=0.7, seed=3)
+    idx = IVFIndex.build(
+        x, SAQConfig(avg_bits=4, rounds=2, align=8, max_bits=9),
+        n_clusters=12)
+    return x, idx
+
+
+def test_engine_parity_vs_direct(built):
+    """Engine results come back in submission order and equal the direct
+    device-resident batched call row-for-row."""
+    _, idx = built
+    qs = decaying_data(16, 32, alpha=0.7, seed=11)
+    with AnnEngine(idx, BatchPolicy(max_batch=8, max_wait_us=2000)) as eng:
+        ids, dists = eng.search_many(qs, k=10, nprobe=6)
+    ref_ids, ref_d = idx.search_batch(qs, k=10, nprobe=6)
+    np.testing.assert_array_equal(ids, np.asarray(ref_ids))
+    np.testing.assert_allclose(dists, np.asarray(ref_d), rtol=1e-6)
+
+
+def test_engine_mixed_k_nprobe_bucketing(built):
+    """Interleaved requests with different (k, nprobe, prefix_bits) land
+    in separate dispatch groups and each matches its per-query search."""
+    _, idx = built
+    qs = decaying_data(12, 32, alpha=0.7, seed=21)
+    pb = tuple(max(1, s.bits // 2) for s in idx.plan.stored_segments)
+    specs = [
+        dict(k=5, nprobe=4),
+        dict(k=10, nprobe=6),
+        dict(k=3, nprobe=6, prefix_bits=pb),
+    ]
+    with AnnEngine(idx, BatchPolicy(max_batch=16, max_wait_us=5000)) as eng:
+        futs = [(eng.submit(q, **specs[i % 3]), specs[i % 3])
+                for i, q in enumerate(qs)]
+        results = [(f.result(timeout=60), s) for f, s in futs]
+    for i, ((ids, dists), spec) in enumerate(results):
+        ref_i, ref_d = idx.search(qs[i], **spec)
+        np.testing.assert_array_equal(ids, np.asarray(ref_i))
+        np.testing.assert_allclose(dists, np.asarray(ref_d), rtol=1e-6)
+
+
+def test_engine_padding_and_chunking_stats(built):
+    """Groups pad to the policy's static shapes; oversized groups chunk
+    at the largest shape; the stats account for every dispatched row."""
+    _, idx = built
+    qs = decaying_data(11, 32, alpha=0.7, seed=31)
+    policy = BatchPolicy(max_batch=16, max_wait_us=50_000,
+                         batch_shapes=(1, 2, 4))
+    with AnnEngine(idx, policy) as eng:
+        ids, _ = eng.search_many(qs, k=5, nprobe=4)
+        st = eng.stats
+    ref_ids, _ = idx.search_batch(qs, k=5, nprobe=4)
+    np.testing.assert_array_equal(ids, np.asarray(ref_ids))
+    assert st.completed == 11 and st.failed == 0
+    # 11 rows through shapes {1,2,4}: every dispatch is 4/2/1 wide
+    assert st.dispatched_rows >= 11
+    assert st.padded_rows == st.dispatched_rows - 11
+    assert 0.0 < st.occupancy <= 1.0
+    assert st.dispatches >= 3     # 11 > max shape forces chunking
+
+
+def test_batch_policy_pad_to():
+    p = BatchPolicy(max_batch=64, batch_shapes=(1, 2, 4, 8))
+    assert [p.pad_to(n) for n in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+    with pytest.raises(ValueError):
+        BatchPolicy(max_batch=0)
+    with pytest.raises(ValueError):
+        BatchPolicy(batch_shapes=())
+
+
+def test_engine_admission_validation(built):
+    _, idx = built
+    q = decaying_data(1, 32, alpha=0.7, seed=41)[0]
+    with AnnEngine(idx) as eng:
+        with pytest.raises(ValueError):       # k beyond candidate capacity
+            eng.submit(q, k=10 ** 6, nprobe=1)
+        with pytest.raises(ValueError):       # wrong query dim
+            eng.submit(q[:7])
+        # the engine keeps serving after rejected admissions
+        ids, _ = eng.search(q, k=5, nprobe=4)
+        assert ids.shape == (5,)
+
+
+def test_engine_lifecycle(built):
+    _, idx = built
+    q = decaying_data(1, 32, alpha=0.7, seed=51)[0]
+    eng = AnnEngine(idx)
+    with pytest.raises(RuntimeError):         # not started
+        eng.submit(q)
+    eng.start()
+    fut = eng.submit(q, k=5, nprobe=4)
+    eng.stop()                                # drains queued work
+    ids, dists = fut.result(timeout=60)
+    assert ids.shape == (5,) and dists.shape == (5,)
+    with pytest.raises(RuntimeError):         # stopped
+        eng.submit(q)
+
+
+def test_k_exceeding_candidates_raises(built):
+    _, idx = built
+    qs = decaying_data(2, 32, alpha=0.7, seed=61)
+    l_max = int(idx.ids.shape[1])
+    with pytest.raises(ValueError, match="candidate capacity"):
+        idx.search_batch(qs, k=l_max + 1, nprobe=1)
+    with pytest.raises(ValueError):
+        idx.search_batch(qs, k=0, nprobe=4)
+    with pytest.raises(ValueError):
+        idx.search_batch(qs, k=5, nprobe=0)
+    # valid boundary: k == min(nprobe, C) * L works
+    ids, _ = idx.search_batch(qs, k=l_max, nprobe=1)
+    assert ids.shape == (2, l_max)
+
+
+def test_empty_cluster_and_nprobe_gt_c_edges():
+    """Duplicate-blob data leaves clusters empty after the final kmeans
+    assignment; searches probing them (and nprobe > C) stay correct."""
+    rng = np.random.default_rng(7)
+    blobs = rng.standard_normal((3, 16)).astype(np.float32) * 4.0
+    x = np.repeat(blobs, 12, axis=0)          # 36 rows, 3 distinct values
+    idx = IVFIndex.build(
+        x, SAQConfig(avg_bits=4, rounds=2, align=8, max_bits=9),
+        n_clusters=8)
+    counts = np.asarray(idx.counts)
+    assert (counts == 0).any(), counts        # the edge is actually hit
+    q = blobs[0] + 0.01
+    ids, dists = idx.search(q, k=5, nprobe=idx.n_clusters)
+    assert (np.asarray(ids) >= 0).all()       # padding never leaks out
+    assert np.isfinite(np.asarray(dists)).all()
+    # nprobe far beyond C clamps and matches the exact-C probe search
+    ids2, d2 = idx.search(q, k=5, nprobe=10 ** 4)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids2))
+    with AnnEngine(idx) as eng:
+        e_ids, _ = eng.search(q, k=5, nprobe=10 ** 4)
+    np.testing.assert_array_equal(e_ids, np.asarray(ids))

@@ -104,3 +104,39 @@ def test_caq_encode_kernel_vs_oracle(n, d, bits, rounds):
     cos_r = np.asarray(fr)[:, 1] / np.sqrt(
         np.asarray(fr)[:, 2] * np.asarray(fr)[:, 3] + 1e-30)
     assert (cos_k >= cos_r - 1e-4).all()
+
+
+@pytest.mark.parametrize("bitpacked", [True, False])
+def test_probe_scan_pallas_vs_xla(bitpacked):
+    """The gathered probe scan must agree between the Pallas kernel
+    (interpret mode, in-VMEM word expansion) and the XLA einsum
+    fallback, for both word-buffer and column storage, with and without
+    progressive prefix reads."""
+    import dataclasses
+
+    from repro.core.saq import SAQConfig
+    from repro.ivf import IVFIndex
+
+    x = decaying_data(1200, 32, alpha=0.7, seed=9)
+    idx = IVFIndex.build(
+        x, SAQConfig(avg_bits=4, rounds=2, align=8, max_bits=9),
+        n_clusters=10)
+    if not bitpacked:
+        idx = dataclasses.replace(idx, packed=idx.packed.unpack())
+    assert idx.packed.bitpacked == bitpacked
+    qs = decaying_data(5, 32, alpha=0.7, seed=19)
+    pb = tuple(max(1, s.bits // 2) for s in idx.plan.stored_segments)
+    for prefix in (None, pb):
+        ids_x, d_x = idx.search_batch(qs, k=8, nprobe=5,
+                                      prefix_bits=prefix)
+        prev = ops._FORCE_INTERPRET
+        ops._FORCE_INTERPRET = True    # pin the Pallas kernel path
+        try:
+            ids_p, d_p = idx.search_batch(qs, k=8, nprobe=5,
+                                          prefix_bits=prefix)
+        finally:
+            ops._FORCE_INTERPRET = prev
+        np.testing.assert_array_equal(np.asarray(ids_x),
+                                      np.asarray(ids_p))
+        np.testing.assert_allclose(np.asarray(d_x), np.asarray(d_p),
+                                   rtol=1e-5, atol=1e-5)
