@@ -1,15 +1,19 @@
 """Batched serving throughput: queries/sec of the IVF index across batch
-sizes — per-query loop vs the single jit'd device-resident batch path vs
-the AnnEngine (async admission + dynamic batching) under Poisson
-arrivals.
+sizes — per-query loop vs the single jit'd device-resident batch path
+(gathered AND cluster-major probe-scan layouts) vs the AnnEngine (async
+admission + dynamic batching) under Poisson arrivals.
 
 The packed-layout refactor turns ``search_batch`` into ONE jit'd call
-(probe selection + transform + fused packed scan + top-k); the engine
-adds the serving loop that actually forms those batches from an async
-request stream. This benchmark measures what each layer buys at serving
-batch sizes {1, 8, 64, 256}. In fast mode it doubles as the CI smoke
-check for the serving path: a regression that makes the engine slower
-than the per-query loop at batch >= 8 fails the run.
+(probe selection + transform + fused packed scan + top-k); the
+cluster-major layout dedups the batch's probed clusters so each unique
+cluster slab is gathered once per dispatch (peak slab bytes ``U*L*d``
+instead of ``NQ*P*L*d``), and the engine adds the serving loop that
+actually forms those batches from an async request stream. This
+benchmark measures what each layer buys at serving batch sizes
+{1, 8, 16, 64, 256}. In fast mode it doubles as the CI smoke check for
+the serving path: a regression that makes the engine slower than the
+per-query loop at batch >= 8, or the cluster-major scan slower than the
+gathered scan at batch >= 16, fails the run.
 """
 from __future__ import annotations
 
@@ -23,7 +27,7 @@ from repro.ivf import IVFIndex
 from repro.serve import AnnEngine, BatchPolicy
 from .common import bench_datasets, emit, save_json
 
-BATCH_SIZES = (1, 8, 64, 256)
+BATCH_SIZES = (1, 8, 16, 64, 256)
 
 
 def _timed(fn, repeats: int = 3) -> float:
@@ -36,6 +40,28 @@ def _timed(fn, repeats: int = 3) -> float:
     return best
 
 
+def _slab_bytes(idx, bs: int, nprobe: int) -> tuple[int, int]:
+    """Peak f32 scan-buffer bytes the two probe-scan layouts
+    materialize: code + factor slabs plus the layout's distance and
+    residual-query intermediates. Gathered scans NQ*P slabs against one
+    query each; cluster-major scans U_max = min(NQ*P, C) slabs against
+    all NQ queries (so its dist/query intermediates scale with NQ)."""
+    p = min(nprobe, idx.n_clusters)
+    l_max = int(idx.ids.shape[1])
+    d = int(idx.packed.layout.col_offsets[-1])
+    s = len(idx.packed.layout.seg_bits)
+    ds = int(idx.g_rot.shape[-1])
+
+    def layout(slabs: int, nb: int) -> int:
+        return (slabs * l_max * d            # unpacked code slab
+                + slabs * l_max * s * 3      # factor slab
+                + slabs * nb * l_max         # distances
+                + slabs * nb * ds) * 4       # residual queries
+    gathered = layout(bs * p, 1)
+    cluster = layout(min(bs * p, idx.n_clusters), bs)
+    return gathered, cluster
+
+
 def _engine_poisson_qps(idx, queries, n_req: int, k: int, nprobe: int,
                         rate_qps: float, seed: int = 0,
                         repeats: int = 3):
@@ -44,14 +70,18 @@ def _engine_poisson_qps(idx, queries, n_req: int, k: int, nprobe: int,
     above the raw batched capacity so the engine actually queues),
     timed from first submission to last result.
 
-    The policy caps dispatch shapes at 8: the padded-gather scan is
-    compute-bound up to batch ~8 on small hosts and memory-bound past
-    it (see the qps_batched column), so bigger ticks would LOWER
-    throughput. Pick ``batch_shapes`` at the knee of qps_batched.
+    The policy runs shapes up to 32 with the cluster-major scan from
+    shape 8: the gathered layout goes memory-bound past batch ~8 on
+    small hosts, but the cluster-major dedup keeps throughput rising
+    through batch ~32 (see the qps_batched vs qps_cluster_major
+    columns), so big ticks now pay off. Pick ``batch_shapes`` at the
+    knee of the FASTER scan column and ``cluster_major_from`` at the
+    measured layout crossover.
     """
     rng = np.random.default_rng(seed)
-    policy = BatchPolicy(max_batch=8, max_wait_us=1000,
-                         batch_shapes=(1, 2, 4, 8))
+    policy = BatchPolicy(max_batch=32, max_wait_us=1000,
+                         batch_shapes=(1, 2, 4, 8, 16, 32),
+                         cluster_major_from=8)
     best = np.inf
     stats = None
     with AnnEngine(idx, policy) as eng:
@@ -88,7 +118,10 @@ def run(fast: bool = True) -> dict:
             continue
         qb = queries[rng.integers(0, len(queries), bs)].astype(np.float32)
 
-        t_batch = _timed(lambda: idx.search_batch(qb, k=k, nprobe=nprobe))
+        t_batch = _timed(lambda: idx.search_batch(
+            qb, k=k, nprobe=nprobe, backend="xla"))
+        t_cm = _timed(lambda: idx.search_batch(
+            qb, k=k, nprobe=nprobe, backend="xla-cluster-major"))
 
         def loop():
             outs = [idx.search(qb[i], k=k, nprobe=nprobe)
@@ -99,26 +132,39 @@ def run(fast: bool = True) -> dict:
         # offered load well above the raw batched capacity -> the engine
         # queues and its batching policy (not arrival gaps) sets the
         # throughput; 4x bs requests give the stream time to pipeline
-        rate = max(2000.0, 4.0 * bs / max(t_batch, 1e-9))
+        rate = max(2000.0, 4.0 * bs / max(min(t_batch, t_cm), 1e-9))
         qps_engine, st = _engine_poisson_qps(
             idx, qb, n_req=4 * bs, k=k, nprobe=nprobe, rate_qps=rate)
+        slab_g, slab_c = _slab_bytes(idx, bs, nprobe)
         row = {"dataset": "deep", "batch": bs,
                "qps_batched": round(bs / t_batch, 1),
+               "qps_cluster_major": round(bs / t_cm, 1),
                "qps_loop": round(bs / t_loop, 1),
                "qps_engine": round(qps_engine, 1),
                "speedup": round(t_loop / max(t_batch, 1e-9), 2),
+               "cluster_major_speedup": round(t_batch / max(t_cm, 1e-9), 2),
+               "slab_mb_gathered": round(slab_g / 2 ** 20, 2),
+               "slab_mb_cluster_major": round(slab_c / 2 ** 20, 2),
                "engine_occupancy": round(st.occupancy, 3),
                "engine_mean_dispatch": round(
                    st.dispatched_rows / max(st.dispatches, 1), 1)}
         rows.append(row)
         emit("batch_qps", row)
     save_json("batch_qps", rows)
-    # CI smoke gate: dynamic batching must beat the per-query loop once
-    # there is a batch to form (acceptance criterion; fast mode only —
-    # --full runs report without aborting the remaining suites).
+    # CI smoke gates (fast mode only — --full runs report without
+    # aborting the remaining suites):
+    #  * dynamic batching must beat the per-query loop once there is a
+    #    batch to form (acceptance criterion)
+    #  * the cluster-major dedup must beat the gathered layout where the
+    #    gathered scan goes memory-bound (its reason to exist)
     gated = [r for r in rows if r["batch"] >= 8] if fast else []
     if gated and not any(r["qps_engine"] > r["qps_loop"] for r in gated):
         raise RuntimeError(
             f"serving regression: AnnEngine slower than per-query loop "
             f"at every batch>=8: {gated}")
+    for r in rows if fast else []:
+        if r["batch"] >= 16 and r["qps_cluster_major"] < r["qps_batched"]:
+            raise RuntimeError(
+                f"serving regression: cluster-major scan slower than the "
+                f"gathered scan at batch {r['batch']}: {r}")
     return {"batch_qps": rows}

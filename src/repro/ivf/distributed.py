@@ -167,15 +167,16 @@ def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...],
     shard_map (the same ops as the single-device ``_search_batch_impl``,
     so every shard agrees on the global probe list bit-for-bit); each
     shard then maps global probe ids onto its local cluster slab and
-    runs the full (NQ, P) probe list through the SAME
-    ``_gathered_probe_dists`` body — out-of-shard probes index-clip
-    into the local slab and mask to inf after the scan. Scanning all P
-    per shard keeps the gathered shapes identical to the single-device
-    scan (bitwise-identical per-candidate distances) at the cost of
-    unscaled per-shard FLOPs; per-shard top-k then merges with one
-    all-gather per mesh axis.
+    runs the full (NQ, P) probe list through the SAME ``_probe_dists``
+    body — gathered or cluster-major per the static ``probe_backend``,
+    exactly as on a single device — with out-of-shard probes
+    index-clipped into the local slab and masked to inf after the scan.
+    Scanning all P per shard keeps the scan shapes identical to the
+    single-device path (bitwise-identical per-candidate distances) at
+    the cost of unscaled per-shard FLOPs; per-shard top-k then merges
+    with one all-gather per mesh axis.
     """
-    from repro.ivf.index import (_gathered_probe_dists, _probe_select,
+    from repro.ivf.index import (_probe_dists, _probe_select,
                                  _transform_queries)
 
     cluster = P(axes)
@@ -190,7 +191,7 @@ def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...],
         local = probes.astype(jnp.int32) - idx * c_loc          # (NQ, P)
         in_range = (local >= 0) & (local < c_loc)
         locc = jnp.clip(local, 0, c_loc - 1)
-        dist, pid = _gathered_probe_dists(
+        dist, pid = _probe_dists(
             codes, factors, o_norm, g_proj, g_rot, ids, fq, fq_rot, locc,
             col_offsets, seg_bits, prefix_bits, bitpacked, probe_backend)
         dist = jnp.where(in_range[:, :, None], dist, jnp.inf)
@@ -244,7 +245,8 @@ def _pad_clusters(arr: jnp.ndarray, c_pad: int, fill) -> jnp.ndarray:
 
 def sharded_search_batch(mesh: Mesh, axis, index, queries: jnp.ndarray,
                          k: int, nprobe: int,
-                         prefix_bits: Optional[Sequence[int]] = None
+                         prefix_bits: Optional[Sequence[int]] = None,
+                         backend: Optional[str] = None
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Cluster-sharded ``IVFIndex.search_batch``: (ids, dists), (NQ, k).
 
@@ -253,7 +255,10 @@ def sharded_search_batch(mesh: Mesh, axis, index, queries: jnp.ndarray,
     over it, queries and probe metadata replicate. Cluster count is
     padded to a multiple of the shard count with empty lists (the
     unpadded centroids make them unreachable by probe selection).
-    Returns replicated results identical to the single-device path.
+    ``backend`` is the probe-scan backend/layout string (see
+    ``IVFIndex.search_batch``), resolved here OUTSIDE the jit and keyed
+    into the memoized program. Returns replicated results identical to
+    the single-device path with the same backend.
     """
     from repro.kernels import ops
 
@@ -261,6 +266,8 @@ def sharded_search_batch(mesh: Mesh, axis, index, queries: jnp.ndarray,
     n_shards = math.prod(mesh.shape[ax] for ax in axes)
     queries = jnp.asarray(queries, jnp.float32)
     index._validate_k(k, nprobe)
+    backend = backend or ops.probe_scan_backend()
+    ops.split_probe_backend(backend)          # fail fast on bad strings
     c = index.n_clusters
     c_pad = -c % n_shards
     c_loc = (c + c_pad) // n_shards
@@ -272,7 +279,7 @@ def sharded_search_batch(mesh: Mesh, axis, index, queries: jnp.ndarray,
         mesh, axes, lay.col_offsets, lay.seg_bits,
         (tuple(prefix_bits) if prefix_bits is not None else None),
         index.packed.bitpacked, k, min(nprobe, c), c_loc,
-        ops.probe_scan_backend())
+        backend)
     # Padding copies the whole index, so memoize the padded operands on
     # the index per shard count — the hot serving path then only pays
     # the jit'd program call. (A rebuilt/reloaded index is a new object

@@ -19,7 +19,11 @@ Search paths:
     summed). ``search_batch`` is ONE jit'd device-resident call for the
     whole ``(NQ, D)`` batch: probe selection, query transform, gather,
     fused multi-segment scan and top-k all happen on device with no
-    Python-level per-query loop (the serving-throughput path).
+    Python-level per-query loop (the serving-throughput path). Two
+    bit-identical slab layouts (``backend=``): *gathered* (one slab per
+    (query, probe) pair) and *cluster-major* (unique probed clusters
+    gathered once, scanned against the whole batch — ``U*L*d`` peak
+    slab bytes instead of ``NQ*P*L*d``; see ``_probe_dists``).
   * ``search_multistage`` — §4.3: clusters scanned in ranking order,
     segments leading-first, candidates pruned with the Chebyshev lower
     bound Est_v = m * sigma_Seg against the running top-k threshold.
@@ -147,7 +151,22 @@ class IVFIndex:
 
     def _validate_k(self, k: int, nprobe: int) -> None:
         """Fail loudly when ``k`` exceeds the padded candidate count
-        (the scan would silently pad with ``-1`` ids / ``inf`` dists)."""
+        ``min(nprobe, C) * L`` — beyond it every extra row is
+        structurally unfillable.
+
+        The check is against *padded* capacity (L = the longest list),
+        which is the tightest bound knowable without running the probe
+        selection: how many candidates are real depends on which
+        clusters each query probes. Searches that pass this check can
+        therefore still come up short on ragged lists (valid candidates
+        < k <= min(nprobe, C) * L). The contract for that case, shared
+        by ``search_batch`` (single-device and mesh-sharded) and
+        ``search_multistage``: the unfillable tail rows are returned as
+        id ``-1`` / dist ``inf``, always sorted AFTER every real
+        candidate, with the tie-stable (distance, probe-major position)
+        order of the sharded merge — so a shorter prefix of real
+        results is directly usable and the paths stay bit-identical.
+        Covered by tests/test_ivf.py::test_ragged_padding_contract."""
         if k < 1:
             raise ValueError(f"k must be >= 1, got {k}")
         if nprobe < 1:
@@ -174,12 +193,25 @@ class IVFIndex:
 
     def search_batch(self, queries: jnp.ndarray, k: int, nprobe: int,
                      prefix_bits: Optional[Sequence[int]] = None,
-                     mesh=None, axis="data"
+                     mesh=None, axis="data",
+                     backend: Optional[str] = None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Batched full-estimator search: ONE jit'd call for the whole
         query batch (probe selection + transform + fused packed scan +
         top-k, all device-resident). Returns (ids, dists) of shape
-        (NQ, k).
+        (NQ, k). On ragged lists with fewer than k real candidates the
+        tail rows come back as id ``-1`` / dist ``inf``, sorted last —
+        see ``_validate_k`` for the full contract.
+
+        ``backend`` picks the probe-scan program (None resolves via
+        ``repro.kernels.ops.probe_scan_backend()``): the base backends
+        ("xla" / "pallas" / "pallas-interpret") gather one (L, d) slab
+        per (query, probe) pair; the ``-cluster-major`` variants dedup
+        the batch's probed clusters first, gather each unique cluster
+        ONCE and scan it against every query that probes it — identical
+        results bit-for-bit, but peak slab bytes drop from
+        ``NQ*P*L*d`` to ``U*L*d`` (U = unique probed clusters), which
+        is what keeps large batches out of the memory-bound regime.
 
         With ``mesh`` the padded cluster lists are sharded over the
         mesh axis/axes named by ``axis`` (``shard_map``): probe
@@ -187,14 +219,18 @@ class IVFIndex:
         and per-shard top-k merge with one all-gather — see
         ``repro.ivf.distributed.sharded_search_batch``.
         """
+        from repro.kernels import ops
+
         queries = jnp.asarray(queries, jnp.float32)
         self._validate_k(k, nprobe)
+        backend = backend or ops.probe_scan_backend()
+        ops.split_probe_backend(backend)      # fail fast on bad strings
         if mesh is not None:
             from repro.ivf.distributed import sharded_search_batch
             return sharded_search_batch(mesh, axis, self, queries, k=k,
                                         nprobe=nprobe,
-                                        prefix_bits=prefix_bits)
-        from repro.kernels import ops
+                                        prefix_bits=prefix_bits,
+                                        backend=backend)
 
         saq = self.saq
         lay = self.packed.layout
@@ -208,7 +244,7 @@ class IVFIndex:
             prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
                          else None),
             bitpacked=self.packed.bitpacked,
-            k=k, nprobe=nprobe, probe_backend=ops.probe_scan_backend())
+            k=k, nprobe=nprobe, probe_backend=backend)
         return ids, dists
 
     # ------------------------------------------------------------------
@@ -223,7 +259,13 @@ class IVFIndex:
             o_norm + q_norm - 2 (sum_{s<t} est_s + m * sum_{s>=t} sigma_s)
 
         exceeds the running k-th best estimated distance.
+
+        ``k``/``nprobe`` are validated exactly like ``search_batch``
+        (k beyond the padded candidate capacity raises); on ragged
+        lists with fewer than k real candidates the tail rows are
+        id ``-1`` / dist ``inf``, sorted last (see ``_validate_k``).
         """
+        self._validate_k(k, nprobe)
         q = jnp.asarray(q, jnp.float32)
         probes = np.asarray(self._probe(q, nprobe))
         fq, fq_rot = self._query_parts(q)
@@ -285,31 +327,80 @@ def _transform_queries(queries, pca_mean, pca_comp, packed_rot):
     return fq, fq @ packed_rot                              # (NQ, Ds)
 
 
-def _gathered_probe_dists(codes, factors, o_norm, g_proj, g_rot, ids,
-                          fq, fq_rot, probes, col_offsets, seg_bits,
-                          prefix_bits, bitpacked, probe_backend):
-    """Gather the probed (C, L, ...) slabs and scan them through the
-    backend-dispatched probe-scan primitive (Pallas kernel with in-VMEM
-    word expansion on TPU, fused XLA einsum elsewhere — see
-    ``repro.kernels.ops.probe_scan``). Padding lanes mask to inf.
+def _probe_dists(codes, factors, o_norm, g_proj, g_rot, ids,
+                 fq, fq_rot, probes, col_offsets, seg_bits,
+                 prefix_bits, bitpacked, probe_backend):
+    """Scan the probed (C, L, ...) lists -> (dists, pids), both
+    (NQ, P, L). Padding lanes mask to inf. This is the ONE scan body
+    shared by the single-device and the mesh-sharded search paths; the
+    static ``probe_backend`` string picks both the kernel backend and
+    the slab layout:
 
-    Returns (dists, pids), both (NQ, P, L); this is the ONE scan body
-    shared by the single-device and the mesh-sharded search paths.
+    * gathered (base backends) — gather one (L, ·) slab per
+      (query, probe) pair and scan the (NQ, P, L, ·) block through
+      ``repro.kernels.ops.probe_scan``. Peak slab bytes NQ*P*L*d.
+    * cluster-major (``*-cluster-major``) — dedup the batch's probed
+      clusters to a static ``U_max = min(NQ*P, C)`` bound
+      (``jnp.unique``), gather each unique cluster's slab ONCE, scan it
+      against the whole query batch in one fused contraction
+      (``ops.cluster_scan``; a cluster's co-probing sub-batch is at
+      most NQ since probes are distinct per query, so NQ is the static
+      sub-batch shape), then scatter the (U, NQ, L) distances back to
+      (NQ, P, L) through the unique-inverse map. Peak slab bytes
+      U_max*L*d — the overlapping probes of a large batch are gathered
+      once instead of once per query, which is what keeps the scan out
+      of the memory-bound regime. Per-candidate math and reduction
+      shapes are identical to the gathered layout (one shared slab-scan
+      body, ``kernels/ivf_scan.py``), so results are bit-identical.
+      When ``U_max == NQ*P`` (cluster count at least the probe count,
+      so the static shapes cannot dedup) the scan falls back to the
+      gathered layout, which is never worse there.
     """
     from repro.kernels import ops
 
+    base, cluster_major = ops.split_probe_backend(probe_backend)
     probesi = probes.astype(jnp.int32)
-    codes_g = codes[probesi]                                # (NQ, P, L, ·)
-    fac_g = factors[probesi]                                # (NQ, P, L, S, 3)
-    o_g = o_norm[probesi]                                   # (NQ, P, L)
+    nq, p = probesi.shape
+    u_max = min(nq * p, codes.shape[0])
+    if cluster_major and u_max >= nq * p:
+        # The static bound cannot dedup anything (C >= NQ*P): every
+        # (query, probe) pair would become its own slab scanned against
+        # ALL NQ queries — NQ x the gathered FLOPs for identical slab
+        # bytes. The gathered layout is never worse here, and the two
+        # are bit-identical, so fall back silently (the policy knob
+        # stays shape-based; this guards the large-C regime).
+        cluster_major = False
     pid = ids[probesi]                                      # (NQ, P, L)
-    qres = fq_rot[:, None, :] - g_rot[probesi]              # (NQ, P, Ds)
-    # residual norm in the FULL projection basis (dropped dims count)
-    q_res_norm = jnp.sum((fq[:, None, :] - g_proj[probesi]) ** 2, axis=-1)
-    dist = ops.probe_scan(codes_g, fac_g, o_g, qres, q_res_norm,
-                          col_offsets=col_offsets, seg_bits=seg_bits,
-                          prefix_bits=prefix_bits, bitpacked=bitpacked,
-                          backend=probe_backend)
+    if cluster_major:
+        uniq, inv = jnp.unique(probesi.reshape(-1), size=u_max,
+                               fill_value=0, return_inverse=True)
+        uniq = uniq.astype(jnp.int32)
+        inv = inv.reshape(nq, p)
+        # per-(cluster, query) residual queries — same elementwise ops
+        # as the gathered layout, just indexed (U, NQ) instead of
+        # (NQ, P), so each value is bit-identical to its gathered twin
+        qres_u = fq_rot[None, :, :] - g_rot[uniq][:, None, :]   # (U, NQ, Ds)
+        # residual norm in the FULL projection basis (dropped dims count)
+        qn_u = jnp.sum((fq[None, :, :] - g_proj[uniq][:, None, :]) ** 2,
+                       axis=-1)                                 # (U, NQ)
+        dist_u = ops.cluster_scan(
+            codes[uniq], factors[uniq], o_norm[uniq], qres_u, qn_u,
+            col_offsets=col_offsets, seg_bits=seg_bits,
+            prefix_bits=prefix_bits, bitpacked=bitpacked,
+            backend=base)                                       # (U, NQ, L)
+        dist = dist_u[inv, jnp.arange(nq)[:, None], :]          # (NQ, P, L)
+    else:
+        codes_g = codes[probesi]                            # (NQ, P, L, ·)
+        fac_g = factors[probesi]                            # (NQ, P, L, S, 3)
+        o_g = o_norm[probesi]                               # (NQ, P, L)
+        qres = fq_rot[:, None, :] - g_rot[probesi]          # (NQ, P, Ds)
+        # residual norm in the FULL projection basis (dropped dims count)
+        q_res_norm = jnp.sum((fq[:, None, :] - g_proj[probesi]) ** 2,
+                             axis=-1)
+        dist = ops.probe_scan(codes_g, fac_g, o_g, qres, q_res_norm,
+                              col_offsets=col_offsets, seg_bits=seg_bits,
+                              prefix_bits=prefix_bits, bitpacked=bitpacked,
+                              backend=base)
     dist = jnp.where(pid >= 0, dist, jnp.inf)
     return dist, pid
 
@@ -326,7 +417,7 @@ def _search_batch_impl(queries, centroids, pca_mean, pca_comp, packed_rot,
     nprobe = min(nprobe, centroids.shape[0])
     probes = _probe_select(queries, centroids, nprobe)
     fq, fq_rot = _transform_queries(queries, pca_mean, pca_comp, packed_rot)
-    dist, pid = _gathered_probe_dists(
+    dist, pid = _probe_dists(
         codes, factors, o_norm, g_proj, g_rot, ids, fq, fq_rot, probes,
         col_offsets, seg_bits, prefix_bits, bitpacked, probe_backend)
     nq = queries.shape[0]

@@ -10,7 +10,7 @@ rescale factor of Eq (5) fused in the same kernel:
     dist^2 = o_norm_sq + ||q||^2
              - 2 * rescale * (delta <codes,q> + q_sum (delta/2 - vmax))
 
-Three kernels:
+Four kernels:
 
 * ``ivf_scan_pallas``  — single segment, single query (the original).
 * ``saq_scan_pallas``  — the fused multi-segment, multi-query scan over
@@ -21,14 +21,24 @@ Three kernels:
   correction + Eq 5 rescale then applies from the packed factor buffer
   in the same kernel. Progressive ``prefix_bits`` reads fold into a
   per-column power-of-two prescale (exact ``>> shift`` in f32).
-* ``saq_probe_scan_pallas`` — the IVF *gathered* probe scan: per
+* ``saq_cluster_scan_pallas`` — the IVF *slab* scan primitive: one grid
+  step per cluster slab, each step expands that slab's (L, d_stored)
+  codes in VMEM ONCE (shift/mask word expansion for bit-packed lists)
+  and contracts them against a (d, S*NB) block of NB segment-masked
+  residual queries — the co-probing sub-batch of the cluster-major
+  search path, where one gathered slab is reused across every query
+  that probes it. Reuses the exact ``_saq_scan_kernel`` body with
+  NQ=NB per grid step.
+* ``saq_probe_scan_pallas`` — the *gathered* probe scan: per
   (query, probe) pair the residual query differs (q' - g_rot[probe]),
-  so the grid runs one step per (query, probe) block and contracts that
-  probe's (L, d_stored) cluster slab against its own segment-masked
-  query. Reuses the exact ``_saq_scan_kernel`` body with NQ=1 per grid
-  step, including the in-VMEM word expansion for bit-packed lists.
-  ``saq_probe_scan_xla`` is the einsum fallback with identical
-  semantics; ``repro.kernels.ops.probe_scan`` dispatches between them.
+  so each pair is its own slab with NB=1 — a thin reshape over the
+  cluster scan, which keeps the two layouts on ONE kernel body (that
+  shared body is what makes the cluster-major and gathered search
+  paths bit-identical).
+  ``saq_probe_scan_xla`` / ``saq_cluster_scan_xla`` are the einsum
+  fallbacks with identical semantics, likewise sharing one slab-scan
+  body; ``repro.kernels.ops.probe_scan`` / ``ops.cluster_scan``
+  dispatch between them.
 
 Tiling: grid over N; queries/factor-layout operands stay resident in
 VMEM across all grid steps (constant index_map), codes stream
@@ -248,66 +258,86 @@ def saq_scan_pallas(codes: jnp.ndarray, factors: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# Gathered probe scan: per-(query, probe) residual queries over padded
-# (C, L, ...) IVF lists
+# Slab scan: per-cluster residual-query blocks over padded (C, L, ...)
+# IVF lists — the shared body of the gathered (NB=1 per (query, probe)
+# pair) and cluster-major (NB=NQ per unique cluster) search layouts
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit,
                    static_argnames=("col_offsets", "seg_bits", "prefix_bits",
                                     "bitpacked", "interpret"))
-def saq_probe_scan_pallas(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
-                          o_norm_g: jnp.ndarray, queries_g: jnp.ndarray,
-                          q_norm_g: jnp.ndarray,
-                          col_offsets: Tuple[int, ...],
-                          seg_bits: Tuple[int, ...],
-                          prefix_bits: Optional[Tuple[int, ...]] = None,
-                          bitpacked: bool = False,
-                          interpret: bool = False) -> jnp.ndarray:
-    """Fused scan of gathered IVF probe slabs: (NQ, P, L) sq distances.
+def saq_cluster_scan_pallas(codes_u: jnp.ndarray, factors_u: jnp.ndarray,
+                            o_norm_u: jnp.ndarray, queries_u: jnp.ndarray,
+                            q_norm_u: jnp.ndarray,
+                            col_offsets: Tuple[int, ...],
+                            seg_bits: Tuple[int, ...],
+                            prefix_bits: Optional[Tuple[int, ...]] = None,
+                            bitpacked: bool = False,
+                            interpret: bool = False) -> jnp.ndarray:
+    """Fused scan of U cluster slabs vs NB queries each: (U, NB, L).
 
     Unlike ``saq_scan_pallas`` (one query set vs ALL rows), every
-    (query, probe) pair here carries its OWN residual query
-    ``q_rot - g_rot[probe]``, so the grid is one step per (query, probe)
-    and each step contracts that probe's (L, d_stored) cluster slab
-    against its own segment-masked query — the same kernel body, NQ=1.
+    (slab, query) pair here carries its OWN residual query
+    ``q_rot - g_rot[cluster]``, so the grid is one step per slab and
+    each step expands that slab's (L, d_stored) codes in VMEM once and
+    contracts them against its (d, S*NB) segment-masked query block —
+    the same kernel body as the flat scan, NQ=NB. In the cluster-major
+    search layout NB is the query batch (the slab is reused across all
+    co-probing queries); the gathered layout is the NB=1 special case
+    (see ``saq_probe_scan_pallas``).
 
-    codes_g:   (NQ, P, L, d_stored) uint — gathered packed codes, or
-               (NQ, P, L, n_words) uint32 words with ``bitpacked``
+    codes_u:   (U, L, d_stored) uint — per-slab packed codes, or
+               (U, L, n_words) uint32 words with ``bitpacked``
                (expanded in VMEM per slab)
-    factors_g: (NQ, P, L, S, 3) f32 gathered factor buffer
-    o_norm_g:  (NQ, P, L) f32 gathered total ||o||^2
-    queries_g: (NQ, P, d_stored) f32 per-probe rotated residual queries
-    q_norm_g:  (NQ, P) f32 per-probe FULL-basis residual query norms
+    factors_u: (U, L, S, 3) f32 per-slab factor buffer
+    o_norm_u:  (U, L) f32 per-slab total ||o||^2
+    queries_u: (U, NB, d_stored) f32 per-slab rotated residual queries
+    q_norm_u:  (U, NB) f32 per-slab FULL-basis residual query norms
                (computed in the projection basis so dropped dims count)
     """
     from repro.core.types import (make_col_scale, make_effective_bits,
                                   make_seg_onehot)
 
-    nq, p, l, code_w = codes_g.shape
+    u, l, code_w = codes_u.shape
+    nb = queries_u.shape[1]
     d = col_offsets[-1]
     s_count = len(seg_bits)
-    g = nq * p
+    # XLA's N=1 dot (a true matvec) accumulates over d in a different
+    # order than the N>=2 matmul path, while every N>=2 column count is
+    # bit-stable — so a single-segment single-query block would break
+    # the gathered-vs-cluster-major bit-identity. Pad that one case to
+    # two columns (zero query, sliced off below) to pin the matmul path.
+    pad_nb = nb * s_count == 1
+    if pad_nb:
+        queries_u = jnp.concatenate(
+            [queries_u, jnp.zeros_like(queries_u)], axis=1)
+        q_norm_u = jnp.concatenate(
+            [q_norm_u, jnp.zeros_like(q_norm_u)], axis=1)
+        nb = 2
     eff_bits = make_effective_bits(seg_bits, prefix_bits)
     onehot = jnp.asarray(make_seg_onehot(col_offsets))
     colscale = make_col_scale(col_offsets, seg_bits, prefix_bits)[None, :]
 
-    codes_fl = codes_g.reshape(g * l, code_w)
+    codes_fl = codes_u.reshape(u * l, code_w)
     fac_fl = jnp.concatenate(
-        [factors_g.reshape(g * l, s_count * 3),
-         o_norm_g.reshape(g * l)[:, None]], axis=-1).astype(jnp.float32)
-    q = queries_g.reshape(g, d).astype(jnp.float32)
-    # per-(query, probe) segment-masked query block, (G*D, S)
-    qmat_fl = (q[:, :, None] * onehot[None, :, :]).reshape(g * d, s_count)
+        [factors_u.reshape(u * l, s_count * 3),
+         o_norm_u.reshape(u * l)[:, None]], axis=-1).astype(jnp.float32)
+    q = queries_u.astype(jnp.float32)                        # (U, NB, d)
+    # per-slab segment-masked query block, (U*D, S*NB) — column
+    # s*NB + n is query n masked to segment s (the kernel's layout)
+    qmat_fl = (q.transpose(0, 2, 1)[:, :, None, :]
+               * onehot[None, :, :, None]).reshape(u * d, s_count * nb)
     qstats_fl = jnp.concatenate(
-        [q @ onehot, q_norm_g.reshape(g, 1).astype(jnp.float32)],
-        axis=-1).reshape(g * (s_count + 1), 1)
+        [(q @ onehot).transpose(0, 2, 1),
+         q_norm_u[:, None, :].astype(jnp.float32)],
+        axis=1).reshape(u * (s_count + 1), nb)
 
     in_specs = [
         pl.BlockSpec((l, code_w), lambda i: (i, 0)),
         pl.BlockSpec((l, 3 * s_count + 1), lambda i: (i, 0)),
         pl.BlockSpec((1, d), lambda i: (0, 0)),                # resident
-        pl.BlockSpec((d, s_count), lambda i: (i, 0)),
-        pl.BlockSpec((s_count + 1, 1), lambda i: (i, 0)),
+        pl.BlockSpec((d, s_count * nb), lambda i: (i, 0)),
+        pl.BlockSpec((s_count + 1, nb), lambda i: (i, 0)),
     ]
     operands = [codes_fl, fac_fl, jnp.asarray(colscale), qmat_fl, qstats_fl]
     if bitpacked:
@@ -319,15 +349,104 @@ def saq_probe_scan_pallas(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
         in_specs.append(pl.BlockSpec((6, d), lambda i: (0, 0)))  # resident
         operands.append(jnp.asarray(tab))
     out = pl.pallas_call(
-        functools.partial(_saq_scan_kernel, seg_bits=eff_bits, n_q=1,
+        functools.partial(_saq_scan_kernel, seg_bits=eff_bits, n_q=nb,
                           bitpacked=bitpacked),
-        grid=(g,),
+        grid=(u,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((l, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((g * l, 1), jnp.float32),
+        out_specs=pl.BlockSpec((l, nb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((u * l, nb), jnp.float32),
         interpret=interpret,
     )(*operands)
+    out = out.reshape(u, l, nb).transpose(0, 2, 1)
+    return out[:, :1, :] if pad_nb else out
+
+
+def saq_probe_scan_pallas(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
+                          o_norm_g: jnp.ndarray, queries_g: jnp.ndarray,
+                          q_norm_g: jnp.ndarray,
+                          col_offsets: Tuple[int, ...],
+                          seg_bits: Tuple[int, ...],
+                          prefix_bits: Optional[Tuple[int, ...]] = None,
+                          bitpacked: bool = False,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Fused scan of gathered IVF probe slabs: (NQ, P, L) sq distances.
+
+    Every (query, probe) pair is its own slab with a single residual
+    query — the NB=1 reshape of ``saq_cluster_scan_pallas``. Sharing
+    one kernel body between the layouts is what keeps the gathered and
+    cluster-major search paths bit-identical.
+
+    codes_g:   (NQ, P, L, d_stored) uint — gathered packed codes, or
+               (NQ, P, L, n_words) uint32 words with ``bitpacked``
+    factors_g: (NQ, P, L, S, 3) f32 gathered factor buffer
+    o_norm_g:  (NQ, P, L) f32 gathered total ||o||^2
+    queries_g: (NQ, P, d_stored) f32 per-probe rotated residual queries
+    q_norm_g:  (NQ, P) f32 per-probe FULL-basis residual query norms
+    """
+    nq, p, l = o_norm_g.shape
+    g = nq * p
+    out = saq_cluster_scan_pallas(
+        codes_g.reshape(g, l, codes_g.shape[-1]),
+        factors_g.reshape(g, l, *factors_g.shape[3:]),
+        o_norm_g.reshape(g, l),
+        queries_g.reshape(g, 1, queries_g.shape[-1]),
+        q_norm_g.reshape(g, 1),
+        col_offsets=col_offsets, seg_bits=seg_bits,
+        prefix_bits=prefix_bits, bitpacked=bitpacked,
+        interpret=interpret)                                 # (G, 1, L)
     return out.reshape(nq, p, l)
+
+
+def saq_cluster_scan_xla(codes_u: jnp.ndarray, factors_u: jnp.ndarray,
+                         o_norm_u: jnp.ndarray, queries_u: jnp.ndarray,
+                         q_norm_u: jnp.ndarray,
+                         col_offsets: Tuple[int, ...],
+                         seg_bits: Tuple[int, ...],
+                         prefix_bits: Optional[Tuple[int, ...]] = None,
+                         bitpacked: bool = False) -> jnp.ndarray:
+    """XLA fallback for the slab scan (same contract as
+    ``saq_cluster_scan_pallas``): every (segment, query) raw dot product
+    comes out of ONE fused einsum per slab block, then the Eq 13 affine
+    corrections + Eq 5 rescales apply from the factor buffer.
+    Returns (U, NB, L)."""
+    from repro.core.types import (FACTOR_RESCALE, FACTOR_VMAX,
+                                  make_col_scale, make_effective_bits,
+                                  make_seg_onehot, unpack_words, word_layout)
+
+    # Same N=1-matvec guard as the Pallas variant: pad a single-segment
+    # single-query block to two columns so the contraction always takes
+    # the bit-stable N>=2 matmul lowering in both slab layouts.
+    pad_nb = queries_u.shape[1] * len(seg_bits) == 1
+    if pad_nb:
+        queries_u = jnp.concatenate(
+            [queries_u, jnp.zeros_like(queries_u)], axis=1)
+        q_norm_u = jnp.concatenate(
+            [q_norm_u, jnp.zeros_like(q_norm_u)], axis=1)
+    eff_bits = make_effective_bits(seg_bits, prefix_bits)
+    onehot = jnp.asarray(make_seg_onehot(col_offsets))
+    colscale = jnp.asarray(make_col_scale(col_offsets, seg_bits,
+                                          prefix_bits))
+    if bitpacked:
+        wl = word_layout(tuple(col_offsets), tuple(seg_bits))
+        codes = unpack_words(codes_u, wl).astype(jnp.float32)
+    else:
+        codes = codes_u.astype(jnp.float32)
+    # floor(codes * 2^-shift) == codes >> shift exactly (codes < 2^16)
+    codes = jnp.floor(codes * colscale)
+    pow2 = jnp.asarray([1 << b for b in eff_bits], jnp.float32)
+    q = queries_u.astype(jnp.float32)                       # (U, NB, D)
+    qmask = q[..., :, None] * onehot                        # (U, NB, D, S)
+    raw = jnp.einsum("uld,unds->ulns", codes, qmask)        # fused dot
+    vmax = factors_u[..., FACTOR_VMAX]                      # (U, L, S)
+    rescale = factors_u[..., FACTOR_RESCALE]
+    delta = (2.0 * vmax) / pow2
+    q_sum = q @ onehot                                      # (U, NB, S)
+    ip_xq = delta[:, :, None, :] * raw \
+        + q_sum[:, None, :, :] * (0.5 * delta - vmax)[:, :, None, :]
+    ip = jnp.sum(ip_xq * rescale[:, :, None, :], axis=-1)   # (U, L, NB)
+    out = o_norm_u[:, :, None] + q_norm_u[:, None, :] - 2.0 * ip
+    out = out.transpose(0, 2, 1)
+    return out[:, :1, :] if pad_nb else out
 
 
 def saq_probe_scan_xla(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
@@ -338,32 +457,17 @@ def saq_probe_scan_xla(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
                        prefix_bits: Optional[Tuple[int, ...]] = None,
                        bitpacked: bool = False) -> jnp.ndarray:
     """XLA fallback for the gathered probe scan (same contract as
-    ``saq_probe_scan_pallas``): every segment's raw dot product comes
-    out of ONE fused einsum over the gathered code slabs, then the Eq 13
-    affine corrections + Eq 5 rescales apply from the factor buffer."""
-    from repro.core.types import (FACTOR_RESCALE, FACTOR_VMAX,
-                                  make_col_scale, make_effective_bits,
-                                  make_seg_onehot, unpack_words, word_layout)
-
-    eff_bits = make_effective_bits(seg_bits, prefix_bits)
-    onehot = jnp.asarray(make_seg_onehot(col_offsets))
-    colscale = jnp.asarray(make_col_scale(col_offsets, seg_bits,
-                                          prefix_bits))
-    if bitpacked:
-        wl = word_layout(tuple(col_offsets), tuple(seg_bits))
-        codes = unpack_words(codes_g, wl).astype(jnp.float32)
-    else:
-        codes = codes_g.astype(jnp.float32)
-    # floor(codes * 2^-shift) == codes >> shift exactly (codes < 2^16)
-    codes = jnp.floor(codes * colscale)
-    pow2 = jnp.asarray([1 << b for b in eff_bits], jnp.float32)
-    q = queries_g.astype(jnp.float32)
-    qmask = q[..., :, None] * onehot                        # (NQ, P, D, S)
-    raw = jnp.einsum("qpld,qpds->qpls", codes, qmask)       # fused dot
-    vmax = factors_g[..., FACTOR_VMAX]                      # (NQ, P, L, S)
-    rescale = factors_g[..., FACTOR_RESCALE]
-    delta = (2.0 * vmax) / pow2
-    q_sum = q @ onehot                                      # (NQ, P, S)
-    ip_xq = delta * raw + q_sum[..., None, :] * (0.5 * delta - vmax)
-    ip = jnp.sum(ip_xq * rescale, axis=-1)                  # (NQ, P, L)
-    return o_norm_g + q_norm_g[..., None] - 2.0 * ip
+    ``saq_probe_scan_pallas``): the NB=1 reshape of
+    ``saq_cluster_scan_xla``, so both search layouts share one Eq 13
+    body."""
+    nq, p, l = o_norm_g.shape
+    g = nq * p
+    out = saq_cluster_scan_xla(
+        codes_g.reshape(g, l, codes_g.shape[-1]),
+        factors_g.reshape(g, l, *factors_g.shape[3:]),
+        o_norm_g.reshape(g, l),
+        queries_g.reshape(g, 1, queries_g.shape[-1]),
+        q_norm_g.reshape(g, 1),
+        col_offsets=col_offsets, seg_bits=seg_bits,
+        prefix_bits=prefix_bits, bitpacked=bitpacked)        # (G, 1, L)
+    return out.reshape(nq, p, l)

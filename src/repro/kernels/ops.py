@@ -12,7 +12,8 @@ import jax.numpy as jnp
 
 from .caq_adjust import caq_adjust_pallas
 from .fwht import fwht_pallas
-from .ivf_scan import (ivf_scan_pallas, saq_probe_scan_pallas,
+from .ivf_scan import (ivf_scan_pallas, saq_cluster_scan_pallas,
+                       saq_cluster_scan_xla, saq_probe_scan_pallas,
                        saq_probe_scan_xla, saq_scan_pallas)
 from .caq_encode import caq_encode_pallas
 from .saq_attend import saq_attend_pallas
@@ -67,22 +68,50 @@ def saq_scan(packed, queries: jnp.ndarray, q_norm_sq=None,
         interpret=interpret)
 
 
-def probe_scan_backend() -> str:
-    """Backend dispatch policy for the gathered probe scan: the compiled
+_CLUSTER_MAJOR_SUFFIX = "-cluster-major"
+_PROBE_SCAN_BASES = ("pallas", "pallas-interpret", "xla")
+
+
+def probe_scan_backend(cluster_major: bool = False) -> str:
+    """Backend dispatch policy for the IVF probe scan: the compiled
     Pallas kernel on TPU, the interpret-mode kernel under
     force-interpret (so parity tests can pin the kernel path on CPU),
     and the XLA einsum fallback everywhere else (CPU/GPU serving stays
-    on fused XLA). The returned string fully determines the executed
-    program (including interpret mode); callers that jit around
-    ``probe_scan`` must resolve this OUTSIDE the jit and thread it as a
-    static arg, or a flipped force-interpret would silently hit the
-    stale compile cache."""
+    on fused XLA). With ``cluster_major`` the same base backend gets
+    the ``-cluster-major`` suffix, selecting the dedup layout in
+    ``repro.ivf.index``: unique probed clusters are gathered once and
+    scanned against the whole query batch instead of one slab per
+    (query, probe) pair — bit-identical results, ``U*L*d`` peak slab
+    bytes instead of ``NQ*P*L*d``. The returned string fully determines
+    the executed program (including interpret mode); callers that jit
+    around ``probe_scan`` / ``cluster_scan`` must resolve this OUTSIDE
+    the jit and thread it as a static arg, or a flipped force-interpret
+    would silently hit the stale compile cache."""
     if _FORCE_INTERPRET:
-        return "pallas-interpret"
-    # _FORCE_INTERPRET=False means "compiled kernels" (as for every
-    # other kernel wrapper): the compiled Pallas path exists on TPU
-    # only, so elsewhere it still resolves to the XLA fallback.
-    return "pallas" if jax.default_backend() == "tpu" else "xla"
+        base = "pallas-interpret"
+    else:
+        # _FORCE_INTERPRET=False means "compiled kernels" (as for every
+        # other kernel wrapper): the compiled Pallas path exists on TPU
+        # only, so elsewhere it still resolves to the XLA fallback.
+        base = "pallas" if jax.default_backend() == "tpu" else "xla"
+    return base + _CLUSTER_MAJOR_SUFFIX if cluster_major else base
+
+
+def split_probe_backend(backend: str) -> tuple[str, bool]:
+    """Validate a probe-scan backend string and split it into
+    ``(base, cluster_major)`` — base in {"pallas", "pallas-interpret",
+    "xla"}, cluster_major True for the ``-cluster-major`` layouts."""
+    base, cluster_major = backend, False
+    if backend.endswith(_CLUSTER_MAJOR_SUFFIX):
+        base = backend[:-len(_CLUSTER_MAJOR_SUFFIX)]
+        cluster_major = True
+    if base not in _PROBE_SCAN_BASES:
+        valid = list(_PROBE_SCAN_BASES) + [
+            b + _CLUSTER_MAJOR_SUFFIX for b in _PROBE_SCAN_BASES]
+        raise ValueError(
+            f"unknown probe-scan backend {backend!r}; expected one of "
+            f"{valid}")
+    return base, cluster_major
 
 
 def probe_scan(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
@@ -97,13 +126,23 @@ def probe_scan(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
     per-(query, probe) residual queries. See
     ``ivf_scan.saq_probe_scan_pallas`` for the operand contract.
     ``backend``: "pallas" | "pallas-interpret" | "xla" | None (None
-    resolves via ``probe_scan_backend()``).
+    resolves via ``probe_scan_backend()``). The ``-cluster-major``
+    strings name a *layout* handled by the caller
+    (``repro.ivf.index._probe_dists``), which routes the deduped
+    operands through ``cluster_scan`` — this gathered-slab entry point
+    only accepts the base backends.
     """
     backend = backend or probe_scan_backend()
+    base, cluster_major = split_probe_backend(backend)
+    if cluster_major:
+        raise ValueError(
+            f"probe_scan scans gathered (NQ, P, L) slabs; the "
+            f"{backend!r} layout dedups clusters first — call "
+            f"cluster_scan with the unique-cluster operands instead")
     col_offsets = tuple(col_offsets)
     seg_bits = tuple(seg_bits)
-    if backend in ("pallas", "pallas-interpret"):
-        if bitpacked and backend == "pallas":
+    if base in ("pallas", "pallas-interpret"):
+        if bitpacked and base == "pallas":
             # Same guard as saq_scan: the in-kernel word expansion is
             # validated in interpret mode but not yet on compiled
             # Mosaic/Triton, so compiled scans expand through XLA first
@@ -118,11 +157,50 @@ def probe_scan(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
             prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
                          else None),
             bitpacked=bitpacked,
-            interpret=(backend == "pallas-interpret"))
-    if backend != "xla":
-        raise ValueError(f"unknown probe_scan backend {backend!r}")
+            interpret=(base == "pallas-interpret"))
     return saq_probe_scan_xla(
         codes_g, factors_g, o_norm_g, queries_g, q_norm_g,
+        col_offsets=col_offsets, seg_bits=seg_bits,
+        prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
+                     else None),
+        bitpacked=bitpacked)
+
+
+def cluster_scan(codes_u: jnp.ndarray, factors_u: jnp.ndarray,
+                 o_norm_u: jnp.ndarray, queries_u: jnp.ndarray,
+                 q_norm_u: jnp.ndarray, col_offsets, seg_bits,
+                 prefix_bits=None, bitpacked: bool = False,
+                 backend: str | None = None) -> jnp.ndarray:
+    """Backend-dispatched cluster-major slab scan -> (U, NB, L) sq dists.
+
+    The scan primitive behind the cluster-major search layout: U unique
+    cluster slabs (each gathered ONCE) scanned against the NB-query
+    sub-batch that probes them, with per-(slab, query) residual queries.
+    See ``ivf_scan.saq_cluster_scan_pallas`` for the operand contract.
+    ``backend`` accepts the same strings as ``probe_scan`` with or
+    without the ``-cluster-major`` suffix (the suffix only selects the
+    caller-side dedup layout; the slab scan itself is the same).
+    """
+    backend = backend or probe_scan_backend(cluster_major=True)
+    base, _ = split_probe_backend(backend)
+    col_offsets = tuple(col_offsets)
+    seg_bits = tuple(seg_bits)
+    if base in ("pallas", "pallas-interpret"):
+        if bitpacked and base == "pallas":
+            # Same compiled-backend word-expansion guard as probe_scan.
+            from repro.core.types import unpack_words, word_layout
+            codes_u = unpack_words(codes_u,
+                                   word_layout(col_offsets, seg_bits))
+            bitpacked = False
+        return saq_cluster_scan_pallas(
+            codes_u, factors_u, o_norm_u, queries_u, q_norm_u,
+            col_offsets=col_offsets, seg_bits=seg_bits,
+            prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
+                         else None),
+            bitpacked=bitpacked,
+            interpret=(base == "pallas-interpret"))
+    return saq_cluster_scan_xla(
+        codes_u, factors_u, o_norm_u, queries_u, q_norm_u,
         col_offsets=col_offsets, seg_bits=seg_bits,
         prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
                      else None),

@@ -22,6 +22,12 @@ fused scan on batch=1 and thrashes the jit cache with ad-hoc shapes.
   ``batch_shapes`` so the jit cache holds one executable per
   (shape, key) instead of one per observed batch size. Padded rows are
   zero queries whose results are dropped.
+* **Scan-layout policy** — dispatch shapes at or past
+  ``BatchPolicy.cluster_major_from`` route through the cluster-major
+  probe scan (unique probed clusters gathered once per dispatch,
+  ``U*L*d`` peak slab bytes instead of ``NQ*P*L*d``, bit-identical
+  results), so large ticks stay out of the gathered layout's
+  memory-bound regime; small ticks keep the cheaper gathered layout.
 * **Scale-out** — constructed with ``mesh=``, every dispatch routes
   through the cluster-sharded search path
   (``repro.ivf.distributed.sharded_search_batch``), which returns
@@ -56,11 +62,23 @@ class BatchPolicy:
     batch_shapes: the static shapes groups pad up to (ascending).
                   Groups larger than the biggest shape dispatch in
                   chunks of that size.
+    cluster_major_from:
+                  dispatch shapes >= this threshold use the
+                  cluster-major probe-scan layout (unique probed
+                  clusters gathered once per dispatch — peak slab bytes
+                  U*L*d instead of NQ*P*L*d, bit-identical results);
+                  smaller shapes keep the gathered layout, whose
+                  per-pair slabs are cheaper when probe overlap is low.
+                  None pins every shape to the gathered layout. Set it
+                  at the measured crossover of
+                  ``benchmarks/batch_qps.py`` (the gathered layout's
+                  memory-bound knee; see docs/serving.md).
     """
 
     max_batch: int = 64
     max_wait_us: int = 2000
     batch_shapes: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+    cluster_major_from: Optional[int] = 8
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -72,11 +90,31 @@ class BatchPolicy:
         if not shapes or shapes[0] < 1:
             raise ValueError(f"bad batch_shapes {self.batch_shapes}")
         object.__setattr__(self, "batch_shapes", shapes)
+        if self.cluster_major_from is not None \
+                and self.cluster_major_from < 1:
+            raise ValueError(
+                f"cluster_major_from must be >= 1 or None, got "
+                f"{self.cluster_major_from}")
 
     def pad_to(self, n: int) -> int:
-        """Smallest static shape >= n (n is pre-chunked to the max)."""
-        i = bisect.bisect_left(self.batch_shapes, n)
-        return self.batch_shapes[min(i, len(self.batch_shapes) - 1)]
+        """Smallest static shape >= n. Raises for n beyond the largest
+        shape — callers must chunk at ``batch_shapes[-1]`` first (the
+        dispatcher does); silently returning the largest shape would
+        hand back a pad target SMALLER than n."""
+        if n < 1:
+            raise ValueError(f"batch size must be >= 1, got {n}")
+        if n > self.batch_shapes[-1]:
+            raise ValueError(
+                f"batch size {n} exceeds the largest static shape "
+                f"{self.batch_shapes[-1]}; chunk the group at "
+                f"batch_shapes[-1] before padding")
+        return self.batch_shapes[bisect.bisect_left(self.batch_shapes, n)]
+
+    def cluster_major(self, shape: int) -> bool:
+        """Whether a dispatch of this padded shape uses the
+        cluster-major probe-scan layout."""
+        return (self.cluster_major_from is not None
+                and shape >= self.cluster_major_from)
 
 
 @dataclasses.dataclass
@@ -234,13 +272,23 @@ class AnnEngine:
 
     def warmup(self, k: int = 10, nprobe: int = 8,
                prefix_bits: Optional[Sequence[int]] = None) -> None:
-        """Pre-compile every static batch shape for one dispatch key."""
+        """Pre-compile every static batch shape for one dispatch key
+        (each shape with the scan backend the policy will pick for it)."""
         for s in self.policy.batch_shapes:
             qb = np.zeros((s, self.index.dim), np.float32)
             ids, dists = self.index.search_batch(
                 qb, k=k, nprobe=nprobe, prefix_bits=prefix_bits,
-                mesh=self.mesh, axis=self.axis)
+                mesh=self.mesh, axis=self.axis,
+                backend=self._scan_backend(s))
             jax.block_until_ready(ids)
+
+    def _scan_backend(self, shape: int) -> str:
+        """Resolve the probe-scan backend string for a dispatch shape:
+        the host's base backend, with the cluster-major layout once the
+        shape crosses ``policy.cluster_major_from``."""
+        from repro.kernels import ops
+        return ops.probe_scan_backend(
+            cluster_major=self.policy.cluster_major(shape))
 
     # ------------------------------------------------------------------
     # dispatcher
@@ -292,7 +340,8 @@ class AnnEngine:
         try:
             ids, dists = self.index.search_batch(
                 qb, k=k, nprobe=nprobe, prefix_bits=prefix_bits,
-                mesh=self.mesh, axis=self.axis)
+                mesh=self.mesh, axis=self.axis,
+                backend=self._scan_backend(shape))
             ids = np.asarray(jax.block_until_ready(ids))
             dists = np.asarray(dists)
         except Exception as e:  # fail the whole group, keep serving

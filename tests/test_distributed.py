@@ -85,6 +85,25 @@ def test_sharded_search_batch_bit_identical():
                             and np.array_equal(
                                 np.asarray(b1).view(np.uint32),
                                 np.asarray(b2).view(np.uint32))))
+        # cluster-major layout on the mesh: each shard dedups its local
+        # probe list; results must still be bit-identical to BOTH the
+        # single-device gathered path and the sharded gathered path
+        a3, b3 = idx.search_batch(qs, k=10, nprobe=7, mesh=mesh,
+                                  axis=("pod", "data"),
+                                  backend="xla-cluster-major")
+        print("CMAJOR", int(np.array_equal(np.asarray(ids_s),
+                                           np.asarray(a3))
+                            and np.array_equal(
+                                np.asarray(d_s).view(np.uint32),
+                                np.asarray(b3).view(np.uint32))))
+        a4, b4 = idx.search_batch(qs, k=10, nprobe=7, prefix_bits=pb,
+                                  mesh=mesh, axis=("pod", "data"),
+                                  backend="xla-cluster-major")
+        print("CMPREFIX", int(np.array_equal(np.asarray(a1),
+                                             np.asarray(a4))
+                              and np.array_equal(
+                                  np.asarray(b1).view(np.uint32),
+                                  np.asarray(b4).view(np.uint32))))
         with AnnEngine(idx, BatchPolicy(max_batch=8, max_wait_us=1000),
                        mesh=mesh, axis=("pod", "data")) as eng:
             e_ids, e_d = eng.search_many(qs, k=10, nprobe=7)
@@ -106,6 +125,8 @@ def test_sharded_search_batch_bit_identical():
     assert "IDS 1" in out
     assert "DISTS 1" in out
     assert "PREFIX 1" in out
+    assert "CMAJOR 1" in out
+    assert "CMPREFIX 1" in out
     assert "ENG 1" in out
     assert "TIES 1" in out
 

@@ -75,10 +75,41 @@ def test_engine_padding_and_chunking_stats(built):
 def test_batch_policy_pad_to():
     p = BatchPolicy(max_batch=64, batch_shapes=(1, 2, 4, 8))
     assert [p.pad_to(n) for n in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+    # beyond the largest static shape pad_to must raise, not hand back
+    # a pad target smaller than n (callers chunk at batch_shapes[-1])
+    with pytest.raises(ValueError, match="largest static shape"):
+        p.pad_to(9)
+    with pytest.raises(ValueError):
+        p.pad_to(0)
     with pytest.raises(ValueError):
         BatchPolicy(max_batch=0)
     with pytest.raises(ValueError):
         BatchPolicy(batch_shapes=())
+    with pytest.raises(ValueError):
+        BatchPolicy(cluster_major_from=0)
+
+
+def test_batch_policy_cluster_major_threshold():
+    p = BatchPolicy(batch_shapes=(1, 4, 16), cluster_major_from=8)
+    assert [p.cluster_major(s) for s in (1, 4, 16)] == [False, False, True]
+    off = BatchPolicy(cluster_major_from=None)
+    assert not any(off.cluster_major(s) for s in off.batch_shapes)
+
+
+def test_engine_cluster_major_dispatch_parity(built):
+    """With the cluster-major layout forced for EVERY dispatch shape,
+    engine results stay bit-identical to the direct (gathered) batched
+    call — the layouts share one slab-scan body."""
+    _, idx = built
+    qs = decaying_data(10, 32, alpha=0.7, seed=71)
+    policy = BatchPolicy(max_batch=8, max_wait_us=2000,
+                         batch_shapes=(1, 2, 4, 8), cluster_major_from=1)
+    with AnnEngine(idx, policy) as eng:
+        ids, dists = eng.search_many(qs, k=10, nprobe=6)
+    ref_ids, ref_d = idx.search_batch(qs, k=10, nprobe=6)
+    np.testing.assert_array_equal(ids, np.asarray(ref_ids))
+    np.testing.assert_array_equal(dists.view(np.uint32),
+                                  np.asarray(ref_d).view(np.uint32))
 
 
 def test_engine_admission_validation(built):

@@ -85,3 +85,91 @@ def test_search_batch(built):
     for i in range(4):
         a, _ = idx.search(qs[i], k=5, nprobe=8)
         np.testing.assert_array_equal(np.asarray(ids[i]), np.asarray(a))
+
+
+def test_multistage_validates_k_like_search_batch(built):
+    """search_multistage applies the same k/nprobe validation as
+    search_batch instead of silently returning -1/inf rows."""
+    _, idx = built
+    q = decaying_data(1, 48, alpha=0.7, seed=88)[0]
+    l_max = int(idx.ids.shape[1])
+    with pytest.raises(ValueError, match="candidate capacity"):
+        idx.search_multistage(q, k=l_max + 1, nprobe=1)
+    with pytest.raises(ValueError):
+        idx.search_multistage(q, k=0, nprobe=4)
+    with pytest.raises(ValueError):
+        idx.search_multistage(q, k=5, nprobe=0)
+    # valid boundary still works
+    ids, _, _ = idx.search_multistage(q, k=5, nprobe=4)
+    assert ids.shape == (5,)
+
+
+@pytest.mark.parametrize("bitpacked", [True, False])
+def test_multistage_vs_batch_parity(built, bitpacked):
+    """With pruning disabled (huge m) and nprobe = C, the multistage
+    path scans exactly the candidates search_batch scans: top-k ids
+    must match exactly and distances to fp-accumulation-order noise."""
+    import dataclasses
+
+    _, idx = built
+    if not bitpacked:
+        idx = dataclasses.replace(idx, packed=idx.packed.unpack())
+    assert idx.packed.bitpacked == bitpacked
+    qs = decaying_data(4, 48, alpha=0.7, seed=91)
+    for i in range(qs.shape[0]):
+        ids_b, d_b = idx.search(qs[i], k=10, nprobe=idx.n_clusters)
+        ids_m, d_m, st = idx.search_multistage(
+            qs[i], k=10, nprobe=idx.n_clusters, m=1e9)
+        assert st.pruned_frac == 0.0           # m disables pruning
+        np.testing.assert_array_equal(np.asarray(ids_b),
+                                      np.asarray(ids_m))
+        np.testing.assert_allclose(np.asarray(d_b), np.asarray(d_m),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def _ragged_index():
+    """An index whose probed lists are much shorter than the padded L,
+    so k <= min(nprobe, C) * L passes validation but the scan runs out
+    of real candidates."""
+    rng = np.random.default_rng(7)
+    blobs = rng.standard_normal((3, 16)).astype(np.float32) * 4.0
+    x = np.concatenate([
+        np.repeat(blobs[j:j + 1], n, axis=0)
+        + rng.standard_normal((n, 16)).astype(np.float32) * 0.05
+        for j, n in enumerate((30, 3, 3))])
+    idx = IVFIndex.build(
+        x, SAQConfig(avg_bits=4, rounds=2, align=8, max_bits=9),
+        n_clusters=3)
+    assert int(np.asarray(idx.counts).min()) < int(idx.ids.shape[1])
+    return blobs, idx
+
+
+def test_ragged_padding_contract():
+    """The documented short-candidate contract (see _validate_k): when
+    valid candidates < k <= padded capacity, every path returns the
+    real candidates first (distances ascending) and fills the tail with
+    id -1 / dist inf — batch (both scan layouts) and multistage."""
+    blobs, idx = _ragged_index()
+    q = blobs[1]
+    k = 10
+
+    def check(ids, dists):
+        ids, dists = np.asarray(ids), np.asarray(dists)
+        n_real = int((ids >= 0).sum())
+        assert 0 < n_real < k                  # the edge is actually hit
+        assert (ids[:n_real] >= 0).all()       # real rows first...
+        assert (ids[n_real:] == -1).all()      # ...-1 tail last
+        assert np.isfinite(dists[:n_real]).all()
+        assert np.isinf(dists[n_real:]).all()
+        assert (np.diff(dists[:n_real]) >= 0).all()
+        return ids, dists
+
+    ids_g, d_g = idx.search(q, k=k, nprobe=1)
+    check(ids_g, d_g)
+    ids_c, d_c = idx.search_batch(q[None], k=k, nprobe=1,
+                                  backend="xla-cluster-major")
+    check(ids_c[0], d_c[0])
+    np.testing.assert_array_equal(np.asarray(ids_g), np.asarray(ids_c[0]))
+    ids_m, d_m, _ = idx.search_multistage(q, k=k, nprobe=1, m=1e9)
+    check(ids_m, d_m)
+    np.testing.assert_array_equal(np.asarray(ids_g), np.asarray(ids_m))

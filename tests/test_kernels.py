@@ -140,3 +140,109 @@ def test_probe_scan_pallas_vs_xla(bitpacked):
                                       np.asarray(ids_p))
         np.testing.assert_allclose(np.asarray(d_x), np.asarray(d_p),
                                    rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bitpacked", [True, False])
+def test_cluster_major_vs_gathered_bit_identical(bitpacked):
+    """The cluster-major probe scan (unique clusters gathered once,
+    scanned against the whole batch, scattered back) must be
+    BIT-identical to the gathered per-(query, probe) layout — both
+    kernel backends, word-buffer and column storage, with and without
+    progressive prefix reads. The batch is wider than the cluster count
+    so the dedup bound U_max = min(NQ*P, C) actually saturates."""
+    import dataclasses
+
+    from repro.core.saq import SAQConfig
+    from repro.ivf import IVFIndex
+
+    x = decaying_data(1200, 32, alpha=0.7, seed=9)
+    idx = IVFIndex.build(
+        x, SAQConfig(avg_bits=4, rounds=2, align=8, max_bits=9),
+        n_clusters=10)
+    if not bitpacked:
+        idx = dataclasses.replace(idx, packed=idx.packed.unpack())
+    assert idx.packed.bitpacked == bitpacked
+    qs = decaying_data(7, 32, alpha=0.7, seed=19)
+    pb = tuple(max(1, s.bits // 2) for s in idx.plan.stored_segments)
+    for prefix in (None, pb):
+        for base in ("xla", "pallas-interpret"):
+            ids_g, d_g = idx.search_batch(qs, k=8, nprobe=5,
+                                          prefix_bits=prefix, backend=base)
+            ids_c, d_c = idx.search_batch(
+                qs, k=8, nprobe=5, prefix_bits=prefix,
+                backend=base + "-cluster-major")
+            np.testing.assert_array_equal(np.asarray(ids_g),
+                                          np.asarray(ids_c))
+            np.testing.assert_array_equal(
+                np.asarray(d_g).view(np.uint32),
+                np.asarray(d_c).view(np.uint32))
+
+
+def test_cluster_major_bit_identical_single_segment():
+    """Regression: a single-segment plan gives the gathered layout a
+    1-column contraction, which XLA lowers as a matvec with a different
+    d-accumulation order than the cluster-major layout's multi-column
+    matmul — the scans pad to 2 columns to pin one lowering. Gaussian
+    data on a plan whose stored layout collapses to S=1 exercises it."""
+    from repro.core.saq import SAQConfig
+    from repro.ivf import IVFIndex
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((2000, 32)).astype(np.float32)
+    idx = IVFIndex.build(
+        x, SAQConfig(avg_bits=4, rounds=2, align=8, max_bits=9),
+        n_clusters=18)
+    assert len(idx.plan.stored_segments) == 1      # the edge is real
+    qs = rng.standard_normal((5, 32)).astype(np.float32)
+    for nq in (1, 5):                              # NB=1 edge too
+        for base in ("xla", "pallas-interpret"):
+            ids_g, d_g = idx.search_batch(qs[:nq], k=10, nprobe=7,
+                                          backend=base)
+            ids_c, d_c = idx.search_batch(
+                qs[:nq], k=10, nprobe=7,
+                backend=base + "-cluster-major")
+            np.testing.assert_array_equal(np.asarray(ids_g),
+                                          np.asarray(ids_c))
+            np.testing.assert_array_equal(
+                np.asarray(d_g).view(np.uint32),
+                np.asarray(d_c).view(np.uint32))
+
+
+def test_cluster_major_falls_back_when_dedup_impossible(monkeypatch):
+    """With C >= NQ*P the static dedup bound U_max = min(NQ*P, C) equals
+    NQ*P — the cluster-major layout would scan NQ x the gathered FLOPs
+    for identical slab bytes, so _probe_dists must fall back to the
+    gathered scan (bit-identical, strictly cheaper). Poisoning
+    cluster_scan proves the fallback path is really taken."""
+    from repro.core.saq import SAQConfig
+    from repro.ivf import IVFIndex
+    from repro.kernels import ops
+
+    x = decaying_data(800, 32, alpha=0.7, seed=5)
+    idx = IVFIndex.build(
+        x, SAQConfig(avg_bits=4, rounds=2, align=8, max_bits=9),
+        n_clusters=16)
+    qs = decaying_data(2, 32, alpha=0.7, seed=6)
+    ids_ref, d_ref = idx.search_batch(qs, k=5, nprobe=4)
+
+    def boom(*a, **kw):
+        raise AssertionError("cluster_scan must not run when U_max == NQ*P")
+
+    monkeypatch.setattr(ops, "cluster_scan", boom)
+    # NQ*P = 8 <= C = 16 -> fallback; traces fresh (new backend key)
+    ids, d = idx.search_batch(qs, k=5, nprobe=4,
+                              backend="xla-cluster-major")
+    np.testing.assert_array_equal(np.asarray(ids_ref), np.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(d_ref).view(np.uint32),
+                                  np.asarray(d).view(np.uint32))
+
+
+def test_cluster_scan_rejects_bad_backend():
+    from repro.kernels import ops
+
+    with pytest.raises(ValueError, match="unknown probe-scan backend"):
+        ops.split_probe_backend("einsum")
+    with pytest.raises(ValueError, match="unknown probe-scan backend"):
+        ops.split_probe_backend("cluster-major")   # suffix alone
+    assert ops.split_probe_backend("xla-cluster-major") == ("xla", True)
+    assert ops.split_probe_backend("pallas") == ("pallas", False)
