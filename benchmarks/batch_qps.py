@@ -10,13 +10,25 @@ cluster slab is gathered once per dispatch (peak slab bytes ``U*L*d``
 instead of ``NQ*P*L*d``), and the engine adds the serving loop that
 actually forms those batches from an async request stream. This
 benchmark measures what each layer buys at serving batch sizes
-{1, 8, 16, 64, 256}. In fast mode it doubles as the CI smoke check for
-the serving path: a regression that makes the engine slower than the
-per-query loop at batch >= 8, or the cluster-major scan slower than the
-gathered scan at batch >= 16, fails the run.
+{1, 8, 16, 64, 256}, plus a mesh section (subprocess with
+``--xla_force_host_platform_device_count``) comparing the sharded
+search with and without per-shard probe compaction and reporting
+per-shard scan FLOPs. In fast mode it doubles as the CI smoke check
+for the serving path: a regression that makes the engine slower than
+the per-query loop at batch >= 8, the cluster-major scan slower than
+the gathered scan at batch >= 16, or the compacted mesh scan slower
+than the uncompacted mesh scan at batch >= 16, fails the run. Every
+run also APPENDS its qps/occupancy summary to the root-level
+``BENCH_batch_qps.json`` so the serving-perf trajectory across PRs is
+machine-readable.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -28,6 +40,140 @@ from repro.serve import AnnEngine, BatchPolicy
 from .common import bench_datasets, emit, save_json
 
 BATCH_SIZES = (1, 8, 16, 64, 256)
+
+MESH_SHARDS = 4
+MESH_BATCHES = (16, 64)
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Sharded serving measured in a subprocess: the host exposes one CPU
+# device, so the mesh needs --xla_force_host_platform_device_count set
+# before jax initializes (same recipe as tests/test_distributed.py).
+# nprobe=16 over 4 shards of c_loc=8 clusters makes the workload
+# skew-free BY CONSTRUCTION: the default budget ceil(16/4)*2 = 8 equals
+# the most probes that can land on one shard, so the compacted program
+# never overflows and the comparison isolates the P -> P_loc per-shard
+# FLOPs cut.
+_MESH_BENCH_SRC = """
+import json, time
+import numpy as np, jax
+from repro.compat import AxisType, make_mesh
+from repro.core.saq import SAQConfig
+from repro.data import DATASETS, make_dataset, make_queries
+from repro.ivf import IVFIndex
+from repro.ivf.distributed import sharded_search_batch
+from repro.kernels import ops
+
+spec = DATASETS["deep"]
+x = np.asarray(make_dataset(spec, n={n}))
+queries = np.asarray(make_queries(spec, 64))
+idx = IVFIndex.build(
+    x, SAQConfig(avg_bits=4, rounds=3, align=64, max_bits=12),
+    n_clusters=32)
+mesh = make_mesh(({shards},), ("data",), axis_types=(AxisType.Auto,))
+k, nprobe = 10, 16
+rng = np.random.default_rng(0)
+p = min(nprobe, idx.n_clusters)
+l_max = int(idx.ids.shape[1])
+d_st = int(idx.packed.layout.col_offsets[-1])
+for bs in {batches}:
+    qb = queries[rng.integers(0, len(queries), bs)].astype(np.float32)
+
+    def timed(budget, stats=None):
+        def fn():
+            return sharded_search_batch(
+                mesh, ("data",), idx, qb, k=k, nprobe=nprobe,
+                probe_budget=budget, stats=stats)
+        jax.block_until_ready(fn()[0])         # warmup / compile
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn()[0])
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    st = {{}}
+    t_un = timed(0)
+    t_c = timed(None, stats=st)
+    p_loc = st["probe_budget"] or p
+    row = {{
+        "batch": bs, "mesh_shards": {shards}, "nprobe": nprobe,
+        "probe_budget": p_loc,
+        "qps_mesh_uncompacted": round(bs / t_un, 1),
+        "qps_mesh_compacted": round(bs / t_c, 1),
+        "flops_per_shard_full": ops.slab_scan_flops(bs * p, l_max, d_st),
+        "flops_per_shard_compacted": ops.slab_scan_flops(
+            bs * p_loc, l_max, d_st),
+        "overflow_queries": st["overflow_queries"],
+        "fallback": st["fallback"],
+    }}
+    print("MESHROW " + json.dumps(row), flush=True)
+"""
+
+
+def _mesh_rows(fast: bool = True) -> list:
+    """Measure the sharded search (compacted vs uncompacted probe
+    lists) in a subprocess with MESH_SHARDS host devices."""
+    n = 4000 if fast else 20_000
+    src = _MESH_BENCH_SRC.format(n=n, shards=MESH_SHARDS,
+                                 batches=tuple(MESH_BATCHES))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={MESH_SHARDS}"
+    src_dir = os.path.join(_REPO_ROOT, "src")
+    env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(src)],
+                         env=env, capture_output=True, text=True,
+                         timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"mesh benchmark subprocess failed:\n{out.stderr[-4000:]}")
+    rows = [json.loads(line.split(" ", 1)[1])
+            for line in out.stdout.splitlines()
+            if line.startswith("MESHROW ")]
+    for row in rows:
+        emit("batch_qps_mesh", row)
+    return rows
+
+
+def _append_trajectory(rows: list, mesh_rows: list) -> None:
+    """Append this run's qps/occupancy summary to the ROOT-LEVEL
+    ``BENCH_batch_qps.json`` (a JSON list, one entry per run) so the
+    serving-perf trajectory across PRs stays machine-readable."""
+    fp = os.path.join(_REPO_ROOT, "BENCH_batch_qps.json")
+    log = []
+    try:
+        with open(fp) as f:
+            log = json.load(f)
+        if not isinstance(log, list):
+            log = []
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
+    rev = None
+    try:
+        proc = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True,
+                              cwd=_REPO_ROOT, timeout=10)
+        rev = proc.stdout.strip() or None
+        if rev:
+            dirty = subprocess.run(["git", "status", "--porcelain"],
+                                   capture_output=True, text=True,
+                                   cwd=_REPO_ROOT, timeout=10)
+            if dirty.stdout.strip():
+                rev += "-dirty"      # measured on uncommitted changes
+    except Exception:
+        pass
+    keep = ("batch", "qps_batched", "qps_cluster_major", "qps_loop",
+            "qps_engine", "engine_occupancy")
+    log.append({
+        "rev": rev,
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "rows": [{k: r[k] for k in keep if k in r} for r in rows],
+        "mesh": mesh_rows,
+    })
+    with open(fp, "w") as f:
+        json.dump(log, f, indent=1, default=float)
+        f.write("\n")
 
 
 def _timed(fn, repeats: int = 3) -> float:
@@ -150,13 +296,18 @@ def run(fast: bool = True) -> dict:
                    st.dispatched_rows / max(st.dispatches, 1), 1)}
         rows.append(row)
         emit("batch_qps", row)
-    save_json("batch_qps", rows)
+    mesh_rows = _mesh_rows(fast)
+    save_json("batch_qps", {"rows": rows, "mesh": mesh_rows})
+    _append_trajectory(rows, mesh_rows)
     # CI smoke gates (fast mode only — --full runs report without
     # aborting the remaining suites):
     #  * dynamic batching must beat the per-query loop once there is a
     #    batch to form (acceptance criterion)
     #  * the cluster-major dedup must beat the gathered layout where the
     #    gathered scan goes memory-bound (its reason to exist)
+    #  * on the mesh, probe compaction must beat the full-probe scan at
+    #    serving batch sizes (its reason to exist: per-shard FLOPs
+    #    scale with P_loc, not P)
     gated = [r for r in rows if r["batch"] >= 8] if fast else []
     if gated and not any(r["qps_engine"] > r["qps_loop"] for r in gated):
         raise RuntimeError(
@@ -167,4 +318,10 @@ def run(fast: bool = True) -> dict:
             raise RuntimeError(
                 f"serving regression: cluster-major scan slower than the "
                 f"gathered scan at batch {r['batch']}: {r}")
-    return {"batch_qps": rows}
+    for r in mesh_rows if fast else []:
+        if r["batch"] >= 16 \
+                and r["qps_mesh_compacted"] < r["qps_mesh_uncompacted"]:
+            raise RuntimeError(
+                f"serving regression: compacted mesh scan slower than "
+                f"the uncompacted mesh scan at batch {r['batch']}: {r}")
+    return {"batch_qps": rows, "batch_qps_mesh": mesh_rows}

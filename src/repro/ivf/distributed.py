@@ -20,18 +20,25 @@ cache):
 * ``sharded_search_batch``    — the full IVF search path over the padded
   ``(C, L, ...)`` list layout: clusters sharded over the mesh axis/axes,
   probe selection + query transform replicated (bit-identical to the
-  single-device path), each shard runs the full probe list against its
-  LOCAL slab (out-of-shard probes index-clipped, masked to inf after
-  the scan — the static SPMD shapes match the single-device scan
-  exactly, which is what makes per-candidate distances bitwise
-  identical), local top-k, ONE all-gather of k candidates per
+  single-device path), each shard COMPACTS the replicated (NQ, P) probe
+  list down to the probes that land on its local cluster slab — padded
+  to the static per-shard budget ``P_loc`` (``probe_budget``, default
+  ``ceil(P / n_shards) * PROBE_BUDGET_SLACK``) — scans only that
+  (NQ, P_loc) set through the same ``_probe_dists`` body as the
+  single-device path, and carries every candidate's GLOBAL probe-major
+  flat position ``p * L + l`` through the local top-k into the merge,
+  so the tie-stable (distance, position) order stays bit-identical to
+  the single-device path. ONE all-gather of k candidates per
   (shard, query), tie-stable global merge. Exposed as
-  ``IVFIndex.search_batch(..., mesh=...)``. What this scales today is
-  list *capacity* (each device stores C/shards of the index) and
-  collective traffic (O(devices * NQ * k), database-size independent);
-  per-shard scan FLOPs stay at the single-device worst case because a
-  query's probes can all land on one shard and SPMD shapes are static —
-  probe compaction is a ROADMAP follow-up.
+  ``IVFIndex.search_batch(..., mesh=...)``. The mesh therefore scales
+  list *capacity* (each device stores C/shards of the index),
+  collective traffic (O(devices * NQ * k), database-size independent)
+  AND per-shard scan FLOPs (each shard scans P_loc <= P probes per
+  query instead of all P). Probe skew piling more than P_loc in-shard
+  probes onto one shard is handled explicitly: the compacted program
+  reports an overflow count and the dispatch falls back to the
+  uncompacted full-probe program (a SECOND memoized static-shape
+  program, not a recompile) — results are bit-identical either way.
 """
 from __future__ import annotations
 
@@ -160,26 +167,39 @@ def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...],
                        seg_bits: Tuple[int, ...],
                        prefix_bits: Optional[Tuple[int, ...]],
                        bitpacked: bool, k: int, nprobe: int, c_loc: int,
-                       probe_backend: str):
+                       probe_backend: str, p_loc: int = 0):
     """jit'd shard_map program for the cluster-sharded IVF search.
 
     Probe selection and the query transform run replicated OUTSIDE the
     shard_map (the same ops as the single-device ``_search_batch_impl``,
     so every shard agrees on the global probe list bit-for-bit); each
-    shard then maps global probe ids onto its local cluster slab and
-    runs the full (NQ, P) probe list through the SAME ``_probe_dists``
-    body — gathered or cluster-major per the static ``probe_backend``,
-    exactly as on a single device — with out-of-shard probes
-    index-clipped into the local slab and masked to inf after the scan.
-    Scanning all P per shard keeps the scan shapes identical to the
-    single-device path (bitwise-identical per-candidate distances) at
-    the cost of unscaled per-shard FLOPs; per-shard top-k then merges
-    with one all-gather per mesh axis.
+    shard then maps global probe ids onto its local cluster slab and —
+    with ``p_loc > 0`` — COMPACTS the (NQ, P) probe list down to the
+    (NQ, p_loc) probes that land on its slab before running it through
+    the SAME ``_probe_dists`` body as the single-device path (gathered
+    or cluster-major per the static ``probe_backend``). Out-of-shard /
+    padding probes index-clip into the local slab and mask to inf after
+    the scan; every in-range candidate's per-element math is the scan
+    body's, so per-candidate distances stay bitwise identical to the
+    single-device scan. The compacted local top-k ranks candidates by
+    their GLOBAL probe-major flat position ``p * L + l`` (compaction is
+    order-preserving, so the compacted flat index order IS the global
+    position order restricted to this shard), and that global position
+    is the secondary merge key — reproducing single-device ``top_k``
+    tie-breaking exactly. Per-shard top-k then merges with one
+    all-gather per mesh axis.
+
+    ``p_loc = 0`` scans the full probe list (the uncompacted program —
+    per-shard FLOPs at the single-device worst case); ``p_loc > 0``
+    additionally returns the replicated count of (query, shard) pairs
+    whose in-shard probes overflowed the budget, so the caller can fall
+    back to the ``p_loc = 0`` program for that dispatch.
     """
     from repro.ivf.index import (_probe_dists, _probe_select,
                                  _transform_queries)
 
     cluster = P(axes)
+    compact = 0 < p_loc < nprobe
 
     def scan_body(codes, factors, o_norm, g_proj, g_rot, ids,
                   fq, fq_rot, probes):
@@ -190,38 +210,66 @@ def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...],
             idx = idx * axis_size(ax) + jax.lax.axis_index(ax)
         local = probes.astype(jnp.int32) - idx * c_loc          # (NQ, P)
         in_range = (local >= 0) & (local < c_loc)
+        nq, p = local.shape
+        if compact:
+            # overflow accounting BEFORE compaction: queries with more
+            # in-shard probes than the budget lose candidates and must
+            # be re-dispatched uncompacted by the caller
+            n_in = jnp.sum(in_range.astype(jnp.int32), axis=1)   # (NQ,)
+            overflow = jnp.sum((n_in > p_loc).astype(jnp.int32))
+            # order-preserving compaction via a strictly-ordered key:
+            # in-shard probes keep their probe order and come first,
+            # out-of-shard probes (the pad pool) follow in probe order —
+            # unique keys, so no reliance on sort stability
+            slot = jnp.arange(p, dtype=jnp.int32)[None, :]
+            rank = jnp.where(in_range, 0, p) + slot
+            sel = jnp.argsort(rank, axis=1)[:, :p_loc]           # (NQ, P_loc)
+            local = jnp.take_along_axis(local, sel, axis=1)
+            in_range = jnp.take_along_axis(in_range, sel, axis=1)
+            orig_p = sel.astype(jnp.int32)       # global probe slot per lane
+        else:
+            overflow = jnp.int32(0)
+            orig_p = None
         locc = jnp.clip(local, 0, c_loc - 1)
         dist, pid = _probe_dists(
             codes, factors, o_norm, g_proj, g_rot, ids, fq, fq_rot, locc,
             col_offsets, seg_bits, prefix_bits, bitpacked, probe_backend)
         dist = jnp.where(in_range[:, :, None], dist, jnp.inf)
         pid = jnp.where(in_range[:, :, None], pid, -1)
-        nq = dist.shape[0]
+        l = dist.shape[2]
         neg, ix = jax.lax.top_k(-dist.reshape(nq, -1), k)
         d = -neg
         i = jnp.take_along_axis(pid.reshape(nq, -1), ix, axis=1)
-        # ix is each pick's probe-major flat position p*L+l — the SAME
-        # coordinate the single-device top_k ranks over (every in-range
-        # candidate lives on exactly one shard, so positions of finite
-        # candidates are globally unique per query)
-        pos = ix.astype(jnp.int32)
+        # pos is each pick's GLOBAL probe-major flat position p*L+l —
+        # the SAME coordinate the single-device top_k ranks over (every
+        # in-range candidate lives on exactly one shard, so positions
+        # of finite candidates are globally unique per query). In the
+        # compacted layout ix is a compacted flat index; map it back
+        # through the per-lane global probe slot.
+        if orig_p is None:
+            pos = ix.astype(jnp.int32)
+        else:
+            pos = jnp.take_along_axis(orig_p, ix // l, axis=1) * l \
+                + ix % l
         # ONE all-gather of k candidates per (shard, query) per axis
         for ax in axes:
             d = jax.lax.all_gather(d, ax, axis=1, tiled=True)
             i = jax.lax.all_gather(i, ax, axis=1, tiled=True)
             pos = jax.lax.all_gather(pos, ax, axis=1, tiled=True)
+            overflow = jax.lax.psum(overflow, ax)
         # merge by (dist, flat position): jax.lax.top_k breaks ties by
         # lower index, so ranking the gathered candidates by position as
         # the secondary key reproduces the single-device tie order even
         # when equal distances land on different shards
         perm = jnp.lexsort((pos, d), axis=1)[:, :k]
         return (jnp.take_along_axis(d, perm, axis=1),
-                jnp.take_along_axis(i, perm, axis=1))
+                jnp.take_along_axis(i, perm, axis=1),
+                overflow)
 
     sharded = shard_map(
         scan_body, mesh=mesh,
         in_specs=(cluster,) * 6 + (P(), P(), P()),
-        out_specs=(P(), P()),
+        out_specs=(P(), P(), P()),
         check_vma=False)
 
     def run(queries, centroids, pca_mean, pca_comp, packed_rot,
@@ -229,9 +277,9 @@ def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...],
         probes = _probe_select(queries, centroids, nprobe)
         fq, fq_rot = _transform_queries(queries, pca_mean, pca_comp,
                                         packed_rot)
-        d, i = sharded(codes, factors, o_norm, g_proj, g_rot, ids,
-                       fq, fq_rot, probes)
-        return i, d
+        d, i, overflow = sharded(codes, factors, o_norm, g_proj, g_rot,
+                                 ids, fq, fq_rot, probes)
+        return i, d, overflow
 
     return jax.jit(run)
 
@@ -243,10 +291,27 @@ def _pad_clusters(arr: jnp.ndarray, c_pad: int, fill) -> jnp.ndarray:
     return jnp.pad(arr, widths, constant_values=fill)
 
 
+# Default slack multiplier on the fair per-shard probe share: budget
+# P_loc = ceil(P / n_shards) * SLACK. Uniformly spread probes average
+# P / n_shards in-shard probes per query, so slack 2 absorbs moderate
+# skew before the overflow fallback kicks in.
+PROBE_BUDGET_SLACK = 2
+
+
+def default_probe_budget(nprobe: int, n_shards: int,
+                         slack: int = PROBE_BUDGET_SLACK) -> int:
+    """Default static per-shard probe budget ``P_loc`` for the
+    compacted sharded scan: the fair share ``ceil(P / n_shards)`` times
+    a skew-slack multiplier, capped at P (where compaction is moot)."""
+    return min(nprobe, math.ceil(nprobe / max(n_shards, 1)) * slack)
+
+
 def sharded_search_batch(mesh: Mesh, axis, index, queries: jnp.ndarray,
                          k: int, nprobe: int,
                          prefix_bits: Optional[Sequence[int]] = None,
-                         backend: Optional[str] = None
+                         backend: Optional[str] = None,
+                         probe_budget: Optional[int] = None,
+                         stats: Optional[dict] = None
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Cluster-sharded ``IVFIndex.search_batch``: (ids, dists), (NQ, k).
 
@@ -259,6 +324,25 @@ def sharded_search_batch(mesh: Mesh, axis, index, queries: jnp.ndarray,
     ``IVFIndex.search_batch``), resolved here OUTSIDE the jit and keyed
     into the memoized program. Returns replicated results identical to
     the single-device path with the same backend.
+
+    ``probe_budget`` is the static per-shard probe budget ``P_loc`` of
+    the compacted scan: ``None`` resolves ``default_probe_budget``
+    (``ceil(P / n_shards) * PROBE_BUDGET_SLACK``), ``0`` disables
+    compaction (every shard scans the full probe list), any other value
+    is clamped to ``P``. Compaction also turns itself off when it
+    cannot help (``P_loc >= P``) or cannot hold the request
+    (``k > P_loc * L`` would starve the per-shard top-k). When a
+    dispatch overflows the budget — some (query, shard) pair has more
+    than ``P_loc`` in-shard probes — the whole dispatch falls back to
+    the uncompacted program (a second memoized program, bit-identical
+    results).
+
+    ``stats``, when given, is filled with the dispatch's compaction
+    telemetry: ``probe_budget`` (resolved P_loc, 0 = uncompacted),
+    ``compacted`` (whether the compacted program ran and its results
+    were used), ``overflow_queries`` (count of overflowed
+    (query, shard) pairs) and ``fallback`` (True when overflow forced
+    the uncompacted re-dispatch).
     """
     from repro.kernels import ops
 
@@ -271,15 +355,30 @@ def sharded_search_batch(mesh: Mesh, axis, index, queries: jnp.ndarray,
     c = index.n_clusters
     c_pad = -c % n_shards
     c_loc = (c + c_pad) // n_shards
+    eff_probe = min(nprobe, c)
+    l_max = int(index.ids.shape[1])
+    if probe_budget is None:
+        p_loc = default_probe_budget(eff_probe, n_shards)
+    elif probe_budget < 0:
+        raise ValueError(
+            f"probe_budget must be >= 0 (0 disables compaction), got "
+            f"{probe_budget}")
+    else:
+        p_loc = min(int(probe_budget), eff_probe)
+    if p_loc >= eff_probe or (p_loc and k > p_loc * l_max):
+        # compaction cannot reduce work (budget covers every probe) or
+        # cannot hold the request (per-shard top-k needs k candidates
+        # out of p_loc * L lanes) — run the uncompacted program
+        p_loc = 0
     lay = index.packed.layout
     saq = index.saq
     pca_mean = saq.pca.mean if saq.pca is not None else None
     pca_comp = saq.pca.components if saq.pca is not None else None
+    pb = tuple(prefix_bits) if prefix_bits is not None else None
     fn = _sharded_search_fn(
-        mesh, axes, lay.col_offsets, lay.seg_bits,
-        (tuple(prefix_bits) if prefix_bits is not None else None),
-        index.packed.bitpacked, k, min(nprobe, c), c_loc,
-        backend)
+        mesh, axes, lay.col_offsets, lay.seg_bits, pb,
+        index.packed.bitpacked, k, eff_probe, c_loc,
+        backend, p_loc)
     # Padding copies the whole index, so memoize the padded operands on
     # the index per shard count — the hot serving path then only pays
     # the jit'd program call. (A rebuilt/reloaded index is a new object
@@ -295,5 +394,23 @@ def sharded_search_batch(mesh: Mesh, axis, index, queries: jnp.ndarray,
             _pad_clusters(index.g_rot, c_pad, 0.0),
             _pad_clusters(index.ids, c_pad, -1))
         cache[n_shards] = padded
-    return fn(queries, index.centroids, pca_mean, pca_comp,
-              saq.packed_rot, *padded)
+    operands = (queries, index.centroids, pca_mean, pca_comp,
+                saq.packed_rot) + padded
+    ids, dists, overflow = fn(*operands)
+    n_over = int(overflow) if p_loc else 0
+    fallback = False
+    if n_over:
+        # probe skew exceeded the budget somewhere: the compacted
+        # results dropped candidates, so re-dispatch the full-probe
+        # program (memoized under p_loc=0 — no recompile on repeats)
+        fallback = True
+        fn_full = _sharded_search_fn(
+            mesh, axes, lay.col_offsets, lay.seg_bits, pb,
+            index.packed.bitpacked, k, eff_probe, c_loc,
+            backend, 0)
+        ids, dists, _ = fn_full(*operands)
+    if stats is not None:
+        stats.update(probe_budget=p_loc,
+                     compacted=bool(p_loc) and not fallback,
+                     overflow_queries=n_over, fallback=fallback)
+    return ids, dists

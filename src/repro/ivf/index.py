@@ -194,7 +194,9 @@ class IVFIndex:
     def search_batch(self, queries: jnp.ndarray, k: int, nprobe: int,
                      prefix_bits: Optional[Sequence[int]] = None,
                      mesh=None, axis="data",
-                     backend: Optional[str] = None
+                     backend: Optional[str] = None,
+                     probe_budget: Optional[int] = None,
+                     shard_stats: Optional[dict] = None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Batched full-estimator search: ONE jit'd call for the whole
         query batch (probe selection + transform + fused packed scan +
@@ -215,9 +217,14 @@ class IVFIndex:
 
         With ``mesh`` the padded cluster lists are sharded over the
         mesh axis/axes named by ``axis`` (``shard_map``): probe
-        selection is replicated, each shard scans its local clusters,
-        and per-shard top-k merge with one all-gather — see
-        ``repro.ivf.distributed.sharded_search_batch``.
+        selection is replicated, each shard compacts the probe list to
+        its local slab under the static per-shard ``probe_budget``
+        (None = auto, 0 = scan the full list; overflow falls back to
+        the full-probe program), and per-shard top-k merge with one
+        all-gather — see
+        ``repro.ivf.distributed.sharded_search_batch``, which also
+        documents the ``shard_stats`` telemetry dict. Both mesh-only
+        knobs are ignored without ``mesh``.
         """
         from repro.kernels import ops
 
@@ -230,7 +237,9 @@ class IVFIndex:
             return sharded_search_batch(mesh, axis, self, queries, k=k,
                                         nprobe=nprobe,
                                         prefix_bits=prefix_bits,
-                                        backend=backend)
+                                        backend=backend,
+                                        probe_budget=probe_budget,
+                                        stats=shard_stats)
 
         saq = self.saq
         lay = self.packed.layout
@@ -334,7 +343,18 @@ def _probe_dists(codes, factors, o_norm, g_proj, g_rot, ids,
     (NQ, P, L). Padding lanes mask to inf. This is the ONE scan body
     shared by the single-device and the mesh-sharded search paths; the
     static ``probe_backend`` string picks both the kernel backend and
-    the slab layout:
+    the slab layout.
+
+    ``probes`` need not be the full probe selection: the sharded path
+    passes per-shard COMPACTED lists (P = the shard's probe budget,
+    lanes beyond the shard's in-range probes index-clipped and masked
+    by the caller). Every (query, probe) lane is scanned independently
+    with the same per-element math regardless of P, so compacted lanes
+    stay bit-identical to their full-list twins; callers that rank the
+    output with a flat ``top_k`` must map the compacted flat index
+    ``j * L + l`` back to the GLOBAL probe-major position
+    ``p * L + l`` themselves (the tie-break coordinate of the
+    single-device search — see ``_sharded_search_fn``). Layouts:
 
     * gathered (base backends) — gather one (L, ·) slab per
       (query, probe) pair and scan the (NQ, P, L, ·) block through
@@ -478,18 +498,36 @@ def _scan_cluster_staged_impl(codes_c, fac_c, o_norm_c, gq_c, g_rot_c,
     return est, alive, bits_acc
 
 
+def _staged_scan_consts(index: IVFIndex):
+    """Per-index constants of the staged scan (variance segment slices,
+    segment bounds, dropped-dim variance mask) — pure functions of the
+    plan and the fitted variances, so they are built ONCE per index and
+    memoized on the instance (same pattern as ``_shard_pad_cache``):
+    ``search_multistage`` calls ``_scan_cluster_staged`` once per
+    probed cluster, and rebuilding these in Python per cluster dominated
+    the host-side cost of the cluster loop. (A rebuilt/reloaded index
+    is a new object with a fresh cache.)"""
+    cached = index.__dict__.get("_staged_consts_cache")
+    if cached is None:
+        lay = index.packed.layout
+        var = index.saq.variances
+        var_segs = tuple(var[lay.seg_starts[s]:lay.seg_stops[s]]
+                         for s in range(lay.n_segments))
+        seg_bounds = tuple(zip(lay.seg_starts, lay.seg_stops))
+        drop_mask = np.zeros(index.saq.plan.dim, np.float32)
+        for s in index.saq.plan.segments:
+            if s.bits == 0:
+                drop_mask[s.start:s.stop] = 1.0
+        var_drop = jnp.asarray(drop_mask) * var
+        cached = (var_segs, seg_bounds, var_drop)
+        index.__dict__["_staged_consts_cache"] = cached
+    return cached
+
+
 def _scan_cluster_staged(index: IVFIndex, c: int, fq, fq_rot, tau, m,
                          seg_ids):
     lay = index.packed.layout
-    var = index.saq.variances
-    var_segs = tuple(var[lay.seg_starts[s]:lay.seg_stops[s]]
-                     for s in range(lay.n_segments))
-    seg_bounds = tuple(zip(lay.seg_starts, lay.seg_stops))
-    drop_mask = np.zeros(index.saq.plan.dim, np.float32)
-    for s in index.saq.plan.segments:
-        if s.bits == 0:
-            drop_mask[s.start:s.stop] = 1.0
-    var_drop = jnp.asarray(drop_mask) * var
+    var_segs, seg_bounds, var_drop = _staged_scan_consts(index)
     return _scan_cluster_staged_impl(
         index.packed.codes[c], index.packed.factors[c],
         index.packed.o_norm_sq_total[c], index.g_proj[c], index.g_rot[c],

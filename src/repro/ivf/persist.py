@@ -8,7 +8,12 @@ columns at exactly its own bit width (see ``repro.core.types.WordLayout``
 and docs/storage.md), ONE factor array (C, L, S, 3), plus ids /
 centroids / transforms and manifest.json for static metadata (plan
 segments, SAQ config). On-disk bytes now equal the space budget Table 6
-reports. Atomic via tmp + rename, same discipline as repro/ckpt.
+reports. Crash-safe via tmp + backup swap: the new index is staged at
+``<path>.tmp``, the old one parked at ``<path>.bak`` for the instant of
+the swap, so a loadable copy exists at ``path`` or ``path + ".bak"`` at
+every point of an overwriting save (no rmtree-the-only-copy window) —
+and ``load_index`` transparently falls back to the ``.bak`` survivor,
+so a restart after a mid-swap crash still serves.
 
 Legacy directories still load and are auto-repacked to the bit-packed
 in-memory form: v2 (one widest-dtype codes array) and v1 (per-segment
@@ -77,9 +82,27 @@ def save_index(index: IVFIndex, path: str) -> None:
     _save_arrays(tmp, arrays)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+    # Overwrite swap with no unrecoverable window: the old `path` is
+    # RENAMED to `path.bak` (never deleted while it is the only copy),
+    # the fully-written tmp renames into place, and only then does the
+    # backup go. A crash at any point leaves a loadable index at `path`
+    # or `path.bak`. (The old rmtree(path) -> replace(tmp, path)
+    # sequence destroyed the only copy if the process died between the
+    # two calls.)
+    bak = path + ".bak"
     if os.path.exists(path):
-        shutil.rmtree(path)
-    os.replace(tmp, path)
+        if os.path.exists(bak):      # stale backup from an older crash
+            shutil.rmtree(bak)
+        os.replace(path, bak)
+        os.replace(tmp, path)
+        shutil.rmtree(bak)
+    else:
+        os.replace(tmp, path)
+        if os.path.exists(bak):
+            # a previous save crashed mid-swap (old index parked at
+            # .bak, new one still at .tmp); this save has now written a
+            # fresh index at `path`, so the backup is obsolete
+            shutil.rmtree(bak)
 
 
 class CorruptIndexError(ValueError):
@@ -88,6 +111,15 @@ class CorruptIndexError(ValueError):
 
 
 def load_index(path: str) -> IVFIndex:
+    # Crash recovery for the save_index swap: if a save died between
+    # parking the old index at `.bak` and renaming the new one into
+    # place, `path` is missing but the backup holds the only loadable
+    # copy — serve from it instead of failing the restart. (The next
+    # successful save_index(path) cleans the backup up.)
+    if not os.path.exists(os.path.join(path, "manifest.json")):
+        bak = path + ".bak"
+        if os.path.exists(os.path.join(bak, "manifest.json")):
+            path = bak
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
 

@@ -166,6 +166,18 @@ def probe_scan(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
         bitpacked=bitpacked)
 
 
+def slab_scan_flops(n_slabs: int, l: int, d: int, n_q: int = 1) -> int:
+    """Dominant-term FLOP estimate of one slab-scan dispatch: the
+    MXU/einsum contraction is ``2 * L * d`` MACs per (slab, query), so
+    a gathered probe scan costs ``slab_scan_flops(NQ * P, L, d)`` and a
+    cluster-major scan ``slab_scan_flops(U, L, d, NQ)``. Benchmarks use
+    this to report per-shard scan work — e.g. probe compaction cuts a
+    shard's gathered scan from ``NQ * P`` to ``NQ * P_loc`` slabs
+    (`repro.ivf.distributed.sharded_search_batch`). The affine Eq 13
+    correction and the top-k are O(L) per slab and excluded."""
+    return 2 * n_slabs * l * d * n_q
+
+
 def cluster_scan(codes_u: jnp.ndarray, factors_u: jnp.ndarray,
                  o_norm_u: jnp.ndarray, queries_u: jnp.ndarray,
                  q_norm_u: jnp.ndarray, col_offsets, seg_bits,

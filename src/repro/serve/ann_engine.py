@@ -31,7 +31,12 @@ fused scan on batch=1 and thrashes the jit cache with ad-hoc shapes.
 * **Scale-out** — constructed with ``mesh=``, every dispatch routes
   through the cluster-sharded search path
   (``repro.ivf.distributed.sharded_search_batch``), which returns
-  bit-identical results to the single-device path.
+  bit-identical results to the single-device path. Per-shard scan work
+  is compacted to the probes that land on each shard under
+  ``BatchPolicy.probe_budget`` (overflowing dispatches fall back to
+  the uncompacted program; ``EngineStats.probe_fallbacks`` /
+  ``probe_overflow_queries`` count them, and ``warmup`` compiles both
+  programs per shape).
 
 See ``docs/serving.md`` for the architecture and a throughput recipe;
 ``benchmarks/batch_qps.py`` measures engine QPS under Poisson arrivals.
@@ -73,12 +78,23 @@ class BatchPolicy:
                   at the measured crossover of
                   ``benchmarks/batch_qps.py`` (the gathered layout's
                   memory-bound knee; see docs/serving.md).
+    probe_budget: static per-shard probe budget of mesh-sharded
+                  dispatches (engines constructed with ``mesh=``):
+                  None = auto (``ceil(P / n_shards)`` x slack — see
+                  ``repro.ivf.distributed.default_probe_budget``),
+                  0 = disable probe compaction (every shard scans the
+                  full probe list), n = at most n probes scanned per
+                  shard per query. Overflowing dispatches (probe skew
+                  beyond the budget) fall back to the uncompacted
+                  program and count in ``EngineStats.probe_fallbacks``.
+                  Ignored without a mesh.
     """
 
     max_batch: int = 64
     max_wait_us: int = 2000
     batch_shapes: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
     cluster_major_from: Optional[int] = 8
+    probe_budget: Optional[int] = None
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -95,6 +111,10 @@ class BatchPolicy:
             raise ValueError(
                 f"cluster_major_from must be >= 1 or None, got "
                 f"{self.cluster_major_from}")
+        if self.probe_budget is not None and self.probe_budget < 0:
+            raise ValueError(
+                f"probe_budget must be >= 0 or None (auto), got "
+                f"{self.probe_budget}")
 
     def pad_to(self, n: int) -> int:
         """Smallest static shape >= n. Raises for n beyond the largest
@@ -125,14 +145,21 @@ class EngineStats:
     completed: int = 0
     failed: int = 0
     ticks: int = 0
-    dispatches: int = 0        # search_batch calls issued
+    dispatches: int = 0        # search_batch calls issued (incl. failed)
+    failed_dispatches: int = 0  # dispatches whose search_batch raised
     dispatched_rows: int = 0   # rows sent to the device incl. padding
     padded_rows: int = 0       # rows that were padding
     max_group: int = 0         # largest single dispatch group seen
+    probe_fallbacks: int = 0   # mesh dispatches that overflowed the
+    #                            probe budget and re-ran uncompacted
+    probe_overflow_queries: int = 0  # overflowed (query, shard) pairs
 
     @property
     def occupancy(self) -> float:
-        """Fraction of dispatched rows that carried real queries."""
+        """Fraction of dispatched rows that carried real queries.
+        Failed dispatches count their rows too — a raising dispatch
+        still occupied the device, and skipping it would overstate
+        healthy traffic."""
         if self.dispatched_rows == 0:
             return 0.0
         return 1.0 - self.padded_rows / self.dispatched_rows
@@ -258,9 +285,15 @@ class AnnEngine:
 
     def search_many(self, queries, k: int = 10, nprobe: int = 8,
                     prefix_bits: Optional[Sequence[int]] = None):
-        """Submit a whole batch and gather (ids, dists) as (NQ, k)."""
+        """Submit a whole batch and gather (ids, dists) as (NQ, k).
+        An empty batch returns empty (0, k) arrays (np.stack would
+        raise on zero rows)."""
+        queries = np.asarray(queries, np.float32)
+        if queries.shape[0] == 0:
+            return (np.empty((0, k), np.int32),
+                    np.empty((0, k), np.float32))
         futs = [self.submit(q, k=k, nprobe=nprobe, prefix_bits=prefix_bits)
-                for q in np.asarray(queries, np.float32)]
+                for q in queries]
         out = [f.result() for f in futs]
         return (np.stack([o[0] for o in out]),
                 np.stack([o[1] for o in out]))
@@ -273,14 +306,26 @@ class AnnEngine:
     def warmup(self, k: int = 10, nprobe: int = 8,
                prefix_bits: Optional[Sequence[int]] = None) -> None:
         """Pre-compile every static batch shape for one dispatch key
-        (each shape with the scan backend the policy will pick for it)."""
+        (each shape with the scan backend the policy will pick for it).
+        Mesh engines warm BOTH sharded programs per shape — the
+        compacted one (the policy's ``probe_budget``) and the
+        uncompacted overflow-fallback (``probe_budget=0``) — so a
+        skewed dispatch at serving time never eats the fallback
+        compile."""
+        if self.mesh is None:
+            budgets: Tuple = (None,)
+        else:
+            budgets = tuple(dict.fromkeys(
+                (self.policy.probe_budget, 0)))
         for s in self.policy.batch_shapes:
             qb = np.zeros((s, self.index.dim), np.float32)
-            ids, dists = self.index.search_batch(
-                qb, k=k, nprobe=nprobe, prefix_bits=prefix_bits,
-                mesh=self.mesh, axis=self.axis,
-                backend=self._scan_backend(s))
-            jax.block_until_ready(ids)
+            for budget in budgets:
+                ids, dists = self.index.search_batch(
+                    qb, k=k, nprobe=nprobe, prefix_bits=prefix_bits,
+                    mesh=self.mesh, axis=self.axis,
+                    backend=self._scan_backend(s),
+                    probe_budget=budget)
+                jax.block_until_ready(ids)
 
     def _scan_backend(self, shape: int) -> str:
         """Resolve the probe-scan backend string for a dispatch shape:
@@ -337,18 +382,29 @@ class AnnEngine:
         qb = np.zeros((shape, self.index.dim), np.float32)
         for j, r in enumerate(reqs):
             qb[j] = r.query
+        shard_stats: Optional[dict] = {} if self.mesh is not None else None
         try:
             ids, dists = self.index.search_batch(
                 qb, k=k, nprobe=nprobe, prefix_bits=prefix_bits,
                 mesh=self.mesh, axis=self.axis,
-                backend=self._scan_backend(shape))
+                backend=self._scan_backend(shape),
+                probe_budget=self.policy.probe_budget,
+                shard_stats=shard_stats)
             ids = np.asarray(jax.block_until_ready(ids))
             dists = np.asarray(dists)
         except Exception as e:  # fail the whole group, keep serving
             for r in reqs:
                 r.future.set_exception(e)
+            # a raising dispatch still occupied a device slot: count it
+            # in the dispatch/row/padding totals (or `occupancy` would
+            # silently overstate healthy traffic) plus the failure
+            # counters
             with self._lock:
                 self._stats.failed += n
+                self._stats.dispatches += 1
+                self._stats.failed_dispatches += 1
+                self._stats.dispatched_rows += shape
+                self._stats.padded_rows += shape - n
             return
         for j, r in enumerate(reqs):
             r.future.set_result((ids[j], dists[j]))
@@ -357,3 +413,8 @@ class AnnEngine:
             self._stats.dispatches += 1
             self._stats.dispatched_rows += shape
             self._stats.padded_rows += shape - n
+            if shard_stats is not None:
+                if shard_stats.get("fallback"):
+                    self._stats.probe_fallbacks += 1
+                self._stats.probe_overflow_queries += \
+                    shard_stats.get("overflow_queries", 0)

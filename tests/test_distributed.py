@@ -131,6 +131,202 @@ def test_sharded_search_batch_bit_identical():
     assert "TIES 1" in out
 
 
+def test_probe_compaction_bit_identical():
+    """Per-shard probe compaction (the default on a mesh) must be
+    bit-identical to the single-device path across the whole matrix:
+    both probe-scan layouts, bit-packed and unpacked codes,
+    prefix_bits, exact-duplicate distances across shards, and ragged
+    lists short of k (-1/inf tails) — with the compacted program
+    actually in use (stats say compacted, no overflow fallback)."""
+    out = run_with_devices(textwrap.dedent("""
+        import dataclasses
+        import numpy as np, jax.numpy as jnp
+        from repro.compat import AxisType, make_mesh
+        from repro.core.saq import SAQConfig
+        from repro.ivf import IVFIndex
+        from repro.ivf.distributed import sharded_search_batch
+
+        def bit_eq(a, b):
+            return (np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+                    and np.array_equal(np.asarray(a[1]).view(np.uint32),
+                                       np.asarray(b[1]).view(np.uint32)))
+
+        rng = np.random.default_rng(0)
+        mesh = make_mesh((4, 2), ("pod", "data"),
+                         axis_types=(AxisType.Auto,) * 2)
+        axs = ("pod", "data")
+        x = rng.standard_normal((2000, 32)).astype(np.float32)
+        idx = IVFIndex.build(
+            x, SAQConfig(avg_bits=4, rounds=2, align=8, max_bits=9),
+            n_clusters=18)
+        qs = rng.standard_normal((5, 32)).astype(np.float32)
+        # nprobe=16 over 8 shards: default budget ceil(16/8)*2 = 4
+        # exceeds c_loc = 3, so overflow is impossible and every
+        # dispatch runs the compacted program for real
+        pb = tuple(max(1, s.bits // 2) for s in idx.plan.stored_segments)
+        for tag, packing in (("PACKED", idx),
+                             ("UNPACKED", dataclasses.replace(
+                                 idx, packed=idx.packed.unpack()))):
+            for backend in ("xla", "xla-cluster-major"):
+                for prefix in (None, pb):
+                    ref = packing.search_batch(qs, k=10, nprobe=16,
+                                               prefix_bits=prefix,
+                                               backend=backend)
+                    st = {}
+                    got = sharded_search_batch(
+                        mesh, axs, packing, qs, k=10, nprobe=16,
+                        prefix_bits=prefix, backend=backend, stats=st)
+                    ok = (bit_eq((ref[0], ref[1]), got)
+                          and st["compacted"] and not st["fallback"]
+                          and st["overflow_queries"] == 0
+                          and 0 < st["probe_budget"] < 16)
+                    print(tag, backend,
+                          "PFX" if prefix else "FULL", int(ok))
+        # exact-duplicate rows create equal distances across shards:
+        # the compacted (dist, position) merge must still match
+        xd = np.vstack([x, x[:50]])
+        idx2 = IVFIndex.build(
+            xd, SAQConfig(avg_bits=4, rounds=2, align=8, max_bits=9),
+            n_clusters=18)
+        ref = idx2.search_batch(qs, k=20, nprobe=16)
+        st = {}
+        got = sharded_search_batch(mesh, axs, idx2, qs, k=20, nprobe=16,
+                                   stats=st)
+        print("TIES", int(bit_eq(ref, got) and st["compacted"]))
+        # ragged lists short of k: one fat duplicate blob + scattered
+        # singletons, k beyond the real candidate count -> the -1/inf
+        # tail contract must survive compaction on both layouts
+        xr = np.vstack([
+            np.repeat(rng.standard_normal((1, 16)), 60, axis=0),
+            rng.standard_normal((30, 16)) * 8.0]).astype(np.float32)
+        idxr = IVFIndex.build(
+            xr, SAQConfig(avg_bits=4, rounds=2, align=8, max_bits=9),
+            n_clusters=12)
+        qr = rng.standard_normal((3, 16)).astype(np.float32)
+        k = min(128, 4 * int(idxr.ids.shape[1]))
+        for backend in ("xla", "xla-cluster-major"):
+            ref = idxr.search_batch(qr, k=k, nprobe=12, backend=backend)
+            st = {}
+            got = sharded_search_batch(mesh, axs, idxr, qr, k=k,
+                                       nprobe=12, backend=backend,
+                                       stats=st)
+            tail = int((np.asarray(ref[0]) == -1).sum())
+            print("RAGGED", backend,
+                  int(bit_eq(ref, got) and st["compacted"] and tail > 0))
+    """))
+    for flag in ("PACKED xla FULL 1", "PACKED xla PFX 1",
+                 "PACKED xla-cluster-major FULL 1",
+                 "PACKED xla-cluster-major PFX 1",
+                 "UNPACKED xla FULL 1", "UNPACKED xla PFX 1",
+                 "UNPACKED xla-cluster-major FULL 1",
+                 "UNPACKED xla-cluster-major PFX 1",
+                 "TIES 1", "RAGGED xla 1", "RAGGED xla-cluster-major 1"):
+        assert flag in out, (flag, out)
+
+
+def test_probe_compaction_overflow_and_skew():
+    """Adversarially skewed probe distributions: a cluster permutation
+    pins ALL of one query's probes onto one shard. The tightest budget
+    that fits must run compacted and bit-identical; one below it must
+    detect the overflow and fall back (still bit-identical). Budget
+    semantics (0 / >= P / k-capacity guard / negative) and the engine's
+    fallback telemetry are pinned too."""
+    out = run_with_devices(textwrap.dedent("""
+        import dataclasses
+        import numpy as np, jax.numpy as jnp
+        from repro.compat import AxisType, make_mesh
+        from repro.core.saq import SAQConfig
+        from repro.ivf import IVFIndex
+        from repro.ivf.distributed import sharded_search_batch
+        from repro.ivf.index import _probe_select
+        from repro.serve import AnnEngine, BatchPolicy
+
+        def bit_eq(a, b):
+            return (np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+                    and np.array_equal(np.asarray(a[1]).view(np.uint32),
+                                       np.asarray(b[1]).view(np.uint32)))
+
+        rng = np.random.default_rng(1)
+        x = rng.standard_normal((1500, 32)).astype(np.float32)
+        idx = IVFIndex.build(
+            x, SAQConfig(avg_bits=4, rounds=2, align=8, max_bits=9),
+            n_clusters=16)
+        qs = rng.standard_normal((4, 32)).astype(np.float32)
+        # relabel clusters so query 0's 8 probes are clusters 0..7 —
+        # with a 2-shard mesh (c_loc = 8) they ALL land on shard 0
+        p0 = np.asarray(_probe_select(jnp.asarray(qs[:1]),
+                                      idx.centroids, 8))[0]
+        perm = np.concatenate(
+            [p0, np.setdiff1d(np.arange(16), p0)]).astype(np.int64)
+        pk = idx.packed
+        idx = dataclasses.replace(
+            idx, centroids=idx.centroids[perm], ids=idx.ids[perm],
+            counts=idx.counts[perm],
+            packed=dataclasses.replace(
+                pk, codes=pk.codes[perm], factors=pk.factors[perm],
+                o_norm_sq_total=pk.o_norm_sq_total[perm]),
+            g_proj=idx.g_proj[perm], g_rot=idx.g_rot[perm])
+        mesh = make_mesh((2,), ("data",), axis_types=(AxisType.Auto,))
+        ref = idx.search_batch(qs, k=10, nprobe=8)
+        # per-(query, shard) in-range counts decide the exact budget
+        # where overflow starts: max_in fits, max_in - 1 overflows
+        probes = np.asarray(_probe_select(jnp.asarray(qs),
+                                          idx.centroids, 8))
+        counts = np.stack([((probes >= s * 8) & (probes < (s + 1) * 8))
+                           .sum(axis=1) for s in (0, 1)])
+        max_in = int(counts.max())
+        n_over = int((counts > max_in - 1).sum())
+        assert int(counts[0, 0]) == 8 and max_in == 8  # skew is real
+        st = {}
+        got = sharded_search_batch(mesh, ("data",), idx, qs, k=10,
+                                   nprobe=8, probe_budget=max_in - 1,
+                                   stats=st)
+        print("OVER", int(bit_eq(ref, got) and st["fallback"]
+                          and not st["compacted"]
+                          and st["overflow_queries"] == n_over))
+        # nprobe=8 == P: budget 8 covers everything -> compaction off
+        st2 = {}
+        sharded_search_batch(mesh, ("data",), idx, qs, k=10, nprobe=8,
+                             probe_budget=8, stats=st2)
+        print("COVER", int(st2["probe_budget"] == 0
+                           and not st2["compacted"]))
+        st3 = {}
+        sharded_search_batch(mesh, ("data",), idx, qs, k=10, nprobe=8,
+                             probe_budget=0, stats=st3)
+        print("OFF", int(st3["probe_budget"] == 0))
+        # k beyond the compacted per-shard capacity p_loc * L turns
+        # compaction off instead of starving the local top-k
+        l_max = int(idx.ids.shape[1])
+        st4 = {}
+        got4 = sharded_search_batch(mesh, ("data",), idx, qs,
+                                    k=2 * l_max, nprobe=8,
+                                    probe_budget=1, stats=st4)
+        ref4 = idx.search_batch(qs, k=2 * l_max, nprobe=8)
+        print("KCAP", int(st4["probe_budget"] == 0
+                          and bit_eq(ref4, got4)))
+        try:
+            sharded_search_batch(mesh, ("data",), idx, qs, k=10,
+                                 nprobe=8, probe_budget=-1)
+            print("NEG 0")
+        except ValueError:
+            print("NEG 1")
+        # engine telemetry: a starving budget forces fallbacks, and the
+        # results still match the single-device reference
+        pol = BatchPolicy(max_batch=4, max_wait_us=1000,
+                          batch_shapes=(1, 2, 4), probe_budget=max_in - 1)
+        with AnnEngine(idx, pol, mesh=mesh, axis=("data",)) as eng:
+            eng.warmup(k=10, nprobe=8)
+            e_ids, e_d = eng.search_many(qs, k=10, nprobe=8)
+            est = eng.stats
+        print("ENG", int(np.array_equal(e_ids, np.asarray(ref[0]))
+                         and est.probe_fallbacks >= 1
+                         and est.probe_overflow_queries >= 1))
+    """))
+    for flag in ("OVER 1", "COVER 1", "OFF 1", "KCAP 1", "NEG 1",
+                 "ENG 1"):
+        assert flag in out, (flag, out)
+
+
 def test_compressed_mean_and_moe_parity():
     out = run_with_devices(textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np

@@ -112,6 +112,62 @@ def test_engine_cluster_major_dispatch_parity(built):
                                   np.asarray(ref_d).view(np.uint32))
 
 
+def test_engine_failed_dispatch_counts_rows(built):
+    """A dispatch whose search_batch raises must still count in
+    dispatches/dispatched_rows/padded_rows (it occupied the device) and
+    bump failed_dispatches — otherwise occupancy silently overstates
+    healthy traffic."""
+    _, idx = built
+
+    class Exploding:
+        """Index proxy whose batched search always raises."""
+
+        def __init__(self, inner):
+            self._inner = inner
+            self.dim = inner.dim
+            self._validate_k = inner._validate_k
+
+        def search_batch(self, *a, **kw):
+            raise RuntimeError("boom")
+
+    qs = decaying_data(3, 32, alpha=0.7, seed=81)
+    policy = BatchPolicy(max_batch=4, max_wait_us=50_000,
+                         batch_shapes=(1, 2, 4))
+    with AnnEngine(Exploding(idx), policy) as eng:
+        futs = [eng.submit(q, k=5, nprobe=4) for q in qs]
+        errs = [pytest.raises(RuntimeError, f.result, timeout=60)
+                for f in futs]
+    assert len(errs) == 3
+    st = eng.stats
+    assert st.failed == 3 and st.completed == 0
+    assert st.failed_dispatches >= 1
+    assert st.dispatches == st.failed_dispatches
+    assert st.dispatched_rows >= 3            # failed rows ARE counted
+    assert st.padded_rows == st.dispatched_rows - 3
+    assert 0.0 < st.occupancy <= 1.0
+
+
+def test_engine_search_many_empty(built):
+    """search_many([]) returns empty (0, k) arrays instead of crashing
+    on np.stack of an empty list."""
+    _, idx = built
+    with AnnEngine(idx) as eng:
+        ids, dists = eng.search_many([], k=7, nprobe=4)
+        st = eng.stats
+    assert ids.shape == (0, 7) and dists.shape == (0, 7)
+    assert ids.dtype == np.int32 and dists.dtype == np.float32
+    assert st.submitted == 0 and st.dispatches == 0
+
+
+def test_batch_policy_probe_budget():
+    p = BatchPolicy(probe_budget=4)
+    assert p.probe_budget == 4
+    assert BatchPolicy(probe_budget=0).probe_budget == 0      # disabled
+    assert BatchPolicy().probe_budget is None                 # auto
+    with pytest.raises(ValueError, match="probe_budget"):
+        BatchPolicy(probe_budget=-1)
+
+
 def test_engine_admission_validation(built):
     _, idx = built
     q = decaying_data(1, 32, alpha=0.7, seed=41)[0]

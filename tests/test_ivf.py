@@ -52,6 +52,38 @@ def test_multistage_matches_full_and_prunes(built):
         assert 0.0 <= stats.pruned_frac <= 1.0
 
 
+def test_staged_scan_consts_cached_per_index(built):
+    """search_multistage visits many clusters per call; the staged-scan
+    constants (variance segment slices / bounds / dropped-dim mask) are
+    pure per-index values and must be built ONCE and reused across
+    clusters and calls — not rebuilt in Python per probed cluster."""
+    from repro.ivf import index as ivf_index
+    _, idx = built
+    q = decaying_data(1, 48, alpha=0.7, seed=65)[0]
+    idx.__dict__.pop("_staged_consts_cache", None)
+    builds = {"n": 0}
+    real = ivf_index._staged_scan_consts
+
+    def counting(index):
+        had = "_staged_consts_cache" in index.__dict__
+        out = real(index)
+        if not had:
+            builds["n"] += 1
+        return out
+
+    ivf_index._staged_scan_consts = counting
+    try:
+        ids1, d1, _ = idx.search_multistage(q, k=10, nprobe=8)
+        first = idx._staged_consts_cache
+        ids2, d2, _ = idx.search_multistage(q, k=10, nprobe=8)
+    finally:
+        ivf_index._staged_scan_consts = real
+    assert builds["n"] == 1                   # built exactly once...
+    assert idx._staged_consts_cache is first  # ...and reused verbatim
+    np.testing.assert_array_equal(np.asarray(ids1), np.asarray(ids2))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
 def test_progressive_search(built):
     x, idx = built
     q = decaying_data(1, 48, alpha=0.7, seed=70)[0]

@@ -6,6 +6,7 @@ import dataclasses
 import filecmp
 import json
 import os
+import shutil
 
 import jax.numpy as jnp
 import numpy as np
@@ -101,6 +102,70 @@ def test_save_load_save_byte_stable(tmp_path, index):
     assert files == sorted(os.listdir(p2))
     _, mismatch, errors = filecmp.cmpfiles(p1, p2, files, shallow=False)
     assert not mismatch and not errors, (mismatch, errors)
+
+
+def test_overwrite_crash_keeps_a_loadable_copy(tmp_path, index):
+    """An overwriting save that dies at ANY step of the swap must leave
+    a loadable index at `path` or `path.bak` — the old rmtree(path) ->
+    replace(tmp, path) sequence had a window that destroyed the only
+    copy. Every os.replace / shutil.rmtree call of the swap is failed
+    in turn and a full save -> load round-trip must still succeed from
+    whatever survived."""
+    import repro.ivf.persist as persist
+    _, idx = index
+    path = str(tmp_path / "idx")
+    save_index(idx, path)
+    ref_ids = np.asarray(idx.ids)
+
+    def check_recoverable():
+        # load_index(path) itself must recover — it falls back to the
+        # .bak survivor when the swap died with `path` missing
+        loaded = load_index(path)
+        np.testing.assert_array_equal(np.asarray(loaded.ids), ref_ids)
+
+    real_replace, real_rmtree = os.replace, shutil.rmtree
+    # Every overwriting save starts with a stale .bak parked next to
+    # the index (as a crashed earlier save would leave) so the swap
+    # makes exactly these destructive calls, failed one per iteration:
+    #   rmtree #1  stale .bak removal      (path still intact)
+    #   replace #1 path -> .bak            (path still intact)
+    #   replace #2 .tmp -> path            (old index survives at .bak)
+    #   rmtree #2  .bak cleanup            (new index already at path)
+    # (.tmp staging calls are exempt: they precede any destructive
+    # step, so crashing there trivially leaves `path` intact)
+    for prim, fail_at in (("rmtree", 1), ("replace", 1),
+                          ("replace", 2), ("rmtree", 2)):
+        os.makedirs(path + ".bak", exist_ok=True)   # stale leftover
+        calls = {"n": 0}
+
+        def flaky(src, *a, _prim=prim, _fail=fail_at, **kw):
+            real = real_replace if _prim == "replace" else real_rmtree
+            if _prim == "rmtree" and str(src).endswith(".tmp"):
+                return real(src, *a, **kw)
+            calls["n"] += 1
+            if calls["n"] == _fail:
+                raise OSError(f"injected crash: {_prim} #{_fail}")
+            return real(src, *a, **kw)
+
+        try:
+            if prim == "replace":
+                persist.os.replace = flaky
+            else:
+                persist.shutil.rmtree = flaky
+            with pytest.raises(OSError, match="injected crash"):
+                save_index(idx, path)
+        finally:
+            persist.os.replace = real_replace
+            persist.shutil.rmtree = real_rmtree
+        check_recoverable()
+        # the next (uninterrupted) save must self-recover: stale
+        # .tmp/.bak cleaned up, fresh loadable index in place (after
+        # the replace #2 crash `path` is gone and the backup holds the
+        # only copy — the save writes a fresh index and then drops the
+        # obsolete backup)
+        save_index(idx, path)
+        assert not os.path.exists(path + ".bak")
+        check_recoverable()
 
 
 def test_v3_manifest_records_word_layout(tmp_path, index):
