@@ -10,17 +10,28 @@ cluster slab is gathered once per dispatch (peak slab bytes ``U*L*d``
 instead of ``NQ*P*L*d``), and the engine adds the serving loop that
 actually forms those batches from an async request stream. This
 benchmark measures what each layer buys at serving batch sizes
-{1, 8, 16, 64, 256}, plus a mesh section (subprocess with
+{1, 8, 16, 64, 256}, plus an accuracy-tier section (the two-phase
+coarse-prefix scan + full-width re-rank behind
+``search_batch(refine=...)`` / the engine's named tiers) at batch
+{16, 64} reporting qps, recall@10 against the exact ranking, and the
+phase-1 scan work in BOTH currencies (raw f32 slab MACs and the
+bit-weighted ``scan_bit_macs`` the paper's Fig. 11 uses — the 4-8x
+scan-FLOP reduction claim lives in the bit-weighted column), plus a
+mesh section (subprocess with
 ``--xla_force_host_platform_device_count``) comparing the sharded
 search with and without per-shard probe compaction and reporting
 per-shard scan FLOPs. In fast mode it doubles as the CI smoke check
 for the serving path: a regression that makes the engine slower than
 the per-query loop at batch >= 8, the cluster-major scan slower than
-the gathered scan at batch >= 16, or the compacted mesh scan slower
-than the uncompacted mesh scan at batch >= 16, fails the run. Every
-run also APPENDS its qps/occupancy summary to the root-level
-``BENCH_batch_qps.json`` so the serving-perf trajectory across PRs is
-machine-readable.
+the gathered scan at batch >= 16, the compacted mesh scan slower
+than the uncompacted mesh scan at batch >= 16, the balanced tier
+slower than the single-phase scan at batch >= 16, any tier's
+recall@10 below its pinned floor, or the best qualifying tier's
+bit-weighted phase-1 reduction below 4x, fails the run. The
+root-level ``BENCH_batch_qps.json`` trajectory (one appended entry
+per run: qps/occupancy rows + tier rows + mesh rows) is the single
+bench output — there is no per-run ``experiments/`` copy — and the
+gates read the same rows that land there.
 """
 from __future__ import annotations
 
@@ -36,10 +47,19 @@ import numpy as np
 
 from repro.core.saq import SAQConfig
 from repro.ivf import IVFIndex
-from repro.serve import AnnEngine, BatchPolicy
-from .common import bench_datasets, emit, save_json
+from repro.kernels import ops
+from repro.serve import AnnEngine, BatchPolicy, DEFAULT_TIERS
+from .common import bench_datasets, emit
 
 BATCH_SIZES = (1, 8, 16, 64, 256)
+
+TIER_BATCHES = (16, 64)
+TIER_NPROBE = 16
+# Pinned recall@10 floors (vs the single-phase exact ranking, default
+# oversample) per tier — measured on the fast-mode deep workload and
+# set with headroom below the observed values; the CI gate fails any
+# tier that drops under its floor.
+TIER_RECALL_FLOOR = {"exact": 1.0, "balanced": 0.93, "cheap": 0.85}
 
 MESH_SHARDS = 4
 MESH_BATCHES = (16, 64)
@@ -136,10 +156,86 @@ def _mesh_rows(fast: bool = True) -> list:
     return rows
 
 
-def _append_trajectory(rows: list, mesh_rows: list) -> None:
-    """Append this run's qps/occupancy summary to the ROOT-LEVEL
-    ``BENCH_batch_qps.json`` (a JSON list, one entry per run) so the
-    serving-perf trajectory across PRs stays machine-readable."""
+def _tier_rows(idx, queries, rng, fast: bool = True) -> list:
+    """Measure the accuracy tiers (single jit'd two-phase dispatches via
+    ``search_batch(refine=...)``) against the single-phase scan at
+    serving batch sizes: qps, recall@10 vs the exact ranking, and the
+    scan work per dispatch in both currencies.
+
+    ``bit_macs_*`` is the bit-weighted ``scan_bit_macs`` currency
+    (phase 1 reads ``coarse_prefix`` bits of ``coarse_dim_frac`` of the
+    columns; a full-width read of an avg-4-bit layout costs ~4 bit-MACs
+    per column), which is where the paper-level 4-8x phase-1 reduction
+    shows up. ``flops_*`` is raw f32 slab MACs — the currency a CPU/MXU
+    actually pays today, where phase 1 only saves the sliced-out
+    trailing columns; both are recorded so the trajectory can tell
+    precision wins from dimension-slicing wins."""
+    k = 10
+    p = min(TIER_NPROBE, idx.n_clusters)
+    l_max = int(idx.ids.shape[1])
+    lay = idx.packed.layout
+    d_st = int(lay.col_offsets[-1])
+    cap = p * l_max
+    rows = []
+    for bs in TIER_BATCHES:
+        qb = queries[rng.integers(0, len(queries), bs)].astype(np.float32)
+        exact_i, _ = idx.search_batch(qb, k=k, nprobe=TIER_NPROBE)
+        exact_i = np.asarray(exact_i)
+        for tier in ("exact", "balanced", "cheap"):
+            spec = DEFAULT_TIERS[tier]
+            t = _timed(lambda: idx.search_batch(
+                qb, k=k, nprobe=TIER_NPROBE, refine=spec))
+            ids, _ = idx.search_batch(qb, k=k, nprobe=TIER_NPROBE,
+                                      refine=spec)
+            rec = float(np.mean([
+                len(set(a.tolist()) & set(b.tolist())) / k
+                for a, b in zip(np.asarray(ids), exact_i)]))
+            n_scan = bs * p * l_max       # candidate rows phase 1 reads
+            bits_full = ops.scan_bit_macs(n_scan, lay.col_offsets,
+                                          lay.seg_bits)
+            if spec is None:              # single-phase: one full pass
+                row = {"batch": bs, "tier": tier, "nprobe": TIER_NPROBE,
+                       "qps": round(bs / t, 1), "recall_at_10": rec,
+                       "k_refine": 0,
+                       "bit_macs_phase1": bits_full, "bit_macs_phase2": 0,
+                       "bit_macs_single": bits_full,
+                       "bit_mac_reduction": 1.0,
+                       "flops_phase1": ops.slab_scan_flops(
+                           bs * p, l_max, d_st),
+                       "flops_phase2": 0}
+            else:
+                coarse = spec.coarse_prefix_bits(lay.col_offsets,
+                                                 lay.seg_bits)
+                k_ref = spec.k_refine(k, cap)
+                d_keep = max(lay.col_offsets[s + 1]
+                             for s, b in enumerate(coarse) if b > 0)
+                bits_p1 = ops.scan_bit_macs(n_scan, lay.col_offsets,
+                                            lay.seg_bits, coarse)
+                bits_p2 = ops.scan_bit_macs(bs * k_ref, lay.col_offsets,
+                                            lay.seg_bits)
+                row = {"batch": bs, "tier": tier, "nprobe": TIER_NPROBE,
+                       "qps": round(bs / t, 1), "recall_at_10": rec,
+                       "k_refine": k_ref,
+                       "bit_macs_phase1": bits_p1,
+                       "bit_macs_phase2": bits_p2,
+                       "bit_macs_single": bits_full,
+                       "bit_mac_reduction": round(bits_full / bits_p1, 2),
+                       "flops_phase1": ops.slab_scan_flops(
+                           bs * p, l_max, d_keep),
+                       "flops_phase2": ops.slab_scan_flops(
+                           bs * k_ref, 1, d_st)}
+            rows.append(row)
+            emit("batch_qps_tiers", row)
+    return rows
+
+
+def _append_trajectory(rows: list, tier_rows: list,
+                       mesh_rows: list) -> None:
+    """Append this run's qps/occupancy + accuracy-tier summary to the
+    ROOT-LEVEL ``BENCH_batch_qps.json`` (a JSON list, one entry per
+    run) so the serving-perf trajectory across PRs stays
+    machine-readable. This file is the ONLY bench output of this suite
+    — the CI gates and the docs tables read the same rows."""
     fp = os.path.join(_REPO_ROOT, "BENCH_batch_qps.json")
     log = []
     try:
@@ -169,6 +265,7 @@ def _append_trajectory(rows: list, mesh_rows: list) -> None:
         "rev": rev,
         "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "rows": [{k: r[k] for k in keep if k in r} for r in rows],
+        "tiers": tier_rows,
         "mesh": mesh_rows,
     })
     with open(fp, "w") as f:
@@ -296,9 +393,9 @@ def run(fast: bool = True) -> dict:
                    st.dispatched_rows / max(st.dispatches, 1), 1)}
         rows.append(row)
         emit("batch_qps", row)
+    tier_rows = _tier_rows(idx, queries, rng, fast)
     mesh_rows = _mesh_rows(fast)
-    save_json("batch_qps", {"rows": rows, "mesh": mesh_rows})
-    _append_trajectory(rows, mesh_rows)
+    _append_trajectory(rows, tier_rows, mesh_rows)
     # CI smoke gates (fast mode only — --full runs report without
     # aborting the remaining suites):
     #  * dynamic batching must beat the per-query loop once there is a
@@ -308,6 +405,11 @@ def run(fast: bool = True) -> dict:
     #  * on the mesh, probe compaction must beat the full-probe scan at
     #    serving batch sizes (its reason to exist: per-shard FLOPs
     #    scale with P_loc, not P)
+    #  * the balanced tier's two-phase dispatch must beat the
+    #    single-phase scan wall-clock at batch >= 16, every tier must
+    #    hold its pinned recall@10 floor, and at least one tier holding
+    #    its floor must record a >= 4x bit-weighted phase-1 reduction
+    #    (the tiers' reason to exist)
     gated = [r for r in rows if r["batch"] >= 8] if fast else []
     if gated and not any(r["qps_engine"] > r["qps_loop"] for r in gated):
         raise RuntimeError(
@@ -324,4 +426,29 @@ def run(fast: bool = True) -> dict:
             raise RuntimeError(
                 f"serving regression: compacted mesh scan slower than "
                 f"the uncompacted mesh scan at batch {r['batch']}: {r}")
-    return {"batch_qps": rows, "batch_qps_mesh": mesh_rows}
+    if fast:
+        by_batch = {}
+        for r in tier_rows:
+            by_batch.setdefault(r["batch"], {})[r["tier"]] = r
+        for bs, tiers in by_batch.items():
+            if bs >= 16 and tiers["balanced"]["qps"] \
+                    < tiers["exact"]["qps"]:
+                raise RuntimeError(
+                    f"serving regression: balanced tier slower than the "
+                    f"single-phase scan at batch {bs}: {tiers}")
+        for r in tier_rows:
+            if r["recall_at_10"] < TIER_RECALL_FLOOR[r["tier"]]:
+                raise RuntimeError(
+                    f"accuracy regression: tier {r['tier']} recall@10 "
+                    f"{r['recall_at_10']:.3f} below pinned floor "
+                    f"{TIER_RECALL_FLOOR[r['tier']]}: {r}")
+        best_red = max((r["bit_mac_reduction"] for r in tier_rows
+                        if r["recall_at_10"]
+                        >= TIER_RECALL_FLOOR[r["tier"]]), default=0.0)
+        if best_red < 4.0:
+            raise RuntimeError(
+                f"tier regression: best bit-weighted phase-1 reduction "
+                f"{best_red} < 4x among tiers holding their recall "
+                f"floor: {tier_rows}")
+    return {"batch_qps": rows, "batch_qps_tiers": tier_rows,
+            "batch_qps_mesh": mesh_rows}

@@ -167,7 +167,8 @@ def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...],
                        seg_bits: Tuple[int, ...],
                        prefix_bits: Optional[Tuple[int, ...]],
                        bitpacked: bool, k: int, nprobe: int, c_loc: int,
-                       probe_backend: str, p_loc: int = 0):
+                       probe_backend: str, p_loc: int = 0,
+                       refine: Optional[Tuple[Tuple[int, ...], int]] = None):
     """jit'd shard_map program for the cluster-sharded IVF search.
 
     Probe selection and the query transform run replicated OUTSIDE the
@@ -194,9 +195,25 @@ def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...],
     additionally returns the replicated count of (query, shard) pairs
     whose in-shard probes overflowed the budget, so the caller can fall
     back to the ``p_loc = 0`` program for that dispatch.
+
+    ``refine = (coarse_prefix, k_ref_loc)`` switches each shard to the
+    TWO-PHASE scan (still the same single jit'd program): the local
+    probe set is scanned on the ``_coarse_view`` operands (coarse
+    prefix + leading-segment slice), each shard keeps its
+    ``k_ref_loc`` best coarse candidates, re-scores ONLY those at full
+    width through ``ops.refine_scan``, and local-top-k's the REFINED
+    distances before the all-gather — so compaction and refinement
+    stack (per-shard phase-1 FLOPs drop to coarse bits x the compacted
+    probe set). The shard-local coarse top-``k_ref_loc`` is a superset
+    of any global coarse top-``k_refine`` restricted to this shard
+    (``k_ref_loc = min(k_refine, local lanes)``), so the merged result
+    refines at least every candidate the single-device two-phase pass
+    refines; the merge key stays the refined ``(distance, global
+    position)`` pair.
     """
-    from repro.ivf.index import (_probe_dists, _probe_select,
+    from repro.ivf.index import (_coarse_view, _probe_dists, _probe_select,
                                  _transform_queries)
+    from repro.kernels import ops
 
     cluster = P(axes)
     compact = 0 < p_loc < nprobe
@@ -231,15 +248,51 @@ def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...],
             overflow = jnp.int32(0)
             orig_p = None
         locc = jnp.clip(local, 0, c_loc - 1)
-        dist, pid = _probe_dists(
-            codes, factors, o_norm, g_proj, g_rot, ids, fq, fq_rot, locc,
-            col_offsets, seg_bits, prefix_bits, bitpacked, probe_backend)
-        dist = jnp.where(in_range[:, :, None], dist, jnp.inf)
-        pid = jnp.where(in_range[:, :, None], pid, -1)
-        l = dist.shape[2]
-        neg, ix = jax.lax.top_k(-dist.reshape(nq, -1), k)
-        d = -neg
-        i = jnp.take_along_axis(pid.reshape(nq, -1), ix, axis=1)
+        if refine is None:
+            dist, pid = _probe_dists(
+                codes, factors, o_norm, g_proj, g_rot, ids, fq, fq_rot,
+                locc, col_offsets, seg_bits, prefix_bits, bitpacked,
+                probe_backend)
+            dist = jnp.where(in_range[:, :, None], dist, jnp.inf)
+            pid = jnp.where(in_range[:, :, None], pid, -1)
+            l = dist.shape[2]
+            neg, ix = jax.lax.top_k(-dist.reshape(nq, -1), k)
+            d = -neg
+            i = jnp.take_along_axis(pid.reshape(nq, -1), ix, axis=1)
+        else:
+            # two-phase shard scan: coarse local probe scan, local
+            # top-k_ref_loc survivors, full-width re-rank of ONLY those
+            # — all before the k-candidate all-gather
+            coarse, k_ref = refine
+            (codes_c, fac_c, g_rot_c, fq_rot_c, co_c, sb_c,
+             pb_c) = _coarse_view(codes, factors, g_rot, fq_rot,
+                                  col_offsets, seg_bits, coarse, bitpacked)
+            dist_c, _ = _probe_dists(
+                codes_c, fac_c, o_norm, g_proj, g_rot_c, ids, fq,
+                fq_rot_c, locc, co_c, sb_c, pb_c, bitpacked,
+                probe_backend)
+            dist_c = jnp.where(in_range[:, :, None], dist_c, jnp.inf)
+            l = dist_c.shape[2]
+            _, ix = jax.lax.top_k(-dist_c.reshape(nq, -1), k_ref)
+            lsel = jnp.take_along_axis(locc, ix // l, axis=1)  # (NQ, R)
+            slot = ix % l
+            inr_r = jnp.take_along_axis(in_range, ix // l, axis=1)
+            pid = jnp.where(inr_r, ids[lsel, slot], -1)
+            codes_r = codes[lsel, slot]
+            fac_r = factors[lsel, slot]
+            o_r = o_norm[lsel, slot]
+            qres_r = fq_rot[:, None, :] - g_rot[lsel]
+            qn_r = jnp.sum((fq[:, None, :] - g_proj[lsel]) ** 2, axis=-1)
+            rr = nq * k_ref
+            dist = ops.refine_scan(
+                codes_r.reshape(rr, codes_r.shape[-1]),
+                fac_r.reshape(rr, *fac_r.shape[2:]),
+                o_r.reshape(rr), qres_r.reshape(rr, qres_r.shape[-1]),
+                qn_r.reshape(rr),
+                col_offsets=col_offsets, seg_bits=seg_bits,
+                prefix_bits=prefix_bits, bitpacked=bitpacked,
+                backend=probe_backend).reshape(nq, k_ref)
+            dist = jnp.where(pid >= 0, dist, jnp.inf)
         # pos is each pick's GLOBAL probe-major flat position p*L+l —
         # the SAME coordinate the single-device top_k ranks over (every
         # in-range candidate lives on exactly one shard, so positions
@@ -251,6 +304,14 @@ def _sharded_search_fn(mesh: Mesh, axes: Tuple[str, ...],
         else:
             pos = jnp.take_along_axis(orig_p, ix // l, axis=1) * l \
                 + ix % l
+        if refine is not None:
+            # local top-k of the REFINED distances (tie-stable on the
+            # global position), so only k of the k_ref_loc refined
+            # candidates cross the interconnect
+            perm_l = jnp.lexsort((pos, dist), axis=1)[:, :k]
+            d = jnp.take_along_axis(dist, perm_l, axis=1)
+            i = jnp.take_along_axis(pid, perm_l, axis=1)
+            pos = jnp.take_along_axis(pos, perm_l, axis=1)
         # ONE all-gather of k candidates per (shard, query) per axis
         for ax in axes:
             d = jax.lax.all_gather(d, ax, axis=1, tiled=True)
@@ -311,7 +372,8 @@ def sharded_search_batch(mesh: Mesh, axis, index, queries: jnp.ndarray,
                          prefix_bits: Optional[Sequence[int]] = None,
                          backend: Optional[str] = None,
                          probe_budget: Optional[int] = None,
-                         stats: Optional[dict] = None
+                         stats: Optional[dict] = None,
+                         refine=None
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Cluster-sharded ``IVFIndex.search_batch``: (ids, dists), (NQ, k).
 
@@ -343,6 +405,13 @@ def sharded_search_batch(mesh: Mesh, axis, index, queries: jnp.ndarray,
     were used), ``overflow_queries`` (count of overflowed
     (query, shard) pairs) and ``fallback`` (True when overflow forced
     the uncompacted re-dispatch).
+
+    ``refine`` (a :class:`repro.ivf.refine.RefineSpec`) runs the
+    per-shard two-phase scan — coarse local probe scan, local
+    ``min(k_refine, local lanes)`` survivors, full-width re-rank, local
+    top-k of the refined distances — before the unchanged all-gather
+    merge, so probe compaction and refinement stack. See
+    ``_sharded_search_fn``.
     """
     from repro.kernels import ops
 
@@ -375,10 +444,26 @@ def sharded_search_batch(mesh: Mesh, axis, index, queries: jnp.ndarray,
     pca_mean = saq.pca.mean if saq.pca is not None else None
     pca_comp = saq.pca.components if saq.pca is not None else None
     pb = tuple(prefix_bits) if prefix_bits is not None else None
+    coarse = k_refine = None
+    if refine is not None:
+        k_refine = refine.k_refine(k, eff_probe * l_max)
+        coarse = refine.coarse_prefix_bits(lay.col_offsets, lay.seg_bits,
+                                           pb)
+
+    def _refine_arg(budget: int):
+        """Static per-shard refine tuple for a probe budget: each shard
+        keeps min(k_refine, its local candidate lanes) coarse
+        survivors — a superset of the global coarse top-k_refine
+        restricted to the shard."""
+        if refine is None:
+            return None
+        lanes = (budget or eff_probe) * l_max
+        return (coarse, min(k_refine, lanes))
+
     fn = _sharded_search_fn(
         mesh, axes, lay.col_offsets, lay.seg_bits, pb,
         index.packed.bitpacked, k, eff_probe, c_loc,
-        backend, p_loc)
+        backend, p_loc, refine=_refine_arg(p_loc))
     # Padding copies the whole index, so memoize the padded operands on
     # the index per shard count — the hot serving path then only pays
     # the jit'd program call. (A rebuilt/reloaded index is a new object
@@ -407,7 +492,7 @@ def sharded_search_batch(mesh: Mesh, axis, index, queries: jnp.ndarray,
         fn_full = _sharded_search_fn(
             mesh, axes, lay.col_offsets, lay.seg_bits, pb,
             index.packed.bitpacked, k, eff_probe, c_loc,
-            backend, 0)
+            backend, 0, refine=_refine_arg(0))
         ids, dists, _ = fn_full(*operands)
     if stats is not None:
         stats.update(probe_budget=p_loc,

@@ -45,6 +45,7 @@ from repro.core.kmeans import kmeans_fit
 from repro.core.saq import SAQ, SAQConfig
 from repro.core.types import (FACTOR_RESCALE, FACTOR_VMAX, PackedCodes,
                               QuantPlan, unpack_words, word_layout)
+from repro.ivf.refine import RefineSpec
 
 
 class SearchStats(NamedTuple):
@@ -183,12 +184,13 @@ class IVFIndex:
 
     # ------------------------------------------------------------------
     def search(self, q: jnp.ndarray, k: int, nprobe: int,
-               prefix_bits: Optional[Sequence[int]] = None
+               prefix_bits: Optional[Sequence[int]] = None,
+               refine: Optional[RefineSpec] = None
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Full-estimator search. Returns (ids, est_dists) of length k."""
         ids, dists = self.search_batch(
             jnp.asarray(q, jnp.float32)[None, :], k=k, nprobe=nprobe,
-            prefix_bits=prefix_bits)
+            prefix_bits=prefix_bits, refine=refine)
         return ids[0], dists[0]
 
     def search_batch(self, queries: jnp.ndarray, k: int, nprobe: int,
@@ -196,7 +198,8 @@ class IVFIndex:
                      mesh=None, axis="data",
                      backend: Optional[str] = None,
                      probe_budget: Optional[int] = None,
-                     shard_stats: Optional[dict] = None
+                     shard_stats: Optional[dict] = None,
+                     refine: Optional[RefineSpec] = None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Batched full-estimator search: ONE jit'd call for the whole
         query batch (probe selection + transform + fused packed scan +
@@ -225,6 +228,22 @@ class IVFIndex:
         ``repro.ivf.distributed.sharded_search_batch``, which also
         documents the ``shard_stats`` telemetry dict. Both mesh-only
         knobs are ignored without ``mesh``.
+
+        With ``refine`` (a :class:`repro.ivf.refine.RefineSpec`) the
+        search runs the device-resident TWO-PHASE program, still one
+        jit'd dispatch: phase 1 scans every probed candidate at the
+        spec's coarse per-segment prefix over the spec's leading-segment
+        slice, keeps the statically-shaped ``k_refine`` best via
+        ``lax.top_k``, and phase 2 gathers only those survivors'
+        full-width rows (candidate-major, through the probe-major flat
+        position ``p*L + l``) and re-scores them at ``prefix_bits``
+        precision (full width when None) for the final tie-stable
+        ``(distance, position)`` top-k. ``refine=None`` bypasses both
+        phases — bit-identical to the current single-phase program (the
+        engine's ``"exact"`` tier). Composes with every other knob:
+        both slab layouts apply to the phase-1 scan, and on a ``mesh``
+        each shard refines its local coarse survivors before the
+        all-gather merge (compaction and refinement stack).
         """
         from repro.kernels import ops
 
@@ -239,19 +258,35 @@ class IVFIndex:
                                         prefix_bits=prefix_bits,
                                         backend=backend,
                                         probe_budget=probe_budget,
-                                        stats=shard_stats)
+                                        stats=shard_stats,
+                                        refine=refine)
 
         saq = self.saq
         lay = self.packed.layout
         pca_mean = saq.pca.mean if saq.pca is not None else None
         pca_comp = saq.pca.components if saq.pca is not None else None
+        pb = tuple(prefix_bits) if prefix_bits is not None else None
+        if refine is not None:
+            eff_probe = min(nprobe, self.n_clusters)
+            k_ref = refine.k_refine(k, eff_probe * int(self.ids.shape[1]))
+            coarse = refine.coarse_prefix_bits(
+                lay.col_offsets, lay.seg_bits, pb)
+            dists, ids = _search_batch_refine_impl(
+                queries, self.centroids, pca_mean, pca_comp,
+                saq.packed_rot, self.packed.codes, self.packed.factors,
+                self.packed.o_norm_sq_total, self.g_proj, self.g_rot,
+                self.ids,
+                col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
+                prefix_bits=pb, coarse_prefix=coarse,
+                bitpacked=self.packed.bitpacked,
+                k=k, k_refine=k_ref, nprobe=nprobe, probe_backend=backend)
+            return ids, dists
         dists, ids = _search_batch_impl(
             queries, self.centroids, pca_mean, pca_comp, saq.packed_rot,
             self.packed.codes, self.packed.factors,
             self.packed.o_norm_sq_total, self.g_proj, self.g_rot, self.ids,
             col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
-            prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
-                         else None),
+            prefix_bits=pb,
             bitpacked=self.packed.bitpacked,
             k=k, nprobe=nprobe, probe_backend=backend)
         return ids, dists
@@ -273,6 +308,21 @@ class IVFIndex:
         (k beyond the padded candidate capacity raises); on ragged
         lists with fewer than k real candidates the tail rows are
         id ``-1`` / dist ``inf``, sorted last (see ``_validate_k``).
+
+        This is one of TWO progressive-scan implementations; they are
+        pinned against each other by
+        tests/test_refine.py::test_multistage_vs_two_phase_parity.
+        Prefer ``search_batch(..., refine=RefineSpec(...))`` for
+        serving: it is one static-shape jit'd device program (batched,
+        mesh/engine-composable), trading the data-dependent prune for a
+        fixed ``k_refine`` survivor budget. Prefer THIS path when you
+        need the paper's adaptive §4.3 semantics — per-candidate
+        Chebyshev early exit whose work shrinks with the data — or its
+        exact bits-accessed accounting (Fig 11); the host-side cluster
+        loop makes it a single-query analysis tool, not a throughput
+        path. With ``m`` large (prune disabled) and ``nprobe=C`` both
+        reduce to exhaustive full-width ranking and agree on ids with
+        matching distances.
         """
         self._validate_k(k, nprobe)
         q = jnp.asarray(q, jnp.float32)
@@ -443,6 +493,99 @@ def _search_batch_impl(queries, centroids, pca_mean, pca_comp, packed_rot,
     nq = queries.shape[0]
     neg_top, idx = jax.lax.top_k(-dist.reshape(nq, -1), k)
     return -neg_top, jnp.take_along_axis(pid.reshape(nq, -1), idx, axis=1)
+
+
+def _coarse_view(codes, factors, g_rot, fq_rot, col_offsets, seg_bits,
+                 coarse_prefix, bitpacked):
+    """Static phase-1 operand slice for a resolved coarse prefix tuple
+    (non-zero entries form a leading run — ``RefineSpec`` guarantees
+    zeros only as a trailing suffix). Trailing zero-prefix segments are
+    sliced OUT of the operands instead of scanned: a 0-bit segment's
+    Eq 13 term is exactly 0.0 (``floor(codes * 2^-b) = 0`` and
+    ``delta/2 - vmax = 0``), so the sliced scan is bitwise-equal to the
+    full-shape prefix-0 scan while actually shrinking the contraction.
+    For bit-packed lists the leading *words* are sliced —
+    ``words[..., :n_words_trunc]`` is a valid packed buffer for the
+    truncated layout because fields pack sequentially LSB-first (a kept
+    column's bits never live beyond the truncated word count)."""
+    s_keep = max(s for s, b in enumerate(coarse_prefix) if b > 0) + 1
+    co_c = col_offsets[:s_keep + 1]
+    sb_c = seg_bits[:s_keep]
+    pb_c = coarse_prefix[:s_keep]
+    if s_keep == len(seg_bits):
+        return codes, factors, g_rot, fq_rot, co_c, sb_c, pb_c
+    d_keep = co_c[-1]
+    if bitpacked:
+        codes_c = codes[..., :word_layout(co_c, sb_c).n_words]
+    else:
+        codes_c = codes[..., :d_keep]
+    return (codes_c, factors[..., :s_keep, :], g_rot[..., :d_keep],
+            fq_rot[..., :d_keep], co_c, sb_c, pb_c)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("col_offsets", "seg_bits", "prefix_bits",
+                                    "coarse_prefix", "bitpacked", "k",
+                                    "k_refine", "nprobe", "probe_backend"))
+def _search_batch_refine_impl(queries, centroids, pca_mean, pca_comp,
+                              packed_rot, codes, factors, o_norm, g_proj,
+                              g_rot, ids, col_offsets, seg_bits, prefix_bits,
+                              coarse_prefix, bitpacked, k, k_refine, nprobe,
+                              probe_backend):
+    """End-to-end TWO-PHASE batched search, one jit'd program (no host
+    round-trip between phases): coarse probe scan -> static top-k_refine
+    -> candidate-major full-width re-rank -> tie-stable final top-k.
+
+    Phase 1 reuses the exact ``_probe_dists`` body (both slab layouts)
+    on the ``_coarse_view`` operands; survivors are selected by
+    ``lax.top_k`` over the flat probe-major axis, whose index IS the
+    global position key ``p*L + l`` — ties break toward the lower
+    position, matching the final ``lexsort((pos, dist))`` ranking and
+    the PR 5 sharded merge. Phase 2 gathers each survivor's full-width
+    code/factor row and its own residual query (survivors of one query
+    land in different clusters) and re-scores through
+    ``ops.refine_scan`` at ``prefix_bits`` precision (full width when
+    None). Padding lanes ride through phase 2 masked back to inf, so
+    the ragged-tail contract of ``_validate_k`` is preserved.
+    """
+    from repro.kernels import ops
+
+    nprobe = min(nprobe, centroids.shape[0])
+    probes = _probe_select(queries, centroids, nprobe)
+    fq, fq_rot = _transform_queries(queries, pca_mean, pca_comp, packed_rot)
+    (codes_c, fac_c, g_rot_c, fq_rot_c, co_c, sb_c, pb_c) = _coarse_view(
+        codes, factors, g_rot, fq_rot, col_offsets, seg_bits,
+        coarse_prefix, bitpacked)
+    dist_c, _ = _probe_dists(
+        codes_c, fac_c, o_norm, g_proj, g_rot_c, ids, fq, fq_rot_c, probes,
+        co_c, sb_c, pb_c, bitpacked, probe_backend)
+    nq = queries.shape[0]
+    l = ids.shape[1]
+    _, pos = jax.lax.top_k(-dist_c.reshape(nq, -1), k_refine)   # (NQ, R)
+    csel = jnp.take_along_axis(probes.astype(jnp.int32), pos // l, axis=1)
+    slot = pos % l                                              # (NQ, R)
+    codes_r = codes[csel, slot]                                 # (NQ, R, ·)
+    fac_r = factors[csel, slot]                                 # (NQ, R, S, 3)
+    o_r = o_norm[csel, slot]                                    # (NQ, R)
+    pid_r = ids[csel, slot]                                     # (NQ, R)
+    qres_r = fq_rot[:, None, :] - g_rot[csel]                   # (NQ, R, Ds)
+    # residual norm in the FULL projection basis (dropped dims count)
+    qn_r = jnp.sum((fq[:, None, :] - g_proj[csel]) ** 2, axis=-1)
+    r = nq * k_refine
+    dist_r = ops.refine_scan(
+        codes_r.reshape(r, codes_r.shape[-1]),
+        fac_r.reshape(r, *fac_r.shape[2:]),
+        o_r.reshape(r), qres_r.reshape(r, qres_r.shape[-1]),
+        qn_r.reshape(r),
+        col_offsets=col_offsets, seg_bits=seg_bits,
+        prefix_bits=prefix_bits, bitpacked=bitpacked,
+        backend=probe_backend).reshape(nq, k_refine)
+    dist_r = jnp.where(pid_r >= 0, dist_r, jnp.inf)
+    # final tie-stable (distance, global probe-major position) top-k —
+    # the same key pair as the sharded merge
+    perm = jnp.lexsort((pos, dist_r), axis=-1)[:, :k]
+    return (jnp.take_along_axis(dist_r, perm, axis=1),
+            jnp.take_along_axis(pid_r, perm, axis=1))
 
 
 @functools.partial(jax.jit,

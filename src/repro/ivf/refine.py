@@ -1,0 +1,97 @@
+"""Two-phase (coarse prefix -> full-width re-rank) search spec.
+
+SAQ's codes are progressive by construction: code adjustment packs most
+of each vector's magnitude into the leading bits, and dimension
+segmentation puts the high-variance dimensions into the leading
+segments. A :class:`RefineSpec` exploits both axes of that structure in
+one device-resident pass:
+
+* **phase 1** scans every probed candidate at ``coarse_prefix`` leading
+  bits per segment, over only the leading segments covering
+  ``coarse_dim_frac`` of the stored dimensions (trailing segments are
+  statically sliced out of the slab operands — for bit-packed lists the
+  leading *words* are sliced, which is a valid packed buffer for the
+  truncated layout because fields pack sequentially LSB-first). A
+  sliced-out segment is bitwise-equivalent to scanning it at a 0-bit
+  prefix: ``floor(codes * 2^-b) = 0`` and ``delta/2 - vmax = 0``
+  exactly, so its Eq 13 term is exactly ``0.0``.
+* **phase 2** gathers only the ``k_refine`` coarse survivors
+  (candidate-major, through the probe-major flat position ``p*L + l``)
+  and re-scores them at full width with
+  :func:`repro.kernels.ops.refine_scan`, producing the final tie-stable
+  ``(distance, position)`` top-k.
+
+``refine=None`` (the engine's ``"exact"`` tier) bypasses both phases
+and runs the current single-phase program — bit-identical by
+construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class RefineSpec:
+    """Knobs of the two-phase search.
+
+    coarse_prefix:   leading bits per segment read in phase 1 (clamped
+                     to each segment's stored width; 1-2 is the useful
+                     range — the paper's progressive-accuracy curve is
+                     steepest there).
+    oversample:      phase-1 survivor budget as a multiple of ``k``:
+                     ``k_refine = min(ceil(oversample * k), P * L)``.
+                     Large enough values degenerate to re-ranking every
+                     probed candidate (useful for parity tests).
+    coarse_dim_frac: fraction of the *stored dimensions* phase 1 scans:
+                     the minimal leading-segment run covering at least
+                     this fraction is kept, trailing segments are
+                     sliced out entirely (scanned at 0 bits, exactly).
+                     1.0 keeps every segment.
+    """
+
+    coarse_prefix: int = 1
+    oversample: float = 8.0
+    coarse_dim_frac: float = 1.0
+
+    def __post_init__(self):
+        if self.coarse_prefix < 1:
+            raise ValueError(
+                f"coarse_prefix must be >= 1, got {self.coarse_prefix}")
+        if not self.oversample >= 1.0:
+            raise ValueError(
+                f"oversample must be >= 1, got {self.oversample}")
+        if not 0.0 < self.coarse_dim_frac <= 1.0:
+            raise ValueError(
+                f"coarse_dim_frac must be in (0, 1], got "
+                f"{self.coarse_dim_frac}")
+
+    # ------------------------------------------------------------------
+    def coarse_prefix_bits(
+            self, col_offsets: Sequence[int], seg_bits: Sequence[int],
+            prefix_bits: Optional[Sequence[int]] = None
+    ) -> Tuple[int, ...]:
+        """Resolve the phase-1 per-segment prefix for a packed layout:
+        ``min(coarse_prefix, stored width, caller prefix)`` on the kept
+        leading segments, 0 on the trailing segments dropped by
+        ``coarse_dim_frac`` (zeros only ever appear as a trailing run —
+        that is what makes the static slice in ``_coarse_view`` legal).
+        Segment s is kept while its *start* column lies inside the
+        coarse dimension budget; the leading segment is always kept.
+        """
+        d_stored = col_offsets[-1]
+        out = []
+        for s, b in enumerate(seg_bits):
+            keep = s == 0 or col_offsets[s] < self.coarse_dim_frac * d_stored
+            eff = min(self.coarse_prefix, b)
+            if prefix_bits is not None:
+                eff = min(eff, prefix_bits[s])
+            out.append(eff if keep else 0)
+        return tuple(out)
+
+    def k_refine(self, k: int, capacity: int) -> int:
+        """Static phase-1 survivor count: ``min(ceil(oversample * k),
+        capacity)`` and never below ``k`` (``capacity = min(nprobe, C)
+        * L``, the padded candidate count of the probe set)."""
+        return max(k, min(int(math.ceil(self.oversample * k)), capacity))

@@ -10,7 +10,7 @@ rescale factor of Eq (5) fused in the same kernel:
     dist^2 = o_norm_sq + ||q||^2
              - 2 * rescale * (delta <codes,q> + q_sum (delta/2 - vmax))
 
-Four kernels:
+Five kernels:
 
 * ``ivf_scan_pallas``  — single segment, single query (the original).
 * ``saq_scan_pallas``  — the fused multi-segment, multi-query scan over
@@ -35,10 +35,23 @@ Four kernels:
   cluster scan, which keeps the two layouts on ONE kernel body (that
   shared body is what makes the cluster-major and gathered search
   paths bit-identical).
-  ``saq_probe_scan_xla`` / ``saq_cluster_scan_xla`` are the einsum
-  fallbacks with identical semantics, likewise sharing one slab-scan
-  body; ``repro.kernels.ops.probe_scan`` / ``ops.cluster_scan``
-  dispatch between them.
+* ``saq_refine_scan_pallas`` — the *candidate-major* re-rank scan of
+  the two-phase (coarse prefix → full-width refine) search: a flat
+  ``(R, ...)`` list of surviving candidates where EVERY row carries its
+  own residual query (survivors of one query land in different
+  clusters, so no two rows share ``q' - g_rot[c]``). A row-wise
+  residual query turns the slab contraction into an elementwise
+  product followed by a segment reduction, which still maps onto one
+  MXU pass: ``raw = (codes * qres) @ onehot`` gives every segment's
+  partial dot per row, and the same Eq 13 affine + Eq 5 rescale apply
+  from the per-row factor block. Word expansion / prefix prescale are
+  the `_saq_scan_kernel` ones, so refine distances reproduce the slab
+  scan's per-element math.
+  ``saq_probe_scan_xla`` / ``saq_cluster_scan_xla`` /
+  ``saq_refine_scan_xla`` are the einsum fallbacks with identical
+  semantics, likewise sharing one slab-scan body;
+  ``repro.kernels.ops.probe_scan`` / ``ops.cluster_scan`` /
+  ``ops.refine_scan`` dispatch between them.
 
 Tiling: grid over N; queries/factor-layout operands stay resident in
 VMEM across all grid steps (constant index_map), codes stream
@@ -447,6 +460,177 @@ def saq_cluster_scan_xla(codes_u: jnp.ndarray, factors_u: jnp.ndarray,
     out = o_norm_u[:, :, None] + q_norm_u[:, None, :] - 2.0 * ip
     out = out.transpose(0, 2, 1)
     return out[:, :1, :] if pad_nb else out
+
+
+# ---------------------------------------------------------------------------
+# Candidate-major refine scan: the full-width re-rank of the two-phase
+# search — every row is one surviving candidate with its OWN residual
+# query, so the contraction is an elementwise product + segment
+# reduction instead of a shared-query matmul
+# ---------------------------------------------------------------------------
+
+def _saq_refine_kernel(*refs, seg_bits: Tuple[int, ...],
+                       bitpacked: bool = False):
+    """One (T, ·) candidate block, each row vs its own residual query.
+
+    codes_ref:    (T, D) uint — packed candidate codes; with
+                  ``bitpacked``, (T, W) uint32 word rows (expanded here,
+                  same shift/mask tables as the slab scan)
+    qres_ref:     (T, D) f32 — PER-ROW rotated residual queries
+    fac_ref:      (T, 3S+1) f32 — [vmax, rescale, o_norm]*S + o_norm_tot
+    qn_ref:       (T, 1) f32 — per-row FULL-basis residual query norms
+    colscale_ref: (1, D) f32 — per-column prefix-bits prescale
+    onehot_ref:   (D, S) f32 — segment membership
+    tab_ref:      (6, D) u32 — only with ``bitpacked``: unpack tables
+    out_ref:      (T, 1) f32 — estimated squared distances
+
+    ``raw = (codes * qres) @ onehot`` and ``q_sum = qres @ onehot``
+    contract over the SAME d axis as the slab kernels' masked-query
+    matmuls (identical per-element products, zeros elsewhere), so the
+    refined distances reproduce the slab scan's math.
+    """
+    s_count = len(seg_bits)
+    if bitpacked:
+        (codes_ref, qres_ref, fac_ref, qn_ref, colscale_ref, onehot_ref,
+         tab_ref, out_ref) = refs
+        words = codes_ref[...]                                   # (T, W) u32
+        tab = tab_ref[...]
+        lo = jnp.take(words, tab[0].astype(jnp.int32), axis=1)   # (T, D)
+        hi = jnp.take(words, tab[1].astype(jnp.int32), axis=1)
+        vals = ((lo >> tab[2][None, :])
+                | ((hi << tab[3][None, :]) & tab[4][None, :])) \
+            & tab[5][None, :]
+        codes = vals.astype(jnp.float32)
+    else:
+        (codes_ref, qres_ref, fac_ref, qn_ref, colscale_ref, onehot_ref,
+         out_ref) = refs
+        codes = codes_ref[...].astype(jnp.float32)
+    codes = jnp.floor(codes * colscale_ref[...])                 # (T, D)
+    qres = qres_ref[...]
+    onehot = onehot_ref[...]
+    raw = jnp.dot(codes * qres, onehot,
+                  preferred_element_type=jnp.float32)            # MXU (T, S)
+    q_sum = jnp.dot(qres, onehot,
+                    preferred_element_type=jnp.float32)          # (T, S)
+    fac = fac_ref[...]
+    acc = jnp.zeros((codes.shape[0],), jnp.float32)
+    for s in range(len(seg_bits)):                               # static unroll
+        vmax = fac[:, 3 * s + 0]
+        rescale = fac[:, 3 * s + 1]
+        delta = (2.0 * vmax) / (1 << seg_bits[s])
+        acc += rescale * (delta * raw[:, s]
+                          + q_sum[:, s] * (0.5 * delta - vmax))
+    o_norm = fac[:, 3 * s_count]
+    out_ref[...] = (o_norm + qn_ref[...][:, 0] - 2.0 * acc)[:, None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("col_offsets", "seg_bits", "prefix_bits",
+                                    "bitpacked", "n_tile", "interpret"))
+def saq_refine_scan_pallas(codes_r: jnp.ndarray, factors_r: jnp.ndarray,
+                           o_norm_r: jnp.ndarray, queries_r: jnp.ndarray,
+                           q_norm_r: jnp.ndarray,
+                           col_offsets: Tuple[int, ...],
+                           seg_bits: Tuple[int, ...],
+                           prefix_bits: Optional[Tuple[int, ...]] = None,
+                           bitpacked: bool = False,
+                           n_tile: int = DEFAULT_N_TILE,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Fused candidate-major refine scan: (R,) estimated sq distances.
+
+    codes_r:   (R, d_stored) uint — surviving candidates' packed codes,
+               or (R, n_words) uint32 words with ``bitpacked``
+    factors_r: (R, S, 3) f32 per-candidate factor rows
+    o_norm_r:  (R,) f32 per-candidate total ||o||^2
+    queries_r: (R, d_stored) f32 PER-CANDIDATE rotated residual queries
+               (q'_rot - g_rot[cluster of candidate r])
+    q_norm_r:  (R,) f32 per-candidate FULL-basis residual query norms
+    """
+    from repro.core.types import (make_col_scale, make_effective_bits,
+                                  make_seg_onehot)
+
+    r, code_w = codes_r.shape
+    d = col_offsets[-1]
+    s_count = len(seg_bits)
+    eff_bits = make_effective_bits(seg_bits, prefix_bits)
+    onehot = jnp.asarray(make_seg_onehot(col_offsets))
+    colscale = make_col_scale(col_offsets, seg_bits, prefix_bits)[None, :]
+
+    n_tile = min(n_tile, max(8, r))
+    n_pad = -r % n_tile
+    codes_p = jnp.pad(codes_r, ((0, n_pad), (0, 0)))
+    qres_p = jnp.pad(queries_r.astype(jnp.float32), ((0, n_pad), (0, 0)))
+    fac = jnp.concatenate(
+        [factors_r.reshape(r, s_count * 3),
+         o_norm_r.reshape(r)[:, None]], axis=-1).astype(jnp.float32)
+    fac_p = jnp.pad(fac, ((0, n_pad), (0, 0)), constant_values=1.0)
+    qn_p = jnp.pad(q_norm_r.astype(jnp.float32)[:, None],
+                   ((0, n_pad), (0, 0)))
+    grid = ((r + n_pad) // n_tile,)
+    in_specs = [
+        pl.BlockSpec((n_tile, code_w), lambda i: (i, 0)),
+        pl.BlockSpec((n_tile, d), lambda i: (i, 0)),
+        pl.BlockSpec((n_tile, 3 * s_count + 1), lambda i: (i, 0)),
+        pl.BlockSpec((n_tile, 1), lambda i: (i, 0)),
+        pl.BlockSpec((1, d), lambda i: (0, 0)),                # resident
+        pl.BlockSpec((d, s_count), lambda i: (0, 0)),          # resident
+    ]
+    operands = [codes_p, qres_p, fac_p, qn_p, jnp.asarray(colscale), onehot]
+    if bitpacked:
+        tab, n_words = _unpack_tab(col_offsets, seg_bits)
+        if code_w != n_words:
+            raise ValueError(
+                f"bitpacked codes have {code_w} words/row, layout "
+                f"expects {n_words}")
+        in_specs.append(pl.BlockSpec((6, d), lambda i: (0, 0)))  # resident
+        operands.append(jnp.asarray(tab))
+    out = pl.pallas_call(
+        functools.partial(_saq_refine_kernel, seg_bits=eff_bits,
+                          bitpacked=bitpacked),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((n_tile, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r + n_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(*operands)
+    return out[:r, 0]
+
+
+def saq_refine_scan_xla(codes_r: jnp.ndarray, factors_r: jnp.ndarray,
+                        o_norm_r: jnp.ndarray, queries_r: jnp.ndarray,
+                        q_norm_r: jnp.ndarray,
+                        col_offsets: Tuple[int, ...],
+                        seg_bits: Tuple[int, ...],
+                        prefix_bits: Optional[Tuple[int, ...]] = None,
+                        bitpacked: bool = False) -> jnp.ndarray:
+    """XLA fallback for the candidate-major refine scan (same contract
+    as ``saq_refine_scan_pallas``): elementwise code*query product, one
+    (R, d) @ (d, S) segment reduction, Eq 13 affine + Eq 5 rescale from
+    the per-candidate factor rows. Returns (R,)."""
+    from repro.core.types import (FACTOR_RESCALE, FACTOR_VMAX,
+                                  make_col_scale, make_effective_bits,
+                                  make_seg_onehot, unpack_words, word_layout)
+
+    eff_bits = make_effective_bits(seg_bits, prefix_bits)
+    onehot = jnp.asarray(make_seg_onehot(col_offsets))
+    colscale = jnp.asarray(make_col_scale(col_offsets, seg_bits,
+                                          prefix_bits))
+    if bitpacked:
+        wl = word_layout(tuple(col_offsets), tuple(seg_bits))
+        codes = unpack_words(codes_r, wl).astype(jnp.float32)
+    else:
+        codes = codes_r.astype(jnp.float32)
+    codes = jnp.floor(codes * colscale)                     # (R, D)
+    qres = queries_r.astype(jnp.float32)
+    raw = (codes * qres) @ onehot                           # (R, S)
+    q_sum = qres @ onehot                                   # (R, S)
+    pow2 = jnp.asarray([1 << b for b in eff_bits], jnp.float32)
+    vmax = factors_r[..., FACTOR_VMAX]                      # (R, S)
+    rescale = factors_r[..., FACTOR_RESCALE]
+    delta = (2.0 * vmax) / pow2
+    ip = jnp.sum(rescale * (delta * raw + q_sum * (0.5 * delta - vmax)),
+                 axis=-1)                                   # (R,)
+    return o_norm_r + q_norm_r.astype(jnp.float32) - 2.0 * ip
 
 
 def saq_probe_scan_xla(codes_g: jnp.ndarray, factors_g: jnp.ndarray,

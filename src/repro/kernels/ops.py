@@ -14,7 +14,8 @@ from .caq_adjust import caq_adjust_pallas
 from .fwht import fwht_pallas
 from .ivf_scan import (ivf_scan_pallas, saq_cluster_scan_pallas,
                        saq_cluster_scan_xla, saq_probe_scan_pallas,
-                       saq_probe_scan_xla, saq_scan_pallas)
+                       saq_probe_scan_xla, saq_refine_scan_pallas,
+                       saq_refine_scan_xla, saq_scan_pallas)
 from .caq_encode import caq_encode_pallas
 from .saq_attend import saq_attend_pallas
 
@@ -166,6 +167,47 @@ def probe_scan(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
         bitpacked=bitpacked)
 
 
+def refine_scan(codes_r: jnp.ndarray, factors_r: jnp.ndarray,
+                o_norm_r: jnp.ndarray, queries_r: jnp.ndarray,
+                q_norm_r: jnp.ndarray, col_offsets, seg_bits,
+                prefix_bits=None, bitpacked: bool = False,
+                backend: str | None = None) -> jnp.ndarray:
+    """Backend-dispatched candidate-major refine scan -> (R,) sq dists.
+
+    The phase-2 primitive of the two-phase search: a flat list of
+    coarse-scan survivors, each row carrying its OWN residual query
+    (survivors of one query land in different clusters). See
+    ``ivf_scan.saq_refine_scan_pallas`` for the operand contract.
+    ``backend`` accepts the same strings as ``probe_scan``; the
+    ``-cluster-major`` suffix is tolerated and ignored (candidates are
+    already flat — there is no slab layout to pick).
+    """
+    backend = backend or probe_scan_backend()
+    base, _ = split_probe_backend(backend)
+    col_offsets = tuple(col_offsets)
+    seg_bits = tuple(seg_bits)
+    if base in ("pallas", "pallas-interpret"):
+        if bitpacked and base == "pallas":
+            # Same compiled-backend word-expansion guard as probe_scan.
+            from repro.core.types import unpack_words, word_layout
+            codes_r = unpack_words(codes_r,
+                                   word_layout(col_offsets, seg_bits))
+            bitpacked = False
+        return saq_refine_scan_pallas(
+            codes_r, factors_r, o_norm_r, queries_r, q_norm_r,
+            col_offsets=col_offsets, seg_bits=seg_bits,
+            prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
+                         else None),
+            bitpacked=bitpacked,
+            interpret=(base == "pallas-interpret"))
+    return saq_refine_scan_xla(
+        codes_r, factors_r, o_norm_r, queries_r, q_norm_r,
+        col_offsets=col_offsets, seg_bits=seg_bits,
+        prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
+                     else None),
+        bitpacked=bitpacked)
+
+
 def slab_scan_flops(n_slabs: int, l: int, d: int, n_q: int = 1) -> int:
     """Dominant-term FLOP estimate of one slab-scan dispatch: the
     MXU/einsum contraction is ``2 * L * d`` MACs per (slab, query), so
@@ -176,6 +218,26 @@ def slab_scan_flops(n_slabs: int, l: int, d: int, n_q: int = 1) -> int:
     (`repro.ivf.distributed.sharded_search_batch`). The affine Eq 13
     correction and the top-k are O(L) per slab and excluded."""
     return 2 * n_slabs * l * d * n_q
+
+
+def scan_bit_macs(n_rows: int, col_offsets, seg_bits,
+                  prefix_bits=None, n_q: int = 1) -> int:
+    """Bit-weighted MAC count of scanning ``n_rows`` packed rows against
+    ``n_q`` queries: ``sum_cols(effective_bits)`` bit-MACs per
+    (row, query) — the bit-serial currency the paper's Fig. 11 uses for
+    progressive reads (a 2-bit coarse read of an 8-bit column costs 1/4
+    of the full read; a segment truncated to 0 bits costs nothing).
+    ``slab_scan_flops`` counts raw f32 MACs and cannot see precision:
+    use THIS currency to compare phase-1 coarse scans against full-width
+    scans. ``prefix_bits`` entries clamp to each segment's stored width;
+    None means full width."""
+    from repro.core.types import make_effective_bits
+
+    eff = make_effective_bits(tuple(seg_bits), prefix_bits)
+    bits_per_row = sum(
+        b * (col_offsets[s + 1] - col_offsets[s])
+        for s, b in enumerate(eff))
+    return n_rows * n_q * bits_per_row
 
 
 def cluster_scan(codes_u: jnp.ndarray, factors_u: jnp.ndarray,

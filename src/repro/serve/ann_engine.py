@@ -15,9 +15,17 @@ fused scan on batch=1 and thrashes the jit cache with ad-hoc shapes.
   under a :class:`BatchPolicy`: wait at most ``max_wait_us`` after the
   first arrival, admit at most ``max_batch`` per tick.
 * **Bucketing** — requests are grouped by their dispatch key
-  ``(k, nprobe, prefix_bits)``; each group becomes one device-resident
-  ``search_batch`` call (mixed parameters never share a call, so the
-  jit'd program stays static).
+  ``(k, nprobe, prefix_bits, tier)``; each group becomes one
+  device-resident ``search_batch`` call (mixed parameters never share a
+  call, so the jit'd program stays static).
+* **Accuracy tiers** — ``submit(..., tier="cheap")`` names a
+  :class:`repro.ivf.refine.RefineSpec` from ``BatchPolicy.tiers`` and
+  routes the group through the two-phase coarse-scan + re-rank program
+  (``search_batch(refine=...)``); ``tier=None`` and the ``"exact"``
+  tier run the single-phase program unchanged (bit-identical to
+  direct ``search_batch``). ``EngineStats`` keeps per-tier request /
+  dispatched-row / refine-survivor counters so occupancy stays
+  truthful per traffic class.
 * **Static shapes** — every group pads up to the next size in
   ``batch_shapes`` so the jit cache holds one executable per
   (shape, key) instead of one per observed batch size. Padded rows are
@@ -49,10 +57,29 @@ import queue
 import threading
 import time
 from concurrent.futures import Future
-from typing import Optional, Sequence, Tuple
+from typing import Mapping, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
+
+from repro.ivf.refine import RefineSpec
+
+# Default accuracy tiers: the measured sweet spots of
+# benchmarks/batch_qps.py on the bench workload (see docs/serving.md).
+# "cheap" reads 1 leading bit over the leading half of the stored
+# dimensions (8x bit-weighted phase-1 reduction) and compensates the
+# 1-bit ranking noise with a doubled survivor budget — phase 2 is tiny
+# next to phase 1, so oversample is the cheap knob; "balanced" reads
+# 2 bits over the leading half (4x reduction) at the default
+# oversample; "exact" bypasses the two-phase program entirely and is
+# bit-identical to direct search_batch.
+DEFAULT_TIERS = {
+    "cheap": RefineSpec(coarse_prefix=1, oversample=16.0,
+                        coarse_dim_frac=0.5),
+    "balanced": RefineSpec(coarse_prefix=2, oversample=8.0,
+                           coarse_dim_frac=0.5),
+    "exact": None,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +115,14 @@ class BatchPolicy:
                   beyond the budget) fall back to the uncompacted
                   program and count in ``EngineStats.probe_fallbacks``.
                   Ignored without a mesh.
+    tiers:        named accuracy tiers: a mapping of tier name ->
+                  :class:`repro.ivf.refine.RefineSpec` (two-phase
+                  coarse-scan + re-rank) or None (single-phase exact
+                  program). ``submit(..., tier=name)`` buckets the
+                  request under that tier's dispatch key and routes the
+                  group through ``search_batch(refine=spec)``. None
+                  resolves to :data:`DEFAULT_TIERS`
+                  (cheap / balanced / exact).
     """
 
     max_batch: int = 64
@@ -95,6 +130,7 @@ class BatchPolicy:
     batch_shapes: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
     cluster_major_from: Optional[int] = 8
     probe_budget: Optional[int] = None
+    tiers: Optional[Mapping[str, Optional[RefineSpec]]] = None
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -115,6 +151,29 @@ class BatchPolicy:
             raise ValueError(
                 f"probe_budget must be >= 0 or None (auto), got "
                 f"{self.probe_budget}")
+        tiers = dict(DEFAULT_TIERS if self.tiers is None else self.tiers)
+        for name, spec in tiers.items():
+            if not isinstance(name, str) or not name:
+                raise ValueError(f"tier names must be non-empty strings, "
+                                 f"got {name!r}")
+            if spec is not None and not isinstance(spec, RefineSpec):
+                raise ValueError(
+                    f"tier {name!r} must map to a RefineSpec or None "
+                    f"(exact), got {spec!r}")
+        object.__setattr__(self, "tiers", tiers)
+
+    def resolve_tier(self, tier: Optional[str]) -> Optional[RefineSpec]:
+        """The RefineSpec a tier name dispatches with (None = the
+        single-phase exact program). ``tier=None`` always resolves to
+        exact; unknown names raise at admission, not inside a batch."""
+        if tier is None:
+            return None
+        try:
+            return self.tiers[tier]
+        except KeyError:
+            raise ValueError(
+                f"unknown accuracy tier {tier!r}; this policy defines "
+                f"{sorted(self.tiers)}") from None
 
     def pad_to(self, n: int) -> int:
         """Smallest static shape >= n. Raises for n beyond the largest
@@ -153,6 +212,15 @@ class EngineStats:
     probe_fallbacks: int = 0   # mesh dispatches that overflowed the
     #                            probe budget and re-ran uncompacted
     probe_overflow_queries: int = 0  # overflowed (query, shard) pairs
+    # Per-tier traffic-class counters, keyed by the submitted tier name
+    # (requests with tier=None count under "exact" — they run the same
+    # single-phase program). Rows/survivors count device work, so they
+    # include padding rows like ``dispatched_rows`` does.
+    tier_requests: dict = dataclasses.field(default_factory=dict)
+    tier_dispatched_rows: dict = dataclasses.field(default_factory=dict)
+    tier_refine_survivors: dict = dataclasses.field(default_factory=dict)
+    #   ^ phase-2 re-rank rows dispatched (k_refine per dispatched row);
+    #     always 0 for tiers with no RefineSpec
 
     @property
     def occupancy(self) -> float:
@@ -168,7 +236,7 @@ class EngineStats:
 @dataclasses.dataclass
 class _Request:
     query: np.ndarray
-    key: Tuple               # (k, nprobe, prefix_bits) dispatch key
+    key: Tuple               # (k, nprobe, prefix_bits, tier) dispatch key
     future: Future
     t_submit: float
 
@@ -254,8 +322,16 @@ class AnnEngine:
     # admission
     # ------------------------------------------------------------------
     def submit(self, query, k: int = 10, nprobe: int = 8,
-               prefix_bits: Optional[Sequence[int]] = None) -> Future:
-        """Admit one query; returns a Future of (ids, dists)."""
+               prefix_bits: Optional[Sequence[int]] = None,
+               tier: Optional[str] = None) -> Future:
+        """Admit one query; returns a Future of (ids, dists).
+
+        ``tier`` names an accuracy tier from ``policy.tiers`` (e.g.
+        ``"cheap"`` / ``"balanced"`` / ``"exact"``); the request buckets
+        under that tier's dispatch key and runs the tier's two-phase
+        RefineSpec program. None (the default) runs the single-phase
+        exact program and counts under the ``"exact"`` traffic class.
+        Unknown tier names are rejected here, at admission."""
         q = np.asarray(query, np.float32)
         if q.ndim != 1 or q.shape[0] != self.index.dim:
             raise ValueError(
@@ -263,8 +339,10 @@ class AnnEngine:
                 f"got shape {q.shape}")
         # fail fast at admission, not inside a coalesced batch
         self.index._validate_k(k, nprobe)
+        self.policy.resolve_tier(tier)        # unknown tiers fail here
         key = (int(k), int(nprobe),
-               tuple(prefix_bits) if prefix_bits is not None else None)
+               tuple(prefix_bits) if prefix_bits is not None else None,
+               tier)
         fut: Future = Future()
         # the stop-flag check and the enqueue are atomic vs stop() (same
         # lock), so a request is either rejected here or guaranteed to
@@ -274,17 +352,22 @@ class AnnEngine:
                 raise RuntimeError(
                     "AnnEngine is not running (call start())")
             self._stats.submitted += 1
+            tname = tier if tier is not None else "exact"
+            self._stats.tier_requests[tname] = \
+                self._stats.tier_requests.get(tname, 0) + 1
             self._queue.put(_Request(q, key, fut, time.perf_counter()))
         return fut
 
     def search(self, query, k: int = 10, nprobe: int = 8,
-               prefix_bits: Optional[Sequence[int]] = None):
+               prefix_bits: Optional[Sequence[int]] = None,
+               tier: Optional[str] = None):
         """Blocking single-query convenience over ``submit``."""
         return self.submit(query, k=k, nprobe=nprobe,
-                           prefix_bits=prefix_bits).result()
+                           prefix_bits=prefix_bits, tier=tier).result()
 
     def search_many(self, queries, k: int = 10, nprobe: int = 8,
-                    prefix_bits: Optional[Sequence[int]] = None):
+                    prefix_bits: Optional[Sequence[int]] = None,
+                    tier: Optional[str] = None):
         """Submit a whole batch and gather (ids, dists) as (NQ, k).
         An empty batch returns empty (0, k) arrays (np.stack would
         raise on zero rows)."""
@@ -292,7 +375,8 @@ class AnnEngine:
         if queries.shape[0] == 0:
             return (np.empty((0, k), np.int32),
                     np.empty((0, k), np.float32))
-        futs = [self.submit(q, k=k, nprobe=nprobe, prefix_bits=prefix_bits)
+        futs = [self.submit(q, k=k, nprobe=nprobe, prefix_bits=prefix_bits,
+                            tier=tier)
                 for q in queries]
         out = [f.result() for f in futs]
         return (np.stack([o[0] for o in out]),
@@ -301,31 +385,44 @@ class AnnEngine:
     @property
     def stats(self) -> EngineStats:
         with self._lock:
-            return dataclasses.replace(self._stats)
+            # deep-copy the per-tier dicts: replace() would alias them,
+            # and the live dispatcher keeps mutating the originals
+            return dataclasses.replace(
+                self._stats,
+                tier_requests=dict(self._stats.tier_requests),
+                tier_dispatched_rows=dict(self._stats.tier_dispatched_rows),
+                tier_refine_survivors=dict(
+                    self._stats.tier_refine_survivors))
 
     def warmup(self, k: int = 10, nprobe: int = 8,
-               prefix_bits: Optional[Sequence[int]] = None) -> None:
+               prefix_bits: Optional[Sequence[int]] = None,
+               tiers: Optional[Sequence[Optional[str]]] = None) -> None:
         """Pre-compile every static batch shape for one dispatch key
         (each shape with the scan backend the policy will pick for it).
         Mesh engines warm BOTH sharded programs per shape — the
         compacted one (the policy's ``probe_budget``) and the
         uncompacted overflow-fallback (``probe_budget=0``) — so a
         skewed dispatch at serving time never eats the fallback
-        compile."""
+        compile. ``tiers`` lists the accuracy tiers to warm (e.g.
+        ``["cheap", "balanced", "exact"]`` or ``list(policy.tiers)``);
+        each named tier compiles its own two-phase program per shape.
+        None warms just the untiered single-phase program."""
         if self.mesh is None:
             budgets: Tuple = (None,)
         else:
             budgets = tuple(dict.fromkeys(
                 (self.policy.probe_budget, 0)))
-        for s in self.policy.batch_shapes:
-            qb = np.zeros((s, self.index.dim), np.float32)
-            for budget in budgets:
-                ids, dists = self.index.search_batch(
-                    qb, k=k, nprobe=nprobe, prefix_bits=prefix_bits,
-                    mesh=self.mesh, axis=self.axis,
-                    backend=self._scan_backend(s),
-                    probe_budget=budget)
-                jax.block_until_ready(ids)
+        for tier in (tiers if tiers is not None else (None,)):
+            spec = self.policy.resolve_tier(tier)
+            for s in self.policy.batch_shapes:
+                qb = np.zeros((s, self.index.dim), np.float32)
+                for budget in budgets:
+                    ids, dists = self.index.search_batch(
+                        qb, k=k, nprobe=nprobe, prefix_bits=prefix_bits,
+                        mesh=self.mesh, axis=self.axis,
+                        backend=self._scan_backend(s),
+                        probe_budget=budget, refine=spec)
+                    jax.block_until_ready(ids)
 
     def _scan_backend(self, shape: int) -> str:
         """Resolve the probe-scan backend string for a dispatch shape:
@@ -376,9 +473,26 @@ class AnnEngine:
                 self._dispatch_group(key, reqs[lo:lo + cap])
 
     def _dispatch_group(self, key, reqs) -> None:
-        k, nprobe, prefix_bits = key
+        k, nprobe, prefix_bits, tier = key
+        spec = self.policy.resolve_tier(tier)
         n = len(reqs)
         shape = self.policy.pad_to(n)
+        tname = tier if tier is not None else "exact"
+        # device work per tier: every dispatched row (padding included,
+        # like dispatched_rows) and, for refining tiers, the static
+        # k_refine phase-2 rows each dispatched row fans out into
+        survivors = 0
+        if spec is not None:
+            capacity = min(nprobe, self.index.n_clusters) \
+                * int(self.index.ids.shape[1])
+            survivors = shape * spec.k_refine(k, capacity)
+
+        def _count_tier_rows():
+            self._stats.tier_dispatched_rows[tname] = \
+                self._stats.tier_dispatched_rows.get(tname, 0) + shape
+            self._stats.tier_refine_survivors[tname] = \
+                self._stats.tier_refine_survivors.get(tname, 0) + survivors
+
         qb = np.zeros((shape, self.index.dim), np.float32)
         for j, r in enumerate(reqs):
             qb[j] = r.query
@@ -389,7 +503,7 @@ class AnnEngine:
                 mesh=self.mesh, axis=self.axis,
                 backend=self._scan_backend(shape),
                 probe_budget=self.policy.probe_budget,
-                shard_stats=shard_stats)
+                shard_stats=shard_stats, refine=spec)
             ids = np.asarray(jax.block_until_ready(ids))
             dists = np.asarray(dists)
         except Exception as e:  # fail the whole group, keep serving
@@ -405,6 +519,7 @@ class AnnEngine:
                 self._stats.failed_dispatches += 1
                 self._stats.dispatched_rows += shape
                 self._stats.padded_rows += shape - n
+                _count_tier_rows()
             return
         for j, r in enumerate(reqs):
             r.future.set_result((ids[j], dists[j]))
@@ -413,6 +528,7 @@ class AnnEngine:
             self._stats.dispatches += 1
             self._stats.dispatched_rows += shape
             self._stats.padded_rows += shape - n
+            _count_tier_rows()
             if shard_stats is not None:
                 if shard_stats.get("fallback"):
                     self._stats.probe_fallbacks += 1

@@ -327,6 +327,73 @@ def test_probe_compaction_overflow_and_skew():
         assert flag in out, (flag, out)
 
 
+def test_sharded_two_phase_refine():
+    """Two-phase (coarse prefix -> full-width re-rank) search on the
+    mesh: with a degenerate oversample (every probed candidate
+    survives phase 1) the sharded refine path is bit-identical to the
+    single-device refine path on both probe-scan layouts; probe
+    compaction composes with refine bit-identically; and at the
+    default oversample the tiered result keeps recall@10 against the
+    exact ranking."""
+    out = run_with_devices(textwrap.dedent("""
+        import dataclasses
+        import numpy as np, jax.numpy as jnp
+        from repro.compat import AxisType, make_mesh
+        from repro.core.saq import SAQConfig
+        from repro.ivf import IVFIndex, RefineSpec
+        from repro.ivf.distributed import sharded_search_batch
+
+        def bit_eq(a, b):
+            return (np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+                    and np.array_equal(np.asarray(a[1]).view(np.uint32),
+                                       np.asarray(b[1]).view(np.uint32)))
+
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((2000, 32)).astype(np.float32)
+        idx = IVFIndex.build(
+            x, SAQConfig(avg_bits=4, rounds=2, align=8, max_bits=9),
+            n_clusters=14)
+        qs = rng.standard_normal((5, 32)).astype(np.float32)
+        mesh = make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+        degen = RefineSpec(coarse_prefix=1, oversample=1e9)
+        for tag, packing in (("PACKED", idx),
+                             ("UNPACKED", dataclasses.replace(
+                                 idx, packed=idx.packed.unpack()))):
+            for backend in ("xla", "xla-cluster-major"):
+                ref = packing.search_batch(qs, k=10, nprobe=6,
+                                           backend=backend, refine=degen)
+                got = packing.search_batch(qs, k=10, nprobe=6,
+                                           backend=backend, refine=degen,
+                                           mesh=mesh, axis=("data",))
+                print(tag, backend, int(bit_eq(ref, got)))
+        # compacted vs uncompacted refine: per-shard probe budgets must
+        # not change the refined result at all
+        st_c, st_u = {}, {}
+        got_c = sharded_search_batch(mesh, ("data",), idx, qs, k=10,
+                                     nprobe=6, refine=degen,
+                                     probe_budget=3, stats=st_c)
+        got_u = sharded_search_batch(mesh, ("data",), idx, qs, k=10,
+                                     nprobe=6, refine=degen,
+                                     probe_budget=0, stats=st_u)
+        print("COMPACT", int(bit_eq(got_c, got_u) and st_c["compacted"]
+                             and not st_u["compacted"]))
+        # default-oversample tier keeps recall@10 on the mesh
+        exact_i, _ = idx.search_batch(qs, k=10, nprobe=6, mesh=mesh,
+                                      axis=("data",))
+        tier_i, _ = idx.search_batch(
+            qs, k=10, nprobe=6, mesh=mesh, axis=("data",),
+            refine=RefineSpec(coarse_prefix=2, oversample=8.0))
+        hits = np.mean([len(set(a.tolist()) & set(b.tolist())) / 10
+                        for a, b in zip(np.asarray(tier_i),
+                                        np.asarray(exact_i))])
+        print("RECALL", int(hits >= 0.8))
+    """))
+    for flag in ("PACKED xla 1", "PACKED xla-cluster-major 1",
+                 "UNPACKED xla 1", "UNPACKED xla-cluster-major 1",
+                 "COMPACT 1", "RECALL 1"):
+        assert flag in out, (flag, out)
+
+
 def test_compressed_mean_and_moe_parity():
     out = run_with_devices(textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np

@@ -147,6 +147,99 @@ def test_engine_failed_dispatch_counts_rows(built):
     assert 0.0 < st.occupancy <= 1.0
 
 
+def test_engine_accuracy_tiers(built):
+    """Accuracy tiers: the exact tier is bit-identical to the direct
+    single-phase batched call, every named tier buckets separately at
+    admission, and the per-tier counters (requests / dispatched rows /
+    refine survivor budgets) account for every dispatch including
+    padding."""
+    _, idx = built
+    from repro.serve import DEFAULT_TIERS
+    qs = decaying_data(12, 32, alpha=0.7, seed=91)
+    policy = BatchPolicy(max_batch=16, max_wait_us=50_000,
+                         batch_shapes=(1, 2, 4))
+    with AnnEngine(idx, policy) as eng:
+        futs = []
+        for tier in ("exact", "balanced", "cheap", None):
+            futs.append([eng.submit(q, k=10, nprobe=6, tier=tier)
+                         for q in qs])
+        res = [[f.result(timeout=60) for f in fs] for fs in futs]
+        st = eng.stats
+    # exact tier (and tier=None) == direct single-phase, bit for bit
+    ref_i, ref_d = idx.search_batch(qs, k=10, nprobe=6)
+    for tier_res in (res[0], res[3]):
+        np.testing.assert_array_equal(
+            np.stack([i for i, _ in tier_res]), np.asarray(ref_i))
+        np.testing.assert_array_equal(
+            np.stack([d for _, d in tier_res]).view(np.uint32),
+            np.asarray(ref_d).view(np.uint32))
+    # named tiers == direct refined call, row for row
+    for tier, tier_res in (("balanced", res[1]), ("cheap", res[2])):
+        ti, td = idx.search_batch(qs, k=10, nprobe=6,
+                                  refine=DEFAULT_TIERS[tier])
+        np.testing.assert_array_equal(
+            np.stack([i for i, _ in tier_res]), np.asarray(ti))
+        np.testing.assert_allclose(
+            np.stack([d for _, d in tier_res]), np.asarray(td),
+            rtol=1e-6)
+    # per-tier accounting: tier=None folds into the "exact" class
+    assert st.tier_requests == {"exact": 24, "balanced": 12, "cheap": 12}
+    assert set(st.tier_dispatched_rows) == {"exact", "balanced", "cheap"}
+    assert st.tier_dispatched_rows["exact"] >= 24
+    assert sum(st.tier_dispatched_rows.values()) == st.dispatched_rows
+    # survivor budgets: rows * k_refine for refined tiers, 0 for exact
+    l_max = int(idx.ids.shape[1])
+    cap = 6 * l_max
+    assert st.tier_refine_survivors["exact"] == 0
+    for tier in ("balanced", "cheap"):
+        k_ref = DEFAULT_TIERS[tier].k_refine(10, cap)
+        assert (st.tier_refine_survivors[tier]
+                == st.tier_dispatched_rows[tier] * k_ref)
+
+
+def test_engine_tier_validation_and_stats_isolation(built):
+    """Unknown tiers are rejected at admission (before any queueing);
+    custom tier maps replace the defaults; stats snapshots are deep
+    copies that later traffic cannot mutate."""
+    _, idx = built
+    from repro.ivf import RefineSpec
+    q = decaying_data(1, 32, alpha=0.7, seed=92)[0]
+    with AnnEngine(idx) as eng:
+        with pytest.raises(ValueError, match="tier"):
+            eng.submit(q, k=5, nprobe=4, tier="no-such-tier")
+        ids, _ = eng.search(q, k=5, nprobe=4, tier="cheap")
+        assert ids.shape == (5,)
+        snap = eng.stats
+        eng.search(q, k=5, nprobe=4, tier="cheap")
+        assert snap.tier_requests == {"cheap": 1}   # frozen snapshot
+        assert eng.stats.tier_requests == {"cheap": 2}
+    custom = BatchPolicy(tiers={"only": RefineSpec(coarse_prefix=1)})
+    with AnnEngine(idx, custom) as eng2:
+        with pytest.raises(ValueError, match="only"):
+            eng2.submit(q, k=5, nprobe=4, tier="balanced")
+        ids2, _ = eng2.search(q, k=5, nprobe=4, tier="only")
+        assert ids2.shape == (5,)
+    with pytest.raises(ValueError):
+        BatchPolicy(tiers={"": RefineSpec()})
+    with pytest.raises(ValueError):
+        BatchPolicy(tiers={"x": "not-a-spec"})
+
+
+def test_engine_warmup_tiers(built):
+    """warmup(tiers=...) pre-compiles each tier's program per shape and
+    records the dispatches without touching request counters."""
+    _, idx = built
+    policy = BatchPolicy(max_batch=8, max_wait_us=2000,
+                         batch_shapes=(1, 4))
+    with AnnEngine(idx, policy) as eng:
+        eng.warmup(k=10, nprobe=6, tiers=("exact", "balanced", None))
+        st = eng.stats
+        assert st.submitted == 0 and st.tier_requests == {}
+        qs = decaying_data(4, 32, alpha=0.7, seed=93)
+        ids, _ = eng.search_many(qs, k=10, nprobe=6, tier="balanced")
+    assert ids.shape == (4, 10)
+
+
 def test_engine_search_many_empty(built):
     """search_many([]) returns empty (0, k) arrays instead of crashing
     on np.stack of an empty list."""

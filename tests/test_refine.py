@@ -1,0 +1,200 @@
+"""Two-phase (coarse prefix scan -> full-width re-rank) search tests.
+
+Satellite coverage:
+  * recall-vs-prefix sweep: two-phase recall@10 at the default
+    oversample stays within a pinned epsilon of the single-phase
+    scan for coarse prefixes of 1 and 2 bits, across bitpacked and
+    unpacked codes and both slab layouts (gathered + cluster-major).
+  * degenerate oversample (k_refine == capacity) reproduces the
+    single-phase ranking exactly — phase 2 then re-scores every
+    probed candidate at full width.
+  * search_multistage vs two-phase parity: with pruning disabled
+    (huge m) and nprobe = C both reduce to exhaustive full-width
+    ranking and must agree (pinned by the search_multistage
+    docstring as test_multistage_vs_two_phase_parity).
+  * RefineSpec validation + k_refine / coarse_prefix_bits algebra.
+
+Mesh composition of the two-phase path is covered in
+tests/test_distributed.py.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.saq import SAQConfig
+from repro.ivf import IVFIndex, RefineSpec
+from conftest import decaying_data
+
+K = 10
+NPROBE = 8
+
+# Pinned floor: two-phase recall@10 (vs the single-phase ranking as
+# ground truth) at the default oversample=8.  The 1-bit coarse pass on
+# this 48-dim workload sits well above this; the bound is a regression
+# tripwire, not a tight characterisation.
+RECALL_EPS = 0.20
+
+
+@pytest.fixture(scope="module")
+def built():
+    x = decaying_data(4000, 48, alpha=0.7, seed=0)
+    idx = IVFIndex.build(
+        x, SAQConfig(avg_bits=4, rounds=3, align=8, max_bits=9),
+        n_clusters=24)
+    return x, idx
+
+
+def _variant(idx, bitpacked):
+    if not bitpacked:
+        idx = dataclasses.replace(idx, packed=idx.packed.unpack())
+    assert idx.packed.bitpacked == bitpacked
+    return idx
+
+
+def _recall(got_ids, ref_ids):
+    got, ref = np.asarray(got_ids), np.asarray(ref_ids)
+    hits = [len(set(g.tolist()) & set(r.tolist())) / r.shape[0]
+            for g, r in zip(got, ref)]
+    return float(np.mean(hits))
+
+
+@pytest.mark.parametrize("backend", ["xla", "xla-cluster-major"])
+@pytest.mark.parametrize("bitpacked", [True, False])
+@pytest.mark.parametrize("coarse", [1, 2])
+def test_recall_vs_prefix_sweep(built, coarse, bitpacked, backend):
+    _, idx = built
+    idx = _variant(idx, bitpacked)
+    qs = decaying_data(16, 48, alpha=0.7, seed=61)
+    base_i, _ = idx.search_batch(qs, k=K, nprobe=NPROBE,
+                                 backend=backend)
+    spec = RefineSpec(coarse_prefix=coarse)
+    ref_i, ref_d = idx.search_batch(qs, k=K, nprobe=NPROBE,
+                                    backend=backend, refine=spec)
+    assert ref_i.shape == (16, K) and ref_d.shape == (16, K)
+    rec = _recall(ref_i, base_i)
+    assert rec >= 1.0 - RECALL_EPS, (coarse, bitpacked, backend, rec)
+    # returned distances are sorted ascending
+    d = np.asarray(ref_d)
+    assert np.all(np.diff(d, axis=1) >= -1e-6)
+
+
+@pytest.mark.parametrize("backend", ["xla", "xla-cluster-major"])
+@pytest.mark.parametrize("bitpacked", [True, False])
+def test_degenerate_oversample_matches_single_phase(built, bitpacked,
+                                                    backend):
+    """oversample large enough that k_refine saturates at the probed
+    capacity: phase 2 re-scores everything the single-phase scan
+    scores, so ids must match exactly."""
+    _, idx = built
+    idx = _variant(idx, bitpacked)
+    qs = decaying_data(6, 48, alpha=0.7, seed=62)
+    base_i, base_d = idx.search_batch(qs, k=K, nprobe=NPROBE,
+                                      backend=backend)
+    spec = RefineSpec(coarse_prefix=1, oversample=1e9,
+                      coarse_dim_frac=0.5)
+    ref_i, ref_d = idx.search_batch(qs, k=K, nprobe=NPROBE,
+                                    backend=backend, refine=spec)
+    np.testing.assert_array_equal(np.asarray(base_i), np.asarray(ref_i))
+    np.testing.assert_allclose(np.asarray(base_d), np.asarray(ref_d),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_exact_passthrough_is_single_phase(built):
+    """refine=None is literally the single-phase program."""
+    _, idx = built
+    qs = decaying_data(4, 48, alpha=0.7, seed=63)
+    a_i, a_d = idx.search_batch(qs, k=K, nprobe=NPROBE)
+    b_i, b_d = idx.search_batch(qs, k=K, nprobe=NPROBE, refine=None)
+    np.testing.assert_array_equal(np.asarray(a_i), np.asarray(b_i))
+    np.testing.assert_array_equal(
+        np.asarray(a_d, dtype=np.float32).view(np.uint32),
+        np.asarray(b_d, dtype=np.float32).view(np.uint32))
+
+
+@pytest.mark.parametrize("bitpacked", [True, False])
+def test_multistage_vs_two_phase_parity(built, bitpacked):
+    """With pruning disabled (huge m) and nprobe = C, search_multistage
+    and the two-phase path both reduce to exhaustive full-width
+    ranking: ids must match exactly and distances to fp-accumulation
+    noise.  The search_multistage docstring pins this test by name."""
+    _, idx = built
+    idx = _variant(idx, bitpacked)
+    qs = decaying_data(4, 48, alpha=0.7, seed=64)
+    spec = RefineSpec(coarse_prefix=1, oversample=1e9)
+    for i in range(qs.shape[0]):
+        ids_m, d_m, st = idx.search_multistage(
+            qs[i], k=K, nprobe=idx.n_clusters, m=1e9)
+        assert st.pruned_frac == 0.0
+        ids_t, d_t = idx.search(qs[i], k=K, nprobe=idx.n_clusters,
+                                refine=spec)
+        np.testing.assert_array_equal(np.asarray(ids_m),
+                                      np.asarray(ids_t))
+        np.testing.assert_allclose(np.asarray(d_m), np.asarray(d_t),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_single_query_refine_matches_batch_row(built):
+    _, idx = built
+    qs = decaying_data(3, 48, alpha=0.7, seed=65)
+    spec = RefineSpec(coarse_prefix=2)
+    bi, bd = idx.search_batch(qs, k=K, nprobe=NPROBE, refine=spec)
+    for i in range(qs.shape[0]):
+        si, sd = idx.search(qs[i], k=K, nprobe=NPROBE, refine=spec)
+        np.testing.assert_array_equal(np.asarray(bi[i]), np.asarray(si))
+        np.testing.assert_allclose(np.asarray(bd[i]), np.asarray(sd),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_ragged_tail_padding(built):
+    """k_refine larger than the real candidate pool: padding rows are
+    masked to +inf / id -1 and sorted last, same as single-phase."""
+    _, idx = built
+    l_max = int(idx.ids.shape[1])
+    qs = decaying_data(3, 48, alpha=0.7, seed=66)
+    spec = RefineSpec(coarse_prefix=1, oversample=1e9)
+    bi, bd = idx.search_batch(qs, k=l_max, nprobe=1, refine=spec)
+    si, sd = idx.search_batch(qs, k=l_max, nprobe=1)
+    np.testing.assert_array_equal(np.asarray(bi), np.asarray(si))
+    bi, bd = np.asarray(bi), np.asarray(bd)
+    assert np.all(np.isinf(bd[bi < 0]))
+    assert np.all(np.isfinite(bd[bi >= 0]))
+
+
+def test_refine_spec_validation():
+    with pytest.raises(ValueError):
+        RefineSpec(coarse_prefix=0)
+    with pytest.raises(ValueError):
+        RefineSpec(oversample=0.5)
+    with pytest.raises(ValueError):
+        RefineSpec(coarse_dim_frac=0.0)
+    with pytest.raises(ValueError):
+        RefineSpec(coarse_dim_frac=1.5)
+    spec = RefineSpec()
+    assert spec.coarse_prefix == 1 and spec.oversample == 8.0
+
+
+def test_k_refine_algebra():
+    spec = RefineSpec(coarse_prefix=1, oversample=8.0)
+    assert spec.k_refine(10, 1000) == 80
+    assert spec.k_refine(10, 50) == 50      # clamps to capacity
+    assert spec.k_refine(10, 5) == 10       # never below k
+    assert RefineSpec(oversample=1.0).k_refine(10, 1000) == 10
+
+
+def test_coarse_prefix_bits_shapes():
+    col_offsets = (0, 4, 8, 12, 16)
+    seg_bits = (6, 4, 2, 0)
+    # full dim fraction: every nonzero segment clipped to the prefix
+    assert RefineSpec(coarse_prefix=1).coarse_prefix_bits(
+        col_offsets, seg_bits) == (1, 1, 1, 0)
+    assert RefineSpec(coarse_prefix=2).coarse_prefix_bits(
+        col_offsets, seg_bits) == (2, 2, 2, 0)
+    # dim fraction 0.5 with d_stored=16 keeps segments starting
+    # below col 8: segments 0 and 1 only
+    assert RefineSpec(coarse_prefix=2,
+                      coarse_dim_frac=0.5).coarse_prefix_bits(
+        col_offsets, seg_bits) == (2, 2, 0, 0)
+    # composes with an existing prefix_bits truncation
+    assert RefineSpec(coarse_prefix=2).coarse_prefix_bits(
+        col_offsets, seg_bits, (1, 0, 2, 0)) == (1, 0, 2, 0)
