@@ -20,18 +20,23 @@ scan-FLOP reduction claim lives in the bit-weighted column), plus a
 mesh section (subprocess with
 ``--xla_force_host_platform_device_count``) comparing the sharded
 search with and without per-shard probe compaction and reporting
-per-shard scan FLOPs. In fast mode it doubles as the CI smoke check
-for the serving path: a regression that makes the engine slower than
-the per-query loop at batch >= 8, the cluster-major scan slower than
-the gathered scan at batch >= 16, the compacted mesh scan slower
-than the uncompacted mesh scan at batch >= 16, the balanced tier
-slower than the single-phase scan at batch >= 16, any tier's
-recall@10 below its pinned floor, or the best qualifying tier's
-bit-weighted phase-1 reduction below 4x, fails the run. The
-root-level ``BENCH_batch_qps.json`` trajectory (one appended entry
-per run: qps/occupancy rows + tier rows + mesh rows) is the single
-bench output — there is no per-run ``experiments/`` copy — and the
-gates read the same rows that land there.
+per-shard scan FLOPs, plus a live-traffic section (streaming writes
+through the delta slabs of docs/live_index.md) reporting merged-slab
+search qps at 10%/50% delta fill vs the frozen single-slab program,
+add throughput, and the compaction pause. In fast mode it doubles as
+the CI smoke check for the serving path: a regression that makes the
+engine slower than the per-query loop at batch >= 8, the
+cluster-major scan slower than the gathered scan at batch >= 16, the
+compacted mesh scan slower than the uncompacted mesh scan at
+batch >= 16, the balanced tier slower than the single-phase scan at
+batch >= 16, any tier's recall@10 below its pinned floor, the best
+qualifying tier's bit-weighted phase-1 reduction below 4x, or the
+live merged-slab search at 10% delta fill below 0.8x the frozen qps,
+fails the run. The root-level ``BENCH_batch_qps.json`` trajectory
+(one appended entry per run: qps/occupancy rows + tier rows + mesh
+rows + live rows) is the single bench output — there is no per-run
+``experiments/`` copy — and the gates read the same rows that land
+there.
 """
 from __future__ import annotations
 
@@ -46,12 +51,16 @@ import jax
 import numpy as np
 
 from repro.core.saq import SAQConfig
-from repro.ivf import IVFIndex
+from repro.ivf import ClusterFullError, IVFIndex
 from repro.kernels import ops
 from repro.serve import AnnEngine, BatchPolicy, DEFAULT_TIERS
 from .common import bench_datasets, emit
 
 BATCH_SIZES = (1, 8, 16, 64, 256)
+
+LIVE_BATCH = 16
+LIVE_FILLS = (0.10, 0.50)
+LIVE_L_DELTA = 128
 
 TIER_BATCHES = (16, 64)
 TIER_NPROBE = 16
@@ -229,8 +238,63 @@ def _tier_rows(idx, queries, rng, fast: bool = True) -> list:
     return rows
 
 
+def _live_rows(idx, x, queries, rng, fast: bool = True) -> list:
+    """Measure live-traffic serving cost: search qps through the merged
+    (main + delta slab, tombstone-filtered) program at increasing delta
+    fill vs the frozen single-slab program, streaming add throughput,
+    and the compaction pause (the fold is the ONLY moment writers
+    block; search never does). The delta shapes are static, so every
+    fill level reuses one compiled program."""
+    import dataclasses
+
+    k, nprobe = 10, 8
+    qb = queries[rng.integers(0, len(queries), LIVE_BATCH)] \
+        .astype(np.float32)
+    t_frozen = _timed(lambda: idx.search_batch(
+        qb, k=k, nprobe=nprobe, backend="xla"))
+    # own live state on a copy — `idx` stays frozen for the other rows
+    live_idx = dataclasses.replace(idx, live=None)
+    live_idx.enable_live(l_delta=LIVE_L_DELTA)
+    capacity = live_idx.n_clusters * LIVE_L_DELTA
+    rows = []
+    filled, add_s = 0, 0.0
+    for frac in LIVE_FILLS:
+        target = int(frac * capacity)
+        t0 = time.perf_counter()
+        while filled < target:
+            nb = min(64, target - filled)
+            vecs = x[rng.integers(0, len(x), nb)].astype(np.float32)
+            vecs = vecs + 0.01 * rng.standard_normal(
+                vecs.shape).astype(np.float32)
+            try:
+                live_idx.add(vecs)
+            except ClusterFullError:
+                break     # a hot cluster filled first: measure the
+                          # fill actually achieved (recorded below)
+            filled += nb
+        add_s += time.perf_counter() - t0
+        t_live = _timed(lambda: live_idx.search_batch(
+            qb, k=k, nprobe=nprobe, backend="xla"))
+        row = {"batch": LIVE_BATCH, "l_delta": LIVE_L_DELTA,
+               "target_fill": frac,
+               "delta_fill": round(filled / capacity, 3),
+               "adds": filled,
+               "qps_frozen": round(LIVE_BATCH / t_frozen, 1),
+               "qps_live": round(LIVE_BATCH / t_live, 1),
+               "live_vs_frozen": round(t_frozen / max(t_live, 1e-9), 3),
+               "add_rows_per_s": round(filled / max(add_s, 1e-9), 1)}
+        rows.append(row)
+    t0 = time.perf_counter()
+    live_idx.compact()
+    pause_ms = round((time.perf_counter() - t0) * 1e3, 1)
+    for row in rows:
+        row["compact_pause_ms"] = pause_ms
+        emit("batch_qps_live", row)
+    return rows
+
+
 def _append_trajectory(rows: list, tier_rows: list,
-                       mesh_rows: list) -> None:
+                       mesh_rows: list, live_rows: list) -> None:
     """Append this run's qps/occupancy + accuracy-tier summary to the
     ROOT-LEVEL ``BENCH_batch_qps.json`` (a JSON list, one entry per
     run) so the serving-perf trajectory across PRs stays
@@ -267,6 +331,7 @@ def _append_trajectory(rows: list, tier_rows: list,
         "rows": [{k: r[k] for k in keep if k in r} for r in rows],
         "tiers": tier_rows,
         "mesh": mesh_rows,
+        "live": live_rows,
     })
     with open(fp, "w") as f:
         json.dump(log, f, indent=1, default=float)
@@ -395,7 +460,8 @@ def run(fast: bool = True) -> dict:
         emit("batch_qps", row)
     tier_rows = _tier_rows(idx, queries, rng, fast)
     mesh_rows = _mesh_rows(fast)
-    _append_trajectory(rows, tier_rows, mesh_rows)
+    live_rows = _live_rows(idx, x, queries, rng, fast)
+    _append_trajectory(rows, tier_rows, mesh_rows, live_rows)
     # CI smoke gates (fast mode only — --full runs report without
     # aborting the remaining suites):
     #  * dynamic batching must beat the per-query loop once there is a
@@ -450,5 +516,12 @@ def run(fast: bool = True) -> dict:
                 f"tier regression: best bit-weighted phase-1 reduction "
                 f"{best_red} < 4x among tiers holding their recall "
                 f"floor: {tier_rows}")
+        for r in live_rows:
+            if r["target_fill"] <= 0.10 \
+                    and r["qps_live"] < 0.8 * r["qps_frozen"]:
+                raise RuntimeError(
+                    f"live-serving regression: merged-slab search at "
+                    f"{r['delta_fill']:.0%} delta fill is below 0.8x the "
+                    f"frozen qps: {r}")
     return {"batch_qps": rows, "batch_qps_tiers": tier_rows,
-            "batch_qps_mesh": mesh_rows}
+            "batch_qps_mesh": mesh_rows, "batch_qps_live": live_rows}

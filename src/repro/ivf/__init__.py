@@ -1,7 +1,10 @@
 """IVF index substrate: k-means clustering, SAQ-coded inverted lists,
-single-host and shard_map-distributed search."""
+single-host and shard_map-distributed search, live streaming writes
+(delta slabs + tombstones + compaction)."""
 from .index import IVFIndex, SearchStats  # noqa: F401
 from .refine import RefineSpec  # noqa: F401
+from .delta import ClusterFullError, LiveIndex, LiveSnapshot  # noqa: F401
 from .distributed import (default_probe_budget, distributed_scan,  # noqa: F401
                           distributed_scan_packed, sharded_search_batch)
-from .persist import CorruptIndexError, load_index, save_index  # noqa: F401
+from .persist import (CorruptIndexError, append_wal, load_index,  # noqa: F401
+                      save_index)

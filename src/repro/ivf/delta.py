@@ -1,0 +1,461 @@
+"""Live IVF index state: streaming inserts/deletes over the frozen
+padded-list layout, without pausing serving.
+
+The frozen index (PRs 1-6) is a set of immutable device arrays — padded
+``(C, L, ...)`` cluster lists scanned by one jit'd program. This module
+makes that index *mutable* while every search keeps running:
+
+* **Delta slabs** — each cluster owns an append-only delta buffer of
+  static capacity ``(C, L_delta)``, bit-packed in the SAME
+  :class:`repro.core.types.WordLayout` word format as the main lists
+  (or column-per-dim when the main lists are unpacked). An ``add``
+  assigns the vector to its nearest centroid, encodes the *residual*
+  against that centroid through the existing CAQ fast path
+  (``SAQ.encode`` — the exact transform the builder used), and appends
+  the encoded row to the cluster's delta buffer. Searches scan the
+  delta buffer as ONE extra slab through the unchanged
+  ``probe_scan``/``cluster_scan`` bodies and fold it into the final
+  top-k through the tie-stable ``(distance, position)`` order (see
+  ``repro.ivf.index._merged_probe_dists``).
+* **Tombstones** — a ``remove`` flips one bit in a validity bitmap
+  (``live_main`` over the ``(C, L)`` main lists, ``live_delta`` over
+  the delta slab); dead rows are filtered to ``inf``/``-1`` before
+  every top-k, including the two-phase refine survivor selection. Rows
+  are physically dropped at the next compaction.
+* **Snapshot publication** — every mutation builds a fresh immutable
+  :class:`LiveSnapshot` (main lists + delta slab + bitmaps, all device
+  arrays) and swaps ONE reference. Readers grab the reference once per
+  dispatch, so a search never observes a half-applied write and a swap
+  never waits on a search ("between dispatch ticks" by construction:
+  in-flight dispatches keep scanning the snapshot they started with).
+* **Compaction** — :meth:`LiveIndex.compact` folds the whole delta
+  slab into the main lists (dead rows dropped, ``L`` re-padded to the
+  new longest list), rebuilds the per-index caches
+  (``_staged_consts_cache`` / ``_shard_pad_cache``), and publishes the
+  swapped arrays atomically. :meth:`LiveIndex.start_compaction` runs it
+  on a background host thread (same stop-event/join discipline as the
+  ``AnnEngine`` dispatcher loop) triggered by delta fill. The state
+  machine is deliberately small: IDLE -> (fill >= threshold or kick)
+  -> FOLD (under the write lock; searches keep serving the previous
+  snapshot) -> SWAP (one reference) -> IDLE.
+* **Op log** — every add/remove is journaled with a monotonic sequence
+  number (adds store the *encoded* row, so replay never re-runs CAQ).
+  The log is what the v4 WAL persistence serializes
+  (``repro.ivf.persist``): a base snapshot holds everything up to
+  ``compacted_seq`` and WAL segments replay the rest on load.
+
+Single-device scope: the mesh-sharded path and ``search_multistage``
+scan only the frozen main lists, so both refuse a live index that holds
+delta rows or tombstones — ``compact()`` first. See
+``docs/live_index.md`` for the full layout/semantics walkthrough.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class ClusterFullError(RuntimeError):
+    """An ``add`` targeted a cluster whose delta buffer is full. The
+    vector was NOT admitted (adds are all-or-nothing per batch) — run
+    ``compact()`` (or enable background compaction) and retry, or build
+    with a larger ``l_delta``."""
+
+
+class LiveSnapshot(NamedTuple):
+    """One immutable, mutually-consistent view of everything a live
+    search scans: the main padded lists, the delta slab, and the
+    validity bitmaps. Published as a whole by every mutation — readers
+    take the reference once per dispatch and never observe a torn
+    (main, delta) pair."""
+
+    codes: jnp.ndarray        # (C, L, W|Ds) main code buffer
+    factors: jnp.ndarray      # (C, L, S, 3)
+    o_norm: jnp.ndarray       # (C, L)
+    ids: jnp.ndarray          # (C, L) int32, -1 padding
+    live_main: jnp.ndarray    # (C, L) bool, False = tombstoned/padding
+    d_codes: jnp.ndarray      # (C, L_delta, W|Ds) delta code buffer
+    d_factors: jnp.ndarray    # (C, L_delta, S, 3)
+    d_o_norm: jnp.ndarray     # (C, L_delta)
+    d_ids: jnp.ndarray        # (C, L_delta) int32, -1 empty
+    live_delta: jnp.ndarray   # (C, L_delta) bool
+    empty: bool               # no delta rows AND no tombstones
+    version: int              # monotonically increasing publish count
+
+
+class _Op(NamedTuple):
+    """One journaled mutation (the WAL record unit)."""
+
+    seq: int
+    kind: str                 # "add" | "remove"
+    vid: int                  # external vector id
+    cluster: int              # assigned cluster (-1 for removes)
+    codes: Optional[np.ndarray]    # (W|Ds,) encoded code row (adds)
+    factors: Optional[np.ndarray]  # (S, 3) factor row (adds)
+    o_norm: float                  # ||o||^2 total (adds)
+
+
+# Background-compaction defaults: fold once any cluster's delta fill
+# crosses the threshold fraction of its capacity.
+COMPACT_INTERVAL_S = 0.05
+COMPACT_THRESHOLD = 0.75
+
+
+class LiveIndex:
+    """Mutable companion of an :class:`repro.ivf.index.IVFIndex`.
+
+    Owns the host-canonical delta/tombstone state, the write lock, the
+    op log and the published :class:`LiveSnapshot`. Created through
+    ``IVFIndex.enable_live`` (or implicitly by the first
+    ``IVFIndex.add``); the index keeps it at ``index.live``.
+    """
+
+    def __init__(self, index, l_delta: int = 64):
+        if l_delta < 1:
+            raise ValueError(f"l_delta must be >= 1, got {l_delta}")
+        self.index = index
+        self.l_delta = int(l_delta)
+        self._lock = threading.RLock()
+        lay = index.packed.layout
+        c, l = (int(index.ids.shape[0]), int(index.ids.shape[1]))
+        mids = np.asarray(index.ids)
+        codes = np.asarray(index.packed.codes)
+        self.d_codes = np.zeros((c, self.l_delta, codes.shape[-1]),
+                                codes.dtype)
+        self.d_factors = np.zeros((c, self.l_delta, lay.n_segments, 3),
+                                  np.float32)
+        self.d_o_norm = np.zeros((c, self.l_delta), np.float32)
+        self.d_ids = np.full((c, self.l_delta), -1, np.int32)
+        self.live_main = mids >= 0                       # (C, L) bool
+        self.live_delta = np.zeros((c, self.l_delta), bool)
+        self.fill = np.zeros((c,), np.int64)
+        self.live_counts = self.live_main.sum(axis=1).astype(np.int64)
+        self.n_tombstones = 0
+        # external id -> (in_delta, cluster, slot); ids are unique
+        self._id_loc: Dict[int, Tuple[bool, int, int]] = {
+            int(mids[ci, si]): (False, ci, si)
+            for ci, si in zip(*np.nonzero(mids >= 0))}
+        self.next_id = int(mids.max()) + 1 if (mids >= 0).any() else 0
+        self.seq = 0
+        self.compacted_seq = 0     # ops <= this are folded into main
+        self.oplog: List[_Op] = []
+        self.compactions = 0
+        self.folded_rows = 0
+        self._version = 0
+        self.snapshot: LiveSnapshot = None  # set by _publish below
+        # background compactor (started on demand)
+        self._cthread: Optional[threading.Thread] = None
+        self._cstop = threading.Event()
+        self._ckick = threading.Event()
+        self._cthreshold = COMPACT_THRESHOLD
+        self._cinterval = COMPACT_INTERVAL_S
+        self._publish()
+
+    # ------------------------------------------------------------------
+    # snapshot publication
+    # ------------------------------------------------------------------
+    def _publish(self) -> None:
+        """Build and swap the immutable search snapshot (call with the
+        lock held). The single attribute assignment is the atomic swap:
+        dispatches read ``snapshot`` once and keep that view."""
+        idx = self.index
+        self._version += 1
+        self.snapshot = LiveSnapshot(
+            codes=idx.packed.codes, factors=idx.packed.factors,
+            o_norm=idx.packed.o_norm_sq_total, ids=idx.ids,
+            live_main=jnp.asarray(self.live_main),
+            d_codes=jnp.asarray(self.d_codes),
+            d_factors=jnp.asarray(self.d_factors),
+            d_o_norm=jnp.asarray(self.d_o_norm),
+            d_ids=jnp.asarray(self.d_ids),
+            live_delta=jnp.asarray(self.live_delta),
+            empty=(int(self.fill.sum()) == 0 and self.n_tombstones == 0),
+            version=self._version)
+
+    # ------------------------------------------------------------------
+    # admission bookkeeping
+    # ------------------------------------------------------------------
+    def candidate_capacity(self, eff_probe: int) -> int:
+        """Tightest structural bound on the candidates ANY probe set of
+        ``eff_probe`` clusters can supply: the sum of the ``eff_probe``
+        largest per-cluster LIVE row counts (main rows minus tombstones
+        plus live delta rows). This is what ``_validate_k`` checks on a
+        live index — the frozen padded bound ``eff_probe * L`` drifts
+        both ways once rows are tombstoned (overstates) or appended
+        past the build-time padding (understates)."""
+        with self._lock:
+            top = np.sort(self.live_counts)[::-1][:eff_probe]
+            return int(top.sum())
+
+    @property
+    def n_delta_rows(self) -> int:
+        return int(self.fill.sum())
+
+    # ------------------------------------------------------------------
+    # writes
+    # ------------------------------------------------------------------
+    def add(self, vectors, ids=None) -> np.ndarray:
+        """Encode and admit a batch of raw vectors; returns their ids.
+
+        Assignment + CAQ encoding run outside the lock (the expensive
+        part); the buffer append + snapshot publish hold it briefly.
+        All-or-nothing: if ANY target cluster's delta buffer cannot
+        hold its share the whole batch is rejected with
+        :class:`ClusterFullError` and nothing is admitted (never a
+        silent drop). Searches already in flight keep serving the
+        previous snapshot; the next dispatch sees the new rows."""
+        idx = self.index
+        vectors = np.asarray(vectors, np.float32)
+        if vectors.ndim == 1:
+            vectors = vectors[None, :]
+        if vectors.ndim != 2 or vectors.shape[1] != idx.dim:
+            raise ValueError(
+                f"vectors must be (n, {idx.dim}), got {vectors.shape}")
+        n = vectors.shape[0]
+        cents = np.asarray(idx.centroids)
+        d2 = (cents * cents).sum(axis=1)[None, :] - 2.0 * vectors @ cents.T
+        assign = np.argmin(d2, axis=1).astype(np.int64)
+        residuals = vectors - cents[assign]
+        enc = idx.saq.encode(jnp.asarray(residuals),
+                             bitpacked=idx.packed.bitpacked)
+        codes = np.asarray(enc.codes)
+        facs = np.asarray(enc.factors)
+        onorm = np.asarray(enc.o_norm_sq_total)
+        with self._lock:
+            if ids is None:
+                out = np.arange(self.next_id, self.next_id + n,
+                                dtype=np.int64)
+            else:
+                out = np.asarray(ids, np.int64).reshape(-1)
+                if out.shape[0] != n:
+                    raise ValueError(
+                        f"{n} vectors but {out.shape[0]} ids")
+                dup = [int(i) for i in out if int(i) in self._id_loc]
+                if dup or len(set(out.tolist())) != n:
+                    raise ValueError(
+                        f"duplicate ids in add: {dup or out.tolist()}")
+            need = np.bincount(assign, minlength=self.fill.shape[0])
+            over = np.nonzero(self.fill + need > self.l_delta)[0]
+            if over.size:
+                raise ClusterFullError(
+                    f"delta buffers full for clusters {over.tolist()} "
+                    f"(capacity l_delta={self.l_delta}); compact() and "
+                    f"retry, or enable background compaction")
+            for i in range(n):
+                self._append_row(int(assign[i]), int(out[i]), codes[i],
+                                 facs[i], float(onorm[i]), seq=None)
+            self.next_id = max(self.next_id, int(out.max()) + 1)
+            self._publish()
+        self._ckick.set()
+        return out
+
+    def _append_row(self, c: int, vid: int, code_row, fac_row,
+                    o_norm: float, seq: Optional[int]) -> None:
+        """One encoded row into cluster ``c``'s delta buffer + op log
+        (lock held; capacity already checked by the caller)."""
+        slot = int(self.fill[c])
+        assert slot < self.l_delta
+        self.d_codes[c, slot] = code_row
+        self.d_factors[c, slot] = fac_row
+        self.d_o_norm[c, slot] = o_norm
+        self.d_ids[c, slot] = vid
+        self.live_delta[c, slot] = True
+        self.fill[c] += 1
+        self.live_counts[c] += 1
+        self._id_loc[vid] = (True, c, slot)
+        if seq is None:
+            self.seq += 1
+            seq = self.seq
+        else:
+            self.seq = max(self.seq, seq)
+        self.oplog.append(_Op(seq, "add", vid, c,
+                              np.array(code_row, copy=True),
+                              np.array(fac_row, np.float32, copy=True),
+                              float(o_norm)))
+
+    def remove(self, ids) -> int:
+        """Tombstone a batch of ids (build-time or delta rows alike).
+        All-or-nothing: unknown ids fail the whole batch with KeyError
+        before anything is flipped. Returns the number removed; the
+        rows stay physically present (filtered from every top-k) until
+        the next compaction drops them."""
+        ids = [int(i) for i in np.asarray(ids, np.int64).reshape(-1)]
+        with self._lock:
+            missing = [i for i in ids if i not in self._id_loc]
+            if missing:
+                raise KeyError(
+                    f"cannot remove unknown (or already removed) ids "
+                    f"{missing}")
+            if len(set(ids)) != len(ids):
+                raise KeyError(f"duplicate ids in remove: {ids}")
+            for vid in ids:
+                in_delta, c, slot = self._id_loc.pop(vid)
+                if in_delta:
+                    self.live_delta[c, slot] = False
+                else:
+                    self.live_main[c, slot] = False
+                self.live_counts[c] -= 1
+                self.n_tombstones += 1
+                self.seq += 1
+                self.oplog.append(_Op(self.seq, "remove", vid, -1,
+                                      None, None, 0.0))
+            self._publish()
+        self._ckick.set()
+        return len(ids)
+
+    # ------------------------------------------------------------------
+    # WAL replay (repro.ivf.persist)
+    # ------------------------------------------------------------------
+    def replay(self, ops: Sequence[_Op]) -> None:
+        """Re-apply journaled ops in sequence order (load-time WAL
+        replay). Adds carry their encoded rows, so no CAQ re-run; a
+        cluster whose delta fills mid-replay is compacted in place
+        (deterministic — compaction preserves the live set, which is
+        the round-trip contract)."""
+        with self._lock:
+            for op in sorted(ops, key=lambda o: o.seq):
+                if op.kind == "add":
+                    if self.fill[op.cluster] >= self.l_delta:
+                        self.compact()
+                    self._append_row(op.cluster, op.vid, op.codes,
+                                     op.factors, op.o_norm, seq=op.seq)
+                    self.next_id = max(self.next_id, op.vid + 1)
+                elif op.kind == "remove":
+                    in_delta, c, slot = self._id_loc.pop(op.vid)
+                    if in_delta:
+                        self.live_delta[c, slot] = False
+                    else:
+                        self.live_main[c, slot] = False
+                    self.live_counts[c] -= 1
+                    self.n_tombstones += 1
+                    self.seq = max(self.seq, op.seq)
+                    self.oplog.append(op)
+                else:
+                    raise ValueError(f"unknown WAL op kind {op.kind!r}")
+            self._publish()
+
+    def pending_ops(self, after_seq: int) -> List[_Op]:
+        """Ops with ``seq > after_seq`` in sequence order — what a WAL
+        flush serializes on top of a base at ``after_seq``."""
+        with self._lock:
+            return sorted((o for o in self.oplog if o.seq > after_seq),
+                          key=lambda o: o.seq)
+
+    # ------------------------------------------------------------------
+    # compaction
+    # ------------------------------------------------------------------
+    def compact(self) -> bool:
+        """Fold the delta slab into the main lists: live delta rows are
+        appended after each cluster's surviving main rows, tombstoned
+        rows are physically dropped, ``L`` is re-padded to the new
+        longest list, the per-index operand caches are invalidated, and
+        the swapped arrays publish as one snapshot. Returns False when
+        there was nothing to fold. Never pauses serving: in-flight
+        dispatches finish on the pre-fold snapshot; the fold itself
+        runs on the calling (or compactor) thread."""
+        with self._lock:
+            if self.n_delta_rows == 0 and self.n_tombstones == 0:
+                return False
+            idx = self.index
+            mcodes = np.asarray(idx.packed.codes)
+            mfacs = np.asarray(idx.packed.factors)
+            mo = np.asarray(idx.packed.o_norm_sq_total)
+            mids = np.asarray(idx.ids)
+            c = mids.shape[0]
+            n_live = self.live_counts
+            new_l = max(1, int(n_live.max()))
+            codes_n = np.zeros((c, new_l) + mcodes.shape[2:], mcodes.dtype)
+            facs_n = np.zeros((c, new_l) + mfacs.shape[2:], mfacs.dtype)
+            o_n = np.zeros((c, new_l), mo.dtype)
+            ids_n = np.full((c, new_l), -1, np.int32)
+            folded = 0
+            for ci in range(c):
+                m = self.live_main[ci]
+                d = self.live_delta[ci]
+                nm, nd = int(m.sum()), int(d.sum())
+                codes_n[ci, :nm] = mcodes[ci][m]
+                facs_n[ci, :nm] = mfacs[ci][m]
+                o_n[ci, :nm] = mo[ci][m]
+                ids_n[ci, :nm] = mids[ci][m]
+                codes_n[ci, nm:nm + nd] = self.d_codes[ci][d]
+                facs_n[ci, nm:nm + nd] = self.d_factors[ci][d]
+                o_n[ci, nm:nm + nd] = self.d_o_norm[ci][d]
+                ids_n[ci, nm:nm + nd] = self.d_ids[ci][d]
+                folded += nd
+            import dataclasses as _dc
+            idx.packed = _dc.replace(
+                idx.packed, codes=jnp.asarray(codes_n),
+                factors=jnp.asarray(facs_n),
+                o_norm_sq_total=jnp.asarray(o_n))
+            idx.ids = jnp.asarray(ids_n)
+            idx.counts = jnp.asarray(n_live.copy())
+            # list-shaped caches are stale after the fold
+            idx.__dict__.pop("_staged_consts_cache", None)
+            idx.__dict__.pop("_shard_pad_cache", None)
+            # reset delta + bitmaps
+            self.d_codes[:] = 0
+            self.d_factors[:] = 0.0
+            self.d_o_norm[:] = 0.0
+            self.d_ids[:] = -1
+            self.live_delta[:] = False
+            self.fill[:] = 0
+            self.live_main = ids_n >= 0
+            self.n_tombstones = 0
+            self._id_loc = {
+                int(ids_n[ci, si]): (False, int(ci), int(si))
+                for ci, si in zip(*np.nonzero(ids_n >= 0))}
+            self.compacted_seq = self.seq
+            self.compactions += 1
+            self.folded_rows += folded
+            self._publish()
+            return True
+
+    # ------------------------------------------------------------------
+    # background compactor (host thread, dispatcher-loop discipline)
+    # ------------------------------------------------------------------
+    @property
+    def compacting(self) -> bool:
+        return self._cthread is not None and self._cthread.is_alive()
+
+    def start_compaction(self, interval_s: float = COMPACT_INTERVAL_S,
+                         threshold: float = COMPACT_THRESHOLD) -> None:
+        """Start the background compaction thread: every ``interval_s``
+        (or immediately on a write kick) it folds the delta slab once
+        any cluster's fill reaches ``threshold * l_delta``."""
+        if not 0.0 < threshold <= 1.0:
+            raise ValueError(f"threshold must be in (0, 1], got {threshold}")
+        with self._lock:
+            if self.compacting:
+                return
+            self._cinterval = float(interval_s)
+            self._cthreshold = float(threshold)
+            self._cstop = threading.Event()
+            self._ckick = threading.Event()
+            self._cthread = threading.Thread(
+                target=self._compact_loop, name="ivf-live-compactor",
+                daemon=True)
+            self._cthread.start()
+
+    def stop_compaction(self, timeout: Optional[float] = None) -> None:
+        t = self._cthread
+        if t is None:
+            return
+        self._cstop.set()
+        self._ckick.set()
+        t.join(timeout)
+        if not t.is_alive():
+            self._cthread = None
+
+    def _compact_loop(self) -> None:
+        trigger = max(1, math.ceil(self._cthreshold * self.l_delta))
+        while not self._cstop.is_set():
+            self._ckick.wait(timeout=self._cinterval)
+            self._ckick.clear()
+            if self._cstop.is_set():
+                break
+            if int(self.fill.max(initial=0)) >= trigger:
+                self.compact()

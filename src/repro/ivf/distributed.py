@@ -412,9 +412,25 @@ def sharded_search_batch(mesh: Mesh, axis, index, queries: jnp.ndarray,
     top-k of the refined distances — before the unchanged all-gather
     merge, so probe compaction and refinement stack. See
     ``_sharded_search_fn``.
+
+    Live indices (``repro.ivf.delta``) are SINGLE-DEVICE-ONLY for now:
+    this path shards and scans only the frozen ``(C, L)`` main lists,
+    so an index holding delta rows or tombstones is refused (raises
+    ``ValueError``) rather than silently serving stale/deleted rows.
+    ``compact()`` folds the live state into the main lists, after which
+    mesh serving resumes; an index whose live state is attached but
+    EMPTY passes through bit-identically.
     """
     from repro.kernels import ops
 
+    live = getattr(index, "live", None)
+    if live is not None and not live.snapshot.empty:
+        raise ValueError(
+            "sharded_search_batch scans only the frozen (C, L) lists: "
+            "this index holds live delta rows and/or tombstones that "
+            "the mesh path would silently ignore. Live indices are "
+            "single-device-only for now — compact() before mesh "
+            "serving, or search without mesh=.")
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
     n_shards = math.prod(mesh.shape[ax] for ax in axes)
     queries = jnp.asarray(queries, jnp.float32)

@@ -63,6 +63,12 @@ class IVFIndex:
     packed: PackedCodes               # codes (C, L, Ds), factors (C, L, S, 3)
     g_proj: jnp.ndarray               # (C, D) projected centroids (no mean)
     g_rot: jnp.ndarray                # (C, Ds) packed rotated centroids
+    # live streaming state (delta slab + tombstones + compaction); None
+    # until enable_live()/add()/remove() — the frozen paths never touch
+    # it, keeping the pre-live programs bit-identical (pinned by
+    # tests/test_live.py::test_frozen_path_bit_identical).
+    live: Optional["LiveIndex"] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     # ------------------------------------------------------------------
     @property
@@ -150,6 +156,45 @@ class IVFIndex:
                              self.centroids,
                              min(nprobe, self.n_clusters))[0]
 
+    # ------------------------------------------------------------------
+    # live streaming writes (delta slab + tombstones; repro.ivf.delta)
+    # ------------------------------------------------------------------
+    def enable_live(self, l_delta: int = 64) -> "LiveIndex":
+        """Attach (or return) the live write state: per-cluster delta
+        buffers of static capacity ``(C, l_delta)`` plus tombstone
+        bitmaps (see ``repro.ivf.delta``). Idempotent; ``l_delta`` is
+        fixed at first call (re-enabling with a different value
+        raises). With live state attached but EMPTY (no delta rows, no
+        tombstones) search results stay bit-identical to the frozen
+        index."""
+        if self.live is None:
+            from repro.ivf.delta import LiveIndex
+            self.live = LiveIndex(self, l_delta=l_delta)
+        elif self.live.l_delta != l_delta and l_delta != 64:
+            raise ValueError(
+                f"live state already enabled with l_delta="
+                f"{self.live.l_delta}; cannot re-enable with {l_delta}")
+        return self.live
+
+    def add(self, vectors, ids=None) -> np.ndarray:
+        """Stream new vectors into the index (auto-enables live state
+        with the default delta capacity). Immediately searchable by the
+        next ``search_batch`` dispatch; serving is never paused. See
+        ``repro.ivf.delta.LiveIndex.add``."""
+        return self.enable_live().add(vectors, ids)
+
+    def remove(self, ids) -> int:
+        """Tombstone ids (build-time or streamed). Immediately filtered
+        from every search; rows are physically dropped at the next
+        ``compact()``. See ``repro.ivf.delta.LiveIndex.remove``."""
+        return self.enable_live().remove(ids)
+
+    def compact(self) -> bool:
+        """Fold delta rows into the main lists and drop tombstoned
+        rows (no-op without live state). See
+        ``repro.ivf.delta.LiveIndex.compact``."""
+        return False if self.live is None else self.live.compact()
+
     def _validate_k(self, k: int, nprobe: int) -> None:
         """Fail loudly when ``k`` exceeds the padded candidate count
         ``min(nprobe, C) * L`` — beyond it every extra row is
@@ -173,6 +218,22 @@ class IVFIndex:
         if nprobe < 1:
             raise ValueError(f"nprobe must be >= 1, got {nprobe}")
         eff_probe = min(nprobe, self.n_clusters)
+        if self.live is not None:
+            # Live indices drift away from the padded bound both ways:
+            # tombstones shrink a list below L, delta rows grow it past
+            # L. The tightest structural bound is the sum of the
+            # eff_probe largest per-cluster LIVE row counts (main minus
+            # tombstones plus delta occupancy).
+            cand = self.live.candidate_capacity(eff_probe)
+            if k > cand:
+                raise ValueError(
+                    f"k={k} exceeds the live candidate capacity of this "
+                    f"search: the {eff_probe} largest per-cluster live "
+                    f"row counts (tombstones excluded, delta rows "
+                    f"included) sum to {cand} "
+                    f"(C={self.n_clusters} clusters). Raise nprobe, "
+                    f"lower k, or add more vectors.")
+            return
         l_max = int(self.ids.shape[1])
         cand = eff_probe * l_max
         if k > cand:
@@ -266,6 +327,38 @@ class IVFIndex:
         pca_mean = saq.pca.mean if saq.pca is not None else None
         pca_comp = saq.pca.components if saq.pca is not None else None
         pb = tuple(prefix_bits) if prefix_bits is not None else None
+        # One snapshot reference per dispatch: every mutation publishes
+        # a new immutable LiveSnapshot, so this read is the only
+        # synchronization a search needs (no torn main/delta pairs).
+        snap = self.live.snapshot if self.live is not None else None
+        if snap is not None:
+            lt = int(snap.ids.shape[1]) + int(snap.d_ids.shape[1])
+            if refine is not None:
+                eff_probe = min(nprobe, self.n_clusters)
+                k_ref = refine.k_refine(k, eff_probe * lt)
+                coarse = refine.coarse_prefix_bits(
+                    lay.col_offsets, lay.seg_bits, pb)
+                dists, ids = _search_batch_live_refine_impl(
+                    queries, self.centroids, pca_mean, pca_comp,
+                    saq.packed_rot, snap.codes, snap.factors, snap.o_norm,
+                    self.g_proj, self.g_rot, snap.ids, snap.live_main,
+                    snap.d_codes, snap.d_factors, snap.d_o_norm,
+                    snap.d_ids, snap.live_delta,
+                    col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
+                    prefix_bits=pb, coarse_prefix=coarse,
+                    bitpacked=self.packed.bitpacked, k=k, k_refine=k_ref,
+                    nprobe=nprobe, probe_backend=backend)
+                return ids, dists
+            dists, ids = _search_batch_live_impl(
+                queries, self.centroids, pca_mean, pca_comp,
+                saq.packed_rot, snap.codes, snap.factors, snap.o_norm,
+                self.g_proj, self.g_rot, snap.ids, snap.live_main,
+                snap.d_codes, snap.d_factors, snap.d_o_norm,
+                snap.d_ids, snap.live_delta,
+                col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
+                prefix_bits=pb, bitpacked=self.packed.bitpacked,
+                k=k, nprobe=nprobe, probe_backend=backend)
+            return ids, dists
         if refine is not None:
             eff_probe = min(nprobe, self.n_clusters)
             k_ref = refine.k_refine(k, eff_probe * int(self.ids.shape[1]))
@@ -324,6 +417,12 @@ class IVFIndex:
         reduce to exhaustive full-width ranking and agree on ids with
         matching distances.
         """
+        if self.live is not None and not self.live.snapshot.empty:
+            raise ValueError(
+                "search_multistage scans only the frozen (C, L) lists: "
+                "this index holds live delta rows and/or tombstones that "
+                "the staged path would silently ignore. compact() first "
+                "(folds deltas, drops tombstones), or use search_batch.")
         self._validate_k(k, nprobe)
         q = jnp.asarray(q, jnp.float32)
         probes = np.asarray(self._probe(q, nprobe))
@@ -583,6 +682,149 @@ def _search_batch_refine_impl(queries, centroids, pca_mean, pca_comp,
     dist_r = jnp.where(pid_r >= 0, dist_r, jnp.inf)
     # final tie-stable (distance, global probe-major position) top-k —
     # the same key pair as the sharded merge
+    perm = jnp.lexsort((pos, dist_r), axis=-1)[:, :k]
+    return (jnp.take_along_axis(dist_r, perm, axis=1),
+            jnp.take_along_axis(pid_r, perm, axis=1))
+
+
+def _merged_probe_dists(codes, factors, o_norm, ids, live_m,
+                        d_codes, d_factors, d_o_norm, d_ids, live_d,
+                        g_proj, g_rot, fq, fq_rot, probes,
+                        col_offsets, seg_bits, prefix_bits, bitpacked,
+                        probe_backend):
+    """Live scan body: main lists AND the delta slab, each through the
+    unchanged ``_probe_dists`` (same kernels, same slab layouts),
+    tombstones filtered, concatenated along the candidate axis ->
+    (dist, pid) of shape (NQ, P, L + L_delta).
+
+    The flat index of the concatenated axis IS the live position key:
+    ``p * (L + L_delta) + slot`` with main rows at slots ``< L`` and
+    delta rows after — a monotone remap of the frozen ``p * L + l``
+    order, so ``lax.top_k``'s lowest-index tie-break ranks main rows
+    of a probe before its delta rows and earlier probes before later
+    ones, exactly extending the frozen tie-stable order. Tombstoned
+    lanes mask to ``inf``/``-1`` like padding lanes, so the ragged-tail
+    contract of ``_validate_k`` carries over unchanged."""
+    dist_m, pid_m = _probe_dists(
+        codes, factors, o_norm, g_proj, g_rot, ids, fq, fq_rot, probes,
+        col_offsets, seg_bits, prefix_bits, bitpacked, probe_backend)
+    dist_d, pid_d = _probe_dists(
+        d_codes, d_factors, d_o_norm, g_proj, g_rot, d_ids, fq, fq_rot,
+        probes, col_offsets, seg_bits, prefix_bits, bitpacked,
+        probe_backend)
+    probesi = probes.astype(jnp.int32)
+    lm = live_m[probesi]                                    # (NQ, P, L)
+    ld = live_d[probesi]                                    # (NQ, P, Ld)
+    dist_m = jnp.where(lm, dist_m, jnp.inf)
+    pid_m = jnp.where(lm, pid_m, -1)
+    dist_d = jnp.where(ld, dist_d, jnp.inf)
+    pid_d = jnp.where(ld, pid_d, -1)
+    return (jnp.concatenate([dist_m, dist_d], axis=2),
+            jnp.concatenate([pid_m, pid_d], axis=2))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("col_offsets", "seg_bits", "prefix_bits",
+                                    "bitpacked", "k", "nprobe",
+                                    "probe_backend"))
+def _search_batch_live_impl(queries, centroids, pca_mean, pca_comp,
+                            packed_rot, codes, factors, o_norm, g_proj,
+                            g_rot, ids, live_m, d_codes, d_factors,
+                            d_o_norm, d_ids, live_d, col_offsets, seg_bits,
+                            prefix_bits, bitpacked, k, nprobe,
+                            probe_backend):
+    """``_search_batch_impl`` over a live snapshot: the merged
+    main+delta scan with tombstone filtering, ranked by the same flat
+    tie-stable top-k. With empty delta buffers and no tombstones this
+    is bit-identical to the frozen program (the masks are identity on
+    live lanes, the delta lanes are all ``inf``, and the position remap
+    is monotone) — pinned by tests/test_live.py."""
+    nprobe = min(nprobe, centroids.shape[0])
+    probes = _probe_select(queries, centroids, nprobe)
+    fq, fq_rot = _transform_queries(queries, pca_mean, pca_comp, packed_rot)
+    dist, pid = _merged_probe_dists(
+        codes, factors, o_norm, ids, live_m,
+        d_codes, d_factors, d_o_norm, d_ids, live_d,
+        g_proj, g_rot, fq, fq_rot, probes,
+        col_offsets, seg_bits, prefix_bits, bitpacked, probe_backend)
+    nq = queries.shape[0]
+    neg_top, idx = jax.lax.top_k(-dist.reshape(nq, -1), k)
+    return -neg_top, jnp.take_along_axis(pid.reshape(nq, -1), idx, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("col_offsets", "seg_bits", "prefix_bits",
+                                    "coarse_prefix", "bitpacked", "k",
+                                    "k_refine", "nprobe", "probe_backend"))
+def _search_batch_live_refine_impl(queries, centroids, pca_mean, pca_comp,
+                                   packed_rot, codes, factors, o_norm,
+                                   g_proj, g_rot, ids, live_m, d_codes,
+                                   d_factors, d_o_norm, d_ids, live_d,
+                                   col_offsets, seg_bits, prefix_bits,
+                                   coarse_prefix, bitpacked, k, k_refine,
+                                   nprobe, probe_backend):
+    """``_search_batch_refine_impl`` over a live snapshot. Phase 1 runs
+    the merged coarse scan (main + delta, tombstones filtered BEFORE
+    survivor selection, so dead rows never consume ``k_refine`` slots);
+    phase 2 gathers each survivor's full-width row from whichever slab
+    the flat position addresses (``slot < L`` -> main, else delta) and
+    re-scores through the unchanged ``ops.refine_scan``. The final
+    lexsort key is the live flat position, extending the frozen
+    tie-stable order (see ``_merged_probe_dists``)."""
+    from repro.kernels import ops
+
+    nprobe = min(nprobe, centroids.shape[0])
+    probes = _probe_select(queries, centroids, nprobe)
+    fq, fq_rot = _transform_queries(queries, pca_mean, pca_comp, packed_rot)
+    (codes_c, fac_c, g_rot_c, fq_rot_c, co_c, sb_c, pb_c) = _coarse_view(
+        codes, factors, g_rot, fq_rot, col_offsets, seg_bits,
+        coarse_prefix, bitpacked)
+    (d_codes_c, d_fac_c, _, _, _, _, _) = _coarse_view(
+        d_codes, d_factors, g_rot, fq_rot, col_offsets, seg_bits,
+        coarse_prefix, bitpacked)
+    dist_c, _ = _merged_probe_dists(
+        codes_c, fac_c, o_norm, ids, live_m,
+        d_codes_c, d_fac_c, d_o_norm, d_ids, live_d,
+        g_proj, g_rot_c, fq, fq_rot_c, probes,
+        co_c, sb_c, pb_c, bitpacked, probe_backend)
+    nq = queries.shape[0]
+    l = ids.shape[1]
+    l_delta = d_ids.shape[1]
+    lt = l + l_delta
+    _, pos = jax.lax.top_k(-dist_c.reshape(nq, -1), k_refine)   # (NQ, R)
+    csel = jnp.take_along_axis(probes.astype(jnp.int32), pos // lt, axis=1)
+    slot = pos % lt                                             # (NQ, R)
+    in_delta = slot >= l
+    slot_m = jnp.clip(slot, 0, l - 1)
+    slot_d = jnp.clip(slot - l, 0, l_delta - 1)
+
+    def pick(main, delta):
+        gm = main[csel, slot_m]
+        gd = delta[csel, slot_d]
+        w = in_delta.reshape(in_delta.shape + (1,) * (gm.ndim - 2))
+        return jnp.where(w, gd, gm)
+
+    codes_r = pick(codes, d_codes)                              # (NQ, R, ·)
+    fac_r = pick(factors, d_factors)                            # (NQ, R, S, 3)
+    o_r = pick(o_norm, d_o_norm)                                # (NQ, R)
+    pid_r = pick(ids, d_ids)                                    # (NQ, R)
+    alive_r = pick(live_m, live_d)                              # (NQ, R)
+    qres_r = fq_rot[:, None, :] - g_rot[csel]                   # (NQ, R, Ds)
+    # residual norm in the FULL projection basis (dropped dims count)
+    qn_r = jnp.sum((fq[:, None, :] - g_proj[csel]) ** 2, axis=-1)
+    r = nq * k_refine
+    dist_r = ops.refine_scan(
+        codes_r.reshape(r, codes_r.shape[-1]),
+        fac_r.reshape(r, *fac_r.shape[2:]),
+        o_r.reshape(r), qres_r.reshape(r, qres_r.shape[-1]),
+        qn_r.reshape(r),
+        col_offsets=col_offsets, seg_bits=seg_bits,
+        prefix_bits=prefix_bits, bitpacked=bitpacked,
+        backend=probe_backend).reshape(nq, k_refine)
+    # tombstoned/padding survivors mask back to inf (phase 1 already
+    # starves them of slots; this keeps crossover rows dead too)
+    pid_r = jnp.where(alive_r, pid_r, -1)
+    dist_r = jnp.where(pid_r >= 0, dist_r, jnp.inf)
     perm = jnp.lexsort((pos, dist_r), axis=-1)[:, :k]
     return (jnp.take_along_axis(dist_r, perm, axis=1),
             jnp.take_along_axis(pid_r, perm, axis=1))

@@ -15,17 +15,41 @@ every point of an overwriting save (no rmtree-the-only-copy window) —
 and ``load_index`` transparently falls back to the ``.bak`` survivor,
 so a restart after a mid-swap crash still serves.
 
+Format v4 ("live"): a v3 base PLUS write-ahead-log segments. The base
+arrays are the frozen main lists exactly as of the index's last
+compaction (``base_seq`` in the manifest — the main lists only change
+at a fold, so they ARE the state at that sequence number); every
+add/remove past ``base_seq`` lives in ``wal/seg-<first>-<last>.npz``
+segments (columnar op records carrying the ENCODED rows, so replay
+never re-runs quantization) that ``load_index`` replays in sequence
+order through the normal live-write internals — a delta buffer that
+fills mid-replay compacts in place, exactly like live traffic.
+``append_wal`` flushes the ops accumulated since the last save/flush as
+ONE new segment (staged at ``.tmp`` inside ``wal/`` and renamed into
+place), so a serving index can checkpoint its write stream without
+rewriting the base. A frozen index (no live state) still writes v3
+byte-for-byte; v1-v3 directories still load.
+
+``load_index`` also runs full crash recovery for the swap sequence
+(``_recover_dir``): a complete ``manifest.json`` marks a complete copy
+(it is always written LAST), so every intermediate state a crash can
+leave — partial or complete ``.tmp``, parked ``.bak``, missing
+``path`` — is detected, the NEWEST complete copy is promoted back to
+``path``, and the leftovers are cleaned.
+
 Legacy directories still load and are auto-repacked to the bit-packed
 in-memory form: v2 (one widest-dtype codes array) and v1 (per-segment
 seg{i}_* arrays). A save after loading either writes v3.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
+import re
 import shutil
-from typing import Any, Dict
+from typing import Any, Dict, List
 
 import jax.numpy as jnp
 import numpy as np
@@ -37,11 +61,132 @@ from repro.core.types import (PackedCodes, QuantPlan, SegmentSpec,
 from .index import IVFIndex
 
 FORMAT_VERSION = 3
+LIVE_FORMAT_VERSION = 4
+WAL_DIR = "wal"
+_WAL_SEG_RE = re.compile(r"^seg-(\d{12})-(\d{12})\.npz$")
 
 
 def _save_arrays(d: str, arrays: Dict[str, Any]) -> None:
     for name, arr in arrays.items():
         np.save(os.path.join(d, f"{name}.npy"), np.asarray(arr))
+
+
+def _wal_seg_path(wal_dir: str, first: int, last: int) -> str:
+    return os.path.join(wal_dir, f"seg-{first:012d}-{last:012d}.npz")
+
+
+def _write_wal_segment(wal_dir: str, ops, lay, bitpacked: bool) -> str:
+    """Serialize one run of op-log records as a columnar npz segment,
+    staged at ``<name>.tmp`` and renamed into place (atomic on POSIX,
+    extending the save swap discipline down to WAL appends). Code rows
+    are stored in the v3 canonical bit-packed word form — an unpacked
+    in-memory index packs its rows here, so replay into the (always
+    bit-packed) loaded index appends the right layout."""
+    n = len(ops)
+    width = lay.n_words
+    codes = np.zeros((n, width), np.uint32)
+    factors = np.zeros((n, lay.n_segments, 3), np.float32)
+    o_norm = np.zeros((n,), np.float32)
+    seq = np.zeros((n,), np.int64)
+    kind = np.zeros((n,), np.uint8)        # 0 = add, 1 = remove
+    vid = np.zeros((n,), np.int64)
+    cluster = np.full((n,), -1, np.int64)
+    for i, op in enumerate(ops):
+        seq[i] = op.seq
+        vid[i] = op.vid
+        if op.kind == "add":
+            kind[i] = 0
+            cluster[i] = op.cluster
+            row = np.asarray(op.codes)
+            if not bitpacked:
+                row = np.asarray(pack_bits(jnp.asarray(row)[None], lay))[0]
+            codes[i] = row
+            factors[i] = op.factors
+            o_norm[i] = op.o_norm
+        else:
+            kind[i] = 1
+    first, last = int(seq.min()), int(seq.max())
+    final = _wal_seg_path(wal_dir, first, last)
+    staged = final + ".tmp"
+    with open(staged, "wb") as f:
+        np.savez(f, seq=seq, kind=kind, vid=vid, cluster=cluster,
+                 codes=codes, factors=factors, o_norm=o_norm)
+    os.replace(staged, final)
+    return final
+
+
+def _read_wal_ops(path: str, after_seq: int) -> List:
+    """Read every complete WAL segment under ``<path>/wal`` and return
+    the op records with ``seq > after_seq`` in sequence order.
+    Incomplete appends (``*.tmp`` staging files) and unrelated names are
+    ignored; a torn/corrupted segment raises CorruptIndexError."""
+    from repro.ivf.delta import _Op
+
+    wal_dir = os.path.join(path, WAL_DIR)
+    if not os.path.isdir(wal_dir):
+        return []
+    segs = sorted(name for name in os.listdir(wal_dir)
+                  if _WAL_SEG_RE.match(name))
+    out: Dict[int, Any] = {}
+    for name in segs:
+        fp = os.path.join(wal_dir, name)
+        try:
+            with np.load(fp) as z:
+                seq = z["seq"]
+                kind = z["kind"]
+                vid = z["vid"]
+                cluster = z["cluster"]
+                codes = z["codes"]
+                factors = z["factors"]
+                o_norm = z["o_norm"]
+        except Exception as e:
+            raise CorruptIndexError(
+                f"failed to read WAL segment {fp!r} — truncated or "
+                f"corrupted ({e})") from e
+        for i in range(seq.shape[0]):
+            s = int(seq[i])
+            if s <= after_seq or s in out:
+                continue
+            if kind[i] == 0:
+                out[s] = _Op(s, "add", int(vid[i]), int(cluster[i]),
+                             codes[i].copy(), factors[i].copy(),
+                             float(o_norm[i]))
+            else:
+                out[s] = _Op(s, "remove", int(vid[i]), -1, None, None, 0.0)
+    return [out[s] for s in sorted(out)]
+
+
+def append_wal(index: IVFIndex, path: str) -> int:
+    """Flush the index's un-persisted ops to ``<path>/wal`` as one new
+    segment WITHOUT rewriting the base arrays — the incremental
+    checkpoint of a serving live index. ``path`` must hold a v4 save of
+    this index (``save_index`` with live state attached). Returns the
+    number of ops flushed (0 when disk is already current)."""
+    live = index.live
+    if live is None:
+        raise ValueError(
+            "append_wal needs a live index (enable_live()/add()/"
+            "remove() first); a frozen index has no write stream")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("format", 1) < LIVE_FORMAT_VERSION:
+        raise ValueError(
+            f"append_wal target {path!r} is a v{manifest.get('format', 1)} "
+            f"save (no WAL); save_index the live index first")
+    wal_dir = os.path.join(path, WAL_DIR)
+    os.makedirs(wal_dir, exist_ok=True)
+    disk_seq = int(manifest.get("base_seq", 0))
+    for name in os.listdir(wal_dir):
+        m = _WAL_SEG_RE.match(name)
+        if m:
+            disk_seq = max(disk_seq, int(m.group(2)))
+    with live._lock:
+        ops = live.pending_ops(disk_seq)
+        if not ops:
+            return 0
+        _write_wal_segment(wal_dir, ops, index.packed.layout,
+                           index.packed.bitpacked)
+        return len(ops)
 
 
 def save_index(index: IVFIndex, path: str) -> None:
@@ -51,37 +196,58 @@ def save_index(index: IVFIndex, path: str) -> None:
     os.makedirs(tmp)
     saq = index.saq
     lay = index.packed.layout
-    # v3 canonical form: the code buffer goes to disk bit-packed
-    packed = index.packed.pack()
-    manifest = {
-        "format": FORMAT_VERSION,
-        "config": dataclasses.asdict(saq.config) | {"plan": None},
-        "plan": [[s.start, s.stop, s.bits] for s in saq.plan.segments],
-        "dim": saq.plan.dim,
-        "n_segments": lay.n_segments,
-        "has_pca": saq.pca is not None,
-        "bitpacked": True,
-        "n_words": lay.n_words,
-        "total_code_bits": lay.total_code_bits,
-    }
-    arrays: Dict[str, Any] = {
-        "centroids": index.centroids, "ids": index.ids,
-        "counts": index.counts,
-        "codes": packed.codes,
-        "factors": packed.factors,
-        "o_norm_total": packed.o_norm_sq_total,
-        "g_proj": index.g_proj, "g_rot": index.g_rot,
-        "variances": saq.variances,
-    }
-    for i, rot in enumerate(saq.rotations):
-        arrays[f"seg{i}_rotation"] = rot
-    if saq.pca is not None:
-        arrays["pca_mean"] = saq.pca.mean
-        arrays["pca_components"] = saq.pca.components
-        arrays["pca_variances"] = saq.pca.variances
-    _save_arrays(tmp, arrays)
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+    live = index.live
+    # Hold the live write lock across staging so the base arrays, the
+    # op log and the manifest counters are one consistent cut (writes
+    # admitted after the save see it as "before the checkpoint").
+    lock = live._lock if live is not None else contextlib.nullcontext()
+    with lock:
+        # v3 canonical form: the code buffer goes to disk bit-packed
+        packed = index.packed.pack()
+        manifest = {
+            "format": FORMAT_VERSION if live is None
+            else LIVE_FORMAT_VERSION,
+            "config": dataclasses.asdict(saq.config) | {"plan": None},
+            "plan": [[s.start, s.stop, s.bits] for s in saq.plan.segments],
+            "dim": saq.plan.dim,
+            "n_segments": lay.n_segments,
+            "has_pca": saq.pca is not None,
+            "bitpacked": True,
+            "n_words": lay.n_words,
+            "total_code_bits": lay.total_code_bits,
+        }
+        arrays: Dict[str, Any] = {
+            "centroids": index.centroids, "ids": index.ids,
+            "counts": index.counts,
+            "codes": packed.codes,
+            "factors": packed.factors,
+            "o_norm_total": packed.o_norm_sq_total,
+            "g_proj": index.g_proj, "g_rot": index.g_rot,
+            "variances": saq.variances,
+        }
+        for i, rot in enumerate(saq.rotations):
+            arrays[f"seg{i}_rotation"] = rot
+        if saq.pca is not None:
+            arrays["pca_mean"] = saq.pca.mean
+            arrays["pca_components"] = saq.pca.components
+            arrays["pca_variances"] = saq.pca.variances
+        _save_arrays(tmp, arrays)
+        if live is not None:
+            # v4: the base arrays above are the main lists as of the
+            # last compaction (they only change at a fold), i.e. the
+            # state at base_seq; everything after rides in the WAL.
+            manifest["base_seq"] = live.compacted_seq
+            manifest["l_delta"] = live.l_delta
+            manifest["next_id"] = live.next_id
+            os.makedirs(os.path.join(tmp, WAL_DIR))
+            ops = live.pending_ops(live.compacted_seq)
+            if ops:
+                _write_wal_segment(os.path.join(tmp, WAL_DIR), ops, lay,
+                                   index.packed.bitpacked)
+        # manifest goes LAST: its presence marks the copy as complete
+        # (what _recover_dir keys on)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
     # Overwrite swap with no unrecoverable window: the old `path` is
     # RENAMED to `path.bak` (never deleted while it is the only copy),
     # the fully-written tmp renames into place, and only then does the
@@ -110,16 +276,64 @@ class CorruptIndexError(ValueError):
     corrupted arrays) — refusing to serve garbage results."""
 
 
+def _complete(d: str) -> bool:
+    """A copy is complete iff its manifest exists — the manifest is
+    always the LAST file a save writes into the staging dir."""
+    return os.path.isfile(os.path.join(d, "manifest.json"))
+
+
+def _recover_dir(path: str) -> None:
+    """Crash recovery for the ``save_index`` swap sequence: inspect
+    ``path`` / ``path.tmp`` / ``path.bak``, promote the NEWEST complete
+    copy back to ``path`` and clean every leftover. Handles all the
+    intermediate states the sequence (stage tmp -> rmtree stale bak ->
+    rename path to bak -> rename tmp to path -> rmtree bak) can leave:
+
+    * partial ``.tmp`` (died while staging): junk, removed; ``path``
+      (plus possibly a stale ``.bak``) is current.
+    * complete ``.tmp`` with ``path`` present (died before/inside the
+      swap renames): the tmp copy is the newest — finish the swap.
+    * complete ``.tmp`` with ``path`` missing (died between parking the
+      old copy at ``.bak`` and promoting tmp): promote tmp, drop bak.
+    * ``path`` missing with only a complete ``.bak`` (died after
+      parking, with tmp already promoted-or-lost): restore the backup.
+    * ``path`` present with a leftover ``.bak`` (died before the final
+      backup cleanup): the backup is older — removed.
+
+    Idempotent; a second crash during recovery leaves a state this
+    function still recognizes (every mutation is itself a rename or a
+    leftover delete)."""
+    tmp, bak = path + ".tmp", path + ".bak"
+    if _complete(tmp):
+        # A fully staged save died before completing the swap: tmp is
+        # the newest complete copy. Re-run the swap tail.
+        if os.path.isdir(bak):
+            shutil.rmtree(bak)
+        if _complete(path):
+            os.replace(path, bak)
+        elif os.path.isdir(path):
+            shutil.rmtree(path)      # unloadable junk in the way
+        os.replace(tmp, path)
+        if os.path.isdir(bak):
+            shutil.rmtree(bak)
+        return
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)           # partial stage: junk
+    if not _complete(path):
+        if _complete(bak):
+            # died between parking the old index at .bak and renaming
+            # the new one into place (the new copy is gone with tmp):
+            # the backup holds the only loadable copy — restore it.
+            if os.path.isdir(path):
+                shutil.rmtree(path)
+            os.replace(bak, path)
+        return
+    if os.path.isdir(bak):
+        shutil.rmtree(bak)           # stale backup from an older crash
+
+
 def load_index(path: str) -> IVFIndex:
-    # Crash recovery for the save_index swap: if a save died between
-    # parking the old index at `.bak` and renaming the new one into
-    # place, `path` is missing but the backup holds the only loadable
-    # copy — serve from it instead of failing the restart. (The next
-    # successful save_index(path) cleans the backup up.)
-    if not os.path.exists(os.path.join(path, "manifest.json")):
-        bak = path + ".bak"
-        if os.path.exists(os.path.join(bak, "manifest.json")):
-            path = bak
+    _recover_dir(path)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
 
@@ -197,7 +411,18 @@ def load_index(path: str) -> IVFIndex:
         g_rot = jnp.concatenate(
             [arr(f"seg{i}_grot") for i in range(n_seg)], axis=-1)
 
-    return IVFIndex(
+    index = IVFIndex(
         saq=saq, centroids=arr("centroids"), ids=arr("ids"),
         counts=arr("counts"), packed=packed,
         g_proj=arr("g_proj"), g_rot=g_rot)
+    if fmt >= 4:
+        # v4: re-attach the live state and replay the WAL on top of the
+        # base (which is the main lists as of base_seq). Replay runs
+        # through the normal live-write internals, so a delta buffer
+        # that fills mid-replay compacts exactly like live traffic.
+        live = index.enable_live(l_delta=int(manifest["l_delta"]))
+        ops = _read_wal_ops(path, int(manifest.get("base_seq", 0)))
+        if ops:
+            live.replay(ops)
+        live.next_id = max(live.next_id, int(manifest.get("next_id", 0)))
+    return index

@@ -92,6 +92,13 @@ class RefineSpec:
 
     def k_refine(self, k: int, capacity: int) -> int:
         """Static phase-1 survivor count: ``min(ceil(oversample * k),
-        capacity)`` and never below ``k`` (``capacity = min(nprobe, C)
-        * L``, the padded candidate count of the probe set)."""
+        capacity)`` and never below ``k``. ``capacity`` is the padded
+        candidate count of the probe set: ``min(nprobe, C) * L`` on a
+        frozen index, ``min(nprobe, C) * (L + L_delta)`` on a live one
+        (the delta slab adds lanes to every probed cluster — see
+        ``repro.ivf.delta``). A larger live capacity can only ADD
+        all-``inf`` padding survivors relative to the frozen clamp, so
+        the frozen path's final top-k is unaffected — part of the
+        empty-live bit-identity contract pinned by tests/test_live.py.
+        """
         return max(k, min(int(math.ceil(self.oversample * k)), capacity))

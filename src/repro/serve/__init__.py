@@ -6,4 +6,4 @@ from .engine import (ServeConfig, ServeState, make_prefill_step,  # noqa: F401
                      make_decode_step, generate)
 from .sampling import sample_logits  # noqa: F401
 from .ann_engine import (AnnEngine, BatchPolicy, DEFAULT_TIERS,  # noqa: F401
-                         EngineStats)
+                         EngineClosed, EngineStats)

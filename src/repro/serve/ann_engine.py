@@ -46,7 +46,27 @@ fused scan on batch=1 and thrashes the jit cache with ad-hoc shapes.
   ``probe_overflow_queries`` count them, and ``warmup`` compiles both
   programs per shape).
 
-See ``docs/serving.md`` for the architecture and a throughput recipe;
+* **Live writes** — ``add`` / ``remove`` admit streaming inserts and
+  deletes into the index's live state (``repro.ivf.delta``: delta
+  slabs + tombstones) without ever pausing dispatch: searches keep
+  serving the previous immutable snapshot and the next tick sees the
+  new rows. The engine manages the background compaction thread
+  (started lazily with the first write, stopped by ``stop()``); an
+  ``add`` hitting a full delta buffer triggers one synchronous fold
+  and retries, or — with ``compaction=False`` — is REJECTED with
+  ``ClusterFullError`` and counted in ``EngineStats.rejected_adds``
+  (never silently dropped).
+* **Shutdown** — ``stop()`` closes admission and FAILS the backlog:
+  requests still queued when the dispatcher exits get their Future
+  resolved with :class:`EngineClosed` (counted in
+  ``EngineStats.closed_requests``), and later ``submit`` calls raise
+  it too. Waiting out a backlog that may never fit the remaining
+  lifetime is the caller's call, not the engine's — the old drain
+  behavior could hang ``stop()`` (and every pending ``.result()``)
+  forever on a wedged device.
+
+See ``docs/serving.md`` for the architecture and a throughput recipe,
+``docs/live_index.md`` for the live-write design;
 ``benchmarks/batch_qps.py`` measures engine QPS under Poisson arrivals.
 """
 from __future__ import annotations
@@ -80,6 +100,15 @@ DEFAULT_TIERS = {
                            coarse_dim_frac=0.5),
     "exact": None,
 }
+
+
+class EngineClosed(RuntimeError):
+    """The engine was stopped: raised by ``submit`` after ``stop()``
+    (and before ``start()``), and set on every Future still queued when
+    the dispatcher shut down. A closed request was never dispatched —
+    re-submit it to a started engine to run it. Subclasses
+    RuntimeError, so pre-existing ``except RuntimeError`` admission
+    handling keeps working."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -212,6 +241,16 @@ class EngineStats:
     probe_fallbacks: int = 0   # mesh dispatches that overflowed the
     #                            probe budget and re-ran uncompacted
     probe_overflow_queries: int = 0  # overflowed (query, shard) pairs
+    closed_requests: int = 0   # futures failed with EngineClosed at
+    #                            stop() (never dispatched; also counted
+    #                            in `failed` — they did fail)
+    adds: int = 0              # vectors admitted via AnnEngine.add
+    removes: int = 0           # ids tombstoned via AnnEngine.remove
+    rejected_adds: int = 0     # add vectors rejected (ClusterFullError
+    #                            surfaced to the caller, incl. with
+    #                            compaction disabled — never dropped)
+    compactions: int = 0       # delta-slab folds observed on the live
+    #                            index (background or synchronous)
     # Per-tier traffic-class counters, keyed by the submitted tier name
     # (requests with tier=None count under "exact" — they run the same
     # single-phase program). Rows/survivors count device work, so they
@@ -258,11 +297,16 @@ class AnnEngine:
     """
 
     def __init__(self, index, policy: Optional[BatchPolicy] = None,
-                 mesh=None, axis="data"):
+                 mesh=None, axis="data", compaction: bool = True):
         self.index = index
         self.policy = policy or BatchPolicy()
         self.mesh = mesh
         self.axis = axis
+        # live-write compaction policy: True runs the background
+        # compactor (repro.ivf.delta) while the engine is running and
+        # folds synchronously when an add hits a full delta buffer;
+        # False surfaces ClusterFullError to the caller instead.
+        self.compaction = compaction
         self._queue: "queue.Queue[_Request]" = queue.Queue()
         self._stats = EngineStats()
         self._lock = threading.Lock()
@@ -284,33 +328,53 @@ class AnnEngine:
         self._thread = threading.Thread(
             target=self._loop, name="ann-engine-dispatch", daemon=True)
         self._thread.start()
+        live = getattr(self.index, "live", None)
+        if live is not None and self.compaction:
+            live.start_compaction()
         return self
 
     def stop(self, timeout: Optional[float] = None) -> None:
-        """Stop admission and drain: queued requests still complete."""
+        """Stop admission and CLOSE the engine: the dispatcher finishes
+        its in-flight tick and exits; requests still queued behind it
+        get their Future failed with :class:`EngineClosed` (counted in
+        ``stats.closed_requests``) instead of being drained. Draining
+        could block ``stop()`` — and every pending ``.result()`` —
+        indefinitely on a slow or wedged device; failing fast hands the
+        backlog back to callers, who can re-submit after ``start()``.
+        The background compaction thread (if running) stops first."""
+        live = getattr(self.index, "live", None)
+        if live is not None:
+            live.stop_compaction()
         if self._thread is None:
             return
         # Setting the flag under the admission lock makes (flag check +
-        # enqueue) atomic against (flag set + drain): any submit that
+        # enqueue) atomic against (flag set + sweep): any submit that
         # passed the check has already enqueued, so the sweep below
         # catches it and no Future is ever left unresolved.
         with self._lock:
             self._stop.set()
         self._thread.join(timeout)
         if self._thread.is_alive():
-            # join timed out mid-dispatch: admission stays closed and the
-            # dispatcher keeps draining; a later stop()/start() resolves
-            # once it exits. Never run the sweep against a live thread.
+            # join timed out mid-dispatch: admission stays closed; a
+            # later stop() sweeps once the dispatcher exits. Never run
+            # the sweep against a live thread (it could be mid-tick on
+            # a request the sweep would double-resolve).
             return
         self._thread = None
-        leftovers = []
+        n_closed = 0
         while True:
             try:
-                leftovers.append(self._queue.get_nowait())
+                r = self._queue.get_nowait()
             except queue.Empty:
                 break
-        if leftovers:
-            self._dispatch_tick(leftovers)
+            r.future.set_exception(EngineClosed(
+                "AnnEngine stopped before this request was dispatched; "
+                "re-submit after start()"))
+            n_closed += 1
+        if n_closed:
+            with self._lock:
+                self._stats.closed_requests += n_closed
+                self._stats.failed += n_closed
 
     def __enter__(self) -> "AnnEngine":
         return self.start()
@@ -349,7 +413,7 @@ class AnnEngine:
         # be dispatched by the drain
         with self._lock:
             if not self.running or self._stop.is_set():
-                raise RuntimeError(
+                raise EngineClosed(
                     "AnnEngine is not running (call start())")
             self._stats.submitted += 1
             tname = tier if tier is not None else "exact"
@@ -357,6 +421,52 @@ class AnnEngine:
                 self._stats.tier_requests.get(tname, 0) + 1
             self._queue.put(_Request(q, key, fut, time.perf_counter()))
         return fut
+
+    # ------------------------------------------------------------------
+    # live-write admission (repro.ivf.delta)
+    # ------------------------------------------------------------------
+    def add(self, vectors, ids=None) -> np.ndarray:
+        """Admit streaming vectors into the live index; returns their
+        ids. Never pauses dispatch: in-flight searches keep the
+        snapshot they started with, the next tick sees the new rows.
+        On a full delta buffer: with ``compaction`` enabled the engine
+        folds synchronously ONCE and retries; with it disabled (or if
+        the retry still overflows) the batch is rejected with
+        ``repro.ivf.delta.ClusterFullError`` — counted in
+        ``stats.rejected_adds``, never silently dropped."""
+        from repro.ivf.delta import ClusterFullError
+
+        live = self.index.enable_live()
+        if self.compaction and self.running and not live.compacting:
+            live.start_compaction()
+        n = np.asarray(vectors, np.float32).reshape(-1, self.index.dim) \
+            .shape[0]
+        try:
+            out = live.add(vectors, ids)
+        except ClusterFullError:
+            if not self.compaction:
+                with self._lock:
+                    self._stats.rejected_adds += n
+                raise
+            live.compact()
+            try:
+                out = live.add(vectors, ids)
+            except ClusterFullError:
+                with self._lock:
+                    self._stats.rejected_adds += n
+                raise
+        with self._lock:
+            self._stats.adds += len(out)
+        return out
+
+    def remove(self, ids) -> int:
+        """Tombstone ids (build-time or streamed); immediately filtered
+        from the next dispatch. Unknown ids raise KeyError (the whole
+        batch is rejected before anything is flipped)."""
+        n = self.index.enable_live().remove(ids)
+        with self._lock:
+            self._stats.removes += n
+        return n
 
     def search(self, query, k: int = 10, nprobe: int = 8,
                prefix_bits: Optional[Sequence[int]] = None,
@@ -384,11 +494,16 @@ class AnnEngine:
 
     @property
     def stats(self) -> EngineStats:
+        live = getattr(self.index, "live", None)
         with self._lock:
             # deep-copy the per-tier dicts: replace() would alias them,
             # and the live dispatcher keeps mutating the originals
             return dataclasses.replace(
                 self._stats,
+                # compaction count lives on the LiveIndex (folds happen
+                # on the compactor thread and inside replay/add paths
+                # the engine never sees) — snapshot it here
+                compactions=live.compactions if live is not None else 0,
                 tier_requests=dict(self._stats.tier_requests),
                 tier_dispatched_rows=dict(self._stats.tier_dispatched_rows),
                 tier_refine_survivors=dict(
@@ -436,7 +551,10 @@ class AnnEngine:
     # dispatcher
     # ------------------------------------------------------------------
     def _loop(self) -> None:
-        while not (self._stop.is_set() and self._queue.empty()):
+        # Exit as soon as the stop flag is up — the backlog is NOT
+        # drained (stop() fails it with EngineClosed); a tick already
+        # in _dispatch_tick still completes.
+        while not self._stop.is_set():
             try:
                 first = self._queue.get(timeout=0.02)
             except queue.Empty:
@@ -483,8 +601,12 @@ class AnnEngine:
         # k_refine phase-2 rows each dispatched row fans out into
         survivors = 0
         if spec is not None:
-            capacity = min(nprobe, self.index.n_clusters) \
-                * int(self.index.ids.shape[1])
+            # live indices scan L + L_delta lanes per probed cluster
+            # (the delta slab rides along every dispatch)
+            live = getattr(self.index, "live", None)
+            lanes = int(self.index.ids.shape[1]) \
+                + (live.l_delta if live is not None else 0)
+            capacity = min(nprobe, self.index.n_clusters) * lanes
             survivors = shape * spec.k_refine(k, capacity)
 
         def _count_tier_rows():

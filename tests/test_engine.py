@@ -1,12 +1,17 @@
 """AnnEngine serving tests: parity with the direct batched path, mixed
 dispatch-group bucketing, batching-policy accounting, admission
-validation, lifecycle, and the empty-cluster / nprobe edge cases."""
+validation, lifecycle (stop fails the backlog with EngineClosed), live
+write admission, and the empty-cluster / nprobe edge cases."""
+import dataclasses
+import threading
+import time
+
 import numpy as np
 import pytest
 
 from repro.core.saq import SAQConfig
-from repro.ivf import IVFIndex
-from repro.serve import AnnEngine, BatchPolicy
+from repro.ivf import ClusterFullError, IVFIndex
+from repro.serve import AnnEngine, BatchPolicy, EngineClosed
 from conftest import decaying_data
 
 
@@ -278,15 +283,122 @@ def test_engine_lifecycle(built):
     _, idx = built
     q = decaying_data(1, 32, alpha=0.7, seed=51)[0]
     eng = AnnEngine(idx)
-    with pytest.raises(RuntimeError):         # not started
-        eng.submit(q)
+    with pytest.raises(RuntimeError):         # not started (EngineClosed
+        eng.submit(q)                         # subclasses RuntimeError)
     eng.start()
-    fut = eng.submit(q, k=5, nprobe=4)
-    eng.stop()                                # drains queued work
-    ids, dists = fut.result(timeout=60)
+    ids, dists = eng.search(q, k=5, nprobe=4)
     assert ids.shape == (5,) and dists.shape == (5,)
-    with pytest.raises(RuntimeError):         # stopped
+    eng.stop()
+    with pytest.raises(EngineClosed):         # stopped: closed admission
         eng.submit(q)
+    # restartable after stop
+    eng.start()
+    ids2, _ = eng.search(q, k=5, nprobe=4)
+    np.testing.assert_array_equal(ids2, ids)
+    eng.stop()
+
+
+class _Blocking:
+    """Index proxy whose batched search blocks until released — pins one
+    request in-flight so requests behind it are provably queued."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.started = threading.Event()
+        self.release = threading.Event()
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def search_batch(self, *a, **kw):
+        self.started.set()
+        assert self.release.wait(timeout=120)
+        return self._inner.search_batch(*a, **kw)
+
+
+def test_engine_stop_fails_backlog_with_engine_closed(built):
+    """stop() must FAIL futures still queued at shutdown (documented
+    EngineClosed, counted in stats.closed_requests) instead of draining
+    them — the old drain could hang stop() and every pending .result()
+    behind a wedged dispatch. The in-flight request still completes."""
+    _, idx = built
+    qs = decaying_data(5, 32, alpha=0.7, seed=52)
+    blk = _Blocking(idx)
+    eng = AnnEngine(blk, BatchPolicy(max_wait_us=0)).start()
+    inflight = eng.submit(qs[0], k=5, nprobe=4)
+    assert blk.started.wait(timeout=60)       # first request is mid-scan
+    queued = [eng.submit(q, k=5, nprobe=4) for q in qs[1:]]
+    stopper = threading.Thread(target=eng.stop)
+    stopper.start()
+    time.sleep(0.05)                          # stop() is now waiting
+    blk.release.set()                         # unwedge the dispatch
+    stopper.join(timeout=60)
+    assert not stopper.is_alive()             # stop() returned: no hang
+    ids, _ = inflight.result(timeout=60)      # in-flight work completed
+    assert ids.shape == (5,)
+    for f in queued:                          # backlog failed, not hung
+        with pytest.raises(EngineClosed):
+            f.result(timeout=60)
+    st = eng.stats
+    assert st.closed_requests == len(queued)
+    assert st.failed >= len(queued)
+    with pytest.raises(EngineClosed):         # submit-after-stop
+        eng.submit(qs[0])
+    assert eng.stats.closed_requests == len(queued)  # rejected, not closed
+
+
+def test_engine_stop_idempotent_no_backlog(built):
+    _, idx = built
+    eng = AnnEngine(idx).start()
+    eng.stop()
+    eng.stop()                                # second stop is a no-op
+    assert eng.stats.closed_requests == 0
+
+
+def test_engine_add_remove_admission(built):
+    """Engine write admission: add is immediately searchable, remove
+    immediately filtered, with write counters; search keeps serving
+    throughout (no dispatch pause)."""
+    _, idx = built
+    idx = dataclasses.replace(idx, live=None)  # own live state
+    qs = decaying_data(4, 32, alpha=0.7, seed=53)
+    with AnnEngine(idx, BatchPolicy(max_wait_us=0)) as eng:
+        v = decaying_data(3, 32, alpha=0.7, seed=54)
+        new_ids = eng.add(v)
+        ids, _ = eng.search(v[0], k=10, nprobe=idx.n_clusters)
+        assert int(new_ids[0]) in ids          # immediately searchable
+        eng.remove([int(new_ids[0])])
+        ids2, _ = eng.search(v[0], k=10, nprobe=idx.n_clusters)
+        assert int(new_ids[0]) not in ids2     # immediately filtered
+        eng.search_many(qs, k=5, nprobe=6)    # reads still fine
+        st = eng.stats
+    assert st.adds == 3 and st.removes == 1 and st.rejected_adds == 0
+    assert not idx.live.compacting            # stop() stopped the compactor
+
+
+def test_engine_add_full_cluster_compaction_disabled_rejects(built):
+    """With compaction disabled an add hitting a full delta buffer is
+    REJECTED (ClusterFullError surfaced + counted), never dropped; with
+    compaction enabled the engine folds synchronously and admits."""
+    _, idx = built
+    idx = dataclasses.replace(idx, live=None)
+    idx.enable_live(l_delta=1)
+    v = decaying_data(40, 32, alpha=0.7, seed=55)
+    with AnnEngine(idx, compaction=False) as eng:
+        with pytest.raises(ClusterFullError):
+            eng.add(v)                        # 40 rows over 12 1-slot slabs
+        st = eng.stats
+        assert st.rejected_adds == 40 and st.adds == 0
+        assert idx.live.n_delta_rows == 0     # atomic: nothing admitted
+        assert not idx.live.compacting        # policy respected
+    idx2 = dataclasses.replace(idx, live=None)
+    idx2.enable_live(l_delta=1)
+    with AnnEngine(idx2, compaction=True) as eng2:
+        for lo in range(0, 12, 1):            # 1-row batches always fit
+            eng2.add(v[lo:lo + 1])            # after a synchronous fold
+        st2 = eng2.stats
+    assert st2.adds == 12 and st2.rejected_adds == 0
+    assert st2.compactions == idx2.live.compactions
 
 
 def test_k_exceeding_candidates_raises(built):

@@ -1,0 +1,450 @@
+"""Live IVF index: streaming add/remove (delta slabs + tombstones),
+compaction, v4 WAL persistence, and the frozen-path bit-identity pin.
+
+The empty-live bit-identity matrix is the acceptance anchor of the live
+feature: attaching live state (and running the merged main+delta
+program) with empty delta buffers and no tombstones must reproduce the
+frozen program's results BIT FOR BIT across both slab layouts,
+bitpacked/unpacked lists, prefix_bits, and the refine tiers.
+"""
+import dataclasses
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import decaying_data
+from repro.core.saq import SAQConfig
+from repro.ivf import (ClusterFullError, IVFIndex, RefineSpec, append_wal,
+                       load_index, save_index)
+from repro.ivf.index import brute_force_topk
+
+
+@pytest.fixture(scope="module")
+def built():
+    x = decaying_data(1500, 32, seed=3)
+    idx = IVFIndex.build(jnp.asarray(x), SAQConfig(avg_bits=8),
+                         n_clusters=10, kmeans_iters=8, seed=0)
+    q = x[:6] + 0.01 * decaying_data(6, 32, seed=9)
+    return idx, np.asarray(x), np.asarray(q, np.float32)
+
+
+def _fresh(built, l_delta=16):
+    """A rebuilt-from-parts copy of the module index with its OWN live
+    state (the module fixture must stay frozen for the other tests)."""
+    idx, x, q = built
+    copy = dataclasses.replace(idx, live=None)
+    copy.enable_live(l_delta=l_delta)
+    return copy, x, q
+
+
+def _bits(a):
+    return np.asarray(a, np.float32).view(np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# frozen-path bit identity (acceptance pin)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "xla-cluster-major"])
+@pytest.mark.parametrize("unpacked", [False, True])
+@pytest.mark.parametrize("prefix_bits", [None, "half"])
+@pytest.mark.parametrize("tier", [None, "degenerate", "coarse"])
+def test_frozen_path_bit_identical(built, backend, unpacked, prefix_bits,
+                                   tier):
+    """Empty delta buffers + no tombstones => the live program returns
+    results bit-identical to the frozen program, across slab layouts x
+    bitpacked/unpacked x prefix_bits x refine tiers."""
+    idx, _, q = built
+    if unpacked:
+        idx = dataclasses.replace(idx, packed=idx.packed.unpack(),
+                                  live=None)
+    lay = idx.packed.layout
+    pb = tuple(max(1, b // 2) for b in lay.seg_bits) \
+        if prefix_bits == "half" else None
+    refine = {None: None,
+              "degenerate": RefineSpec(coarse_prefix=8, oversample=1e9),
+              "coarse": RefineSpec(coarse_prefix=1, oversample=16.0,
+                                   coarse_dim_frac=0.5)}[tier]
+    frozen = dataclasses.replace(idx, live=None)
+    ids_f, d_f = frozen.search_batch(q, k=10, nprobe=6, prefix_bits=pb,
+                                     backend=backend, refine=refine)
+    live = dataclasses.replace(idx, live=None)
+    live.enable_live(l_delta=8)
+    assert live.live.snapshot.empty
+    ids_l, d_l = live.search_batch(q, k=10, nprobe=6, prefix_bits=pb,
+                                   backend=backend, refine=refine)
+    np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_l))
+    np.testing.assert_array_equal(_bits(d_f), _bits(d_l))
+
+
+# ---------------------------------------------------------------------------
+# add / remove semantics
+# ---------------------------------------------------------------------------
+
+def test_add_immediately_searchable(built):
+    idx, x, _ = built
+    idx, x, _ = _fresh(built)
+    v = decaying_data(4, 32, seed=21).astype(np.float32)
+    new_ids = idx.add(v)
+    assert new_ids.tolist() == list(range(1500, 1504))
+    # top-1 self-retrieval for every added vector, on both scan layouts
+    for backend in ("xla", "xla-cluster-major"):
+        ids, dists = idx.search_batch(v, k=3, nprobe=idx.n_clusters,
+                                      backend=backend)
+        np.testing.assert_array_equal(np.asarray(ids)[:, 0], new_ids)
+        assert np.all(np.isfinite(np.asarray(dists)[:, 0]))
+    # and through the two-phase program
+    ids_r, _ = idx.search_batch(v, k=3, nprobe=idx.n_clusters,
+                                refine=RefineSpec(coarse_prefix=2,
+                                                  oversample=8.0))
+    np.testing.assert_array_equal(np.asarray(ids_r)[:, 0], new_ids)
+
+
+def test_add_distance_matches_residual_estimate(built):
+    """A delta row's estimated distance comes from the SAME CAQ encode
+    + Eq 13 path as a build-time row: re-building an index over
+    base + streamed data must rank the streamed vectors consistently
+    (here: near-zero distance to themselves)."""
+    idx, x, _ = _fresh(built)
+    v = decaying_data(8, 32, seed=33).astype(np.float32)
+    idx.add(v)
+    _, dists = idx.search_batch(v, k=1, nprobe=idx.n_clusters)
+    true_norm = (v * v).sum(-1)
+    # 8-bit residual codes: the self-distance estimate is tiny relative
+    # to the vector norm
+    assert np.all(np.asarray(dists)[:, 0] < 0.05 * true_norm + 1e-3)
+
+
+def test_remove_immediately_filtered(built):
+    idx, x, q = _fresh(built)
+    new_ids = idx.add(decaying_data(3, 32, seed=22).astype(np.float32))
+    base_ids, _ = idx.search_batch(q, k=10, nprobe=idx.n_clusters)
+    victim_main = int(np.asarray(base_ids)[0, 0])     # a build-time row
+    victim_delta = int(new_ids[0])                    # a streamed row
+    idx.remove([victim_main, victim_delta])
+    for refine in (None, RefineSpec(coarse_prefix=2, oversample=8.0)):
+        ids, _ = idx.search_batch(q, k=10, nprobe=idx.n_clusters,
+                                  refine=refine)
+        ids = np.asarray(ids)
+        assert victim_main not in ids
+        assert victim_delta not in ids
+    # double-remove and unknown ids reject the whole batch atomically
+    with pytest.raises(KeyError):
+        idx.remove([victim_main])
+    before = dict(idx.live._id_loc)
+    with pytest.raises(KeyError):
+        idx.remove([int(new_ids[1]), 10**9])
+    assert dict(idx.live._id_loc) == before
+
+
+def test_cluster_full_rejects_batch_atomically(built):
+    idx, x, _ = _fresh(built, l_delta=2)
+    v = decaying_data(64, 32, seed=23).astype(np.float32)
+    with pytest.raises(ClusterFullError):
+        idx.add(v)                      # some cluster must overflow cap 2
+    assert idx.live.n_delta_rows == 0   # nothing admitted
+    # compaction clears the way (fold empty delta is a no-op, so add a
+    # small batch first to give it something to fold)
+    small = idx.add(v[:2])
+    assert idx.live.n_delta_rows == 2
+    assert idx.compact()
+    assert idx.live.n_delta_rows == 0
+    ids, _ = idx.search_batch(v[:2], k=1, nprobe=idx.n_clusters)
+    np.testing.assert_array_equal(np.asarray(ids)[:, 0], small)
+
+
+def test_validate_k_tracks_live_occupancy(built):
+    """_validate_k on a live index bounds k by the top-nprobe LIVE row
+    counts: tombstones shrink it, delta rows grow it."""
+    idx, x, q = _fresh(built, l_delta=8)
+    live = idx.live
+    cap_frozen = live.candidate_capacity(idx.n_clusters)
+    assert cap_frozen == 1500            # every build row live
+    # k beyond the live capacity raises (mentioning the live bound)
+    with pytest.raises(ValueError, match="live candidate capacity"):
+        idx.search_batch(q, k=cap_frozen + 1, nprobe=idx.n_clusters)
+    idx.search_batch(q, k=cap_frozen, nprobe=idx.n_clusters)
+    # removing rows lowers the bound below the padded-frozen check
+    kill = np.asarray(idx.ids)
+    kill = kill[kill >= 0][:4]
+    idx.remove(kill)
+    assert live.candidate_capacity(idx.n_clusters) == 1496
+    with pytest.raises(ValueError, match="live candidate capacity"):
+        idx.search_batch(q, k=1497, nprobe=idx.n_clusters)
+    # adds raise it back up
+    idx.add(decaying_data(6, 32, seed=24).astype(np.float32))
+    assert live.candidate_capacity(idx.n_clusters) == 1502
+
+
+def test_compact_preserves_results_and_repads(built):
+    idx, x, q = _fresh(built, l_delta=8)
+    new_ids = idx.add(decaying_data(5, 32, seed=25).astype(np.float32))
+    drop = np.asarray(idx.ids)
+    drop = drop[drop >= 0][:7]
+    idx.remove(list(drop) + [int(new_ids[4])])
+    before_ids, before_d = idx.search_batch(q, k=10, nprobe=idx.n_clusters)
+    l_before = int(idx.ids.shape[1])
+    assert idx.compact()
+    # live set folded: no delta rows, no tombstones, same searchable set
+    assert idx.live.snapshot.empty
+    after_ids, after_d = idx.search_batch(q, k=10, nprobe=idx.n_clusters)
+    np.testing.assert_array_equal(np.asarray(before_ids),
+                                  np.asarray(after_ids))
+    np.testing.assert_allclose(np.asarray(before_d), np.asarray(after_d),
+                               rtol=0, atol=0)
+    # L re-padded to the new longest list; counts track live rows
+    assert int(idx.ids.shape[1]) == int(idx.live.live_counts.max())
+    assert int(idx.counts.sum()) == 1500 + 5 - 8
+    # fold is idempotent once empty
+    assert not idx.compact()
+    # frozen-only paths (multistage, mesh) accept the index again
+    ids_ms, _, _ = idx.search_multistage(q[0], k=5, nprobe=4)
+    assert np.asarray(ids_ms)[0] >= 0
+    assert l_before >= int(idx.ids.shape[1]) - idx.live.l_delta
+
+
+def test_multistage_and_mesh_reject_live_state(built):
+    idx, x, q = _fresh(built)
+    idx.add(decaying_data(1, 32, seed=26).astype(np.float32))
+    with pytest.raises(ValueError, match="compact"):
+        idx.search_multistage(q[0], k=5, nprobe=4)
+    # the mesh guard fires before any mesh attribute is touched, so a
+    # dummy object suffices (single-device CI has no multi-device mesh)
+    with pytest.raises(ValueError, match="single-device"):
+        idx.search_batch(q, k=5, nprobe=4, mesh=object())
+
+
+def test_background_compactor_folds_on_fill(built):
+    idx, x, _ = _fresh(built, l_delta=4)
+    live = idx.live
+    live.start_compaction(interval_s=0.01, threshold=0.5)
+    try:
+        v = decaying_data(24, 32, seed=27).astype(np.float32)
+        deadline = time.monotonic() + 30.0
+        lo = 0
+        while lo < len(v) and time.monotonic() < deadline:
+            try:
+                idx.add(v[lo:lo + 2])
+                lo += 2
+            except ClusterFullError:
+                time.sleep(0.01)     # let the compactor catch up
+        assert lo == len(v)
+        deadline = time.monotonic() + 10.0
+        while live.compactions == 0 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert live.compactions >= 1
+        assert live.folded_rows >= 1
+    finally:
+        live.stop_compaction()
+    assert not live.compacting
+
+
+# ---------------------------------------------------------------------------
+# v4 WAL persistence
+# ---------------------------------------------------------------------------
+
+def test_v4_wal_roundtrip_bitwise(built, tmp_path):
+    idx, x, q = _fresh(built, l_delta=8)
+    new_ids = idx.add(decaying_data(5, 32, seed=28).astype(np.float32))
+    idx.remove([int(new_ids[0]), int(np.asarray(idx.ids)[0, 0])])
+    p = str(tmp_path / "live_idx")
+    save_index(idx, p)
+    manifest = json.load(open(os.path.join(p, "manifest.json")))
+    assert manifest["format"] == 4
+    assert manifest["l_delta"] == 8
+    loaded = load_index(p)
+    assert loaded.live is not None
+    assert set(loaded.live._id_loc) == set(idx.live._id_loc)
+    assert loaded.live.next_id == idx.live.next_id
+    # replay reconstructs the delta slots in admission order, so the
+    # search results are bit-identical, tie-breaks included
+    ids_a, d_a = idx.search_batch(q, k=10, nprobe=idx.n_clusters)
+    ids_b, d_b = loaded.search_batch(q, k=10, nprobe=idx.n_clusters)
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    np.testing.assert_array_equal(_bits(d_a), _bits(d_b))
+
+
+def test_v4_append_wal_incremental(built, tmp_path):
+    idx, x, q = _fresh(built, l_delta=8)
+    p = str(tmp_path / "live_idx")
+    idx.add(decaying_data(2, 32, seed=29).astype(np.float32))
+    save_index(idx, p)
+    # more traffic after the save: flushed incrementally, no base rewrite
+    more = idx.add(decaying_data(3, 32, seed=30).astype(np.float32))
+    idx.remove([int(more[1])])
+    base_codes = open(os.path.join(p, "codes.npy"), "rb").read()
+    assert append_wal(idx, p) == 4
+    assert append_wal(idx, p) == 0          # already current
+    assert open(os.path.join(p, "codes.npy"), "rb").read() == base_codes
+    loaded = load_index(p)
+    assert set(loaded.live._id_loc) == set(idx.live._id_loc)
+    ids_a, d_a = idx.search_batch(q, k=10, nprobe=idx.n_clusters)
+    ids_b, d_b = loaded.search_batch(q, k=10, nprobe=idx.n_clusters)
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    np.testing.assert_array_equal(_bits(d_a), _bits(d_b))
+
+
+def test_v4_crash_mid_append_ignores_torn_segment(built, tmp_path):
+    idx, x, q = _fresh(built, l_delta=8)
+    p = str(tmp_path / "live_idx")
+    idx.add(decaying_data(2, 32, seed=31).astype(np.float32))
+    save_index(idx, p)
+    idx.add(decaying_data(2, 32, seed=32).astype(np.float32))
+    append_wal(idx, p)
+    # a crash mid-append leaves a .tmp staging file (and maybe torn
+    # bytes inside it) — load must ignore it and serve the last
+    # complete state
+    wal = os.path.join(p, "wal")
+    with open(os.path.join(wal, "seg-000000000099-000000000099.npz.tmp"),
+              "wb") as f:
+        f.write(b"torn bytes")
+    loaded = load_index(p)
+    assert set(loaded.live._id_loc) == set(idx.live._id_loc)
+
+
+def test_v4_replay_compacts_when_delta_overflows(built, tmp_path):
+    """A WAL can hold more adds than the delta buffers: replay folds
+    mid-stream exactly like live traffic and round-trips the SET."""
+    idx, x, q = _fresh(built, l_delta=2)
+    p = str(tmp_path / "live_idx")
+    save_index(idx, p)
+    for i in range(12):     # interleave adds with folds
+        v = decaying_data(2, 32, seed=40 + i).astype(np.float32)
+        try:
+            idx.add(v)
+        except ClusterFullError:
+            idx.compact()
+            idx.add(v)
+    append_wal(idx, p)
+    loaded = load_index(p)
+    assert set(loaded.live._id_loc) == set(idx.live._id_loc)
+    assert loaded.live.compactions >= 1
+    # same live set => same top-k id set (layout may differ post-fold)
+    ids_a, _ = idx.search_batch(q, k=10, nprobe=idx.n_clusters)
+    ids_b, _ = loaded.search_batch(q, k=10, nprobe=idx.n_clusters)
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+
+
+def test_frozen_save_stays_v3(built, tmp_path):
+    idx, _, _ = built
+    frozen = dataclasses.replace(idx, live=None)
+    p = str(tmp_path / "frozen_idx")
+    save_index(frozen, p)
+    manifest = json.load(open(os.path.join(p, "manifest.json")))
+    assert manifest["format"] == 3
+    assert not os.path.exists(os.path.join(p, "wal"))
+    assert load_index(p).live is None
+
+
+# ---------------------------------------------------------------------------
+# concurrent stress (satellite: writer + readers + compaction)
+# ---------------------------------------------------------------------------
+
+def test_concurrent_writes_searches_no_torn_reads(built):
+    """Writer thread streams add/remove with background compaction
+    while reader threads search across tiers. Every result id must be
+    a known id that was live when the query was submitted (pre-delete
+    ids are allowed only for removes that raced the query) — never a
+    padded (-1) or long-dead row. Finally, recall@10 of the quiesced
+    index vs brute force over the live set."""
+    idx, x, q = _fresh(built, l_delta=32)
+    live = idx.live
+    live.start_compaction(interval_s=0.005, threshold=0.5)
+
+    wlock = threading.Lock()
+    vectors = {i: x[i] for i in range(len(x))}       # live id -> vector
+    removed_at = {}                                  # id -> monotonic time
+    next_new = [0]
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        rng = np.random.default_rng(77)
+        try:
+            for it in range(40):
+                if stop.is_set():
+                    break
+                v = decaying_data(4, 32, seed=1000 + it).astype(np.float32)
+                try:
+                    new = idx.add(v)
+                except ClusterFullError:
+                    idx.compact()
+                    new = idx.add(v)
+                with wlock:
+                    for j, vid in enumerate(new):
+                        vectors[int(vid)] = v[j]
+                    next_new[0] = int(new[-1]) + 1
+                with wlock:
+                    candidates = [i for i in vectors
+                                  if i not in removed_at]
+                kill = rng.choice(candidates,
+                                  size=min(2, len(candidates)),
+                                  replace=False)
+                with wlock:
+                    t_kill = time.monotonic()
+                    for vid in kill:
+                        removed_at[int(vid)] = t_kill
+                idx.remove([int(v_) for v_ in kill])
+                if it % 10 == 9:
+                    idx.compact()
+        except Exception as e:       # pragma: no cover - fail the test
+            errors.append(e)
+            stop.set()
+
+    def reader(seed):
+        rng = np.random.default_rng(seed)
+        refines = [None,
+                   RefineSpec(coarse_prefix=2, oversample=8.0,
+                              coarse_dim_frac=0.5)]
+        try:
+            for it in range(25):
+                if stop.is_set():
+                    break
+                qb = q[rng.integers(0, len(q), size=3)]
+                t0 = time.monotonic()
+                ids, dists = idx.search_batch(
+                    qb, k=10, nprobe=idx.n_clusters,
+                    refine=refines[it % 2])
+                ids = np.asarray(ids)
+                with wlock:
+                    known = set(vectors)
+                    dead_before = {i for i, t in removed_at.items()
+                                   if t < t0}
+                for row in ids:
+                    assert np.all(row >= 0), f"padded id leaked: {row}"
+                    assert len(set(row.tolist())) == len(row), \
+                        f"duplicate ids (torn read): {row}"
+                    for vid in row.tolist():
+                        assert vid in known, f"unknown id {vid}"
+                        assert vid not in dead_before, \
+                            f"tombstoned id {vid} served after delete"
+        except Exception as e:       # pragma: no cover - fail the test
+            errors.append(e)
+            stop.set()
+
+    threads = [threading.Thread(target=writer)] + \
+        [threading.Thread(target=reader, args=(100 + i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    live.stop_compaction()
+    assert not errors, errors[0]
+
+    # recall@10 vs brute force over the final live set
+    with wlock:
+        live_ids = sorted(set(vectors) - set(removed_at))
+    mat = np.stack([vectors[i] for i in live_ids])
+    hits = total = 0
+    for qi in q:
+        ref_pos, _ = brute_force_topk(jnp.asarray(mat), jnp.asarray(qi), 10)
+        ref = {live_ids[j] for j in np.asarray(ref_pos).tolist()}
+        got, _ = idx.search_batch(qi[None], k=10, nprobe=idx.n_clusters)
+        hits += len(ref & set(np.asarray(got)[0].tolist()))
+        total += 10
+    assert hits / total >= 0.7, f"recall@10 {hits / total:.2f}"

@@ -168,6 +168,74 @@ def test_overwrite_crash_keeps_a_loadable_copy(tmp_path, index):
         check_recoverable()
 
 
+# Every on-disk state the save swap sequence (stage tmp -> rmtree stale
+# bak -> rename path to bak -> rename tmp to path -> rmtree bak) can be
+# killed in, as (suffix, copy) layouts: "old"/"new" are two complete but
+# distinguishable saves, "partial_*" the same save with the manifest
+# missing (the manifest is written LAST, so a dir without one is a
+# mid-stage corpse). `expect` names the copy recovery must promote: the
+# NEWEST complete one.
+_CRASH_STATES = [
+    # died while staging: the partial tmp is junk, path is current
+    ("stage_died", [("", "old"), (".tmp", "partial_new")], "old"),
+    # fully staged, died before any swap rename: tmp is the newest copy
+    ("preswap_died", [("", "old"), (".tmp", "new")], "new"),
+    # ... same, plus a stale backup left by an even older crash
+    ("preswap_stale_bak", [("", "old"), (".tmp", "new"), (".bak", "old")],
+     "new"),
+    # died between parking the old copy at .bak and promoting tmp
+    ("midswap_died", [(".tmp", "new"), (".bak", "old")], "new"),
+    # recovery itself died mid-promote, leaving junk where path was
+    ("midswap_junk_path", [("", "partial_old"), (".tmp", "new"),
+                           (".bak", "old")], "new"),
+    # tmp promoted-or-lost, backup holds the only complete copy
+    ("bak_only", [(".bak", "old")], "old"),
+    # junk at path (torn rename), backup complete
+    ("junk_path_bak", [("", "partial_new"), (".bak", "old")], "old"),
+    # died after promoting the new copy but before the backup cleanup
+    ("postswap_died", [("", "new"), (".bak", "old")], "new"),
+]
+
+
+@pytest.mark.parametrize(
+    "layout,expect", [(lay, exp) for _, lay, exp in _CRASH_STATES],
+    ids=[name for name, _, _ in _CRASH_STATES])
+def test_load_recovers_every_crash_state(tmp_path, index, layout, expect):
+    """load_index must recover from EVERY intermediate state of the save
+    swap: promote the newest complete copy back to `path`, clean all
+    leftovers, and stay idempotent. States are constructed directly (no
+    timing luck) from two distinguishable complete saves."""
+    _, idx = index
+    old_dir, new_dir = str(tmp_path / "src_old"), str(tmp_path / "src_new")
+    save_index(idx, old_dir)
+    # same index, ids offset by +1000 (padding kept at -1) — loadable
+    # and trivially distinguishable from the old copy
+    shifted = dataclasses.replace(
+        idx, ids=jnp.where(idx.ids >= 0, idx.ids + 1000, idx.ids))
+    save_index(shifted, new_dir)
+    want = {"old": np.asarray(idx.ids), "new": np.asarray(shifted.ids)}
+
+    path = str(tmp_path / "idx")
+    for suffix, src in layout:
+        d = path + suffix
+        shutil.copytree(old_dir if src.endswith("old") else new_dir, d)
+        if src.startswith("partial"):
+            os.remove(os.path.join(d, "manifest.json"))
+
+    loaded = load_index(path)
+    np.testing.assert_array_equal(np.asarray(loaded.ids), want[expect])
+    # leftovers cleaned: exactly `path` remains
+    assert not os.path.exists(path + ".tmp")
+    assert not os.path.exists(path + ".bak")
+    # idempotent: a second load sees a clean state and agrees
+    again = load_index(path)
+    np.testing.assert_array_equal(np.asarray(again.ids), want[expect])
+    # and the recovered directory accepts a fresh overwriting save
+    save_index(idx, path)
+    np.testing.assert_array_equal(np.asarray(load_index(path).ids),
+                                  want["old"])
+
+
 def test_v3_manifest_records_word_layout(tmp_path, index):
     _, idx = index
     p = str(tmp_path / "idx")
