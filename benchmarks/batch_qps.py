@@ -32,11 +32,17 @@ batch >= 16, the balanced tier slower than the single-phase scan at
 batch >= 16, any tier's recall@10 below its pinned floor, the best
 qualifying tier's bit-weighted phase-1 reduction below 4x, or the
 live merged-slab search at 10% delta fill below 0.8x the frozen qps,
-fails the run. The root-level ``BENCH_batch_qps.json`` trajectory
+fails the run. When a per-host tuning cache is present
+(``$REPRO_TUNING_CACHE`` / ``TUNING_CACHE.json`` from
+``python -m repro.tune.autotune``), a tuned section re-measures
+``search_batch`` with the cache active vs the hand-tuned defaults,
+asserts the results stay bit-identical, and gates tuned qps >= default
+qps on every row. The root-level ``BENCH_batch_qps.json`` trajectory
 (one appended entry per run: qps/occupancy rows + tier rows + mesh
-rows + live rows) is the single bench output — there is no per-run
-``experiments/`` copy — and the gates read the same rows that land
-there.
+rows + live rows + tuned rows, stamped with the git rev AND the host
+fingerprint the numbers are valid for) is the single bench output —
+there is no per-run ``experiments/`` copy — and the gates read the
+same rows that land there.
 """
 from __future__ import annotations
 
@@ -293,8 +299,80 @@ def _live_rows(idx, x, queries, rng, fast: bool = True) -> list:
     return rows
 
 
+def _tuned_rows(idx, queries, rng, fast: bool = True) -> list:
+    """Tuned-vs-default serving comparison (the autotuner's acceptance
+    section). Runs only when a tuning cache for THIS host is available
+    — ``$REPRO_TUNING_CACHE`` / ``TUNING_CACHE.json`` (the path
+    ``python -m repro.tune.autotune`` writes) or an already-active
+    cache — and returns ``[]`` otherwise, so the suite is unchanged on
+    hosts that never tuned.
+
+    Each batch size is measured twice through the SAME ``search_batch``
+    entry point: once with no active cache (hand-tuned defaults) and
+    once with the cache active. The shims consult the cache at trace
+    time, so each side gets a ``jax.clear_caches()`` first — without
+    it the tuned run would silently reuse the default-traced programs
+    (same static args -> no re-trace) and measure nothing. Results
+    must be BIT-identical between the two sides (tuned knobs may only
+    change speed); the CI gate then requires tuned qps to hold >= the
+    default qps on every row, with re-measurement retries + a 2% floor
+    absorbing wall-clock noise between near-identical programs."""
+    from repro.tune import cache as tc
+
+    cache = tc.resolve_cache(True)
+    if cache is None or not cache.matches_host():
+        return []
+    k, nprobe = 10, 8
+    prev = tc.get_active_cache()
+    rows = []
+    try:
+        for bs in BATCH_SIZES:
+            if fast and bs > 64:
+                continue
+            qb = queries[rng.integers(0, len(queries), bs)] \
+                .astype(np.float32)
+            best_def, best_tun = 0.0, 0.0
+            for attempt in range(5):
+                tc.set_active_cache(None)
+                jax.clear_caches()
+                ids_d, d_d = idx.search_batch(qb, k=k, nprobe=nprobe)
+                t_def = _timed(lambda: idx.search_batch(
+                    qb, k=k, nprobe=nprobe))
+                tc.set_active_cache(cache)
+                jax.clear_caches()
+                ids_t, d_t = idx.search_batch(qb, k=k, nprobe=nprobe)
+                t_tun = _timed(lambda: idx.search_batch(
+                    qb, k=k, nprobe=nprobe))
+                # the tuner's hard contract: tuned programs return the
+                # default programs' results bit for bit
+                np.testing.assert_array_equal(np.asarray(ids_d),
+                                              np.asarray(ids_t))
+                np.testing.assert_array_equal(
+                    np.asarray(d_d, np.float32).view(np.uint32),
+                    np.asarray(d_t, np.float32).view(np.uint32))
+                best_def = max(best_def, bs / t_def)
+                best_tun = max(best_tun, bs / t_tun)
+                # retry only while the GATE below would still fail —
+                # shapes the cache has no entry for run the same
+                # program twice, and pure jitter must not fail the run
+                if best_tun >= 0.98 * best_def:
+                    break
+            row = {"dataset": "deep", "batch": bs,
+                   "qps_default": round(best_def, 1),
+                   "qps_tuned": round(best_tun, 1),
+                   "tuned_speedup": round(best_tun / max(best_def, 1e-9),
+                                          3),
+                   "bit_identical": True}
+            rows.append(row)
+            emit("batch_qps_tuned", row)
+    finally:
+        tc.set_active_cache(prev)
+    return rows
+
+
 def _append_trajectory(rows: list, tier_rows: list,
-                       mesh_rows: list, live_rows: list) -> None:
+                       mesh_rows: list, live_rows: list,
+                       tuned_rows: list) -> None:
     """Append this run's qps/occupancy + accuracy-tier summary to the
     ROOT-LEVEL ``BENCH_batch_qps.json`` (a JSON list, one entry per
     run) so the serving-perf trajectory across PRs stays
@@ -323,15 +401,21 @@ def _append_trajectory(rows: list, tier_rows: list,
                 rev += "-dirty"      # measured on uncommitted changes
     except Exception:
         pass
+    from repro.tune.cache import host_fingerprint
     keep = ("batch", "qps_batched", "qps_cluster_major", "qps_loop",
             "qps_engine", "engine_occupancy")
     log.append({
         "rev": rev,
         "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        # qps numbers only compare within a host class: record the
+        # identity next to the rev so the trajectory can be sliced
+        # per host (same fields the tuning cache keys on)
+        "host": host_fingerprint(),
         "rows": [{k: r[k] for k in keep if k in r} for r in rows],
         "tiers": tier_rows,
         "mesh": mesh_rows,
         "live": live_rows,
+        "tuned": tuned_rows,
     })
     with open(fp, "w") as f:
         json.dump(log, f, indent=1, default=float)
@@ -461,7 +545,8 @@ def run(fast: bool = True) -> dict:
     tier_rows = _tier_rows(idx, queries, rng, fast)
     mesh_rows = _mesh_rows(fast)
     live_rows = _live_rows(idx, x, queries, rng, fast)
-    _append_trajectory(rows, tier_rows, mesh_rows, live_rows)
+    tuned_rows = _tuned_rows(idx, queries, rng, fast)
+    _append_trajectory(rows, tier_rows, mesh_rows, live_rows, tuned_rows)
     # CI smoke gates (fast mode only — --full runs report without
     # aborting the remaining suites):
     #  * dynamic batching must beat the per-query loop once there is a
@@ -523,5 +608,16 @@ def run(fast: bool = True) -> dict:
                     f"live-serving regression: merged-slab search at "
                     f"{r['delta_fill']:.0%} delta fill is below 0.8x the "
                     f"frozen qps: {r}")
+        # tuned-vs-default gate (only when a host cache was present):
+        # the autotuner accepts a config only when it measured faster
+        # AND bit-identical, so tuned serving must hold the default
+        # qps on every row — the 2% floor absorbs timer noise between
+        # near-identical programs (retries happen inside _tuned_rows)
+        for r in tuned_rows:
+            if r["qps_tuned"] < 0.98 * r["qps_default"]:
+                raise RuntimeError(
+                    f"tuning regression: cache-tuned search slower than "
+                    f"the hand-tuned default at batch {r['batch']}: {r}")
     return {"batch_qps": rows, "batch_qps_tiers": tier_rows,
-            "batch_qps_mesh": mesh_rows, "batch_qps_live": live_rows}
+            "batch_qps_mesh": mesh_rows, "batch_qps_live": live_rows,
+            "batch_qps_tuned": tuned_rows}

@@ -42,7 +42,11 @@ makes that index *mutable* while every search keeps running:
   number (adds store the *encoded* row, so replay never re-runs CAQ).
   The log is what the v4 WAL persistence serializes
   (``repro.ivf.persist``): a base snapshot holds everything up to
-  ``compacted_seq`` and WAL segments replay the rest on load.
+  ``compacted_seq`` and WAL segments replay the rest on load. With a
+  checkpoint directory attached (``attach_checkpoint`` — done
+  automatically by ``load_index``/``append_wal``), every fold re-bases
+  that save and drops the WAL segments it covers, so a long-running
+  add/compact cycle keeps both ``wal/`` and the in-memory log bounded.
 
 Single-device scope: the mesh-sharded path and ``search_multistage``
 scan only the frozen main lists, so both refuse a live index that holds
@@ -52,6 +56,7 @@ delta rows or tombstones — ``compact()`` first. See
 from __future__ import annotations
 
 import math
+import os
 import threading
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
@@ -145,6 +150,12 @@ class LiveIndex:
         self.oplog: List[_Op] = []
         self.compactions = 0
         self.folded_rows = 0
+        # WAL GC: the attached on-disk save that every fold re-bases
+        # (set by attach_checkpoint / load_index / append_wal)
+        self.checkpoint_path: Optional[str] = None
+        self.checkpoints = 0
+        self._ckpt_lock = threading.Lock()
+        self._replaying = False
         self._version = 0
         self.snapshot: LiveSnapshot = None  # set by _publish below
         # background compactor (started on demand)
@@ -317,26 +328,37 @@ class LiveIndex:
         (deterministic — compaction preserves the live set, which is
         the round-trip contract)."""
         with self._lock:
-            for op in sorted(ops, key=lambda o: o.seq):
-                if op.kind == "add":
-                    if self.fill[op.cluster] >= self.l_delta:
-                        self.compact()
-                    self._append_row(op.cluster, op.vid, op.codes,
-                                     op.factors, op.o_norm, seq=op.seq)
-                    self.next_id = max(self.next_id, op.vid + 1)
-                elif op.kind == "remove":
-                    in_delta, c, slot = self._id_loc.pop(op.vid)
-                    if in_delta:
-                        self.live_delta[c, slot] = False
-                    else:
-                        self.live_main[c, slot] = False
-                    self.live_counts[c] -= 1
-                    self.n_tombstones += 1
-                    self.seq = max(self.seq, op.seq)
-                    self.oplog.append(op)
+            # mid-replay folds must NOT checkpoint: the on-disk WAL
+            # segments still hold the ops this loop has not applied
+            # yet, and a checkpoint would rewrite the directory
+            # without them (see _checkpoint).
+            self._replaying = True
+            try:
+                self._replay_locked(ops)
+            finally:
+                self._replaying = False
+
+    def _replay_locked(self, ops: Sequence[_Op]) -> None:
+        for op in sorted(ops, key=lambda o: o.seq):
+            if op.kind == "add":
+                if self.fill[op.cluster] >= self.l_delta:
+                    self.compact()
+                self._append_row(op.cluster, op.vid, op.codes,
+                                 op.factors, op.o_norm, seq=op.seq)
+                self.next_id = max(self.next_id, op.vid + 1)
+            elif op.kind == "remove":
+                in_delta, c, slot = self._id_loc.pop(op.vid)
+                if in_delta:
+                    self.live_delta[c, slot] = False
                 else:
-                    raise ValueError(f"unknown WAL op kind {op.kind!r}")
-            self._publish()
+                    self.live_main[c, slot] = False
+                self.live_counts[c] -= 1
+                self.n_tombstones += 1
+                self.seq = max(self.seq, op.seq)
+                self.oplog.append(op)
+            else:
+                raise ValueError(f"unknown WAL op kind {op.kind!r}")
+        self._publish()
 
     def pending_ops(self, after_seq: int) -> List[_Op]:
         """Ops with ``seq > after_seq`` in sequence order — what a WAL
@@ -344,6 +366,49 @@ class LiveIndex:
         with self._lock:
             return sorted((o for o in self.oplog if o.seq > after_seq),
                           key=lambda o: o.seq)
+
+    # ------------------------------------------------------------------
+    # WAL segment GC (checkpoint-on-compact)
+    # ------------------------------------------------------------------
+    def attach_checkpoint(self, path: Optional[str]) -> None:
+        """Attach (or detach, with ``None``) the on-disk save directory
+        that every fold re-bases: after each successful ``compact()``
+        the index is re-saved there, so the base arrays advance to the
+        new ``compacted_seq`` and every WAL segment the base now covers
+        is dropped — the GC that keeps a long-running writer's ``wal/``
+        (and in-memory op log) bounded. ``load_index`` and
+        ``append_wal`` attach their directory automatically (the
+        serving relationship); a plain ``save_index`` does not (it is a
+        one-shot export — attach explicitly to opt in)."""
+        self.checkpoint_path = (os.path.abspath(path)
+                                if path is not None else None)
+
+    def _checkpoint(self) -> None:
+        """Re-base the attached save after a fold (WAL segment GC).
+
+        ``save_index`` rewrites the directory with
+        ``base_seq = compacted_seq`` and a fresh ``wal/`` under the
+        existing crash-safe swap discipline, so every old segment is
+        dropped atomically-with-recovery rather than unlinked one by
+        one. Ops at or below the base the save is about to write are
+        then durable in the base arrays and are pruned from the
+        in-memory op log (``cut`` is captured BEFORE the save:
+        ``compacted_seq`` is monotone, so the written base is >= cut
+        and a later ``append_wal`` can never need a pruned op).
+        Runs outside the write lock — disk I/O must not stall
+        writers — and is skipped mid-replay (the on-disk segments
+        still hold un-replayed ops a rewrite would lose)."""
+        path = self.checkpoint_path
+        if path is None or self._replaying:
+            return
+        from repro.ivf.persist import save_index
+        with self._ckpt_lock:
+            with self._lock:
+                cut = self.compacted_seq
+            save_index(self.index, path)
+            with self._lock:
+                self.oplog = [o for o in self.oplog if o.seq > cut]
+                self.checkpoints += 1
 
     # ------------------------------------------------------------------
     # compaction
@@ -356,7 +421,10 @@ class LiveIndex:
         the swapped arrays publish as one snapshot. Returns False when
         there was nothing to fold. Never pauses serving: in-flight
         dispatches finish on the pre-fold snapshot; the fold itself
-        runs on the calling (or compactor) thread."""
+        runs on the calling (or compactor) thread. With a checkpoint
+        attached (:meth:`attach_checkpoint`), a successful fold then
+        re-bases the on-disk save, dropping every WAL segment the new
+        base covers."""
         with self._lock:
             if self.n_delta_rows == 0 and self.n_tombstones == 0:
                 return False
@@ -412,7 +480,11 @@ class LiveIndex:
             self.compactions += 1
             self.folded_rows += folded
             self._publish()
-            return True
+        # Outside the write lock: advance the attached on-disk base so
+        # the WAL segments it covers are dropped (no-op when detached
+        # or mid-replay — see _checkpoint).
+        self._checkpoint()
+        return True
 
     # ------------------------------------------------------------------
     # background compactor (host thread, dispatcher-loop discipline)

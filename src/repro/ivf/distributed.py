@@ -360,11 +360,28 @@ PROBE_BUDGET_SLACK = 2
 
 
 def default_probe_budget(nprobe: int, n_shards: int,
-                         slack: int = PROBE_BUDGET_SLACK) -> int:
+                         slack: Optional[int] = None) -> int:
     """Default static per-shard probe budget ``P_loc`` for the
     compacted sharded scan: the fair share ``ceil(P / n_shards)`` times
-    a skew-slack multiplier, capped at P (where compaction is moot)."""
+    a skew-slack multiplier, capped at P (where compaction is moot).
+    ``slack=None`` resolves the multiplier from the active per-host
+    tuning cache (``repro.tune``) when one carries a measured
+    ``probe_budget_slack``, else the hand-tuned
+    ``PROBE_BUDGET_SLACK`` — so without a cache nothing changes."""
+    if slack is None:
+        slack = _tuned_slack()
     return min(nprobe, math.ceil(nprobe / max(n_shards, 1)) * slack)
+
+
+def _tuned_slack() -> int:
+    from repro.tune.cache import get_active_cache
+
+    cache = get_active_cache()
+    if cache is not None:
+        v = cache.policy.get("probe_budget_slack")
+        if isinstance(v, int) and not isinstance(v, bool) and v >= 1:
+            return v
+    return PROBE_BUDGET_SLACK
 
 
 def sharded_search_batch(mesh: Mesh, axis, index, queries: jnp.ndarray,

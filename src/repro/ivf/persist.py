@@ -175,11 +175,23 @@ def append_wal(index: IVFIndex, path: str) -> int:
             f"save (no WAL); save_index the live index first")
     wal_dir = os.path.join(path, WAL_DIR)
     os.makedirs(wal_dir, exist_ok=True)
-    disk_seq = int(manifest.get("base_seq", 0))
+    base_seq = int(manifest.get("base_seq", 0))
+    disk_seq = base_seq
     for name in os.listdir(wal_dir):
         m = _WAL_SEG_RE.match(name)
-        if m:
-            disk_seq = max(disk_seq, int(m.group(2)))
+        if not m:
+            continue
+        if int(m.group(2)) <= base_seq:
+            # segment fully covered by the compacted base — obsolete
+            # (GC; normally a checkpoint already rewrote wal/ fresh,
+            # this catches directories written before that existed)
+            os.remove(os.path.join(wal_dir, name))
+            continue
+        disk_seq = max(disk_seq, int(m.group(2)))
+    # flushing the write stream here establishes the serving
+    # relationship with this directory: future folds re-base it so
+    # the segments this call appends do not accumulate forever
+    live.attach_checkpoint(path)
     with live._lock:
         ops = live.pending_ops(disk_seq)
         if not ops:
@@ -425,4 +437,9 @@ def load_index(path: str) -> IVFIndex:
         if ops:
             live.replay(ops)
         live.next_id = max(live.next_id, int(manifest.get("next_id", 0)))
+        # a restored serving index keeps its own directory GC'd: every
+        # fold from here re-bases this save and drops covered WAL
+        # segments (attached AFTER replay — mid-replay folds must not
+        # rewrite the directory they are still reading from)
+        live.attach_checkpoint(path)
     return index

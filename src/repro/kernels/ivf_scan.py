@@ -195,7 +195,7 @@ def saq_scan_pallas(codes: jnp.ndarray, factors: jnp.ndarray,
                     q_norm_sq: Optional[jnp.ndarray] = None,
                     prefix_bits: Optional[Tuple[int, ...]] = None,
                     bitpacked: bool = False,
-                    n_tile: int = DEFAULT_N_TILE,
+                    n_tile: Optional[int] = None,
                     interpret: bool = False) -> jnp.ndarray:
     """Fused packed-layout scan: estimated squared distances (NQ, N).
 
@@ -209,6 +209,9 @@ def saq_scan_pallas(codes: jnp.ndarray, factors: jnp.ndarray,
     q_norm_sq: (NQ,) total ||q'||^2 (defaults to the packed-column norm;
         pass the full-basis norm when the plan drops segments)
     prefix_bits: optional per-segment progressive precision
+    n_tile: rows per VMEM block (None -> ``DEFAULT_N_TILE``). Every
+        output row's contraction is row-independent, so any tile size
+        is bit-identical — only speed changes (the autotuner sweeps it).
     """
     from repro.core.types import (make_col_scale, make_effective_bits,
                                   make_seg_onehot)
@@ -233,7 +236,8 @@ def saq_scan_pallas(codes: jnp.ndarray, factors: jnp.ndarray,
     qstats = jnp.concatenate(
         [q_sums.T, q_norm_sq[None, :].astype(jnp.float32)])    # (S+1, NQ)
 
-    n_tile = min(n_tile, max(8, n))
+    n_tile = min(DEFAULT_N_TILE if n_tile is None else int(n_tile),
+                 max(8, n))
     n_pad = -n % n_tile
     codes_p = jnp.pad(codes, ((0, n_pad), (0, 0)))
     fac = jnp.concatenate(
@@ -278,7 +282,7 @@ def saq_scan_pallas(codes: jnp.ndarray, factors: jnp.ndarray,
 
 @functools.partial(jax.jit,
                    static_argnames=("col_offsets", "seg_bits", "prefix_bits",
-                                    "bitpacked", "interpret"))
+                                    "bitpacked", "n_tile", "interpret"))
 def saq_cluster_scan_pallas(codes_u: jnp.ndarray, factors_u: jnp.ndarray,
                             o_norm_u: jnp.ndarray, queries_u: jnp.ndarray,
                             q_norm_u: jnp.ndarray,
@@ -286,6 +290,7 @@ def saq_cluster_scan_pallas(codes_u: jnp.ndarray, factors_u: jnp.ndarray,
                             seg_bits: Tuple[int, ...],
                             prefix_bits: Optional[Tuple[int, ...]] = None,
                             bitpacked: bool = False,
+                            n_tile: Optional[int] = None,
                             interpret: bool = False) -> jnp.ndarray:
     """Fused scan of U cluster slabs vs NB queries each: (U, NB, L).
 
@@ -307,6 +312,11 @@ def saq_cluster_scan_pallas(codes_u: jnp.ndarray, factors_u: jnp.ndarray,
     queries_u: (U, NB, d_stored) f32 per-slab rotated residual queries
     q_norm_u:  (U, NB) f32 per-slab FULL-basis residual query norms
                (computed in the projection basis so dropped dims count)
+    n_tile:    rows per VMEM block WITHIN a slab (None -> the whole
+               (L, ·) slab per grid step, today's layout). Slabs whose
+               L is not a multiple are zero-padded and the pad rows
+               sliced off; row contractions are row-independent, so
+               every tile size is bit-identical — only speed changes.
     """
     from repro.core.types import (make_col_scale, make_effective_bits,
                                   make_seg_onehot)
@@ -331,10 +341,25 @@ def saq_cluster_scan_pallas(codes_u: jnp.ndarray, factors_u: jnp.ndarray,
     onehot = jnp.asarray(make_seg_onehot(col_offsets))
     colscale = make_col_scale(col_offsets, seg_bits, prefix_bits)[None, :]
 
-    codes_fl = codes_u.reshape(u * l, code_w)
+    # Optional row tiling within each slab: pad L to a multiple of the
+    # tile so each slab maps to an integer number of grid steps; the
+    # slab's resident query block is shared by its tiles via the
+    # index_map (i // tiles).
+    t = l if n_tile is None else max(1, min(int(n_tile), l))
+    l_pad = -l % t
+    if l_pad:
+        codes_u = jnp.pad(codes_u, ((0, 0), (0, l_pad), (0, 0)))
+        factors_u = jnp.pad(factors_u,
+                            ((0, 0), (0, l_pad)) + ((0, 0),) * 2,
+                            constant_values=1.0)
+        o_norm_u = jnp.pad(o_norm_u, ((0, 0), (0, l_pad)))
+    l_grid = l + l_pad
+    tiles = l_grid // t
+
+    codes_fl = codes_u.reshape(u * l_grid, code_w)
     fac_fl = jnp.concatenate(
-        [factors_u.reshape(u * l, s_count * 3),
-         o_norm_u.reshape(u * l)[:, None]], axis=-1).astype(jnp.float32)
+        [factors_u.reshape(u * l_grid, s_count * 3),
+         o_norm_u.reshape(u * l_grid)[:, None]], axis=-1).astype(jnp.float32)
     q = queries_u.astype(jnp.float32)                        # (U, NB, d)
     # per-slab segment-masked query block, (U*D, S*NB) — column
     # s*NB + n is query n masked to segment s (the kernel's layout)
@@ -346,11 +371,11 @@ def saq_cluster_scan_pallas(codes_u: jnp.ndarray, factors_u: jnp.ndarray,
         axis=1).reshape(u * (s_count + 1), nb)
 
     in_specs = [
-        pl.BlockSpec((l, code_w), lambda i: (i, 0)),
-        pl.BlockSpec((l, 3 * s_count + 1), lambda i: (i, 0)),
+        pl.BlockSpec((t, code_w), lambda i: (i, 0)),
+        pl.BlockSpec((t, 3 * s_count + 1), lambda i: (i, 0)),
         pl.BlockSpec((1, d), lambda i: (0, 0)),                # resident
-        pl.BlockSpec((d, s_count * nb), lambda i: (i, 0)),
-        pl.BlockSpec((s_count + 1, nb), lambda i: (i, 0)),
+        pl.BlockSpec((d, s_count * nb), lambda i: (i // tiles, 0)),
+        pl.BlockSpec((s_count + 1, nb), lambda i: (i // tiles, 0)),
     ]
     operands = [codes_fl, fac_fl, jnp.asarray(colscale), qmat_fl, qstats_fl]
     if bitpacked:
@@ -364,13 +389,13 @@ def saq_cluster_scan_pallas(codes_u: jnp.ndarray, factors_u: jnp.ndarray,
     out = pl.pallas_call(
         functools.partial(_saq_scan_kernel, seg_bits=eff_bits, n_q=nb,
                           bitpacked=bitpacked),
-        grid=(u,),
+        grid=(u * tiles,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((l, nb), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((u * l, nb), jnp.float32),
+        out_specs=pl.BlockSpec((t, nb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((u * l_grid, nb), jnp.float32),
         interpret=interpret,
     )(*operands)
-    out = out.reshape(u, l, nb).transpose(0, 2, 1)
+    out = out.reshape(u, l_grid, nb)[:, :l].transpose(0, 2, 1)
     return out[:, :1, :] if pad_nb else out
 
 
@@ -381,6 +406,7 @@ def saq_probe_scan_pallas(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
                           seg_bits: Tuple[int, ...],
                           prefix_bits: Optional[Tuple[int, ...]] = None,
                           bitpacked: bool = False,
+                          n_tile: Optional[int] = None,
                           interpret: bool = False) -> jnp.ndarray:
     """Fused scan of gathered IVF probe slabs: (NQ, P, L) sq distances.
 
@@ -406,7 +432,7 @@ def saq_probe_scan_pallas(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
         q_norm_g.reshape(g, 1),
         col_offsets=col_offsets, seg_bits=seg_bits,
         prefix_bits=prefix_bits, bitpacked=bitpacked,
-        interpret=interpret)                                 # (G, 1, L)
+        n_tile=n_tile, interpret=interpret)                  # (G, 1, L)
     return out.reshape(nq, p, l)
 
 
@@ -534,7 +560,7 @@ def saq_refine_scan_pallas(codes_r: jnp.ndarray, factors_r: jnp.ndarray,
                            seg_bits: Tuple[int, ...],
                            prefix_bits: Optional[Tuple[int, ...]] = None,
                            bitpacked: bool = False,
-                           n_tile: int = DEFAULT_N_TILE,
+                           n_tile: Optional[int] = None,
                            interpret: bool = False) -> jnp.ndarray:
     """Fused candidate-major refine scan: (R,) estimated sq distances.
 
@@ -556,7 +582,8 @@ def saq_refine_scan_pallas(codes_r: jnp.ndarray, factors_r: jnp.ndarray,
     onehot = jnp.asarray(make_seg_onehot(col_offsets))
     colscale = make_col_scale(col_offsets, seg_bits, prefix_bits)[None, :]
 
-    n_tile = min(n_tile, max(8, r))
+    n_tile = min(DEFAULT_N_TILE if n_tile is None else int(n_tile),
+                 max(8, r))
     n_pad = -r % n_tile
     codes_p = jnp.pad(codes_r, ((0, n_pad), (0, 0)))
     qres_p = jnp.pad(queries_r.astype(jnp.float32), ((0, n_pad), (0, 0)))

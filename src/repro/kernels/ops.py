@@ -28,6 +28,34 @@ def _interpret() -> bool:
     return jax.default_backend() == "cpu"
 
 
+def _tuned_n_tile(operator: str, n_tile: int | None, **dims
+                  ) -> int | None:
+    """Resolve a scan shim's ``n_tile``: an explicit caller value always
+    wins; otherwise consult the process-global tuning cache for this
+    (operator, static shape) and fall back to None (the kernel's
+    hand-tuned default). The consult happens at trace time, so activate
+    the cache before compiling (see ``repro.tune.cache``). Poisoned
+    cache values sanitize to None — a tuned tile can only change speed,
+    never results."""
+    if n_tile is not None:
+        return int(n_tile)
+    from repro.tune.cache import get_active_cache, lookup_n_tile
+    if get_active_cache() is None:
+        return None
+    return lookup_n_tile(operator, dims)
+
+
+def _tuned_backend(operator: str, allow_cluster_major: bool, **dims
+                   ) -> str | None:
+    """Cache-resolved backend string for a scan shim whose caller passed
+    ``backend=None``, or None (-> ``probe_scan_backend()``)."""
+    from repro.tune.cache import get_active_cache, lookup_backend
+    if get_active_cache() is None:
+        return None
+    return lookup_backend(operator, dims,
+                          allow_cluster_major=allow_cluster_major)
+
+
 def caq_adjust(o: jnp.ndarray, codes: jnp.ndarray, vmax: jnp.ndarray,
                bits: int, rounds: int) -> jnp.ndarray:
     """Kernel-backed Algorithm 1; same contract as ref.caq_adjust_ref."""
@@ -44,12 +72,14 @@ def ivf_scan(codes: jnp.ndarray, vmax: jnp.ndarray, rescale: jnp.ndarray,
 
 
 def saq_scan(packed, queries: jnp.ndarray, q_norm_sq=None,
-             prefix_bits=None) -> jnp.ndarray:
+             prefix_bits=None, n_tile: int | None = None) -> jnp.ndarray:
     """Kernel-backed fused multi-segment multi-query scan over a
     ``PackedCodes`` container (flat ``(N, ...)`` leading shape); see
     ref.saq_scan_ref. queries: (NQ, d_stored) packed rotated queries.
     Bit-packed containers are scanned directly (the kernel expands the
-    uint32 word buffer in VMEM). Returns (NQ, N) estimated squared
+    uint32 word buffer in VMEM). ``n_tile`` (rows per VMEM block) is
+    resolved explicit-arg -> tuning cache -> ``DEFAULT_N_TILE``; any
+    value is bit-identical. Returns (NQ, N) estimated squared
     distances."""
     lay = packed.layout
     interpret = _interpret()
@@ -60,12 +90,17 @@ def saq_scan(packed, queries: jnp.ndarray, q_norm_sq=None,
         # expand through XLA first and feed the kernel columns. Results
         # are bit-identical either way (tests/test_bitpack_parity.py).
         packed = packed.unpack()
+    n_tile = _tuned_n_tile("saq_scan", n_tile,
+                           n=int(packed.codes.shape[0]),
+                           nq=int(queries.shape[0]),
+                           bitpacked=int(packed.bitpacked))
     return saq_scan_pallas(
         packed.codes, packed.factors, packed.o_norm_sq_total, queries,
         col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
         q_norm_sq=q_norm_sq,
         prefix_bits=tuple(prefix_bits) if prefix_bits is not None else None,
         bitpacked=packed.bitpacked,
+        n_tile=n_tile,
         interpret=interpret)
 
 
@@ -119,7 +154,8 @@ def probe_scan(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
                o_norm_g: jnp.ndarray, queries_g: jnp.ndarray,
                q_norm_g: jnp.ndarray, col_offsets, seg_bits,
                prefix_bits=None, bitpacked: bool = False,
-               backend: str | None = None) -> jnp.ndarray:
+               backend: str | None = None,
+               n_tile: int | None = None) -> jnp.ndarray:
     """Backend-dispatched gathered IVF probe scan -> (NQ, P, L) sq dists.
 
     The single scan primitive behind ``IVFIndex.search_batch`` (single
@@ -131,9 +167,14 @@ def probe_scan(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
     strings name a *layout* handled by the caller
     (``repro.ivf.index._probe_dists``), which routes the deduped
     operands through ``cluster_scan`` — this gathered-slab entry point
-    only accepts the base backends.
+    only accepts the base backends. ``n_tile``: rows per VMEM block on
+    the Pallas paths (explicit arg -> tuning cache -> whole slab); the
+    XLA fallback has no tiling and ignores it.
     """
-    backend = backend or probe_scan_backend()
+    nq, p, l = (int(s) for s in o_norm_g.shape)
+    if backend is None:
+        backend = (_tuned_backend("probe_scan", False, nq=nq, p=p, l=l)
+                   or probe_scan_backend())
     base, cluster_major = split_probe_backend(backend)
     if cluster_major:
         raise ValueError(
@@ -158,6 +199,7 @@ def probe_scan(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
             prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
                          else None),
             bitpacked=bitpacked,
+            n_tile=_tuned_n_tile("probe_scan", n_tile, nq=nq, p=p, l=l),
             interpret=(base == "pallas-interpret"))
     return saq_probe_scan_xla(
         codes_g, factors_g, o_norm_g, queries_g, q_norm_g,
@@ -171,7 +213,8 @@ def refine_scan(codes_r: jnp.ndarray, factors_r: jnp.ndarray,
                 o_norm_r: jnp.ndarray, queries_r: jnp.ndarray,
                 q_norm_r: jnp.ndarray, col_offsets, seg_bits,
                 prefix_bits=None, bitpacked: bool = False,
-                backend: str | None = None) -> jnp.ndarray:
+                backend: str | None = None,
+                n_tile: int | None = None) -> jnp.ndarray:
     """Backend-dispatched candidate-major refine scan -> (R,) sq dists.
 
     The phase-2 primitive of the two-phase search: a flat list of
@@ -180,9 +223,14 @@ def refine_scan(codes_r: jnp.ndarray, factors_r: jnp.ndarray,
     ``ivf_scan.saq_refine_scan_pallas`` for the operand contract.
     ``backend`` accepts the same strings as ``probe_scan``; the
     ``-cluster-major`` suffix is tolerated and ignored (candidates are
-    already flat — there is no slab layout to pick).
+    already flat — there is no slab layout to pick). ``n_tile``: rows
+    per VMEM block on the Pallas paths (explicit arg -> tuning cache ->
+    ``DEFAULT_N_TILE``); the XLA fallback ignores it.
     """
-    backend = backend or probe_scan_backend()
+    r = int(codes_r.shape[0])
+    if backend is None:
+        backend = (_tuned_backend("refine_scan", True, r=r)
+                   or probe_scan_backend())
     base, _ = split_probe_backend(backend)
     col_offsets = tuple(col_offsets)
     seg_bits = tuple(seg_bits)
@@ -199,6 +247,7 @@ def refine_scan(codes_r: jnp.ndarray, factors_r: jnp.ndarray,
             prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
                          else None),
             bitpacked=bitpacked,
+            n_tile=_tuned_n_tile("refine_scan", n_tile, r=r),
             interpret=(base == "pallas-interpret"))
     return saq_refine_scan_xla(
         codes_r, factors_r, o_norm_r, queries_r, q_norm_r,
@@ -244,7 +293,8 @@ def cluster_scan(codes_u: jnp.ndarray, factors_u: jnp.ndarray,
                  o_norm_u: jnp.ndarray, queries_u: jnp.ndarray,
                  q_norm_u: jnp.ndarray, col_offsets, seg_bits,
                  prefix_bits=None, bitpacked: bool = False,
-                 backend: str | None = None) -> jnp.ndarray:
+                 backend: str | None = None,
+                 n_tile: int | None = None) -> jnp.ndarray:
     """Backend-dispatched cluster-major slab scan -> (U, NB, L) sq dists.
 
     The scan primitive behind the cluster-major search layout: U unique
@@ -254,8 +304,14 @@ def cluster_scan(codes_u: jnp.ndarray, factors_u: jnp.ndarray,
     ``backend`` accepts the same strings as ``probe_scan`` with or
     without the ``-cluster-major`` suffix (the suffix only selects the
     caller-side dedup layout; the slab scan itself is the same).
+    ``n_tile``: rows per VMEM block WITHIN a slab on the Pallas paths
+    (explicit arg -> tuning cache -> whole slab); XLA ignores it.
     """
-    backend = backend or probe_scan_backend(cluster_major=True)
+    u, l = int(codes_u.shape[0]), int(codes_u.shape[1])
+    nb = int(queries_u.shape[1])
+    if backend is None:
+        backend = (_tuned_backend("cluster_scan", True, u=u, l=l, nb=nb)
+                   or probe_scan_backend(cluster_major=True))
     base, _ = split_probe_backend(backend)
     col_offsets = tuple(col_offsets)
     seg_bits = tuple(seg_bits)
@@ -272,6 +328,7 @@ def cluster_scan(codes_u: jnp.ndarray, factors_u: jnp.ndarray,
             prefix_bits=(tuple(prefix_bits) if prefix_bits is not None
                          else None),
             bitpacked=bitpacked,
+            n_tile=_tuned_n_tile("cluster_scan", n_tile, u=u, l=l, nb=nb),
             interpret=(base == "pallas-interpret"))
     return saq_cluster_scan_xla(
         codes_u, factors_u, o_norm_u, queries_u, q_norm_u,

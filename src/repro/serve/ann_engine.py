@@ -224,6 +224,43 @@ class BatchPolicy:
         return (self.cluster_major_from is not None
                 and shape >= self.cluster_major_from)
 
+    # serving knobs the autotuner measures and persists per host
+    _TUNED_FIELDS = ("cluster_major_from", "batch_shapes", "probe_budget")
+
+    @classmethod
+    def tuned(cls, tuned=True, **overrides) -> "BatchPolicy":
+        """Build a policy whose ``cluster_major_from`` / ``batch_shapes``
+        / ``probe_budget`` come from a per-host tuning cache
+        (``repro.tune``). ``tuned`` accepts True (the active cache, else
+        the default cache path), a path, or a ``TuningCache``.
+
+        Resolution order per knob: an explicit keyword override ALWAYS
+        wins; then the cache's measured value (only when its host
+        fingerprint matches this host); then the hand-tuned class
+        default — so with no cache, a foreign-host cache, or a cache
+        missing the knob, the result is bit-for-bit ``BatchPolicy()``.
+        Poisoned cache values (wrong type/range) are dropped, not
+        raised: a bad cache can cost speed, never correctness."""
+        from repro.tune.cache import resolve_cache
+
+        cache = resolve_cache(tuned)
+        fields: dict = {}
+        if cache is not None and cache.matches_host():
+            pol = cache.policy or {}
+            v = pol.get("cluster_major_from")
+            if isinstance(v, int) and not isinstance(v, bool) and v >= 1:
+                fields["cluster_major_from"] = v
+            v = pol.get("batch_shapes")
+            if (isinstance(v, (list, tuple)) and v
+                    and all(isinstance(s, int) and not isinstance(s, bool)
+                            and s >= 1 for s in v)):
+                fields["batch_shapes"] = tuple(v)
+            v = pol.get("probe_budget")
+            if isinstance(v, int) and not isinstance(v, bool) and v >= 0:
+                fields["probe_budget"] = v
+        fields.update(overrides)
+        return cls(**fields)
+
 
 @dataclasses.dataclass
 class EngineStats:
@@ -297,8 +334,26 @@ class AnnEngine:
     """
 
     def __init__(self, index, policy: Optional[BatchPolicy] = None,
-                 mesh=None, axis="data", compaction: bool = True):
+                 mesh=None, axis="data", compaction: bool = True,
+                 tuned=None):
         self.index = index
+        if tuned is not None:
+            # The tuned= path: resolve serving knobs from a per-host
+            # tuning cache (repro.tune) and activate it process-wide so
+            # the kernel shims consult it when warmup() compiles. An
+            # explicit policy already IS the user's word on every knob —
+            # combining the two would silently ignore one of them.
+            if policy is not None:
+                raise ValueError(
+                    "pass either policy= (explicit knobs) or tuned= "
+                    "(cache-resolved knobs), not both — explicit "
+                    "per-knob overrides go through "
+                    "BatchPolicy.tuned(**overrides)")
+            from repro.tune.cache import resolve_cache, set_active_cache
+            cache = resolve_cache(tuned)
+            if cache is not None:
+                set_active_cache(cache)   # no-op on fingerprint mismatch
+            policy = BatchPolicy.tuned(cache)
         self.policy = policy or BatchPolicy()
         self.mesh = mesh
         self.axis = axis

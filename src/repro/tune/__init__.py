@@ -1,0 +1,28 @@
+"""Autotuning subsystem: operator registry, sweep, persisted cache.
+
+Kept import-light on purpose: ``kernels/ops.py`` consults
+``repro.tune.cache`` on every shim call, so importing this package must
+not pull in the registry/autotuner (which import the IVF stack and the
+benchmark workload generators). Import those explicitly:
+
+    from repro.tune import cache           # always cheap
+    from repro.tune import registry        # operators + metrics
+    from repro.tune import autotune        # the sweep + CLI
+"""
+from .cache import (CACHE_ENV_VAR, CorruptTuningCacheError, TuningCache,
+                    default_cache_path, get_active_cache, host_fingerprint,
+                    load_default_cache, resolve_cache, set_active_cache,
+                    shape_key)
+
+__all__ = [
+    "CACHE_ENV_VAR",
+    "CorruptTuningCacheError",
+    "TuningCache",
+    "default_cache_path",
+    "get_active_cache",
+    "host_fingerprint",
+    "load_default_cache",
+    "resolve_cache",
+    "set_active_cache",
+    "shape_key",
+]

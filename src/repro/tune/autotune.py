@@ -1,0 +1,309 @@
+"""Exhaustive-with-pruning autotuner over the operator registry.
+
+Sweep discipline, per (operator, static shape key):
+
+1. Run the **default config** first: one warmup call (compiles the jit'd
+   program), then ``repeats`` timed runs; the median is the reference
+   time and the output is the reference result.
+2. For every candidate config: warmup, then a single probe run — if the
+   probe is slower than ``PRUNE_FACTOR`` x the best median so far, the
+   candidate is pruned without further repeats (exhaustive-with-pruning;
+   compile time is never charged to a config).
+3. Surviving candidates get the full median-of-``repeats`` treatment.
+4. A candidate can only become the cached winner if its result is
+   **bit-identical** to the default config's (``np.array_equal`` on
+   every output leaf — the same machinery the layout-parity tests pin).
+   A tuned config must never change results, only speed. Non-identical
+   measurements are still recorded in the entry's metrics for the
+   record, flagged ``bit_identical: false``.
+
+On top of the per-operator sweep, ``derive_policy`` measures the
+serving-level knobs the engine resolves from the cache:
+
+* ``cluster_major_from`` — smallest batch shape from which the
+  cluster-major layout beats gathered at every shape from there up
+  (the empirical layout crossover; None when gathered always wins).
+* ``batch_shapes`` — the engine's padding ladder, trimmed at the
+  largest shape that still improves per-row throughput.
+* ``probe_budget_slack`` — the mesh probe-budget multiplier; only swept
+  when more than one device is attached (a 1-device sweep would just
+  measure noise), so single-device hosts fall back to the hand-tuned
+  ``PROBE_BUDGET_SLACK``.
+
+CLI (the CI ``tune-smoke`` job):
+
+    PYTHONPATH=src python -m repro.tune.autotune --fast --out TUNING_CACHE.json
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.tune.cache import TuningCache, host_fingerprint, shape_key
+
+PRUNE_FACTOR = 2.5
+
+
+def _block(result: Any) -> Any:
+    return jax.block_until_ready(result)
+
+
+def _leaves(result: Any) -> List[np.ndarray]:
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(result)]
+
+
+def bit_identical(a: Any, b: Any) -> bool:
+    """True iff two result pytrees match leaf-for-leaf, bit-for-bit
+    (NaNs compared by bit pattern, like the parity tests)."""
+    la, lb = _leaves(a), _leaves(b)
+    if len(la) != len(lb):
+        return False
+    for x, y in zip(la, lb):
+        if x.shape != y.shape or x.dtype != y.dtype:
+            return False
+        if x.dtype.kind == "f":
+            if not np.array_equal(x.view(np.uint32 if x.dtype.itemsize == 4
+                                         else np.uint64),
+                                  y.view(np.uint32 if y.dtype.itemsize == 4
+                                         else np.uint64)):
+                return False
+        elif not np.array_equal(x, y):
+            return False
+    return True
+
+
+def _time_config(run, repeats: int, probe_budget_s: Optional[float] = None
+                 ) -> Tuple[Optional[float], Any]:
+    """Warmup once (compile), then median-of-``repeats``. With
+    ``probe_budget_s`` set, a single probe run slower than the budget
+    prunes the config (returns ``(None, result)``)."""
+    result = _block(run())                      # warmup / compile
+    t0 = time.perf_counter()
+    _block(run())
+    probe = time.perf_counter() - t0
+    if probe_budget_s is not None and probe > probe_budget_s:
+        return None, result
+    times = [probe]
+    for _ in range(max(0, repeats - 1)):
+        t0 = time.perf_counter()
+        _block(run())
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times), result
+
+
+def tune_operator(op, fast: bool = False, repeats: Optional[int] = None,
+                  log=print) -> List[Dict[str, Any]]:
+    """Sweep one operator over its canonical workloads. Returns one
+    entry dict per workload: ``{"shape_key", "config", "metrics"}``."""
+    repeats = repeats if repeats is not None else (3 if fast else 7)
+    entries = []
+    for wl in op.workloads(fast):
+        default_cfg = dict(op.default_config)
+        t_default, ref = _time_config(lambda: op.run(wl, **default_cfg),
+                                      repeats)
+        best_cfg, best_t = default_cfg, t_default
+        measured = [{"config": default_cfg, "time_s": t_default,
+                     "bit_identical": True}]
+        for cfg in op.configs(fast):
+            if cfg == default_cfg:
+                continue
+            t, result = _time_config(
+                lambda: op.run(wl, **cfg), repeats,
+                probe_budget_s=best_t * PRUNE_FACTOR)
+            if t is None:
+                measured.append({"config": cfg, "pruned": True})
+                continue
+            identical = bit_identical(ref, result)
+            measured.append({"config": cfg, "time_s": t,
+                             "bit_identical": identical})
+            # the bit-identity gate: faster AND provably same results
+            if identical and t < best_t:
+                best_cfg, best_t = cfg, t
+        metrics = {"time_s": best_t, "default_time_s": t_default,
+                   "speedup": (t_default / best_t if best_t else 1.0),
+                   "repeats": repeats, "measured": measured}
+        for mname, mfn in op.metrics.items():
+            try:
+                metrics[mname] = mfn(wl, best_cfg, ref)
+            except Exception as e:           # metric must never kill a sweep
+                metrics[mname] = f"error: {e}"
+        log(f"tune,{op.name},{wl.shape_key},"
+            f"default_ms={t_default * 1e3:.3f},best_ms={best_t * 1e3:.3f},"
+            f"config={best_cfg}")
+        entries.append({"shape_key": wl.shape_key, "config": best_cfg,
+                        "metrics": metrics})
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Serving-policy derivation: layout crossover, batch shapes, probe budget
+# ---------------------------------------------------------------------------
+
+def derive_policy(fast: bool = False, repeats: Optional[int] = None,
+                  log=print) -> Dict[str, Any]:
+    from repro.kernels import ops as kops
+    from repro.serve.ann_engine import BatchPolicy
+    from repro.tune.registry import _bundle, _index
+
+    repeats = repeats if repeats is not None else (3 if fast else 5)
+    idx = _index(fast)
+    b = _bundle(fast)
+    queries = np.asarray(b["queries"])
+    shapes = tuple(s for s in BatchPolicy().batch_shapes)
+    k, nprobe = 10, 8
+
+    rows = []
+    crossover: Optional[int] = None
+    for shape in shapes:
+        qb = jax.numpy.asarray(
+            queries[(np.arange(shape) % queries.shape[0])])
+        t_by_layout = {}
+        for cm in (False, True):
+            backend = kops.probe_scan_backend(cluster_major=cm)
+            t, _ = _time_config(
+                lambda: idx.search_batch(qb, k=k, nprobe=nprobe,
+                                         backend=backend),
+                repeats)
+            t_by_layout[cm] = t
+        rows.append({"shape": shape, "gathered_s": t_by_layout[False],
+                     "cluster_major_s": t_by_layout[True]})
+        log(f"tune,layout,shape={shape},"
+            f"gathered_ms={t_by_layout[False] * 1e3:.3f},"
+            f"cluster_major_ms={t_by_layout[True] * 1e3:.3f}")
+    # crossover: smallest shape from which cluster-major wins at every
+    # larger measured shape (monotone suffix, so the policy's single
+    # threshold is faithful to the measurements)
+    for i, row in enumerate(rows):
+        if all(r["cluster_major_s"] < r["gathered_s"] for r in rows[i:]):
+            crossover = row["shape"]
+            break
+
+    # batch_shapes: keep the ladder up to the last shape that still
+    # improves per-row throughput (larger dispatch shapes that only lose
+    # qps/row would just burn padding); always keep at least the default
+    # ladder's head so small dispatches pad tightly.
+    best = [min(r["gathered_s"], r["cluster_major_s"]) for r in rows]
+    per_row = [shapes[i] / best[i] for i in range(len(shapes))]  # rows/s
+    knee = int(np.argmax(per_row))
+    batch_shapes = list(shapes[:knee + 1])
+
+    policy: Dict[str, Any] = {
+        "batch_shapes": batch_shapes,
+        "layout_rows": rows,
+    }
+    if crossover is not None:
+        policy["cluster_major_from"] = crossover
+
+    if jax.device_count() > 1:
+        policy.update(_derive_probe_budget(idx, queries, k, nprobe,
+                                           repeats, log))
+    return policy
+
+
+def _derive_probe_budget(idx, queries, k, nprobe, repeats, log
+                         ) -> Dict[str, Any]:
+    """Sweep the probe-budget slack multiplier on a real mesh. Only
+    called with >1 device; the winner must keep results identical to
+    the uncompacted program (overflow fallback makes that automatic —
+    budgets only change speed/memory, never the merged top-k)."""
+    from jax.sharding import Mesh
+    from repro.ivf.distributed import (PROBE_BUDGET_SLACK,
+                                       default_probe_budget)
+
+    devs = np.asarray(jax.devices())
+    mesh = Mesh(devs, ("data",))
+    n_shards = len(devs)
+    qb = jax.numpy.asarray(queries[: min(16, queries.shape[0])])
+    ref = None
+    best_slack, best_t = None, None
+    out: Dict[str, Any] = {"probe_budget_rows": []}
+    for slack in (1, 2, 3):
+        budget = default_probe_budget(nprobe, n_shards, slack=slack)
+        t, result = _time_config(
+            lambda: idx.search_batch(qb, k=k, nprobe=nprobe, mesh=mesh,
+                                     probe_budget=budget), repeats)
+        if slack == PROBE_BUDGET_SLACK:
+            ref = result
+        out["probe_budget_rows"].append(
+            {"slack": slack, "budget": budget, "time_s": t})
+        log(f"tune,probe_budget,slack={slack},budget={budget},"
+            f"ms={t * 1e3:.3f}")
+        if best_t is None or t < best_t:
+            best_slack, best_t = slack, t
+    # budgets are bit-identical by construction (counted overflow falls
+    # back to the uncompacted program) — still verify against the
+    # hand-tuned slack before caching
+    if ref is not None and best_slack is not None:
+        budget = default_probe_budget(nprobe, n_shards, slack=best_slack)
+        _, result = _time_config(
+            lambda: idx.search_batch(qb, k=k, nprobe=nprobe, mesh=mesh,
+                                     probe_budget=budget), 1)
+        if not bit_identical(ref, result):
+            best_slack = PROBE_BUDGET_SLACK
+    out["probe_budget_slack"] = best_slack
+    out["probe_budget"] = default_probe_budget(nprobe, n_shards,
+                                               slack=best_slack)
+    return out
+
+
+def autotune(fast: bool = False, operators: Optional[Sequence[str]] = None,
+             repeats: Optional[int] = None, with_policy: bool = True,
+             log=print) -> TuningCache:
+    """Run the full sweep and return a populated ``TuningCache`` (the
+    caller persists it with ``cache.save(path)``)."""
+    from repro.tune.registry import OPERATORS
+
+    cache = TuningCache(fingerprint=host_fingerprint())
+    names = list(operators) if operators else sorted(OPERATORS)
+    unknown = [n for n in names if n not in OPERATORS]
+    if unknown:
+        raise ValueError(
+            f"unknown operator(s) {unknown}; registered: "
+            f"{sorted(OPERATORS)}")
+    for name in names:
+        for entry in tune_operator(OPERATORS[name], fast=fast,
+                                   repeats=repeats, log=log):
+            cache.put(name, entry["shape_key"], entry["config"],
+                      entry["metrics"])
+    if with_policy:
+        cache.policy = derive_policy(fast=fast, repeats=repeats, log=log)
+    cache.meta = {"fast": fast, "operators": names}
+    return cache
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    from repro.tune.cache import default_cache_path
+
+    ap = argparse.ArgumentParser(
+        description="Sweep kernel/serving configs and persist a "
+                    "per-host tuning cache")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny pruned grid (CI smoke)")
+    ap.add_argument("--out", default=None,
+                    help="cache path (default: $REPRO_TUNING_CACHE or "
+                         "./TUNING_CACHE.json)")
+    ap.add_argument("--ops", default=None,
+                    help="comma-separated operator subset")
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--no-policy", action="store_true",
+                    help="skip the serving-policy derivation sweep")
+    args = ap.parse_args(argv)
+
+    cache = autotune(fast=args.fast,
+                     operators=(args.ops.split(",") if args.ops else None),
+                     repeats=args.repeats,
+                     with_policy=not args.no_policy)
+    out = args.out or default_cache_path()
+    cache.save(out)
+    print(f"tune,saved,path={out},entries={len(cache.entries)},"
+          f"policy_keys={sorted(cache.policy)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

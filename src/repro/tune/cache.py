@@ -1,0 +1,275 @@
+"""Persisted per-host tuning cache.
+
+A ``TuningCache`` is a versioned JSON document keyed by a *host
+fingerprint* (platform, device kind, device count, jax version) plus a
+per-operator *shape key*. The autotuner (``repro.tune.autotune``) writes
+one; the ``kernels/ops.py`` shims and ``BatchPolicy.tuned()`` consult a
+process-global *active* cache at trace/construction time.
+
+Contract (mirrors the persistence layer's discipline):
+
+* Writes are atomic and crash-safe — staged at ``<path>.tmp`` and
+  published with ``os.replace``, the same idiom as ``save_index``.
+* A corrupt or truncated file raises ``CorruptTuningCacheError``
+  (loudly, mirroring ``CorruptIndexError``) — it is never silently
+  treated as "no cache".
+* A cache whose fingerprint does not match this host is *valid but
+  inapplicable*: lookups fall back to the hand-tuned defaults, exactly
+  as if no cache were present.
+* A poisoned entry (wrong type, non-positive ``n_tile``, unknown
+  backend string) is ignored by consumers — tuned configs can only
+  change speed, never results, so the worst a bad entry can do is be
+  dropped.
+
+With no active cache every consult is a cheap ``None`` check and all
+code paths behave bit-for-bit as before the tuner existed.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform as _platform
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional
+
+CACHE_VERSION = 1
+CACHE_ENV_VAR = "REPRO_TUNING_CACHE"
+DEFAULT_CACHE_FILENAME = "TUNING_CACHE.json"
+
+
+class CorruptTuningCacheError(ValueError):
+    """A tuning-cache file exists but cannot be parsed/validated.
+
+    Raised loudly (like ``CorruptIndexError``) instead of silently
+    falling back to defaults: a half-written or hand-mangled cache is a
+    deployment bug, not a missing optimization."""
+
+
+def host_fingerprint() -> Dict[str, Any]:
+    """The identity a tuning cache is valid for: measurements only
+    transfer between hosts that agree on all four fields."""
+    import jax
+
+    devs = jax.devices()
+    return {
+        "platform": f"{_platform.system()}-{_platform.machine()}",
+        "device_kind": devs[0].device_kind if devs else "none",
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+    }
+
+
+def shape_key(**dims: Any) -> str:
+    """Canonical shape-key string: sorted ``k=v`` pairs. Keys are the
+    operator's static call-shape dims (e.g. ``nq=16,p=8,l=256``)."""
+    return ",".join(f"{k}={dims[k]}" for k in sorted(dims))
+
+
+def _entry_key(operator: str, key: str) -> str:
+    return f"{operator}::{key}"
+
+
+@dataclass
+class TuningCache:
+    """In-memory form of the persisted cache document.
+
+    entries: ``"op::shape_key" -> {"config": {...}, "metrics": {...}}``
+    policy:  engine/serving-level knobs derived by the sweep
+             (``cluster_major_from``, ``batch_shapes``,
+             ``probe_budget``, ``probe_budget_slack``)
+    """
+    fingerprint: Dict[str, Any] = field(default_factory=host_fingerprint)
+    entries: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    policy: Dict[str, Any] = field(default_factory=dict)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    # -- construction / persistence ------------------------------------
+
+    def matches_host(self) -> bool:
+        return self.fingerprint == host_fingerprint()
+
+    def put(self, operator: str, key: str, config: Mapping[str, Any],
+            metrics: Optional[Mapping[str, Any]] = None) -> None:
+        self.entries[_entry_key(operator, key)] = {
+            "config": dict(config), "metrics": dict(metrics or {})}
+
+    def get(self, operator: str, key: str) -> Optional[Dict[str, Any]]:
+        """Config dict for (operator, shape key), or None. Host
+        fingerprint is NOT re-checked here — activation is the gate."""
+        ent = self.entries.get(_entry_key(operator, key))
+        if not isinstance(ent, dict):
+            return None
+        cfg = ent.get("config")
+        return cfg if isinstance(cfg, dict) else None
+
+    def to_doc(self) -> Dict[str, Any]:
+        return {
+            "version": CACHE_VERSION,
+            "fingerprint": self.fingerprint,
+            "policy": self.policy,
+            "entries": self.entries,
+            "meta": self.meta,
+        }
+
+    def save(self, path: str) -> None:
+        """Atomic crash-safe write (stage at ``.tmp`` + ``os.replace``,
+        the ``save_index`` idiom). Serialization is deterministic
+        (sorted keys), so save -> load -> save is byte-stable."""
+        payload = json.dumps(self.to_doc(), indent=2, sort_keys=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(payload + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+
+    @classmethod
+    def from_doc(cls, doc: Any, source: str = "<doc>") -> "TuningCache":
+        if not isinstance(doc, dict):
+            raise CorruptTuningCacheError(
+                f"tuning cache {source}: top level is "
+                f"{type(doc).__name__}, expected object")
+        version = doc.get("version")
+        if version != CACHE_VERSION:
+            raise CorruptTuningCacheError(
+                f"tuning cache {source}: version {version!r} not "
+                f"supported (expected {CACHE_VERSION})")
+        for field_name, typ in (("fingerprint", dict), ("policy", dict),
+                                ("entries", dict)):
+            if not isinstance(doc.get(field_name), typ):
+                raise CorruptTuningCacheError(
+                    f"tuning cache {source}: missing or malformed "
+                    f"{field_name!r} section")
+        return cls(fingerprint=doc["fingerprint"], entries=doc["entries"],
+                   policy=doc["policy"], meta=doc.get("meta", {}))
+
+    @classmethod
+    def load(cls, path: str) -> "TuningCache":
+        """Parse + validate; raises ``CorruptTuningCacheError`` on any
+        torn/truncated/malformed file and ``FileNotFoundError`` when the
+        path does not exist (those are different failures: an absent
+        cache is normal, a broken one never is)."""
+        with open(path, "r") as f:
+            raw = f.read()
+        try:
+            doc = json.loads(raw)
+        except json.JSONDecodeError as e:
+            raise CorruptTuningCacheError(
+                f"tuning cache {path}: invalid JSON ({e})") from e
+        return cls.from_doc(doc, source=path)
+
+
+# ---------------------------------------------------------------------------
+# Process-global active cache — what the ops shims and BatchPolicy consult
+# ---------------------------------------------------------------------------
+
+_active_lock = threading.Lock()
+_active: Optional[TuningCache] = None
+
+
+def set_active_cache(cache: Optional[TuningCache]) -> Optional[TuningCache]:
+    """Install (or clear, with None) the process-global cache the
+    ``kernels/ops.py`` shims consult. A cache whose fingerprint does not
+    match this host is NOT installed (lookups would be measurements from
+    another machine) — the call is then a no-op returning None.
+
+    Consults happen at *trace time*: activate before
+    ``AnnEngine.warmup()`` / first search so compiled programs bake the
+    tuned knobs in. Swapping the cache later does not re-trace programs
+    already compiled (same caveat as ``probe_scan_backend``); since
+    tuned knobs never change results, a stale program is only ever a
+    missed speedup."""
+    global _active
+    if cache is not None and not cache.matches_host():
+        return None
+    with _active_lock:
+        _active = cache
+    return cache
+
+
+def get_active_cache() -> Optional[TuningCache]:
+    return _active
+
+
+def default_cache_path() -> str:
+    """``$REPRO_TUNING_CACHE`` if set, else ``TUNING_CACHE.json`` in the
+    current working directory."""
+    return os.environ.get(CACHE_ENV_VAR) or DEFAULT_CACHE_FILENAME
+
+
+def load_default_cache() -> Optional[TuningCache]:
+    """Load the default-path cache if present; None when absent.
+    Corrupt files still raise — absence is normal, breakage is not."""
+    path = default_cache_path()
+    if not os.path.exists(path):
+        return None
+    return TuningCache.load(path)
+
+
+def resolve_cache(tuned: Any) -> Optional[TuningCache]:
+    """Normalize the ``tuned=`` argument accepted by ``AnnEngine`` /
+    ``BatchPolicy.tuned``: True -> active cache, else the default path
+    (absent file -> None); a str/os.PathLike -> load it (missing file
+    raises — an explicit path is a hard reference); a ``TuningCache`` ->
+    itself; None -> None. Fingerprint gating happens at the consumer."""
+    if tuned is None:
+        return None
+    if tuned is True:
+        return get_active_cache() or load_default_cache()
+    if isinstance(tuned, TuningCache):
+        return tuned
+    if isinstance(tuned, (str, os.PathLike)):
+        return TuningCache.load(os.fspath(tuned))
+    raise TypeError(
+        f"tuned= expects True, a path, or a TuningCache; got "
+        f"{type(tuned).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Sanitized lookups — poisoned entries degrade to defaults, never crash
+# ---------------------------------------------------------------------------
+
+def lookup_config(operator: str, dims: Mapping[str, Any]
+                  ) -> Optional[Dict[str, Any]]:
+    """Active-cache config for (operator, shape dims), or None. Cheap
+    fast path when no cache is active (one global read)."""
+    cache = _active
+    if cache is None:
+        return None
+    return cache.get(operator, shape_key(**dims))
+
+
+def sanitize_n_tile(value: Any) -> Optional[int]:
+    """A usable ``n_tile`` or None. Any positive int is safe by the
+    row-independence argument (see ``ivf_scan``); everything else is a
+    poisoned entry and is dropped."""
+    if isinstance(value, bool) or not isinstance(value, int):
+        return None
+    return value if value >= 1 else None
+
+
+def lookup_n_tile(operator: str, dims: Mapping[str, Any]) -> Optional[int]:
+    cfg = lookup_config(operator, dims)
+    return sanitize_n_tile(cfg.get("n_tile")) if cfg else None
+
+
+def lookup_backend(operator: str, dims: Mapping[str, Any],
+                   allow_cluster_major: bool = True) -> Optional[str]:
+    """A validated probe-scan backend string from the active cache, or
+    None. Unknown strings and (for gathered entry points) cluster-major
+    suffixes are dropped as poisoned."""
+    cfg = lookup_config(operator, dims)
+    if not cfg:
+        return None
+    backend = cfg.get("backend")
+    if not isinstance(backend, str):
+        return None
+    from repro.kernels.ops import split_probe_backend
+    try:
+        _, cluster_major = split_probe_backend(backend)
+    except ValueError:
+        return None
+    if cluster_major and not allow_cluster_major:
+        return None
+    return backend

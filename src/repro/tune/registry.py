@@ -1,0 +1,438 @@
+"""Operator registry for the autotuner (tritonbench idiom).
+
+``register_operator`` / ``register_metric`` wrap the ``kernels/ops.py``
+scan entry points — ``probe_scan``, ``cluster_scan``, ``refine_scan``,
+``saq_scan`` — plus the two search-level programs (the two-phase
+coarse->refine search and the staged multistage scan). Each operator
+declares:
+
+* its tunable **config space** (``n_tile`` tile sizes, backend strings,
+  the ``coarse_prefix``/``coarse_dim_frac``/``oversample`` grid for the
+  two-phase search) and the hand-tuned **default config** the sweep must
+  beat,
+* a canonical **workload generator** reusing the benchmark datasets
+  (``benchmarks/common.bench_datasets`` when the benchmarks package is
+  importable, the underlying ``repro.data`` synthesizers otherwise):
+  real SAQ-encoded rows, real preprocessed queries, shapes matching the
+  serving path,
+* **metrics** beyond wall-clock: ``slab_scan_flops`` (raw f32 MACs),
+  ``scan_bit_macs`` (the paper's bit-weighted currency), and peak slab
+  bytes.
+
+The registry itself never times anything — ``repro.tune.autotune``
+iterates ``OPERATORS`` and owns the sweep/validation discipline.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+N_TILE_GRID = (8, 16, 32, 64, 128)
+N_TILE_GRID_FAST = (32, 128)
+
+# Backend bases that can actually execute on this host: the compiled
+# Pallas kernel exists on TPU only; the interpret-mode kernel runs
+# anywhere (it is the parity path on CPU).
+BACKEND_BASES = (("xla", "pallas") if jax.default_backend() == "tpu"
+                 else ("xla", "pallas-interpret"))
+
+
+@dataclass(frozen=True)
+class Workload:
+    """One canonical (operator, static shape) measurement point."""
+    dims: Mapping[str, Any]          # the shape key (repro.tune.cache)
+    operands: Mapping[str, Any]      # ready device arrays / containers
+
+    @property
+    def shape_key(self) -> str:
+        from repro.tune.cache import shape_key
+        return shape_key(**self.dims)
+
+
+@dataclass
+class Operator:
+    name: str
+    fn: Callable[..., Any]           # fn(workload, **config) -> arrays
+    config_space: Dict[str, Tuple]   # knob -> full candidate grid
+    fast_config_space: Dict[str, Tuple]
+    default_config: Dict[str, Any]
+    workloads: Callable[[bool], List[Workload]]   # (fast) -> points
+    metrics: Dict[str, Callable] = field(default_factory=dict)
+
+    def configs(self, fast: bool = False) -> Iterator[Dict[str, Any]]:
+        """Every candidate config (the default is yielded first so the
+        sweep always has its reference measurement)."""
+        space = self.fast_config_space if fast else self.config_space
+        yield dict(self.default_config)
+        keys = sorted(space)
+        for combo in itertools.product(*(space[k] for k in keys)):
+            cfg = dict(zip(keys, combo))
+            if cfg != self.default_config:
+                yield cfg
+
+    def run(self, workload: Workload, **config) -> Any:
+        return self.fn(workload, **config)
+
+
+OPERATORS: Dict[str, Operator] = {}
+
+
+def register_operator(name: str, *, config_space: Mapping[str, Tuple],
+                      fast_config_space: Mapping[str, Tuple],
+                      default_config: Mapping[str, Any],
+                      workloads: Callable[[bool], List[Workload]]):
+    """Decorator registering ``fn(workload, **config)`` as a tunable
+    operator (tritonbench's ``register_benchmark`` shape)."""
+    def deco(fn):
+        OPERATORS[name] = Operator(
+            name=name, fn=fn, config_space=dict(config_space),
+            fast_config_space=dict(fast_config_space),
+            default_config=dict(default_config), workloads=workloads)
+        return fn
+    return deco
+
+
+def register_metric(operator: str, metric: str):
+    """Decorator attaching ``fn(workload, config, result) -> float`` to
+    a registered operator (tritonbench's ``register_metric`` shape)."""
+    def deco(fn):
+        OPERATORS[operator].metrics[metric] = fn
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# Canonical workload data: the benchmark "deep" dataset, SAQ-encoded once
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=2)
+def _bundle(fast: bool = True):
+    """Dataset + fitted SAQ + packed rows + preprocessed queries, shared
+    by every operator's workload generator."""
+    from repro.core import fit_saq
+
+    try:
+        from benchmarks.common import bench_datasets
+        x, queries = bench_datasets(fast=True)["deep"]
+    except ImportError:
+        # benchmarks/ lives at the repo root and is not installed as a
+        # package; synthesize the identical dataset directly.
+        from repro.data import DATASETS, make_dataset, make_queries
+        spec = DATASETS["deep"]
+        x = make_dataset(spec, n=min(spec.n, 8000))
+        queries = make_queries(spec, 16)
+    x = np.asarray(x, np.float32)
+    queries = np.asarray(queries, np.float32)
+    if fast:
+        x = x[:4096]
+    saq = fit_saq(x, avg_bits=4, rounds=2, align=64, max_bits=12, seed=0)
+    packed = saq.encode(jnp.asarray(x))          # bitpacked container
+    qc = saq.preprocess_queries(jnp.asarray(queries))
+    return {"x": x, "queries": queries, "saq": saq, "packed": packed,
+            "qc": qc}
+
+
+@functools.lru_cache(maxsize=2)
+def _index(fast: bool = True):
+    """A small IVF index matching the batch-qps bench build (for the
+    search-level operators)."""
+    from repro.core import SAQConfig
+    from repro.ivf.index import IVFIndex
+
+    b = _bundle(fast)
+    cfg = SAQConfig(avg_bits=4, rounds=2, align=64, max_bits=12)
+    return IVFIndex.build(jnp.asarray(b["x"]), cfg,
+                          n_clusters=16 if fast else 32, kmeans_iters=5)
+
+
+def _rows(n_rows: int, b) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """``n_rows`` real encoded rows (codes, factors, o_norm), wrapping
+    modulo N so any slab geometry is reachable from the dataset."""
+    packed = b["packed"]
+    n = packed.codes.shape[0]
+    idx = np.arange(n_rows) % n
+    return (jnp.asarray(np.asarray(packed.codes)[idx]),
+            jnp.asarray(np.asarray(packed.factors)[idx]),
+            jnp.asarray(np.asarray(packed.o_norm_sq_total)[idx]))
+
+
+def _residual_queries(nq: int, b) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    qc = b["qc"]
+    q = np.asarray(qc.q_rot)
+    qn = np.asarray(qc.q_norm_sq)
+    idx = np.arange(nq) % q.shape[0]
+    return jnp.asarray(q[idx]), jnp.asarray(qn[idx])
+
+
+def _slab_dims(fast: bool, *, gathered: bool) -> Dict[str, int]:
+    if gathered:
+        return ({"nq": 8, "p": 8, "l": 128} if fast
+                else {"nq": 16, "p": 8, "l": 256})
+    return ({"u": 8, "l": 128, "nb": 8} if fast
+            else {"u": 16, "l": 512, "nb": 16})
+
+
+# ---------------------------------------------------------------------------
+# Operators
+# ---------------------------------------------------------------------------
+
+def _saq_scan_workloads(fast: bool) -> List[Workload]:
+    b = _bundle(fast)
+    packed = b["packed"]
+    qc = b["qc"]
+    nq = 8 if fast else 16
+    return [Workload(
+        dims={"n": int(packed.codes.shape[0]), "nq": nq,
+              "bitpacked": int(packed.bitpacked)},
+        operands={"packed": packed, "queries": qc.q_rot[:nq],
+                  "q_norm_sq": qc.q_norm_sq[:nq], "layout": packed.layout})]
+
+
+@register_operator(
+    "saq_scan",
+    config_space={"n_tile": N_TILE_GRID},
+    fast_config_space={"n_tile": N_TILE_GRID_FAST},
+    default_config={"n_tile": None},
+    workloads=_saq_scan_workloads)
+def _run_saq_scan(wl: Workload, *, n_tile=None):
+    return ops.saq_scan(wl.operands["packed"], wl.operands["queries"],
+                        q_norm_sq=wl.operands["q_norm_sq"], n_tile=n_tile)
+
+
+def _probe_scan_workloads(fast: bool) -> List[Workload]:
+    b = _bundle(fast)
+    dims = _slab_dims(fast, gathered=True)
+    nq, p, l = dims["nq"], dims["p"], dims["l"]
+    codes, factors, o_norm = _rows(nq * p * l, b)
+    lay = b["packed"].layout
+    q, qn = _residual_queries(nq * p, b)
+    s = factors.shape[-2]
+    return [Workload(dims=dims, operands={
+        "codes_g": codes.reshape(nq, p, l, -1),
+        "factors_g": factors.reshape(nq, p, l, s, 3),
+        "o_norm_g": o_norm.reshape(nq, p, l),
+        "queries_g": q.reshape(nq, p, -1),
+        "q_norm_g": qn.reshape(nq, p),
+        "layout": lay, "bitpacked": b["packed"].bitpacked})]
+
+
+@register_operator(
+    "probe_scan",
+    config_space={"n_tile": N_TILE_GRID, "backend": BACKEND_BASES},
+    fast_config_space={"n_tile": N_TILE_GRID_FAST,
+                       "backend": BACKEND_BASES},
+    default_config={"n_tile": None, "backend": None},
+    workloads=_probe_scan_workloads)
+def _run_probe_scan(wl: Workload, *, n_tile=None, backend=None):
+    o = wl.operands
+    lay = o["layout"]
+    return ops.probe_scan(o["codes_g"], o["factors_g"], o["o_norm_g"],
+                          o["queries_g"], o["q_norm_g"],
+                          col_offsets=lay.col_offsets,
+                          seg_bits=lay.seg_bits,
+                          bitpacked=o["bitpacked"],
+                          backend=backend, n_tile=n_tile)
+
+
+def _cluster_scan_workloads(fast: bool) -> List[Workload]:
+    b = _bundle(fast)
+    dims = _slab_dims(fast, gathered=False)
+    u, l, nb = dims["u"], dims["l"], dims["nb"]
+    codes, factors, o_norm = _rows(u * l, b)
+    q, qn = _residual_queries(nb, b)
+    s = factors.shape[-2]
+    return [Workload(dims=dims, operands={
+        "codes_u": codes.reshape(u, l, -1),
+        "factors_u": factors.reshape(u, l, s, 3),
+        "o_norm_u": o_norm.reshape(u, l),
+        "queries_u": jnp.broadcast_to(q[None], (u,) + q.shape),
+        "q_norm_u": jnp.broadcast_to(qn[None], (u,) + qn.shape),
+        "layout": b["packed"].layout,
+        "bitpacked": b["packed"].bitpacked})]
+
+
+@register_operator(
+    "cluster_scan",
+    config_space={"n_tile": N_TILE_GRID, "backend": BACKEND_BASES},
+    fast_config_space={"n_tile": N_TILE_GRID_FAST,
+                       "backend": BACKEND_BASES},
+    default_config={"n_tile": None, "backend": None},
+    workloads=_cluster_scan_workloads)
+def _run_cluster_scan(wl: Workload, *, n_tile=None, backend=None):
+    o = wl.operands
+    lay = o["layout"]
+    return ops.cluster_scan(o["codes_u"], o["factors_u"], o["o_norm_u"],
+                            o["queries_u"], o["q_norm_u"],
+                            col_offsets=lay.col_offsets,
+                            seg_bits=lay.seg_bits,
+                            bitpacked=o["bitpacked"],
+                            backend=backend, n_tile=n_tile)
+
+
+def _refine_scan_workloads(fast: bool) -> List[Workload]:
+    b = _bundle(fast)
+    r = 1024 if fast else 4096
+    codes, factors, o_norm = _rows(r, b)
+    q, qn = _residual_queries(r, b)       # candidate-major: per-row query
+    return [Workload(dims={"r": r}, operands={
+        "codes_r": codes, "factors_r": factors, "o_norm_r": o_norm,
+        "queries_r": q, "q_norm_r": qn,
+        "layout": b["packed"].layout,
+        "bitpacked": b["packed"].bitpacked})]
+
+
+@register_operator(
+    "refine_scan",
+    config_space={"n_tile": N_TILE_GRID, "backend": BACKEND_BASES},
+    fast_config_space={"n_tile": N_TILE_GRID_FAST,
+                       "backend": BACKEND_BASES},
+    default_config={"n_tile": None, "backend": None},
+    workloads=_refine_scan_workloads)
+def _run_refine_scan(wl: Workload, *, n_tile=None, backend=None):
+    o = wl.operands
+    lay = o["layout"]
+    return ops.refine_scan(o["codes_r"], o["factors_r"], o["o_norm_r"],
+                           o["queries_r"], o["q_norm_r"],
+                           col_offsets=lay.col_offsets,
+                           seg_bits=lay.seg_bits,
+                           bitpacked=o["bitpacked"],
+                           backend=backend, n_tile=n_tile)
+
+
+def _search_workloads(fast: bool) -> List[Workload]:
+    b = _bundle(fast)
+    idx = _index(fast)
+    nq = 8 if fast else 16
+    return [Workload(
+        dims={"nq": nq, "k": 10, "nprobe": 8,
+              "n": int(b["x"].shape[0]), "c": int(idx.n_clusters)},
+        operands={"index": idx, "queries": jnp.asarray(b["queries"][:nq]),
+                  "k": 10, "nprobe": 8})]
+
+
+@register_operator(
+    "two_phase_search",
+    # The coarse grid CHANGES which candidates survive phase 1, so these
+    # configs can only win the sweep when their (ids, dists) come out
+    # bit-identical to the default's — the autotuner's validation gate
+    # enforces that; non-identical configs are recorded as measurements
+    # (they are accuracy-tier material) but never cached as winners.
+    config_space={"coarse_prefix": (1, 2),
+                  "coarse_dim_frac": (0.5, 1.0),
+                  "oversample": (4.0, 8.0)},
+    fast_config_space={"coarse_prefix": (1, 2),
+                       "coarse_dim_frac": (1.0,),
+                       "oversample": (8.0,)},
+    default_config={"coarse_prefix": 1, "coarse_dim_frac": 1.0,
+                    "oversample": 8.0},
+    workloads=_search_workloads)
+def _run_two_phase_search(wl: Workload, *, coarse_prefix=1,
+                          coarse_dim_frac=1.0, oversample=8.0):
+    from repro.ivf.refine import RefineSpec
+    o = wl.operands
+    spec = RefineSpec(coarse_prefix=coarse_prefix,
+                      oversample=oversample,
+                      coarse_dim_frac=coarse_dim_frac)
+    return o["index"].search_batch(o["queries"], k=o["k"],
+                                   nprobe=o["nprobe"], refine=spec)
+
+
+@register_operator(
+    "multistage_scan",
+    # No kernel-level knobs yet: registered for its workload + metrics
+    # (the staged scan is the bit-budget baseline the two-phase search
+    # is judged against).
+    config_space={},
+    fast_config_space={},
+    default_config={},
+    workloads=_search_workloads)
+def _run_multistage_scan(wl: Workload):
+    o = wl.operands
+    q = o["queries"][0]
+    ids, dists, _stats = o["index"].search_multistage(
+        q, k=o["k"], nprobe=o["nprobe"])
+    return ids, dists
+
+
+# ---------------------------------------------------------------------------
+# Metrics (beyond wall-clock, which the autotuner measures itself)
+# ---------------------------------------------------------------------------
+
+def _layout_of(wl: Workload):
+    return wl.operands["layout"]
+
+
+@register_metric("saq_scan", "slab_scan_flops")
+def _m_saq_flops(wl, config, result):
+    d = _layout_of(wl).col_offsets[-1]
+    return float(ops.slab_scan_flops(wl.dims["n"], 1, d, wl.dims["nq"]))
+
+
+@register_metric("saq_scan", "scan_bit_macs")
+def _m_saq_bits(wl, config, result):
+    lay = _layout_of(wl)
+    return float(ops.scan_bit_macs(wl.dims["n"], lay.col_offsets,
+                                   lay.seg_bits, n_q=wl.dims["nq"]))
+
+
+@register_metric("probe_scan", "slab_scan_flops")
+def _m_probe_flops(wl, config, result):
+    d = _layout_of(wl).col_offsets[-1]
+    return float(ops.slab_scan_flops(wl.dims["nq"] * wl.dims["p"],
+                                     wl.dims["l"], d))
+
+
+@register_metric("probe_scan", "scan_bit_macs")
+def _m_probe_bits(wl, config, result):
+    lay = _layout_of(wl)
+    return float(ops.scan_bit_macs(
+        wl.dims["nq"] * wl.dims["p"] * wl.dims["l"],
+        lay.col_offsets, lay.seg_bits))
+
+
+@register_metric("probe_scan", "peak_slab_bytes")
+def _m_probe_bytes(wl, config, result):
+    return float(wl.operands["codes_g"].size
+                 * wl.operands["codes_g"].dtype.itemsize)
+
+
+@register_metric("cluster_scan", "slab_scan_flops")
+def _m_cluster_flops(wl, config, result):
+    d = _layout_of(wl).col_offsets[-1]
+    return float(ops.slab_scan_flops(wl.dims["u"], wl.dims["l"], d,
+                                     wl.dims["nb"]))
+
+
+@register_metric("cluster_scan", "scan_bit_macs")
+def _m_cluster_bits(wl, config, result):
+    lay = _layout_of(wl)
+    return float(ops.scan_bit_macs(wl.dims["u"] * wl.dims["l"],
+                                   lay.col_offsets, lay.seg_bits,
+                                   n_q=wl.dims["nb"]))
+
+
+@register_metric("cluster_scan", "peak_slab_bytes")
+def _m_cluster_bytes(wl, config, result):
+    return float(wl.operands["codes_u"].size
+                 * wl.operands["codes_u"].dtype.itemsize)
+
+
+@register_metric("refine_scan", "slab_scan_flops")
+def _m_refine_flops(wl, config, result):
+    d = _layout_of(wl).col_offsets[-1]
+    return float(ops.slab_scan_flops(wl.dims["r"], 1, d))
+
+
+@register_metric("refine_scan", "scan_bit_macs")
+def _m_refine_bits(wl, config, result):
+    lay = _layout_of(wl)
+    return float(ops.scan_bit_macs(wl.dims["r"], lay.col_offsets,
+                                   lay.seg_bits))

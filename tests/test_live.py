@@ -330,6 +330,77 @@ def test_v4_replay_compacts_when_delta_overflows(built, tmp_path):
     np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
 
 
+def test_wal_gc_bounded_segments(built, tmp_path):
+    """Satellite: a long-running add/append/compact cycle must keep
+    ``wal/`` bounded — with a checkpoint attached, every fold re-bases
+    the on-disk save (same crash-safe swap) and drops the segments the
+    new base covers, pruning the durable prefix of the op log too."""
+    idx, x, q = _fresh(built, l_delta=4)
+    p = str(tmp_path / "live_idx")
+    save_index(idx, p)
+    assert idx.live.checkpoint_path is None   # save is a one-shot export
+    idx.live.attach_checkpoint(p)
+    wal = os.path.join(p, "wal")
+    for i in range(6):
+        new = idx.add(decaying_data(3, 32, seed=60 + i).astype(np.float32))
+        idx.remove([int(new[0])])
+        append_wal(idx, p)                    # serving checkpoint stream
+        assert idx.compact()                  # fold -> re-base -> GC
+        segs = [n for n in os.listdir(wal) if n.endswith(".npz")]
+        assert segs == []                     # covered segments dropped
+        manifest = json.load(open(os.path.join(p, "manifest.json")))
+        assert manifest["base_seq"] == idx.live.compacted_seq
+        assert idx.live.pending_ops(0) == []  # op log pruned with them
+    assert idx.live.checkpoints == 6
+    # the re-based save round-trips the live set (and load re-attaches)
+    loaded = load_index(p)
+    assert loaded.live.checkpoint_path == os.path.abspath(p)
+    assert set(loaded.live._id_loc) == set(idx.live._id_loc)
+    ids_a, _ = idx.search_batch(q, k=10, nprobe=idx.n_clusters)
+    ids_b, _ = loaded.search_batch(q, k=10, nprobe=idx.n_clusters)
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    # detached again: folds leave the directory alone (old behavior)
+    idx.live.attach_checkpoint(None)
+    base = manifest["base_seq"]
+    idx.add(decaying_data(2, 32, seed=90).astype(np.float32))
+    assert idx.compact()
+    manifest2 = json.load(open(os.path.join(p, "manifest.json")))
+    assert manifest2["base_seq"] == base
+
+
+def test_wal_gc_background_fold(built, tmp_path):
+    """The background compactor's folds run the same checkpoint: the
+    attached directory's base advances while a writer streams."""
+    idx, x, q = _fresh(built, l_delta=2)
+    p = str(tmp_path / "live_idx")
+    save_index(idx, p)
+    idx.live.attach_checkpoint(p)
+    live = idx.live
+    live.start_compaction(interval_s=0.01, threshold=0.5)
+    try:
+        for i in range(8):
+            v = decaying_data(2, 32, seed=70 + i).astype(np.float32)
+            deadline = time.monotonic() + 30.0
+            while True:
+                try:
+                    idx.add(v)
+                    break
+                except ClusterFullError:
+                    assert time.monotonic() < deadline
+                    time.sleep(0.01)          # let the compactor fold
+        deadline = time.monotonic() + 30.0
+        while live.checkpoints == 0 and time.monotonic() < deadline:
+            time.sleep(0.01)
+    finally:
+        live.stop_compaction()
+    assert live.checkpoints >= 1
+    manifest = json.load(open(os.path.join(p, "manifest.json")))
+    assert manifest["base_seq"] > 0
+    segs = [n for n in os.listdir(os.path.join(p, "wal"))
+            if n.endswith(".npz")]
+    assert segs == []
+
+
 def test_frozen_save_stays_v3(built, tmp_path):
     idx, _, _ = built
     frozen = dataclasses.replace(idx, live=None)

@@ -1,0 +1,408 @@
+"""Kernel & serving-policy autotuner: the persisted per-host
+``TuningCache`` (fingerprint gating, loud corrupt-file rejection,
+byte-stable round trip), poisoned-entry degradation, ``n_tile``
+threading bit-identity through the ops shims and ``search_batch``, the
+``BatchPolicy.tuned`` / ``AnnEngine(tuned=)`` resolution order, the
+cache-resolved mesh probe-budget slack, and the sweep's bit-identity
+gate on a synthetic operator (a config that changes results must never
+become the cached winner).
+
+The tuner's hard contract threads through every test here: a tuned
+config may only change SPEED — with no cache, a mismatched cache, or a
+poisoned entry, every code path must behave bit-for-bit as the
+hand-tuned defaults.
+"""
+import json
+import math
+import os
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import decaying_data
+from repro.core.saq import SAQConfig, fit_saq
+from repro.ivf import IVFIndex
+from repro.kernels import ops
+from repro.serve import AnnEngine, BatchPolicy
+from repro.tune.cache import (CACHE_ENV_VAR, CorruptTuningCacheError,
+                              TuningCache, get_active_cache,
+                              host_fingerprint, load_default_cache,
+                              lookup_backend, lookup_n_tile,
+                              resolve_cache, sanitize_n_tile,
+                              set_active_cache, shape_key)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_active_cache():
+    """Every test leaves the process-global cache the way it found it
+    (deactivated) — a leaked cache would silently re-tune other suites."""
+    set_active_cache(None)
+    yield
+    set_active_cache(None)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    x = decaying_data(400, 32, seed=21)
+    saq = fit_saq(x, avg_bits=4, rounds=2, align=8, max_bits=8)
+    packed = saq.encode(jnp.asarray(x))
+    qs = decaying_data(8, 32, seed=22)
+    qc = saq.preprocess_queries(jnp.asarray(qs))
+    return saq, packed, qc
+
+
+@pytest.fixture(scope="module")
+def built():
+    x = decaying_data(600, 32, seed=23)
+    idx = IVFIndex.build(jnp.asarray(x),
+                         SAQConfig(avg_bits=4, rounds=2, align=8,
+                                   max_bits=8),
+                         n_clusters=8, kmeans_iters=4, seed=0)
+    q = np.asarray(x[:4], np.float32)
+    return idx, q
+
+
+def _bits(a):
+    a = np.asarray(a)
+    return a.view(np.uint32 if a.dtype.itemsize == 4 else np.uint64)
+
+
+def _demo_cache() -> TuningCache:
+    cache = TuningCache()
+    cache.put("saq_scan", shape_key(n=400, nq=8, bitpacked=1),
+              {"n_tile": 64}, {"time_s": 0.001})
+    cache.policy = {"cluster_major_from": 16, "batch_shapes": [1, 2, 4],
+                    "probe_budget": 4, "probe_budget_slack": 3}
+    cache.meta = {"fast": True}
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# persistence: byte-stable round trip, loud corrupt-file rejection
+# ---------------------------------------------------------------------------
+
+def test_save_load_save_byte_stable(tmp_path):
+    cache = _demo_cache()
+    p1 = str(tmp_path / "a.json")
+    p2 = str(tmp_path / "b.json")
+    cache.save(p1)
+    loaded = TuningCache.load(p1)
+    assert loaded.fingerprint == cache.fingerprint
+    assert loaded.policy == cache.policy
+    assert loaded.get("saq_scan", shape_key(n=400, nq=8, bitpacked=1)) \
+        == {"n_tile": 64}
+    loaded.save(p2)
+    assert open(p1, "rb").read() == open(p2, "rb").read()
+    # overwrite in place is stable too (atomic replace, no append drift)
+    loaded.save(p1)
+    assert open(p1, "rb").read() == open(p2, "rb").read()
+
+
+@pytest.mark.parametrize("payload", [
+    "not json at all {",
+    json.dumps([1, 2, 3]),                              # wrong top level
+    json.dumps({"version": 999, "fingerprint": {}, "policy": {},
+                "entries": {}}),                        # unknown version
+    json.dumps({"version": 1, "fingerprint": {}, "policy": {}}),
+                                                        # missing entries
+    json.dumps({"version": 1, "fingerprint": "x", "policy": {},
+                "entries": {}}),                        # malformed section
+], ids=["torn-json", "top-level", "version", "missing", "malformed"])
+def test_corrupt_cache_raises_loudly(tmp_path, payload):
+    """A broken cache file is a deployment bug, not a missing
+    optimization — it must raise (mirroring CorruptIndexError), never
+    silently fall back to defaults."""
+    p = str(tmp_path / "cache.json")
+    with open(p, "w") as f:
+        f.write(payload)
+    with pytest.raises(CorruptTuningCacheError):
+        TuningCache.load(p)
+
+
+def test_truncated_cache_raises(tmp_path):
+    p = str(tmp_path / "cache.json")
+    _demo_cache().save(p)
+    raw = open(p, "rb").read()
+    with open(p, "wb") as f:
+        f.write(raw[: len(raw) // 2])       # torn mid-write
+    with pytest.raises(CorruptTuningCacheError):
+        TuningCache.load(p)
+
+
+def test_default_cache_resolution(tmp_path, monkeypatch):
+    p = str(tmp_path / "cache.json")
+    monkeypatch.setenv(CACHE_ENV_VAR, p)
+    assert load_default_cache() is None          # absence is normal
+    _demo_cache().save(p)
+    assert load_default_cache() is not None
+    assert resolve_cache(True) is not None       # env-var path
+    with open(p, "w") as f:
+        f.write("garbage")                       # breakage never is
+    with pytest.raises(CorruptTuningCacheError):
+        load_default_cache()
+    with pytest.raises(FileNotFoundError):
+        resolve_cache(str(tmp_path / "missing.json"))
+    with pytest.raises(TypeError):
+        resolve_cache(42)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint gating + poisoned entries degrade to defaults
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_mismatch_falls_back_to_defaults():
+    cache = _demo_cache()
+    cache.fingerprint = dict(cache.fingerprint,
+                             device_kind="tpu-from-another-host")
+    assert not cache.matches_host()
+    # activation refuses it (lookups would be another machine's wins)
+    assert set_active_cache(cache) is None
+    assert get_active_cache() is None
+    assert lookup_n_tile("saq_scan",
+                         {"n": 400, "nq": 8, "bitpacked": 1}) is None
+    # policy resolution falls back to the hand-tuned BatchPolicy
+    assert BatchPolicy.tuned(cache) == BatchPolicy()
+
+
+def test_sanitize_poisoned_n_tile():
+    assert sanitize_n_tile(7) == 7
+    assert sanitize_n_tile(1) == 1
+    for junk in (True, False, 0, -4, "8", 3.5, None, [16]):
+        assert sanitize_n_tile(junk) is None
+
+
+def test_lookup_backend_drops_poisoned_strings():
+    cache = TuningCache()
+    dims = {"nq": 4, "p": 2, "l": 16}
+    key = shape_key(**dims)
+    for bogus in ("warp-speed", 17, None):
+        cache.put("probe_scan", key, {"backend": bogus})
+        set_active_cache(cache)
+        assert lookup_backend("probe_scan", dims) is None
+    # cluster-major entry offered to a gathered-only entry point: drop
+    cache.put("probe_scan", key, {"backend": "xla-cluster-major"})
+    assert lookup_backend("probe_scan", dims,
+                          allow_cluster_major=False) is None
+    assert lookup_backend("probe_scan", dims,
+                          allow_cluster_major=True) \
+        == "xla-cluster-major"
+    cache.put("probe_scan", key, {"backend": "xla"})
+    assert lookup_backend("probe_scan", dims,
+                          allow_cluster_major=False) == "xla"
+
+
+def test_poisoned_or_odd_n_tile_scan_bit_identical(fitted):
+    """The acceptance pin: entries the sweep could never have written
+    (poisoned types) AND legal-but-unusual tile sizes must leave
+    ``ops.saq_scan`` results bit-identical to the no-cache default —
+    row tiling only changes the grid, never any row's contraction."""
+    saq, packed, qc = fitted
+    key = shape_key(n=int(packed.codes.shape[0]),
+                    nq=int(qc.q_rot.shape[0]),
+                    bitpacked=int(packed.bitpacked))
+    ref = np.asarray(ops.saq_scan(packed, qc.q_rot,
+                                  q_norm_sq=qc.q_norm_sq))
+    for val in (True, -4, "x", 3, 7, 10_000):
+        cache = TuningCache()
+        cache.put("saq_scan", key, {"n_tile": val})
+        assert set_active_cache(cache) is cache
+        got = np.asarray(ops.saq_scan(packed, qc.q_rot,
+                                      q_norm_sq=qc.q_norm_sq))
+        set_active_cache(None)
+        np.testing.assert_array_equal(_bits(ref), _bits(got),
+                                      err_msg=f"n_tile={val!r}")
+
+
+def test_tuned_n_tile_search_batch_bit_identical(built):
+    """End to end through the jit'd ``search_batch`` program on the
+    Pallas parity path: a cache-resolved ``n_tile`` for the probe scan
+    at the search's true static shape must not change the top-k by one
+    bit. ``jax.clear_caches()`` forces the re-trace — the shim consult
+    happens at trace time, so without it the cached program would
+    simply be reused (the documented stale-program behavior: a missed
+    speedup, never a wrong result)."""
+    idx, q = built
+    k, nprobe = 5, 4
+    backend = "pallas-interpret"
+    ids_ref, d_ref = idx.search_batch(q, k=k, nprobe=nprobe,
+                                      backend=backend)
+    cache = TuningCache()
+    dims = {"nq": q.shape[0], "p": min(nprobe, idx.n_clusters),
+            "l": int(idx.ids.shape[1])}
+    cache.put("probe_scan", shape_key(**dims), {"n_tile": 3})
+    assert set_active_cache(cache) is cache
+    jax.clear_caches()
+    ids_t, d_t = idx.search_batch(q, k=k, nprobe=nprobe, backend=backend)
+    np.testing.assert_array_equal(np.asarray(ids_ref), np.asarray(ids_t))
+    np.testing.assert_array_equal(_bits(d_ref), _bits(d_t))
+
+
+def test_explicit_n_tile_wins_over_cache(fitted):
+    """Resolution order: explicit caller value > cache > default. An
+    explicit ``n_tile`` must be honored (and stay bit-identical) even
+    with a conflicting active cache."""
+    saq, packed, qc = fitted
+    key = shape_key(n=int(packed.codes.shape[0]),
+                    nq=int(qc.q_rot.shape[0]),
+                    bitpacked=int(packed.bitpacked))
+    cache = TuningCache()
+    cache.put("saq_scan", key, {"n_tile": 128})
+    assert set_active_cache(cache) is cache
+    ref = np.asarray(ops.saq_scan(packed, qc.q_rot,
+                                  q_norm_sq=qc.q_norm_sq))
+    got = np.asarray(ops.saq_scan(packed, qc.q_rot,
+                                  q_norm_sq=qc.q_norm_sq, n_tile=5))
+    np.testing.assert_array_equal(_bits(ref), _bits(got))
+
+
+# ---------------------------------------------------------------------------
+# serving-policy resolution: BatchPolicy.tuned / AnnEngine(tuned=) / budget
+# ---------------------------------------------------------------------------
+
+def test_batch_policy_tuned_resolution():
+    cache = _demo_cache()
+    pol = BatchPolicy.tuned(cache)
+    assert pol.cluster_major_from == 16
+    assert pol.batch_shapes == (1, 2, 4)
+    assert pol.probe_budget == 4
+    # explicit values always win over the cache
+    pol2 = BatchPolicy.tuned(cache, cluster_major_from=2,
+                             batch_shapes=(1, 8))
+    assert pol2.cluster_major_from == 2
+    assert pol2.batch_shapes == (1, 8)
+    assert pol2.probe_budget == 4           # untouched field still tuned
+    # None / absent cache -> hand-tuned defaults, bit-for-bit
+    assert BatchPolicy.tuned(None) == BatchPolicy()
+
+
+def test_batch_policy_tuned_drops_poisoned_policy():
+    cache = TuningCache()
+    cache.policy = {"cluster_major_from": True, "batch_shapes": "nope",
+                    "probe_budget": -2}
+    assert BatchPolicy.tuned(cache) == BatchPolicy()
+    cache.policy = {"batch_shapes": []}     # empty ladder is poisoned
+    assert BatchPolicy.tuned(cache) == BatchPolicy()
+
+
+def test_engine_tuned_argument(built):
+    idx, q = built
+    cache = _demo_cache()
+    with pytest.raises(ValueError, match="not both"):
+        AnnEngine(idx, policy=BatchPolicy(), tuned=cache)
+    with AnnEngine(idx, tuned=cache) as eng:
+        # the engine resolved its policy from the cache AND activated
+        # it for the kernel shims' trace-time consults
+        assert eng.policy.cluster_major_from == 16
+        assert eng.policy.batch_shapes == (1, 2, 4)
+        assert get_active_cache() is cache
+        fut = eng.submit(q[0], k=5, nprobe=4)
+        ids, _ = fut.result(timeout=60)
+        assert len(ids) == 5
+
+
+def test_probe_budget_slack_from_cache():
+    from repro.ivf.distributed import (PROBE_BUDGET_SLACK,
+                                       default_probe_budget)
+    nprobe, shards = 16, 4
+    hand = min(nprobe, math.ceil(nprobe / shards) * PROBE_BUDGET_SLACK)
+    assert default_probe_budget(nprobe, shards) == hand
+    cache = TuningCache()
+    cache.policy = {"probe_budget_slack": 3}
+    assert set_active_cache(cache) is cache
+    assert default_probe_budget(nprobe, shards) \
+        == min(nprobe, math.ceil(nprobe / shards) * 3)
+    # explicit slack still wins; poisoned slack degrades to hand-tuned
+    assert default_probe_budget(nprobe, shards, slack=1) \
+        == math.ceil(nprobe / shards)
+    cache.policy = {"probe_budget_slack": True}
+    assert default_probe_budget(nprobe, shards) == hand
+
+
+# ---------------------------------------------------------------------------
+# registry + sweep: default-first enumeration, bit-identity gate
+# ---------------------------------------------------------------------------
+
+def test_registry_registers_scan_operators():
+    from repro.tune import registry
+    expected = {"saq_scan", "probe_scan", "cluster_scan", "refine_scan",
+                "two_phase_search", "multistage_scan"}
+    assert expected <= set(registry.OPERATORS)
+    for name in expected:
+        op = registry.OPERATORS[name]
+        cfgs = list(op.configs(fast=True))
+        assert cfgs[0] == op.default_config      # reference runs first
+        assert all(c == op.default_config or c != cfgs[0]
+                   for c in cfgs[1:])
+        # every slab-scan operator exposes at least one work metric
+        if name in ("saq_scan", "probe_scan", "cluster_scan",
+                    "refine_scan"):
+            assert op.metrics, f"{name} has no registered metrics"
+
+
+def test_sweep_bit_identity_gate_rejects_wrong_results():
+    """A synthetic operator where one config is FASTER but returns
+    different results: the sweep must record it (flagged) and keep the
+    default as the winner — speed never buys a results change."""
+    from repro.tune.autotune import tune_operator
+    from repro.tune.registry import Operator, Workload
+
+    x = jnp.asarray(np.linspace(0.0, 1.0, 512, dtype=np.float32))
+
+    def run(wl, *, mode="exact"):
+        v = wl.operands["x"]
+        if mode == "exact":
+            return jnp.sort(v)[::-1]
+        return v                     # "fast" but wrong: skips the sort
+
+    op = Operator(
+        name="toy", fn=run,
+        config_space={"mode": ("exact", "wrong")},
+        fast_config_space={"mode": ("exact", "wrong")},
+        default_config={"mode": "exact"},
+        workloads=lambda fast: [Workload(dims={"n": 512},
+                                         operands={"x": x})])
+    entries = tune_operator(op, fast=True, repeats=1,
+                            log=lambda *a, **k: None)
+    assert len(entries) == 1
+    ent = entries[0]
+    assert ent["shape_key"] == "n=512"
+    assert ent["config"] == {"mode": "exact"}    # wrong config lost
+    flagged = [m for m in ent["metrics"]["measured"]
+               if m["config"] == {"mode": "wrong"} and not m.get("pruned")]
+    assert flagged and flagged[0]["bit_identical"] is False
+
+
+def test_sweep_accepts_bit_identical_winner_and_caches_it(tmp_path):
+    """A config that IS bit-identical may win; the entry round-trips
+    through the persisted cache and resolves via the shim lookup."""
+    from repro.tune.autotune import tune_operator
+    from repro.tune.registry import Operator, Workload
+
+    x = jnp.asarray(decaying_data(256, 8, seed=5))
+
+    def run(wl, *, n_tile=None):
+        # row-independent reduction: any tiling is bit-identical
+        return jnp.sum(wl.operands["x"] * wl.operands["x"], axis=1)
+
+    op = Operator(
+        name="rowsum", fn=run,
+        config_space={"n_tile": (8, 64)},
+        fast_config_space={"n_tile": (8, 64)},
+        default_config={"n_tile": None},
+        workloads=lambda fast: [Workload(dims={"n": 256},
+                                         operands={"x": x})])
+    entries = tune_operator(op, fast=True, repeats=1,
+                            log=lambda *a, **k: None)
+    cache = TuningCache()
+    cache.put("rowsum", entries[0]["shape_key"], entries[0]["config"],
+              entries[0]["metrics"])
+    p = str(tmp_path / "cache.json")
+    cache.save(p)
+    loaded = TuningCache.load(p)
+    assert set_active_cache(loaded) is loaded
+    cfg = loaded.get("rowsum", "n=256")
+    assert cfg is not None and set(cfg) == {"n_tile"}
+    # the winner is a member of the swept grid (or the default)
+    assert cfg["n_tile"] in (None, 8, 64)
