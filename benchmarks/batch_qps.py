@@ -378,48 +378,16 @@ def _append_trajectory(rows: list, tier_rows: list,
     run) so the serving-perf trajectory across PRs stays
     machine-readable. This file is the ONLY bench output of this suite
     — the CI gates and the docs tables read the same rows."""
-    fp = os.path.join(_REPO_ROOT, "BENCH_batch_qps.json")
-    log = []
-    try:
-        with open(fp) as f:
-            log = json.load(f)
-        if not isinstance(log, list):
-            log = []
-    except (FileNotFoundError, json.JSONDecodeError):
-        pass
-    rev = None
-    try:
-        proc = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
-                              capture_output=True, text=True,
-                              cwd=_REPO_ROOT, timeout=10)
-        rev = proc.stdout.strip() or None
-        if rev:
-            dirty = subprocess.run(["git", "status", "--porcelain"],
-                                   capture_output=True, text=True,
-                                   cwd=_REPO_ROOT, timeout=10)
-            if dirty.stdout.strip():
-                rev += "-dirty"      # measured on uncommitted changes
-    except Exception:
-        pass
-    from repro.tune.cache import host_fingerprint
+    from .common import append_trajectory_entry
     keep = ("batch", "qps_batched", "qps_cluster_major", "qps_loop",
             "qps_engine", "engine_occupancy")
-    log.append({
-        "rev": rev,
-        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
-        # qps numbers only compare within a host class: record the
-        # identity next to the rev so the trajectory can be sliced
-        # per host (same fields the tuning cache keys on)
-        "host": host_fingerprint(),
+    append_trajectory_entry({
         "rows": [{k: r[k] for k in keep if k in r} for r in rows],
         "tiers": tier_rows,
         "mesh": mesh_rows,
         "live": live_rows,
         "tuned": tuned_rows,
     })
-    with open(fp, "w") as f:
-        json.dump(log, f, indent=1, default=float)
-        f.write("\n")
 
 
 def _timed(fn, repeats: int = 3) -> float:

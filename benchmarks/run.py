@@ -14,7 +14,7 @@ import time
 
 
 SUITES = ("accuracy", "quant_time", "anns", "space", "adjust_iters",
-          "bits_accessed", "progressive", "batch_qps")
+          "bits_accessed", "progressive", "batch_qps", "kv_decode")
 
 
 def main(argv=None) -> int:
@@ -31,11 +31,11 @@ def main(argv=None) -> int:
     wanted = args.only.split(",") if args.only else list(SUITES)
 
     from . import (accuracy, adjust_iters, anns, batch_qps, bits_accessed,
-                   progressive, quant_time, space)
+                   kv_decode, progressive, quant_time, space)
     mods = {"accuracy": accuracy, "quant_time": quant_time, "anns": anns,
             "space": space, "adjust_iters": adjust_iters,
             "bits_accessed": bits_accessed, "progressive": progressive,
-            "batch_qps": batch_qps}
+            "batch_qps": batch_qps, "kv_decode": kv_decode}
     for name in wanted:
         t0 = time.time()
         print(f"=== {name} ===", flush=True)

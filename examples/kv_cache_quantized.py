@@ -1,5 +1,7 @@
 """SAQ-quantized KV cache: serve the same prompts with bf16 / 8-bit /
-4-bit caches; report memory footprint and token agreement.
+4-bit / 2-bit paged caches; report the MEASURED cache footprint (bytes
+summed over the live cache arrays — packed word pages + factor planes +
+page table), per-request decode throughput, and token agreement.
 
     PYTHONPATH=src python examples/kv_cache_quantized.py
 """
@@ -11,18 +13,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import ModelConfig
+from repro.models import ModelConfig, forward
 from repro.models.model import init_params
 from repro.serve import ServeConfig, generate
+from repro.serve.engine import ServeStats
 
 
-def cache_bytes(cfg, batch, seq, bits):
-    per_tok = cfg.n_kv_heads * cfg.hd
-    if bits == 0:
-        return 2 * cfg.n_layers * batch * seq * per_tok * 2
-    codes = 2 * cfg.n_layers * batch * seq * per_tok * bits / 8
-    facs = 3 * cfg.n_layers * batch * seq * cfg.n_kv_heads * 4
-    return int(codes + facs)
+def measured_cache_bytes(params, cfg, prompt, serve):
+    """Bytes of the actual prefill cache pytree (no formula: the paged
+    quantized cache is word buffers + f32 factors + the page table)."""
+    _, caches = forward(params, cfg, prompt, collect_cache=True,
+                        cache_max_seq=serve.max_seq,
+                        cache_bits=serve.kv_bits,
+                        cache_page_size=serve.kv_page_size)
+    return sum(x.nbytes for x in jax.tree_util.tree_leaves(caches))
 
 
 def main():
@@ -35,18 +39,21 @@ def main():
                                 cfg.vocab_size)
     n_new, max_seq = 24, 80
     ref = None
-    for bits in (0, 8, 4):
-        out = generate(params, cfg,
-                       ServeConfig(max_seq=max_seq, kv_bits=bits),
-                       prompt, n_new)
-        nb = cache_bytes(cfg, 4, max_seq, bits)
+    for bits in (0, 8, 4, 2):
+        serve = ServeConfig(max_seq=max_seq, kv_bits=bits)
+        stats = ServeStats()
+        out = generate(params, cfg, serve, prompt, n_new, stats=stats)
+        nb = measured_cache_bytes(params, cfg, prompt, serve)
+        tps = stats.requests[0].decode_tps
         tag = "bf16" if bits == 0 else f"q{bits}"
         if ref is None:
             ref = out
-            print(f"{tag:5s} cache {nb/2**20:6.2f} MiB  (reference)")
+            print(f"{tag:5s} cache {nb/2**20:6.2f} MiB  "
+                  f"{tps:7.1f} tok/s  (reference)")
         else:
             agree = float((out == ref).mean())
             print(f"{tag:5s} cache {nb/2**20:6.2f} MiB  "
+                  f"{tps:7.1f} tok/s  "
                   f"token agreement vs bf16: {agree:.1%}")
 
 

@@ -1,0 +1,182 @@
+"""The packed-slab core: true bitstring packing shared by every
+storage consumer (IVF slabs, the flat scan container, and the
+SAQ-quantized KV-cache pages).
+
+Every column of a packed row is stored at exactly its segment's bit
+width inside a per-row uint32 word buffer. ``WordLayout`` is the single
+static description of that format; ``pack_words`` / ``unpack_words``
+are the host-side (jnp) codecs and ``kernel_unpack_table`` emits the
+(6, D) per-column table the Pallas kernel-body library
+(``repro.kernels.packbody``) uses for in-VMEM shift/mask expansion —
+one derivation, so the kernels and the host path can never disagree on
+the bit format.
+
+``pack_bits`` / ``unpack_bits`` are the layout-level wrappers used by
+``PackedCodes`` (they only touch ``layout.words`` / ``layout.d_stored``
+/ ``layout.dtype``, so any ``PackedLayout``-shaped object works).
+
+Everything here is re-exported from ``repro.core.types`` for
+backwards compatibility.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class WordLayout(NamedTuple):
+    """Static per-column word/shift tables for the bit-packed row format.
+
+    Row format: the stored columns' code fields are concatenated
+    little-endian-in-words — column ``c`` (packed order) occupies bits
+    ``[bit_off[c], bit_off[c] + bits[c])`` of the row bitstream, where
+    bit ``i`` lives in word ``i // 32`` at in-word position ``i % 32``.
+    Rows are padded up to a whole number of uint32 words (``n_words``);
+    a field never spans more than two words (``bits <= 32``).
+    """
+
+    bits: np.ndarray        # (D,) i64 field widths
+    bit_off: np.ndarray     # (D,) i64 first bit of each field
+    w_lo: np.ndarray        # (D,) i64 word holding the field's first bit
+    w_hi: np.ndarray        # (D,) i64 word holding the field's last bit
+    shift: np.ndarray       # (D,) i64 in-word position of the first bit
+    straddle: np.ndarray    # (D,) bool, field spans two words
+    hi_shift: np.ndarray    # (D,) u32 hi-word shift: 32-shift, 0 unless
+                            #       straddling (the ONE derivation every
+                            #       packer/unpacker shares)
+    field_mask: np.ndarray  # (D,) u32 (1 << bits) - 1
+    total_bits: int         # exact row payload: sum_s cols_s * bits_s
+    n_words: int            # uint32 words per row
+
+
+@functools.lru_cache(maxsize=None)
+def word_layout(col_offsets: Tuple[int, ...],
+                seg_bits: Tuple[int, ...]) -> WordLayout:
+    """Per-column bit-offset tables for a packed layout (cached)."""
+    if any(b < 1 or b > 32 for b in seg_bits):
+        raise ValueError(f"bit-packable widths are 1..32, got {seg_bits}")
+    d = col_offsets[-1]
+    bits = np.zeros((d,), np.int64)
+    for s, b in enumerate(seg_bits):
+        bits[col_offsets[s]:col_offsets[s + 1]] = b
+    bit_off = np.concatenate([[0], np.cumsum(bits)[:-1]]) if d else bits
+    total_bits = int(bits.sum())
+    n_words = (total_bits + 31) // 32
+    w_lo = bit_off // 32
+    shift = bit_off % 32
+    straddle = (shift + bits) > 32
+    w_hi = np.where(straddle, w_lo + 1, w_lo)
+    hi_shift = np.where(straddle, 32 - shift, 0).astype(np.uint32)
+    field_mask = ((np.uint64(1) << bits.astype(np.uint64)) - 1) \
+        .astype(np.uint32)
+    return WordLayout(bits=bits, bit_off=bit_off, w_lo=w_lo, w_hi=w_hi,
+                      shift=shift, straddle=straddle, hi_shift=hi_shift,
+                      field_mask=field_mask,
+                      total_bits=total_bits, n_words=n_words)
+
+
+def kernel_unpack_table(wl: WordLayout) -> np.ndarray:
+    """(6, D) uint32 per-column table for in-kernel word expansion —
+    rows [w_lo, w_hi, shift, hi_shift, straddle_mask, field_mask], the
+    same ``WordLayout`` fields the jnp pack/unpack use, so the Pallas
+    kernel and the host path can never disagree on the bit format:
+
+        vals = ((words[w_lo] >> shift)
+                | ((words[w_hi] << hi_shift) & straddle_mask)) & field_mask
+
+    The expansion itself lives in ``repro.kernels.packbody.expand_words``
+    (the one kernel body every scan and the attend kernel share).
+    """
+    smask = np.where(wl.straddle, 0xFFFFFFFF, 0)
+    return np.stack([wl.w_lo, wl.w_hi, wl.shift, wl.hi_shift, smask,
+                     wl.field_mask]).astype(np.uint32)
+
+
+def pack_words(codes: jnp.ndarray, wl: WordLayout) -> jnp.ndarray:
+    """Pack ``(..., D)`` integer codes into ``(..., n_words)`` uint32
+    words per the table, each column at exactly its field width.
+
+    Disjoint bit fields are accumulated with adds (no carries possible),
+    so the whole pack is two scatter-adds — jit/vmap-safe.
+    """
+    lead = codes.shape[:-1]
+    if codes.shape[-1] == 0 or wl.n_words == 0:
+        return jnp.zeros(lead + (wl.n_words,), jnp.uint32)
+    c = codes.astype(jnp.uint32) & jnp.asarray(wl.field_mask)
+    shift = jnp.asarray(wl.shift.astype(np.uint32))
+    # low-word part: in-word left shift (overflow past bit 31 wraps away,
+    # leaving exactly the bits that belong in w_lo)
+    lo = c << shift
+    # high-word part of straddling fields: the top (shift+bits-32) bits
+    hi = jnp.where(jnp.asarray(wl.straddle),
+                   c >> jnp.asarray(wl.hi_shift), jnp.uint32(0))
+    words = jnp.zeros(lead + (wl.n_words,), jnp.uint32)
+    words = words.at[..., jnp.asarray(wl.w_lo)].add(lo)
+    words = words.at[..., jnp.asarray(wl.w_hi)].add(hi)
+    return words
+
+
+def unpack_words(words: jnp.ndarray, wl: WordLayout,
+                 trunc: Optional[np.ndarray] = None) -> jnp.ndarray:
+    """Unpack ``(..., n_words)`` uint32 words back to ``(..., D)`` uint32
+    codes per the table; ``trunc`` optionally right-shifts each column
+    (progressive prefix reads) in the integer domain."""
+    if words.shape[-1] != wl.n_words:
+        raise ValueError(
+            f"word buffer last axis {words.shape[-1]} != n_words "
+            f"{wl.n_words} for this layout")
+    lead = words.shape[:-1]
+    d = wl.bits.shape[0]
+    if d == 0:
+        return jnp.zeros(lead + (0,), jnp.uint32)
+    words = words.astype(jnp.uint32)
+    lo = jnp.take(words, jnp.asarray(wl.w_lo), axis=-1)
+    hi = jnp.take(words, jnp.asarray(wl.w_hi), axis=-1)
+    shift = jnp.asarray(wl.shift.astype(np.uint32))
+    hi_part = jnp.where(jnp.asarray(wl.straddle),
+                        hi << jnp.asarray(wl.hi_shift), jnp.uint32(0))
+    vals = ((lo >> shift) | hi_part) & jnp.asarray(wl.field_mask)
+    if trunc is not None:
+        vals = vals >> jnp.asarray(trunc.astype(np.uint32))
+    return vals
+
+
+def prefix_trunc_shifts(col_offsets: Sequence[int], seg_bits: Sequence[int],
+                        prefix_bits: Optional[Sequence[int]]) -> np.ndarray:
+    """(d_stored,) per-column right-shift realizing the progressive
+    prefix read ``codes >> (B_s - min(prefix_bits[s], B_s))``."""
+    trunc = np.zeros((col_offsets[-1],), np.uint32)
+    if prefix_bits is not None:
+        for s, b in enumerate(seg_bits):
+            eff = min(prefix_bits[s], b)
+            trunc[col_offsets[s]:col_offsets[s + 1]] = b - eff
+    return trunc
+
+
+def pack_bits(codes: jnp.ndarray, layout) -> jnp.ndarray:
+    """Pack ``(..., d_stored)`` codes into ``(..., n_words)`` uint32
+    words, each column at exactly its segment's bit width. ``layout``
+    is a ``PackedLayout`` (duck-typed: ``.d_stored`` / ``.words``)."""
+    if codes.shape[-1] != layout.d_stored:
+        raise ValueError(
+            f"codes last axis {codes.shape[-1]} != d_stored "
+            f"{layout.d_stored}")
+    return pack_words(codes, layout.words)
+
+
+def unpack_bits(words: jnp.ndarray, layout,
+                prefix_bits: Optional[Sequence[int]] = None) -> jnp.ndarray:
+    """Unpack ``(..., n_words)`` uint32 words back to ``(..., d_stored)``
+    codes at ``layout.dtype``.
+
+    prefix_bits: optional per-segment progressive precision — the packed
+    equivalent of ``codes >> (B_s - b_s)`` (truncation happens in the
+    integer domain, so packed truncate == unpack-then-truncate exactly).
+    """
+    trunc = (prefix_trunc_shifts(layout.col_offsets, layout.seg_bits,
+                                 prefix_bits)
+             if prefix_bits is not None else None)
+    return unpack_words(words, layout.words, trunc).astype(layout.dtype)

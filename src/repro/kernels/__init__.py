@@ -6,12 +6,16 @@ the jit wrappers; ref.py the pure-jnp oracles):
 * ``caq_adjust`` — Algorithm 1 coordinate-descent encode loop
 * ``ivf_scan``   — quantized-domain distance scan (Eq 13/5), MXU dot
 * ``fwht``       — structured rotation (dimension balancing)
-* ``saq_attend`` — decode attention over the SAQ-quantized KV cache
+* ``saq_attend`` — decode attention over the WordLayout-packed KV cache
 * ``caq_encode`` — fused bulk encode (init + Jacobi adjust + factors)
+
+``packbody.py`` is the shared kernel-body library: the one in-VMEM
+WordLayout word-expansion every packed-storage kernel (the four IVF
+scans and the attend kernel) consumes.
 """
-from . import ops, ref  # noqa: F401
+from . import ops, packbody, ref  # noqa: F401
 from .caq_adjust import caq_adjust_pallas  # noqa: F401
 from .fwht import fwht_pallas  # noqa: F401
 from .ivf_scan import ivf_scan_pallas  # noqa: F401
-from .saq_attend import saq_attend_pallas  # noqa: F401
+from .saq_attend import saq_attend_pallas, saq_attend_xla  # noqa: F401
 from .caq_encode import caq_encode_pallas  # noqa: F401

@@ -66,6 +66,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.packbody import expand_words, unpack_tab
+
 DEFAULT_N_TILE = 512
 
 
@@ -143,16 +145,9 @@ def _saq_scan_kernel(*refs, seg_bits: Tuple[int, ...], n_q: int,
     if bitpacked:
         (codes_ref, fac_ref, colscale_ref, qmat_ref, qstats_ref, tab_ref,
          out_ref) = refs
-        words = codes_ref[...]                                   # (T, W) u32
-        tab = tab_ref[...]
-        # in-VMEM shift/mask expansion: gather each field's word(s) and
-        # cut the field out — (lo >> shift) | (hi << hi_shift) & smask
-        lo = jnp.take(words, tab[0].astype(jnp.int32), axis=1)   # (T, D)
-        hi = jnp.take(words, tab[1].astype(jnp.int32), axis=1)
-        vals = ((lo >> tab[2][None, :])
-                | ((hi << tab[3][None, :]) & tab[4][None, :])) \
-            & tab[5][None, :]
-        codes = vals.astype(jnp.float32)
+        # in-VMEM shift/mask expansion via the shared kernel body
+        codes = expand_words(codes_ref[...], tab_ref[...]) \
+            .astype(jnp.float32)                                 # (T, D)
     else:
         (codes_ref, fac_ref, colscale_ref, qmat_ref, qstats_ref,
          out_ref) = refs
@@ -173,16 +168,6 @@ def _saq_scan_kernel(*refs, seg_bits: Tuple[int, ...], n_q: int,
         acc += rescale * (delta * raw_s + q_sum * (0.5 * delta - vmax))
     o_norm = fac[:, 3 * s_count][:, None]
     out_ref[...] = o_norm + qstats_ref[s_count, :][None, :] - 2.0 * acc
-
-
-def _unpack_tab(col_offsets: Tuple[int, ...],
-                seg_bits: Tuple[int, ...]):
-    """(6, d_stored) uint32 per-column unpack tables for the kernel
-    (single source of truth: ``repro.core.types.kernel_unpack_table``)."""
-    from repro.core.types import kernel_unpack_table, word_layout
-
-    wl = word_layout(col_offsets, seg_bits)
-    return kernel_unpack_table(wl), wl.n_words
 
 
 @functools.partial(jax.jit,
@@ -255,7 +240,7 @@ def saq_scan_pallas(codes: jnp.ndarray, factors: jnp.ndarray,
     ]
     operands = [codes_p, fac_p, jnp.asarray(colscale), qmat, qstats]
     if bitpacked:
-        tab, n_words = _unpack_tab(col_offsets, seg_bits)
+        tab, n_words = unpack_tab(col_offsets, seg_bits)
         if code_w != n_words:
             raise ValueError(
                 f"bitpacked codes have {code_w} words/row, layout "
@@ -379,7 +364,7 @@ def saq_cluster_scan_pallas(codes_u: jnp.ndarray, factors_u: jnp.ndarray,
     ]
     operands = [codes_fl, fac_fl, jnp.asarray(colscale), qmat_fl, qstats_fl]
     if bitpacked:
-        tab, n_words = _unpack_tab(col_offsets, seg_bits)
+        tab, n_words = unpack_tab(col_offsets, seg_bits)
         if code_w != n_words:
             raise ValueError(
                 f"bitpacked codes have {code_w} words/row, layout "
@@ -519,14 +504,8 @@ def _saq_refine_kernel(*refs, seg_bits: Tuple[int, ...],
     if bitpacked:
         (codes_ref, qres_ref, fac_ref, qn_ref, colscale_ref, onehot_ref,
          tab_ref, out_ref) = refs
-        words = codes_ref[...]                                   # (T, W) u32
-        tab = tab_ref[...]
-        lo = jnp.take(words, tab[0].astype(jnp.int32), axis=1)   # (T, D)
-        hi = jnp.take(words, tab[1].astype(jnp.int32), axis=1)
-        vals = ((lo >> tab[2][None, :])
-                | ((hi << tab[3][None, :]) & tab[4][None, :])) \
-            & tab[5][None, :]
-        codes = vals.astype(jnp.float32)
+        codes = expand_words(codes_ref[...], tab_ref[...]) \
+            .astype(jnp.float32)                                 # (T, D)
     else:
         (codes_ref, qres_ref, fac_ref, qn_ref, colscale_ref, onehot_ref,
          out_ref) = refs
@@ -604,7 +583,7 @@ def saq_refine_scan_pallas(codes_r: jnp.ndarray, factors_r: jnp.ndarray,
     ]
     operands = [codes_p, qres_p, fac_p, qn_p, jnp.asarray(colscale), onehot]
     if bitpacked:
-        tab, n_words = _unpack_tab(col_offsets, seg_bits)
+        tab, n_words = unpack_tab(col_offsets, seg_bits)
         if code_w != n_words:
             raise ValueError(
                 f"bitpacked codes have {code_w} words/row, layout "

@@ -17,7 +17,7 @@ from .ivf_scan import (ivf_scan_pallas, saq_cluster_scan_pallas,
                        saq_probe_scan_xla, saq_refine_scan_pallas,
                        saq_refine_scan_xla, saq_scan_pallas)
 from .caq_encode import caq_encode_pallas
-from .saq_attend import saq_attend_pallas
+from .saq_attend import DEFAULT_S_BLOCK, saq_attend_pallas, saq_attend_xla
 
 _FORCE_INTERPRET: bool | None = None
 
@@ -343,12 +343,62 @@ def fwht(x: jnp.ndarray) -> jnp.ndarray:
     return fwht_pallas(x, interpret=_interpret())
 
 
-def saq_attend(q, k_codes, k_vmax, k_rescale, v_codes, v_vmax, pos,
-               bits: int):
-    """Kernel-backed quantized-cache decode attention; see
-    ref.saq_attend_ref."""
-    return saq_attend_pallas(q, k_codes, k_vmax, k_rescale, v_codes,
-                             v_vmax, pos, bits, interpret=_interpret())
+def _tuned_s_block(s_block: int | None, **dims) -> int | None:
+    """Resolve ``attend_scan``'s ``s_block`` (sequence rows per VMEM
+    block): explicit arg -> tuning cache -> None (``DEFAULT_S_BLOCK``).
+    Any value is bit-identical — it only tiles the online softmax."""
+    if s_block is not None:
+        return int(s_block)
+    from repro.tune.cache import (get_active_cache, lookup_config,
+                                  sanitize_n_tile)
+    if get_active_cache() is None:
+        return None
+    cfg = lookup_config("attend_scan", dims)
+    if not isinstance(cfg, dict):
+        return None
+    return sanitize_n_tile(cfg.get("s_block"))
+
+
+def attend_scan(q, k_words, k_vmax, k_rescale, v_words, v_vmax, pos,
+                bits: int, hd: int, backend: str | None = None,
+                s_block: int | None = None):
+    """Decode attention over a WordLayout bit-packed KV cache; see
+    ref.saq_attend_ref for the dense-math oracle.
+
+    q: (B, H, hd); k/v words: (B, S, Hkv, W) uint32 (W = hd*bits/32);
+    factors: (B, S, Hkv); pos: () int32. Backend resolution matches the
+    scan shims: explicit arg -> tuning cache -> ``probe_scan_backend()``
+    (fused Pallas on TPU, interpret-mode kernel under force-interpret,
+    dense-upcast XLA elsewhere). Returns (B, H, hd).
+    """
+    b, h = int(q.shape[0]), int(q.shape[1])
+    s, hkv = int(k_words.shape[1]), int(k_words.shape[2])
+    dims = dict(b=b, s=s, h=h, hkv=hkv, hd=hd, bits=bits)
+    if backend is None:
+        backend = (_tuned_backend("attend_scan", False, **dims)
+                   or probe_scan_backend())
+    base, _ = split_probe_backend(backend)
+    if base == "xla":
+        return saq_attend_xla(q, k_words, k_vmax, k_rescale, v_words,
+                              v_vmax, pos, bits=bits, hd=hd)
+    sb = _tuned_s_block(s_block, **dims) or DEFAULT_S_BLOCK
+    sb = min(sb, s)
+    while s % sb:
+        sb -= 1
+    if base == "pallas":
+        # Same compiled-backend word-expansion guard as the scans: the
+        # in-kernel table-gather expansion is validated in interpret
+        # mode; compiled Mosaic expands through XLA and feeds the kernel
+        # dense codes. Bit-identical either way (tests/test_kvcache.py).
+        from repro.kernels.packbody import kv_unpack
+        kc = kv_unpack(k_words, hd, bits).astype(jnp.uint8)
+        vc = kv_unpack(v_words, hd, bits).astype(jnp.uint8)
+        return saq_attend_pallas(q, kc, k_vmax, k_rescale, vc, v_vmax,
+                                 pos, bits=bits, hd=hd, s_block=sb,
+                                 packed=False, interpret=False)
+    return saq_attend_pallas(q, k_words, k_vmax, k_rescale, v_words,
+                             v_vmax, pos, bits=bits, hd=hd, s_block=sb,
+                             packed=True, interpret=True)
 
 
 def caq_encode(o: jnp.ndarray, bits: int, rounds: int = 4):

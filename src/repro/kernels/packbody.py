@@ -1,0 +1,95 @@
+"""Kernel-body library for WordLayout word expansion.
+
+``expand_words`` is THE in-VMEM expansion body: every Pallas kernel
+that reads bit-packed storage (the four IVF scan kernels in
+``ivf_scan.py`` and the SAQ-quantized KV-cache attend kernel in
+``saq_attend.py``) expands uint32 word buffers to integer codes through
+this one function, driven by the (6, D) table from
+``core.packed.kernel_unpack_table``. Integer shifts and masks only, so
+packed reads are bitwise identical to the dense-code path.
+
+Also home to the KV-cache page bit format: single-segment WordLayouts
+at ``bits ∈ KV_BITS`` over the head dimension, plus the pack/unpack
+helpers the paged cache (``models/kvcache.py``) uses host-side.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packed import (
+    WordLayout,
+    kernel_unpack_table,
+    pack_words,
+    unpack_words,
+    word_layout,
+)
+
+# Bit widths the SAQ KV-cache supports. 2/4/8 divide 32 exactly, so no
+# field ever straddles a word boundary and a (page, head) row is always
+# hd * bits / 32 words.
+KV_BITS: Tuple[int, ...] = (2, 4, 8)
+
+
+def expand_words(words: jnp.ndarray, tab: jnp.ndarray) -> jnp.ndarray:
+    """Expand ``(..., W)`` uint32 word rows to ``(..., D)`` uint32 codes.
+
+    ``tab`` is the (6, D) uint32 table from ``kernel_unpack_table`` —
+    rows [w_lo, w_hi, shift, hi_shift, straddle_mask, field_mask]:
+
+        vals = ((words[w_lo] >> shift)
+                | ((words[w_hi] << hi_shift) & straddle_mask)) & field_mask
+
+    Pure integer gather/shift/mask over the last axis: safe inside a
+    Pallas kernel body (VMEM-resident ``tab`` operand) and as a host-side
+    jnp expression, and exact — the packed read is bitwise identical to
+    the dense-code path it replaces.
+    """
+    lo = jnp.take(words, tab[0].astype(jnp.int32), axis=-1)   # (..., D)
+    hi = jnp.take(words, tab[1].astype(jnp.int32), axis=-1)
+    return ((lo >> tab[2]) | ((hi << tab[3]) & tab[4])) & tab[5]
+
+
+@functools.lru_cache(maxsize=None)
+def unpack_tab(col_offsets: Tuple[int, ...],
+               seg_bits: Tuple[int, ...]) -> Tuple[np.ndarray, int]:
+    """Resident kernel operand for a packed layout: ((6, D) uint32
+    expansion table, words per row)."""
+    wl = word_layout(col_offsets, seg_bits)
+    return kernel_unpack_table(wl), wl.n_words
+
+
+@functools.lru_cache(maxsize=None)
+def kv_word_layout(hd: int, bits: int) -> WordLayout:
+    """The KV-cache page row format: one segment, ``hd`` columns at
+    ``bits`` each. Validates ``bits`` — the old byte path silently read
+    any ``bits != 4`` as 8-bit."""
+    if bits not in KV_BITS:
+        raise ValueError(
+            f"KV-cache bits must be one of {KV_BITS}, got {bits}")
+    return word_layout((0, hd), (bits,))
+
+
+def kv_n_words(hd: int, bits: int) -> int:
+    """uint32 words per (token, head) row of a ``bits``-packed KV page."""
+    return kv_word_layout(hd, bits).n_words
+
+
+@functools.lru_cache(maxsize=None)
+def kv_unpack_tab(hd: int, bits: int) -> np.ndarray:
+    """(6, hd) uint32 expansion table for a KV page row."""
+    return kernel_unpack_table(kv_word_layout(hd, bits))
+
+
+def kv_pack(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack ``(..., hd)`` KV codes into ``(..., W)`` uint32 words."""
+    return pack_words(codes, kv_word_layout(codes.shape[-1], bits))
+
+
+def kv_unpack(words: jnp.ndarray, hd: int, bits: int) -> jnp.ndarray:
+    """Unpack ``(..., W)`` uint32 words back to ``(..., hd)`` uint32
+    KV codes (host-side / XLA fallback path)."""
+    return unpack_words(words, kv_word_layout(hd, bits))

@@ -118,11 +118,38 @@ def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
 
 def saq_attend_ref(q, k_codes, k_vmax, k_rescale, v_codes, v_vmax, pos,
                    bits: int):
-    """Reference semantics: models/kvcache.attend_saq (Eq 13/5 logits +
-    masked softmax + code-domain value reconstruction)."""
-    from repro.models.kvcache import attend_saq
-    return attend_saq(q, (k_codes, k_vmax, k_rescale, v_codes, v_vmax),
-                      pos, bits)
+    """Dense-math oracle: Eq 13/5 logits + masked softmax + code-domain
+    value reconstruction over DENSE (unpacked) codes.
+
+    q: (B, H, hd); k/v codes: (B, S, Hkv, hd) integer codes; factors:
+    (B, S, Hkv); pos: () int32. Returns (B, H, hd).
+    """
+    b, s, hkv, hd = k_codes.shape
+    h = q.shape[1]
+    g = h // hkv
+    kc = k_codes.astype(jnp.float32)
+    vc = v_codes.astype(jnp.float32)
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    q_sum = jnp.sum(qg, axis=-1)                              # (B, Hkv, G)
+    delta_k = (2.0 * k_vmax) / (1 << bits)                    # (B, S, Hkv)
+    ip_cq = jnp.einsum("bhgd,bshd->bhgs", qg, kc)
+    ip_kq = delta_k.transpose(0, 2, 1)[:, :, None, :] * ip_cq \
+        + q_sum[..., None] * (0.5 * delta_k - k_vmax).transpose(
+            0, 2, 1)[:, :, None, :]
+    logits = ip_kq * k_rescale.transpose(0, 2, 1)[:, :, None, :] \
+        / (hd ** 0.5)
+    valid = (jnp.arange(s) <= pos)[None, None, None, :]
+    logits = jnp.where(valid, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)                       # (B,Hkv,G,S)
+    # values: v_t = delta_v (c + 0.5) - vmax  =>
+    # sum_t p_t v_t = (p*delta_v) @ c + sum_t p_t (0.5 delta_v - vmax)
+    delta_v = ((2.0 * v_vmax) / (1 << bits)).transpose(0, 2, 1)
+    vvm_t = v_vmax.transpose(0, 2, 1)
+    pw = p * delta_v[:, :, None, :]
+    out = jnp.einsum("bhgs,bshd->bhgd", pw, vc)
+    out = out + jnp.sum(p * (0.5 * delta_v - vvm_t)[:, :, None, :],
+                        axis=-1)[..., None]
+    return out.reshape(b, h, hd).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -1,15 +1,22 @@
 """Pallas TPU kernel: decode attention over the SAQ-quantized KV cache.
 
-The pure-JAX path (models/kvcache.attend_saq) materializes an f32 upcast
-of the u8 codes in HBM before the dots — 4 bytes/element of traffic for
-a 1-byte cache. This kernel streams u8 code blocks HBM->VMEM, upcasts in
-VMEM, and runs the Eq 13/5 estimator + online softmax + the affine value
-reconstruction entirely on-chip: HBM traffic = the codes themselves (+
-the per-token factors), which is the whole point of quantizing the cache.
+The XLA fallback path materializes an f32 upcast of the codes in HBM
+before the dots — 4 bytes/element of traffic for a sub-byte cache. This
+kernel streams WordLayout uint32 word blocks HBM->VMEM, expands them
+in-VMEM through the shared kernel body (``packbody.expand_words`` — the
+same (6, D) table + shift/mask expansion the IVF scan kernels use), and
+runs the Eq 13/5 estimator + online softmax + the affine value
+reconstruction entirely on-chip: HBM traffic = the packed words
+themselves (+ the per-token factors), which is the whole point of
+quantizing the cache.
 
 Layout: grid = (B, S/BS); sequence blocks are visited sequentially per
 batch row (TPU grid order), carrying running (m, l, acc) in VMEM scratch;
 the output block (H, hd) is written on the last S-block.
+
+``packed=False`` takes dense u8 code blocks instead of word blocks with
+otherwise identical math — the packed path is bitwise identical to it
+(integer expansion is exact), which is what the parity tests pin.
 """
 from __future__ import annotations
 
@@ -20,12 +27,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.packbody import expand_words, kv_unpack, kv_unpack_tab
+
 DEFAULT_S_BLOCK = 1024
 
 
-def _attend_kernel(pos_ref, q_ref, kc_ref, kf_ref, vc_ref, vf_ref, out_ref,
-                   m_ref, l_ref, acc_ref, *, bits: int, s_block: int,
-                   n_sblocks: int, hkv: int, g: int, hd: int):
+def _attend_kernel(pos_ref, q_ref, kc_ref, kf_ref, vc_ref, vf_ref, *rest,
+                   bits: int, s_block: int, n_sblocks: int, hkv: int,
+                   g: int, hd: int, packed: bool):
+    if packed:
+        tab_ref, out_ref, m_ref, l_ref, acc_ref = rest
+        tab = tab_ref[...]
+        expand = lambda ref: expand_words(ref[0], tab) \
+            .astype(jnp.float32)                           # (BS, Hkv, hd)
+    else:
+        out_ref, m_ref, l_ref, acc_ref = rest
+        expand = lambda ref: ref[0].astype(jnp.float32)
     si = pl.program_id(1)
     pos = pos_ref[0]
 
@@ -35,17 +52,9 @@ def _attend_kernel(pos_ref, q_ref, kc_ref, kf_ref, vc_ref, vf_ref, out_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    def _unpack(c):
-        if bits != 4:
-            return c.astype(jnp.float32)
-        lo = (c & 0xF).astype(jnp.float32)
-        hi = (c >> 4).astype(jnp.float32)
-        return jnp.stack([lo, hi], axis=-1).reshape(
-            c.shape[:-1] + (c.shape[-1] * 2,))
-
     q = q_ref[0].reshape(hkv, g, hd).astype(jnp.float32)
     q_sum = jnp.sum(q, axis=-1)                            # (Hkv, G)
-    kc = _unpack(kc_ref[0])                                # (BS, Hkv, hd)
+    kc = expand(kc_ref)                                    # (BS, Hkv, hd)
     kvm = kf_ref[0][:, :, 0]                               # (BS, Hkv)
     krs = kf_ref[0][:, :, 1]
     delta_k = (2.0 * kvm) / (1 << bits)
@@ -68,7 +77,7 @@ def _attend_kernel(pos_ref, q_ref, kc_ref, kf_ref, vc_ref, vf_ref, out_ref,
     l_new = l_prev * corr + jnp.sum(p, axis=-1)
     # value read-back in the code domain:
     #   sum_t p_t v_t = (p * delta_v) @ c_v + sum_t p_t (0.5 delta_v - vmax)
-    vc = _unpack(vc_ref[0])
+    vc = expand(vc_ref)
     vvm = vf_ref[0][:, :, 0]
     delta_v = ((2.0 * vvm) / (1 << bits)).T                # (Hkv, BS)
     pw = p * delta_v[:, None, :]
@@ -86,20 +95,22 @@ def _attend_kernel(pos_ref, q_ref, kc_ref, kf_ref, vc_ref, vf_ref, out_ref,
         out_ref[...] = out.reshape(1, hkv * g, hd).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "s_block",
-                                             "interpret"))
+@functools.partial(jax.jit, static_argnames=("bits", "hd", "s_block",
+                                             "packed", "interpret"))
 def saq_attend_pallas(q: jnp.ndarray, k_codes: jnp.ndarray,
                       k_vmax: jnp.ndarray, k_rescale: jnp.ndarray,
                       v_codes: jnp.ndarray, v_vmax: jnp.ndarray,
-                      pos: jnp.ndarray, bits: int,
+                      pos: jnp.ndarray, bits: int, hd: int,
                       s_block: int = DEFAULT_S_BLOCK,
+                      packed: bool = True,
                       interpret: bool = False) -> jnp.ndarray:
-    """q: (B, H, hd); codes: (B, S, Hkv, hd) u8 — PACKED two-per-byte
-    (B, S, Hkv, hd/2) when bits == 4; factors: (B, S, Hkv);
-    pos: () int32. Returns (B, H, hd)."""
-    b, h, hd = q.shape
+    """q: (B, H, hd); k/v codes: (B, S, Hkv, W) uint32 WordLayout word
+    buffers (``packed``) or (B, S, Hkv, hd) dense u8 codes; factors:
+    (B, S, Hkv); pos: () int32. Returns (B, H, hd)."""
+    b, h, hd_q = q.shape
+    assert hd_q == hd, (hd_q, hd)
     s, hkv = k_codes.shape[1], k_codes.shape[2]
-    hd_stored = k_codes.shape[3]
+    d_stored = k_codes.shape[3]
     g = h // hkv
     s_block = min(s_block, s)
     assert s % s_block == 0, (s, s_block)
@@ -107,22 +118,30 @@ def saq_attend_pallas(q: jnp.ndarray, k_codes: jnp.ndarray,
     kf = jnp.stack([k_vmax, k_rescale], axis=-1)           # (B, S, Hkv, 2)
     vf = v_vmax[..., None]                                 # (B, S, Hkv, 1)
     pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (1,))
+    in_specs = [
+        pl.BlockSpec((1,), lambda bi, si: (0,)),
+        pl.BlockSpec((1, h, hd), lambda bi, si: (bi, 0, 0)),
+        pl.BlockSpec((1, s_block, hkv, d_stored),
+                     lambda bi, si: (bi, si, 0, 0)),
+        pl.BlockSpec((1, s_block, hkv, 2),
+                     lambda bi, si: (bi, si, 0, 0)),
+        pl.BlockSpec((1, s_block, hkv, d_stored),
+                     lambda bi, si: (bi, si, 0, 0)),
+        pl.BlockSpec((1, s_block, hkv, 1),
+                     lambda bi, si: (bi, si, 0, 0)),
+    ]
+    operands = [pos_arr, q, k_codes, kf, v_codes, vf]
+    if packed:
+        # resident (6, hd) expansion table — same operand the IVF scan
+        # kernels carry
+        in_specs.append(pl.BlockSpec((6, hd), lambda bi, si: (0, 0)))
+        operands.append(jnp.asarray(kv_unpack_tab(hd, bits)))
     out = pl.pallas_call(
         functools.partial(_attend_kernel, bits=bits, s_block=s_block,
-                          n_sblocks=n_sblocks, hkv=hkv, g=g, hd=hd),
+                          n_sblocks=n_sblocks, hkv=hkv, g=g, hd=hd,
+                          packed=packed),
         grid=(b, n_sblocks),
-        in_specs=[
-            pl.BlockSpec((1,), lambda bi, si: (0,)),
-            pl.BlockSpec((1, h, hd), lambda bi, si: (bi, 0, 0)),
-            pl.BlockSpec((1, s_block, hkv, hd_stored),
-                         lambda bi, si: (bi, si, 0, 0)),
-            pl.BlockSpec((1, s_block, hkv, 2),
-                         lambda bi, si: (bi, si, 0, 0)),
-            pl.BlockSpec((1, s_block, hkv, hd_stored),
-                         lambda bi, si: (bi, si, 0, 0)),
-            pl.BlockSpec((1, s_block, hkv, 1),
-                         lambda bi, si: (bi, si, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, h, hd), lambda bi, si: (bi, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
         scratch_shapes=[
@@ -131,5 +150,39 @@ def saq_attend_pallas(q: jnp.ndarray, k_codes: jnp.ndarray,
             pltpu.VMEM((hkv, g, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(pos_arr, q, k_codes, kf, v_codes, vf)
+    )(*operands)
     return out
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "hd"))
+def saq_attend_xla(q: jnp.ndarray, k_words: jnp.ndarray,
+                   k_vmax: jnp.ndarray, k_rescale: jnp.ndarray,
+                   v_words: jnp.ndarray, v_vmax: jnp.ndarray,
+                   pos: jnp.ndarray, bits: int, hd: int) -> jnp.ndarray:
+    """Dense-upcast XLA fallback: unpack the word buffers to f32 codes
+    in HBM, then standard (non-streamed) masked softmax attention with
+    the same Eq 13/5 estimator + value read-back."""
+    b, h, _ = q.shape
+    s, hkv = k_words.shape[1], k_words.shape[2]
+    g = h // hkv
+    kc = kv_unpack(k_words, hd, bits).astype(jnp.float32)  # (B, S, Hkv, hd)
+    vc = kv_unpack(v_words, hd, bits).astype(jnp.float32)
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    q_sum = jnp.sum(qg, axis=-1)                           # (B, Hkv, G)
+    delta_k = (2.0 * k_vmax) / (1 << bits)                 # (B, S, Hkv)
+    ip_cq = jnp.einsum("bhgd,bshd->bhgs", qg, kc)
+    ip_kq = delta_k.transpose(0, 2, 1)[:, :, None, :] * ip_cq \
+        + q_sum[..., None] * (0.5 * delta_k - k_vmax).transpose(
+            0, 2, 1)[:, :, None, :]
+    logits = ip_kq * k_rescale.transpose(0, 2, 1)[:, :, None, :] \
+        / (hd ** 0.5)
+    valid = (jnp.arange(s) <= pos)[None, None, None, :]
+    logits = jnp.where(valid, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)                    # (B, Hkv, G, S)
+    delta_v = ((2.0 * v_vmax) / (1 << bits)).transpose(0, 2, 1)
+    vvm_t = v_vmax.transpose(0, 2, 1)
+    pw = p * delta_v[:, :, None, :]
+    out = jnp.einsum("bhgs,bshd->bhgd", pw, vc)
+    out = out + jnp.sum(p * (0.5 * delta_v - vvm_t)[:, :, None, :],
+                        axis=-1)[..., None]
+    return out.reshape(b, h, hd).astype(q.dtype)

@@ -80,15 +80,23 @@ def _kv_cache_spec(cfg: ModelConfig, axes: MeshAxes, batch: int,
                    max_seq: int, bits: int):
     """Cache layout: batch over fsdp axes, SEQUENCE over the model axis
     (context parallelism for decode: each model shard holds S/16 of the
-    cache; softmax reductions lower to the matching collectives)."""
+    cache; softmax reductions lower to the matching collectives). The
+    quantized cache shards its PAGE axis instead (pages are the unit of
+    placement; the page table itself follows the batch)."""
     bsp = axes.bp(batch)
-    ssp = axes.sp(max_seq)
-    big = P(None, bsp, ssp, None, None)
-    small = P(None, bsp, ssp, None)
     if bits > 0:
-        return kvc.KVCacheSAQ(k_codes=big, k_vmax=small, k_rescale=small,
-                              v_codes=big, v_vmax=small, bits=bits)
-    return kvc.KVCacheBF16(k=big, v=big)
+        n_pages = kvc.n_pages_for(max_seq, kvc.DEFAULT_PAGE_SIZE)
+        psp = axes.sp(n_pages)
+        words = P(None, bsp, psp, None, None, None)
+        fac = P(None, bsp, psp, None, None)
+        return kvc.KVCacheSAQ(
+            k_words=words, k_vmax=fac, k_rescale=fac,
+            v_words=words, v_vmax=fac,
+            page_table=P(bsp, None),
+            bits=bits, page_size=kvc.DEFAULT_PAGE_SIZE, hd=cfg.hd)
+    ssp = axes.sp(max_seq)
+    return kvc.KVCacheBF16(k=P(None, bsp, ssp, None, None),
+                           v=P(None, bsp, ssp, None, None))
 
 
 def abstract_decode_caches(cfg: ModelConfig, axes: MeshAxes, batch: int,

@@ -2,8 +2,12 @@
 technique as a first-class serving feature).
 
 Quantized layout (per layer slice): K and V are CAQ-coded per (token,
-head) vector of length head_dim — one segment, per-vector symmetric grid,
-``bits`` bits (default 8 = 2x HBM saving vs bf16; 4 = 4x). Attention
+head) vector of length head_dim — one segment, per-vector symmetric
+grid, ``bits`` in {2, 4, 8} — and stored as WordLayout bit-packed
+**pages**: the sequence axis is split into fixed ``page_size`` pages
+addressed through a static ``(B, n_pages)`` page table, and each
+(token, head) row is a ``hd * bits / 32``-word uint32 buffer in the
+same bit format as the IVF slabs (``repro.core.packed``). Attention
 scores are computed *in the integer code domain* with the paper's
 estimator (Eq 13 + Eq 5):
 
@@ -12,9 +16,12 @@ estimator (Eq 13 + Eq 5):
 and the value read-back uses the same affine identity, so the cache is
 never densified. Encoding uses the Jacobi variant of code adjustment
 (parallel over the 128 dims — right shape for one-token appends).
+The fused decode kernel lives in ``repro.kernels.saq_attend`` behind
+the ``repro.kernels.ops.attend_scan`` backend shim.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import NamedTuple, Tuple, Union
 
@@ -23,6 +30,9 @@ import jax.numpy as jnp
 
 from repro.core.caq import adjust_jacobi
 from repro.core.lvq import lvq_symmetric_init
+from repro.kernels.packbody import KV_BITS, kv_n_words, kv_pack
+
+DEFAULT_PAGE_SIZE = 16
 
 
 class KVCacheBF16(NamedTuple):
@@ -31,31 +41,39 @@ class KVCacheBF16(NamedTuple):
     v: jnp.ndarray
 
 
-import dataclasses
-
-
 @dataclasses.dataclass
 class KVCacheSAQ:
-    """Per-layer-stacked quantized cache.
+    """Per-layer-stacked paged quantized cache.
 
-    codes: (L, B, S, Hkv, hd) uint8 for bits=8; bits=4 codes are PACKED
-    two-per-byte -> (L, B, S, Hkv, hd/2) (half the cache HBM of q8).
-    k_vmax/k_rescale/v_vmax: (L, B, S, Hkv) f32
-    ``bits`` is static pytree aux data (jit-safe branch selector).
+    k_words/v_words: (L, B, n_pages, page_size, Hkv, W) uint32 —
+        WordLayout-packed code rows, W = hd * bits / 32
+    k_vmax/k_rescale/v_vmax: (L, B, n_pages, page_size, Hkv) f32
+    page_table: (B, n_pages) int32 — logical page -> physical page
+        (identity after init/prefill; any permutation decodes the same)
+    ``bits``/``page_size``/``hd`` are static pytree aux data (jit-safe).
     """
-    k_codes: jnp.ndarray
+    k_words: jnp.ndarray
     k_vmax: jnp.ndarray
     k_rescale: jnp.ndarray
-    v_codes: jnp.ndarray
+    v_words: jnp.ndarray
     v_vmax: jnp.ndarray
+    page_table: jnp.ndarray
     bits: int
+    page_size: int
+    hd: int
+
+    @property
+    def max_seq(self) -> int:
+        return self.k_words.shape[2] * self.page_size
 
 
 jax.tree_util.register_pytree_node(
     KVCacheSAQ,
-    lambda c: ((c.k_codes, c.k_vmax, c.k_rescale, c.v_codes, c.v_vmax),
-               (c.bits,)),
-    lambda aux, ch: KVCacheSAQ(*ch, bits=aux[0]))
+    lambda c: ((c.k_words, c.k_vmax, c.k_rescale, c.v_words, c.v_vmax,
+                c.page_table),
+               (c.bits, c.page_size, c.hd)),
+    lambda aux, ch: KVCacheSAQ(*ch, bits=aux[0], page_size=aux[1],
+                               hd=aux[2]))
 
 
 KVCache = Union[KVCacheBF16, KVCacheSAQ]
@@ -68,36 +86,29 @@ def init_bf16(n_layers: int, batch: int, max_seq: int, n_kv: int, hd: int
                        v=jnp.zeros(shape, jnp.bfloat16))
 
 
-def pack_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
-    """bits=4: pack pairs of codes along the last axis into one byte."""
-    if bits != 4:
-        return codes
-    lo = codes[..., 0::2]
-    hi = codes[..., 1::2]
-    return (lo | (hi << 4)).astype(jnp.uint8)
-
-
-def unpack_codes(packed: jnp.ndarray, bits: int) -> jnp.ndarray:
-    if bits != 4:
-        return packed
-    lo = packed & 0xF
-    hi = packed >> 4
-    return jnp.stack([lo, hi], axis=-1).reshape(
-        packed.shape[:-1] + (packed.shape[-1] * 2,))
+def n_pages_for(max_seq: int, page_size: int) -> int:
+    return -(-max_seq // page_size)
 
 
 def init_saq(n_layers: int, batch: int, max_seq: int, n_kv: int, hd: int,
-             bits: int = 8) -> KVCacheSAQ:
-    hd_stored = hd // 2 if bits == 4 else hd
-    shape = (n_layers, batch, max_seq, n_kv, hd_stored)
-    fshape = (n_layers, batch, max_seq, n_kv)
+             bits: int = 8, page_size: int = DEFAULT_PAGE_SIZE
+             ) -> KVCacheSAQ:
+    if bits not in KV_BITS:
+        raise ValueError(f"KV-cache bits must be one of {KV_BITS}, "
+                         f"got {bits}")
+    n_pages = n_pages_for(max_seq, page_size)
+    w = kv_n_words(hd, bits)
+    wshape = (n_layers, batch, n_pages, page_size, n_kv, w)
+    fshape = (n_layers, batch, n_pages, page_size, n_kv)
     return KVCacheSAQ(
-        k_codes=jnp.zeros(shape, jnp.uint8),
+        k_words=jnp.zeros(wshape, jnp.uint32),
         k_vmax=jnp.ones(fshape, jnp.float32),
         k_rescale=jnp.zeros(fshape, jnp.float32),
-        v_codes=jnp.zeros(shape, jnp.uint8),
+        v_words=jnp.zeros(wshape, jnp.uint32),
         v_vmax=jnp.ones(fshape, jnp.float32),
-        bits=bits)
+        page_table=jnp.broadcast_to(jnp.arange(n_pages, dtype=jnp.int32),
+                                    (batch, n_pages)),
+        bits=bits, page_size=page_size, hd=hd)
 
 
 # ---------------------------------------------------------------------------
@@ -125,11 +136,38 @@ def _encode_rows(x: jnp.ndarray, bits: int, rounds: int
 
 def quantize_kv(k_t: jnp.ndarray, v_t: jnp.ndarray, bits: int,
                 rounds: int = 2):
-    """k_t/v_t: (..., Hkv, hd) K/V vectors -> quantized pieces (leading
-    dims preserved — works for one decode token or a whole prefill)."""
+    """k_t/v_t: (..., Hkv, hd) K/V vectors -> quantized pieces as dense
+    u8 codes (leading dims preserved — works for one decode token or a
+    whole prefill)."""
     kc, kv_, kr = _encode_rows(k_t, bits, rounds)
     vc, vv, _ = _encode_rows(v_t, bits, rounds)
     return kc, kv_, kr, vc, vv
+
+
+def quantize_paged(k_all: jnp.ndarray, v_all: jnp.ndarray, bits: int,
+                   page_size: int = DEFAULT_PAGE_SIZE, rounds: int = 2
+                   ) -> KVCacheSAQ:
+    """Prefill path: quantize + bit-pack a whole (L, B, S, Hkv, hd)
+    K/V tensor pair into a paged cache with an identity page table.
+    S must be a multiple of ``page_size`` (forward pads the cache)."""
+    l, b, s, hkv, hd = k_all.shape
+    if s % page_size:
+        raise ValueError(
+            f"prefill length {s} not a multiple of page_size {page_size}")
+    kc, kvm, krs, vc, vvm = quantize_kv(k_all, v_all, bits, rounds)
+    n_pages = s // page_size
+
+    def paged(x):
+        return x.reshape((l, b, n_pages, page_size) + x.shape[3:])
+
+    return KVCacheSAQ(
+        k_words=paged(kv_pack(kc, bits)),
+        k_vmax=paged(kvm), k_rescale=paged(krs),
+        v_words=paged(kv_pack(vc, bits)),
+        v_vmax=paged(vvm),
+        page_table=jnp.broadcast_to(jnp.arange(n_pages, dtype=jnp.int32),
+                                    (b, n_pages)),
+        bits=bits, page_size=page_size, hd=hd)
 
 
 # ---------------------------------------------------------------------------
@@ -139,7 +177,6 @@ def quantize_kv(k_t: jnp.ndarray, v_t: jnp.ndarray, bits: int,
 def _upd(buf, val, pos):
     """dynamic_update_slice at sequence position ``pos`` (axis 1)."""
     val = val[:, None].astype(buf.dtype)
-    idx = (jnp.zeros((), jnp.int32),) * 0
     return jax.lax.dynamic_update_slice_in_dim(buf, val, pos, axis=1)
 
 
@@ -155,48 +192,50 @@ def attend_bf16(q: jnp.ndarray, k_buf: jnp.ndarray, v_buf: jnp.ndarray,
     return decode_attention(q, k_buf, v_buf, pos)
 
 
-def append_saq(slice_kv, k_t, v_t, pos, bits: int, rounds: int = 2):
-    """slice_kv: per-layer (k_codes, k_vmax, k_rescale, v_codes, v_vmax)
-    with shapes (B, S, Hkv, hd[/2 packed]) / (B, S, Hkv)."""
-    kc_b, kvm_b, krs_b, vc_b, vvm_b = slice_kv
+def _paged_set(buf, val, page_table, pos, page_size):
+    """Write one token's row into every batch row's page at logical
+    position ``pos``: physical page = page_table[b, pos // page_size],
+    slot = pos % page_size."""
+    b = buf.shape[0]
+    phys = jnp.take(page_table, pos // page_size, axis=1)     # (B,)
+    slot = pos % page_size
+    return buf.at[jnp.arange(b), phys, slot].set(val.astype(buf.dtype))
+
+
+def append_saq(slice_kv, page_table, k_t, v_t, pos, bits: int,
+               page_size: int, rounds: int = 2):
+    """slice_kv: per-layer (k_words, k_vmax, k_rescale, v_words, v_vmax)
+    with shapes (B, P, ps, Hkv, W) / (B, P, ps, Hkv); k_t/v_t:
+    (B, Hkv, hd) one decode token. Encodes, bit-packs, and scatters the
+    row through the page table."""
+    kw_b, kvm_b, krs_b, vw_b, vvm_b = slice_kv
     kc, kvm, krs, vc, vvm = quantize_kv(k_t, v_t, bits, rounds)
-    kc, vc = pack_codes(kc, bits), pack_codes(vc, bits)
-    return (_upd(kc_b, kc, pos), _upd(kvm_b, kvm, pos),
-            _upd(krs_b, krs, pos), _upd(vc_b, vc, pos), _upd(vvm_b, vvm, pos))
+    kw = kv_pack(kc, bits)                                    # (B, Hkv, W)
+    vw = kv_pack(vc, bits)
+    upd = functools.partial(_paged_set, page_table=page_table, pos=pos,
+                            page_size=page_size)
+    return (upd(kw_b, kw), upd(kvm_b, kvm), upd(krs_b, krs),
+            upd(vw_b, vw), upd(vvm_b, vvm))
 
 
-def attend_saq(q: jnp.ndarray, slice_kv, pos, bits: int) -> jnp.ndarray:
-    """Integer-domain attention over the quantized cache.
+def gather_pages(arr: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """(B, P, ps, ...) physical pages -> (B, P*ps, ...) logical-order
+    sequence buffer via the page table."""
+    b, p = page_table.shape
+    idx = page_table.reshape((b, p) + (1,) * (arr.ndim - 2))
+    out = jnp.take_along_axis(arr, idx, axis=1)
+    return out.reshape((b, p * arr.shape[2]) + arr.shape[3:])
 
-    q: (B, H, hd); codes: (B, S, Hkv, hd) u8. Logits use the Eq 13/5
-    estimator of <k_t, q>; values are reconstructed through the same
-    affine identity inside the weighted sum (never densified to bf16).
-    """
-    kc, kvm, krs, vc, vvm = slice_kv
-    kc = unpack_codes(kc, bits)
-    vc = unpack_codes(vc, bits)
-    b, s, hkv, hd = kc.shape
-    h = q.shape[1]
-    g = h // hkv
-    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
-    q_sum = jnp.sum(qg, axis=-1)                              # (B, Hkv, G)
-    delta_k = (2.0 * kvm) / (1 << bits)                       # (B, S, Hkv)
-    ip_cq = jnp.einsum("bhgd,bshd->bhgs", qg,
-                       kc.astype(jnp.float32))
-    ip_kq = delta_k.transpose(0, 2, 1)[:, :, None, :] * ip_cq \
-        + q_sum[..., None] * (0.5 * delta_k - kvm).transpose(
-            0, 2, 1)[:, :, None, :]
-    logits = ip_kq * krs.transpose(0, 2, 1)[:, :, None, :] / (hd ** 0.5)
-    valid = (jnp.arange(s) <= pos)[None, None, None, :]
-    logits = jnp.where(valid, logits, -jnp.inf)
-    p = jax.nn.softmax(logits, axis=-1)                       # (B,Hkv,G,S)
-    # values: v_t = delta_v (c + 0.5) - vmax  =>
-    # sum_t p_t v_t = (p*delta_v) @ c + sum_t p_t (0.5 delta_v - vmax)
-    delta_v = ((2.0 * vvm) / (1 << bits)).transpose(0, 2, 1)  # (B,Hkv,S)
-    vvm_t = vvm.transpose(0, 2, 1)
-    pw = p * delta_v[:, :, None, :]
-    out = jnp.einsum("bhgs,bshd->bhgd", pw, vc.astype(jnp.float32))
-    corr = jnp.sum(p * (0.5 * delta_v - vvm_t)[:, :, None, :],
-                   axis=-1)                                   # (B,Hkv,G)
-    out = out + corr[..., None]
-    return out.reshape(b, h, hd).astype(q.dtype)
+
+def attend_saq(q: jnp.ndarray, slice_kv, page_table, pos, bits: int,
+               page_size: int, hd: int, backend=None) -> jnp.ndarray:
+    """Integer-domain attention over the paged quantized cache.
+
+    q: (B, H, hd); slice_kv as in ``append_saq``. Pages are gathered to
+    logical order, then the Eq 13/5 estimator + value read-back run in
+    the fused attend kernel (``ops.attend_scan``)."""
+    from repro.kernels import ops
+
+    kw, kvm, krs, vw, vvm = (gather_pages(x, page_table) for x in slice_kv)
+    return ops.attend_scan(q, kw, kvm, krs, vw, vvm, pos, bits=bits,
+                           hd=hd, backend=backend).astype(q.dtype)

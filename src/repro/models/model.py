@@ -272,19 +272,23 @@ def forward(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
             axes: MeshAxes = MeshAxes(), mesh=None,
             img_embeds: Optional[jnp.ndarray] = None,
             collect_cache: bool = False, cache_max_seq: int = 0,
-            cache_bits: int = 0
+            cache_bits: int = 0, cache_page_size: int = 0
             ) -> Tuple[jnp.ndarray, Optional[PrefillCaches]]:
     """Teacher-forced pass. tokens: (B, S) (audio: (B, S, K)).
 
     Returns (hidden (B, S, d), caches?). With ``collect_cache`` the KV/SSM
     caches are emitted, padded to ``cache_max_seq`` (>= S); ``cache_bits``
-    > 0 selects the SAQ-quantized cache.
+    > 0 selects the SAQ-quantized paged cache (``cache_page_size`` tokens
+    per page, 0 -> default; max_seq rounds up to a whole page).
     """
     x = embed(params, cfg, tokens)
     b, s = x.shape[0], x.shape[1]
     x = shard(x, P(axes.batch, axes.sp(s), None))
     positions = jnp.arange(s)[None, :]
     max_seq = max(cache_max_seq, s) if collect_cache else s
+    page_size = cache_page_size or kvc.DEFAULT_PAGE_SIZE
+    if collect_cache and cache_bits > 0:
+        max_seq = kvc.n_pages_for(max_seq, page_size) * page_size
 
     def pad_cache(k):  # (..., S, Hkv, hd) -> (..., max_seq, Hkv, hd)
         if max_seq == s:
@@ -304,7 +308,7 @@ def forward(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
         if collect_cache:
             k_all, v_all = kvs      # (L, B, S, Hkv, hd)
             caches = PrefillCaches(kv=_make_kv_cache(
-                pad_cache(k_all), pad_cache(v_all), cache_bits))
+                pad_cache(k_all), pad_cache(v_all), cache_bits, page_size))
 
     elif cfg.family == "ssm":
         def body(x, lp):
@@ -341,7 +345,8 @@ def forward(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
             caches = PrefillCaches(
                 ssm=states,
                 shared_kv=_make_kv_cache(
-                    pad_cache(k_all), pad_cache(v_all), cache_bits))
+                    pad_cache(k_all), pad_cache(v_all), cache_bits,
+                    page_size))
 
     elif cfg.family == "vlm":
         n_groups, g = vlm_groups(cfg)
@@ -367,7 +372,7 @@ def forward(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
             k_flat = k_flat.reshape((-1,) + k_flat.shape[2:])   # (L, ...)
             v_flat = v_flat.reshape((-1,) + v_flat.shape[2:])
             caches = PrefillCaches(
-                kv=_make_kv_cache(k_flat, v_flat, cache_bits),
+                kv=_make_kv_cache(k_flat, v_flat, cache_bits, page_size),
                 cross_kv=crosses)
     else:
         raise ValueError(cfg.family)
@@ -375,16 +380,16 @@ def forward(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
     return x, caches
 
 
-def _make_kv_cache(k_all: jnp.ndarray, v_all: jnp.ndarray, bits: int):
+def _make_kv_cache(k_all: jnp.ndarray, v_all: jnp.ndarray, bits: int,
+                   page_size: int = 0):
     """(L, B, S, Hkv, hd) pair -> cache struct (quantized if bits > 0).
-    Quantization keeps the (L, B, S, Hkv) layout — sharding-preserving."""
+    Quantization pages the sequence axis and bit-packs the codes into
+    WordLayout word buffers (see ``kvc.quantize_paged``)."""
     if bits <= 0:
         return kvc.KVCacheBF16(k=k_all.astype(jnp.bfloat16),
                                v=v_all.astype(jnp.bfloat16))
-    kc, kvm, krs, vc, vvm = kvc.quantize_kv(k_all, v_all, bits)
-    kc, vc = kvc.pack_codes(kc, bits), kvc.pack_codes(vc, bits)
-    return kvc.KVCacheSAQ(k_codes=kc, k_vmax=kvm, k_rescale=krs,
-                          v_codes=vc, v_vmax=vvm, bits=bits)
+    return kvc.quantize_paged(k_all, v_all, bits,
+                              page_size or kvc.DEFAULT_PAGE_SIZE)
 
 
 # ---------------------------------------------------------------------------
@@ -392,14 +397,21 @@ def _make_kv_cache(k_all: jnp.ndarray, v_all: jnp.ndarray, bits: int):
 # ---------------------------------------------------------------------------
 
 def _attn_decode(lp: Dict, cfg: ModelConfig, axes: MeshAxes,
-                 x_t: jnp.ndarray, pos, kv_slice, bits: int):
-    """x_t: (B, d). kv_slice: per-layer cache pieces. Returns (x, slice)."""
+                 x_t: jnp.ndarray, pos, kv_slice, bits: int,
+                 saq_meta=None):
+    """x_t: (B, d). kv_slice: per-layer cache pieces. ``saq_meta``:
+    (page_table, page_size, hd) when bits > 0 (the page table is
+    layer-invariant — closure data, not a scan operand). Returns
+    (x, slice)."""
     h = rms_norm(x_t[:, None, :], lp["ln1"], cfg.norm_eps)
     q, k, v = qkv(lp["attn"], cfg, h, pos[None, None])
     q, k_t, v_t = q[:, 0], k[:, 0], v[:, 0]
     if bits > 0:
-        kv_slice = kvc.append_saq(kv_slice, k_t, v_t, pos, bits)
-        att = kvc.attend_saq(q, kv_slice, pos, bits)
+        page_table, page_size, hd = saq_meta
+        kv_slice = kvc.append_saq(kv_slice, page_table, k_t, v_t, pos,
+                                  bits, page_size)
+        att = kvc.attend_saq(q, kv_slice, page_table, pos, bits,
+                             page_size, hd)
     else:
         kb, vb = kvc.append_bf16(kv_slice, k_t, v_t, pos)
         kv_slice = (kb, vb)
@@ -418,14 +430,23 @@ def _attn_decode(lp: Dict, cfg: ModelConfig, axes: MeshAxes,
 def _kv_slices(cache):
     if isinstance(cache, kvc.KVCacheBF16):
         return (cache.k, cache.v)
-    return (cache.k_codes, cache.k_vmax, cache.k_rescale,
-            cache.v_codes, cache.v_vmax)
+    return (cache.k_words, cache.k_vmax, cache.k_rescale,
+            cache.v_words, cache.v_vmax)
 
 
 def _rebuild_cache(cache, slices):
     if isinstance(cache, kvc.KVCacheBF16):
         return kvc.KVCacheBF16(k=slices[0], v=slices[1])
-    return kvc.KVCacheSAQ(*slices, bits=cache.bits)
+    return kvc.KVCacheSAQ(*slices, page_table=cache.page_table,
+                          bits=cache.bits, page_size=cache.page_size,
+                          hd=cache.hd)
+
+
+def _saq_meta(cache):
+    """(page_table, page_size, hd) closure data for ``_attn_decode``."""
+    if isinstance(cache, kvc.KVCacheSAQ):
+        return (cache.page_table, cache.page_size, cache.hd)
+    return None
 
 
 def decode_step(params: Dict, cfg: ModelConfig, token: jnp.ndarray,
@@ -445,12 +466,13 @@ def decode_step(params: Dict, cfg: ModelConfig, token: jnp.ndarray,
     bits = caches.kv.bits if isinstance(caches.kv, kvc.KVCacheSAQ) else (
         caches.shared_kv.bits
         if isinstance(caches.shared_kv, kvc.KVCacheSAQ) else 0)
+    saq_meta = _saq_meta(caches.kv) or _saq_meta(caches.shared_kv)
 
     if cfg.family in ("dense", "moe", "audio"):
         def body(x_t, inputs):
             lp, kv_slice = inputs
             x_t, kv_slice = _attn_decode(lp, cfg, axes, x_t, pos, kv_slice,
-                                         bits)
+                                         bits, saq_meta)
             return x_t, kv_slice
         x_t, new_slices = jax.lax.scan(
             body, x_t, (params["layers"], _kv_slices(caches.kv)))
@@ -477,7 +499,7 @@ def decode_step(params: Dict, cfg: ModelConfig, token: jnp.ndarray,
                 return x_t + y, st1
             x_t, st = jax.lax.scan(inner, x_t, (glp, st))
             x_t, kv_slice = _attn_decode(sa, cfg, axes, x_t, pos, kv_slice,
-                                         bits)
+                                         bits, saq_meta)
             return x_t, (st, kv_slice)
         x_t, (states, new_slices) = jax.lax.scan(
             group, x_t,
@@ -491,7 +513,8 @@ def decode_step(params: Dict, cfg: ModelConfig, token: jnp.ndarray,
             (glp, clp), kv_slice, ckv = inputs
             def inner(x_t, inputs2):
                 lp, kvs = inputs2
-                x_t, kvs = _attn_decode(lp, cfg, axes, x_t, pos, kvs, bits)
+                x_t, kvs = _attn_decode(lp, cfg, axes, x_t, pos, kvs, bits,
+                                        saq_meta)
                 return x_t, kvs
             x_t, kv_slice = jax.lax.scan(inner, x_t, (glp, kv_slice))
             # cross attention over static image kv

@@ -6,19 +6,23 @@ lowers for the ``prefill_*`` / ``decode_*`` / ``long_*`` shapes):
 * ``prefill_step(params, tokens[, img]) -> (last_logits, caches)``
 * ``decode_step(params, token, pos, caches[, img]) -> (logits, caches)``
 
-The KV cache is bf16 or SAQ-quantized (``kv_bits`` > 0) — the paper's
-quantizer as a first-class serving feature: at 32k context and 8-bit
-codes the cache HBM halves, which directly raises the decode roofline
-(decode is cache-bandwidth-bound; see EXPERIMENTS.md §Perf).
+The KV cache is bf16 or SAQ-quantized (``kv_bits`` in {2, 4, 8}) — the
+paper's quantizer as a first-class serving feature: the quantized cache
+stores WordLayout bit-packed pages (``kv_page_size`` tokens each), so at
+32k context and 4-bit codes the cache HBM quarters, which directly
+raises the decode roofline (decode is cache-bandwidth-bound; see
+EXPERIMENTS.md §Perf).
 
 ``generate`` runs the loop host-side with on-device state (small-scale /
-examples); production launchers jit the step functions directly.
+examples) and records one ``RequestStats`` per call when handed a
+``ServeStats`` sink; production launchers jit the step functions
+directly.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,9 +35,49 @@ from .sampling import sample_logits
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     max_seq: int                 # KV cache capacity
-    kv_bits: int = 0             # 0 = bf16 cache; 4/8 = SAQ-quantized
+    kv_bits: int = 0             # 0 = bf16 cache; 2/4/8 = SAQ-quantized
+    kv_page_size: int = 0        # tokens per KV page (0 = default)
     temperature: float = 0.0
     top_k: int = 0
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request accounting emitted by ``generate``."""
+    batch: int
+    prompt_tokens: int           # per sequence
+    new_tokens: int              # per sequence
+    kv_bits: int
+    prefill_s: float
+    decode_s: float
+
+    @property
+    def decode_tps(self) -> float:
+        """Generated tokens (batch-summed) per second of decode."""
+        return self.batch * self.new_tokens / max(self.decode_s, 1e-9)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Sink for per-request stats (pass as ``generate(..., stats=...)``)."""
+    requests: List[RequestStats] = dataclasses.field(default_factory=list)
+
+    def record(self, r: RequestStats) -> None:
+        self.requests.append(r)
+
+    def summary(self) -> Dict[str, float]:
+        n = len(self.requests)
+        if not n:
+            return {"requests": 0}
+        return {
+            "requests": n,
+            "tokens": sum(r.batch * r.new_tokens for r in self.requests),
+            "prefill_s": sum(r.prefill_s for r in self.requests),
+            "decode_s": sum(r.decode_s for r in self.requests),
+            "decode_tps": (
+                sum(r.batch * r.new_tokens for r in self.requests)
+                / max(sum(r.decode_s for r in self.requests), 1e-9)),
+        }
 
 
 @dataclasses.dataclass
@@ -49,7 +93,8 @@ def make_prefill_step(cfg: ModelConfig, serve: ServeConfig,
         hidden, caches = forward(
             params, cfg, tokens, axes=axes, mesh=mesh,
             img_embeds=img_embeds, collect_cache=True,
-            cache_max_seq=serve.max_seq, cache_bits=serve.kv_bits)
+            cache_max_seq=serve.max_seq, cache_bits=serve.kv_bits,
+            cache_page_size=serve.kv_page_size)
         logits = logits_fn(params, cfg, hidden[:, -1:, :])[:, 0]
         return logits, caches
     return prefill
@@ -66,13 +111,18 @@ def make_decode_step(cfg: ModelConfig, serve: ServeConfig,
 def generate(params, cfg: ModelConfig, serve: ServeConfig,
              prompt: jnp.ndarray, n_tokens: int,
              img_embeds: Optional[jnp.ndarray] = None,
-             axes: MeshAxes = MeshAxes(), mesh=None, seed: int = 0
-             ) -> jnp.ndarray:
+             axes: MeshAxes = MeshAxes(), mesh=None, seed: int = 0,
+             stats: Optional[ServeStats] = None) -> jnp.ndarray:
     """Greedy/sampled generation. prompt: (B, S) (audio: (B, S, K)).
-    Returns (B, n_tokens[, K]) generated ids."""
+    Returns (B, n_tokens[, K]) generated ids. With ``stats``, one
+    ``RequestStats`` row is recorded (timings block on device work, so
+    they measure compute + the first-call compile)."""
     prefill = jax.jit(make_prefill_step(cfg, serve, axes, mesh))
     dstep = jax.jit(make_decode_step(cfg, serve, axes, mesh))
+    t0 = time.perf_counter()
     logits, caches = prefill(params, prompt, img_embeds)
+    logits.block_until_ready()
+    t1 = time.perf_counter()
     key = jax.random.PRNGKey(seed)
     pos = prompt.shape[1]
     outs = []
@@ -85,4 +135,14 @@ def generate(params, cfg: ModelConfig, serve: ServeConfig,
         tok = sample_logits(key, logits, serve.temperature, serve.top_k)
         outs.append(tok)
         pos += 1
-    return jnp.stack(outs, axis=1)
+    out = jnp.stack(outs, axis=1)
+    out.block_until_ready()
+    t2 = time.perf_counter()
+    if stats is not None:
+        stats.record(RequestStats(
+            batch=int(prompt.shape[0]),
+            prompt_tokens=int(prompt.shape[1]),
+            new_tokens=int(n_tokens),
+            kv_bits=int(serve.kv_bits),
+            prefill_s=t1 - t0, decode_s=t2 - t1))
+    return out

@@ -2,9 +2,9 @@
 
 ``register_operator`` / ``register_metric`` wrap the ``kernels/ops.py``
 scan entry points — ``probe_scan``, ``cluster_scan``, ``refine_scan``,
-``saq_scan`` — plus the two search-level programs (the two-phase
-coarse->refine search and the staged multistage scan). Each operator
-declares:
+``saq_scan``, plus ``attend_scan`` (quantized-KV decode attention) —
+and the two search-level programs (the two-phase coarse->refine search
+and the staged multistage scan). Each operator declares:
 
 * its tunable **config space** (``n_tile`` tile sizes, backend strings,
   the ``coarse_prefix``/``coarse_dim_frac``/``oversample`` grid for the
@@ -362,6 +362,53 @@ def _run_multistage_scan(wl: Workload):
     return ids, dists
 
 
+def _attend_workloads(fast: bool) -> List[Workload]:
+    """Quantized paged KV decode at serving shapes. Same bit-identity
+    discipline as the scans: every (backend, s_block) config must
+    reproduce the default's output exactly to win (the packed kernel,
+    the dense-code kernel, and any s_block tiling are all integer-exact
+    over the same codes; only backend flips that change softmax
+    streaming order can fail the gate, and then they simply don't
+    cache)."""
+    from repro.models import kvcache as kvc
+
+    b, hkv, h, hd, bits = 2, 4, 8, 64, 4
+    s = 512 if fast else 2048
+    rng = np.random.default_rng(1013)
+    k = jnp.asarray(rng.normal(size=(1, b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, b, s, hkv, hd)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, h, hd)), jnp.float32)
+    cache = kvc.quantize_paged(k, v, bits)
+    gather = functools.partial(kvc.gather_pages,
+                               page_table=cache.page_table)
+    return [Workload(
+        dims={"b": b, "s": s, "h": h, "hkv": hkv, "hd": hd, "bits": bits},
+        operands={"q": q,
+                  "k_words": gather(cache.k_words[0]),
+                  "k_vmax": gather(cache.k_vmax[0]),
+                  "k_rescale": gather(cache.k_rescale[0]),
+                  "v_words": gather(cache.v_words[0]),
+                  "v_vmax": gather(cache.v_vmax[0]),
+                  "pos": jnp.asarray(s - 1, jnp.int32)})]
+
+
+@register_operator(
+    "attend_scan",
+    config_space={"s_block": (128, 256, 512, 1024),
+                  "backend": BACKEND_BASES},
+    fast_config_space={"s_block": (256, 1024),
+                       "backend": BACKEND_BASES},
+    default_config={"s_block": None, "backend": None},
+    workloads=_attend_workloads)
+def _run_attend_scan(wl: Workload, *, s_block=None, backend=None):
+    o = wl.operands
+    return ops.attend_scan(o["q"], o["k_words"], o["k_vmax"],
+                           o["k_rescale"], o["v_words"], o["v_vmax"],
+                           o["pos"], bits=wl.dims["bits"],
+                           hd=wl.dims["hd"], backend=backend,
+                           s_block=s_block)
+
+
 # ---------------------------------------------------------------------------
 # Metrics (beyond wall-clock, which the autotuner measures itself)
 # ---------------------------------------------------------------------------
@@ -436,3 +483,13 @@ def _m_refine_bits(wl, config, result):
     lay = _layout_of(wl)
     return float(ops.scan_bit_macs(wl.dims["r"], lay.col_offsets,
                                    lay.seg_bits))
+
+
+@register_metric("attend_scan", "kv_bytes_streamed")
+def _m_attend_bytes(wl, config, result):
+    """HBM bytes one decode step must stream: the packed K+V words plus
+    the per-token factors (what the fused kernel actually reads)."""
+    o = wl.operands
+    return float(sum(a.size * a.dtype.itemsize
+                     for a in (o["k_words"], o["v_words"], o["k_vmax"],
+                               o["k_rescale"], o["v_vmax"])))

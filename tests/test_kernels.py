@@ -67,8 +67,9 @@ def test_kernel_backed_encode_matches_scan_mode():
 @pytest.mark.parametrize("b,s,h,hkv,hd", [(2, 64, 8, 4, 32),
                                           (1, 128, 4, 4, 64),
                                           (3, 96, 8, 2, 16)])
-@pytest.mark.parametrize("bits", [4, 8])
-def test_saq_attend_kernel_vs_oracle(b, s, h, hkv, hd, bits):
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_attend_scan_vs_oracle(b, s, h, hkv, hd, bits):
+    from repro.kernels.packbody import kv_pack
     from repro.models import kvcache as kvc
     rng = np.random.default_rng(b * s + bits)
     k = rng.normal(size=(b, s, hkv, hd)).astype(np.float32)
@@ -76,13 +77,16 @@ def test_saq_attend_kernel_vs_oracle(b, s, h, hkv, hd, bits):
     q = rng.normal(size=(b, h, hd)).astype(np.float32)
     kc, kvm, krs, vc, vvm = kvc.quantize_kv(jnp.asarray(k),
                                             jnp.asarray(v), bits)
-    kc, vc = kvc.pack_codes(kc, bits), kvc.pack_codes(vc, bits)
+    kw, vw = kv_pack(kc, bits), kv_pack(vc, bits)
     pos = jnp.asarray(s * 3 // 4, jnp.int32)
-    got = np.asarray(ops.saq_attend(jnp.asarray(q), kc, kvm, krs, vc,
-                                    vvm, pos, bits))
     want = np.asarray(ref.saq_attend_ref(jnp.asarray(q), kc, kvm, krs,
                                          vc, vvm, pos, bits))
-    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    for backend in ("pallas-interpret", "xla"):
+        got = np.asarray(ops.attend_scan(jnp.asarray(q), kw, kvm, krs,
+                                         vw, vvm, pos, bits=bits, hd=hd,
+                                         backend=backend))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                   err_msg=backend)
 
 
 @pytest.mark.parametrize("n,d", [(10, 16), (100, 64), (33, 96)])

@@ -1,0 +1,159 @@
+"""Paged SAQ KV-cache contracts (repro.models.kvcache).
+
+* packed-vs-dense bit-identity of the fused attend kernel: the in-VMEM
+  word expansion (shared kernel body) against the same kernel fed dense
+  u8 codes, across bits in {2, 4, 8} x page sizes x ragged ``pos``
+  boundaries (first token, last slot of a page, first slot of the next,
+  full cache).
+* the page table is a real indirection: any physical permutation of the
+  pages decodes bit-identically through gather + attend.
+* one-token appends through a shuffled page table reproduce the prefill
+  quantization exactly.
+* bits validation (the old path silently decoded bits=2 as 8-bit).
+* ServeStats accounting math.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.packbody import kv_unpack
+from repro.kernels.saq_attend import saq_attend_pallas
+from repro.models import kvcache as kvc
+
+B, HKV, H, HD = 2, 2, 4, 32
+S = 32
+
+
+def _rand_kv(seed, l=1, s=S):
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray(rng.standard_normal((l, B, s, HKV, HD)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((l, B, s, HKV, HD)), jnp.float32)
+    return k, v
+
+
+def _slice0(cache):
+    return (cache.k_words[0], cache.k_vmax[0], cache.k_rescale[0],
+            cache.v_words[0], cache.v_vmax[0])
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("page_size", [8, 16])
+def test_attend_packed_vs_dense_bit_identical(bits, page_size):
+    k, v = _rand_kv(bits * 10 + page_size)
+    cache = kvc.quantize_paged(k, v, bits, page_size=page_size)
+    kw, kvm, krs, vw, vvm = (kvc.gather_pages(x, cache.page_table)
+                             for x in _slice0(cache))
+    kc = kv_unpack(kw, HD, bits).astype(jnp.uint8)
+    vc = kv_unpack(vw, HD, bits).astype(jnp.uint8)
+    rng = np.random.default_rng(99)
+    q = jnp.asarray(rng.standard_normal((B, H, HD)), jnp.float32)
+    for pos in (0, page_size - 1, page_size, S - 1):
+        pos = jnp.asarray(pos, jnp.int32)
+        out_p = saq_attend_pallas(q, kw, kvm, krs, vw, vvm, pos,
+                                  bits=bits, hd=HD, s_block=16,
+                                  packed=True, interpret=True)
+        out_d = saq_attend_pallas(q, kc, kvm, krs, vc, vvm, pos,
+                                  bits=bits, hd=HD, s_block=16,
+                                  packed=False, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(out_p).view(np.uint32),
+            np.asarray(out_d).view(np.uint32),
+            err_msg=f"pos={int(pos)}")
+
+
+def test_shuffled_page_table_decodes_identically():
+    """Permuting the physical pages while recording the permutation in
+    the page table must be invisible to gather and attend."""
+    bits, ps = 4, 8
+    k, v = _rand_kv(5)
+    cache = kvc.quantize_paged(k, v, bits, page_size=ps)
+    n_pages = cache.page_table.shape[1]
+    rng = np.random.default_rng(1)
+    perm = jnp.asarray(np.stack([rng.permutation(n_pages)
+                                 for _ in range(B)]), jnp.int32)
+    inv = jnp.argsort(perm, axis=1).astype(jnp.int32)
+
+    def scramble(arr):
+        # physical page p now holds logical page inv-image: placing
+        # logical page j at physical slot perm[b, j] means
+        # page_table = perm and physical = take(arr, inv) per batch.
+        return jnp.take_along_axis(
+            arr, inv.reshape((B, n_pages) + (1,) * (arr.ndim - 2)),
+            axis=1)
+
+    shuffled = dataclasses.replace(
+        cache,
+        k_words=scramble(cache.k_words[0])[None],
+        k_vmax=scramble(cache.k_vmax[0])[None],
+        k_rescale=scramble(cache.k_rescale[0])[None],
+        v_words=scramble(cache.v_words[0])[None],
+        v_vmax=scramble(cache.v_vmax[0])[None],
+        page_table=perm)
+    for a, b in zip(_slice0(cache), _slice0(shuffled)):
+        np.testing.assert_array_equal(
+            np.asarray(kvc.gather_pages(a, cache.page_table)),
+            np.asarray(kvc.gather_pages(b, shuffled.page_table)))
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((B, H, HD)), jnp.float32)
+    pos = jnp.asarray(S - 1, jnp.int32)
+    out_i = kvc.attend_saq(q, _slice0(cache), cache.page_table, pos,
+                           bits=bits, page_size=ps, hd=HD)
+    out_s = kvc.attend_saq(q, _slice0(shuffled), shuffled.page_table,
+                           pos, bits=bits, page_size=ps, hd=HD)
+    np.testing.assert_array_equal(np.asarray(out_i).view(np.uint32),
+                                  np.asarray(out_s).view(np.uint32))
+
+
+def test_append_through_shuffled_table_matches_prefill():
+    """Writing tokens one at a time through a permuted page table must
+    land exactly the rows a whole-sequence prefill quantization
+    produces (the encoder is per-row, so batch vs single-token encode
+    is the same program)."""
+    bits, ps = 4, 8
+    k, v = _rand_kv(7)
+    want = kvc.quantize_paged(k, v, bits, page_size=ps)
+    n_pages = S // ps
+    rng = np.random.default_rng(3)
+    perm = jnp.asarray(np.stack([rng.permutation(n_pages)
+                                 for _ in range(B)]), jnp.int32)
+    empty = kvc.init_saq(1, B, S, HKV, HD, bits=bits, page_size=ps)
+    slice_kv = _slice0(empty)
+    for t in range(S):
+        slice_kv = kvc.append_saq(slice_kv, perm, k[0, :, t], v[0, :, t],
+                                  jnp.asarray(t, jnp.int32), bits=bits,
+                                  page_size=ps)
+    got = [kvc.gather_pages(x, perm) for x in slice_kv]
+    ref = [kvc.gather_pages(x, want.page_table) for x in _slice0(want)]
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(got[3]), np.asarray(ref[3]))
+    for g, r in zip(got[1:3] + got[4:], ref[1:3] + ref[4:]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_bits_validation():
+    with pytest.raises(ValueError, match="bits"):
+        kvc.init_saq(1, B, S, HKV, HD, bits=3)
+    k, v = _rand_kv(11, s=8)
+    with pytest.raises(ValueError, match="bits"):
+        kvc.quantize_paged(k, v, bits=5, page_size=8)
+    with pytest.raises(ValueError, match="page_size"):
+        kvc.quantize_paged(k, v, bits=4, page_size=16)  # 8 % 16 != 0
+
+
+def test_serve_stats_summary():
+    from repro.serve.engine import RequestStats, ServeStats
+
+    st = ServeStats()
+    assert st.summary() == {"requests": 0}
+    st.record(RequestStats(batch=2, prompt_tokens=8, new_tokens=4,
+                           kv_bits=4, prefill_s=0.5, decode_s=2.0))
+    st.record(RequestStats(batch=1, prompt_tokens=8, new_tokens=8,
+                           kv_bits=4, prefill_s=0.5, decode_s=2.0))
+    s = st.summary()
+    assert s["requests"] == 2 and s["tokens"] == 16
+    assert s["decode_s"] == 4.0 and s["decode_tps"] == pytest.approx(4.0)
+    assert st.requests[0].decode_tps == pytest.approx(4.0)

@@ -118,7 +118,9 @@ def test_packed_q4_cache_halves_codes_and_decodes():
                     cache_max_seq=16, cache_bits=8)
     _, c4 = forward(params, cfg, toks, collect_cache=True,
                     cache_max_seq=16, cache_bits=4)
-    assert c4.kv.k_codes.shape[-1] * 2 == c8.kv.k_codes.shape[-1]
+    # bit-exact storage: a 4-bit page row is half the words of an 8-bit one
+    assert c4.kv.k_words.shape[-1] * 2 == c8.kv.k_words.shape[-1]
+    assert c4.kv.k_words.dtype == np.uint32
     lg8, _ = decode_step(params, cfg, toks[:, -1], 12, c8)
     lg4, _ = decode_step(params, cfg, toks[:, -1], 12, c4)
     a, b = np.asarray(lg8, np.float32), np.asarray(lg4, np.float32)
@@ -126,3 +128,18 @@ def test_packed_q4_cache_halves_codes_and_decodes():
     # 4-bit is coarser but must stay in the same class
     rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
     assert rel < 0.5, rel
+
+
+def test_q2_cache_decodes_finite():
+    # the old byte path silently read bits=2 as 8-bit garbage; the
+    # WordLayout path must decode it for real
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("granite-20b")
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    _, c2 = forward(params, cfg, toks, collect_cache=True,
+                    cache_max_seq=16, cache_bits=2)
+    assert c2.kv.k_words.shape[-1] * 16 == cfg.hd, c2.kv.k_words.shape
+    lg2, _ = decode_step(params, cfg, toks[:, -1], 12, c2)
+    assert np.isfinite(np.asarray(lg2, np.float32)).all()

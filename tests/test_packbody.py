@@ -1,0 +1,165 @@
+"""Shared kernel-body library (repro.kernels.packbody) tests.
+
+The body's word expansion (``expand_words`` over the (6, D) table from
+``unpack_tab``) must be integer-exact against the host-side
+``unpack_words`` on any layout — including fields that straddle a word
+boundary — because every scan kernel AND the attend kernel now consume
+this one implementation. The four-kernel matrix pins the ivf_scan
+refactor: bit-packed vs column storage must stay BIT-identical through
+the whole search (probe, cluster-major, refine, and the flat saq_scan)
+on both backends, with and without progressive prefix reads.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packed import pack_words, unpack_words, word_layout
+from repro.kernels.packbody import (KV_BITS, expand_words, kv_n_words,
+                                    kv_pack, kv_unpack, kv_word_layout,
+                                    unpack_tab)
+from conftest import decaying_data
+
+
+def _random_codes(col_offsets, seg_bits, n, rng):
+    d = col_offsets[-1]
+    codes = np.zeros((n, d), np.uint32)
+    for s, b in enumerate(seg_bits):
+        codes[:, col_offsets[s]:col_offsets[s + 1]] = rng.integers(
+            0, 1 << b, (n, col_offsets[s + 1] - col_offsets[s]))
+    return codes
+
+
+# Layouts chosen so fields straddle uint32 boundaries: 3-bit columns
+# cross at bit 30, 5-bit at 30, 7-bit at 28, and the mixed plan does
+# all of it across segment joins.
+STRADDLE_LAYOUTS = [
+    ((0, 16), (3,)),
+    ((0, 13), (5,)),
+    ((0, 10), (7,)),
+    ((0, 7, 15, 24), (3, 5, 7)),
+    ((0, 11, 30), (6, 1)),
+]
+
+
+@pytest.mark.parametrize("col_offsets,seg_bits", STRADDLE_LAYOUTS)
+def test_expand_words_matches_unpack_words(col_offsets, seg_bits):
+    rng = np.random.default_rng(sum(col_offsets) + sum(seg_bits))
+    lay = word_layout(col_offsets, seg_bits)
+    codes = _random_codes(col_offsets, seg_bits, 9, rng)
+    words = pack_words(jnp.asarray(codes), lay)
+    tab, n_words = unpack_tab(col_offsets, seg_bits)
+    assert n_words == lay.n_words
+    assert tab.shape == (6, col_offsets[-1])
+    got = np.asarray(expand_words(words, jnp.asarray(tab)))
+    want = np.asarray(unpack_words(words, lay))
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got, codes)
+
+
+def test_expand_words_under_jit_and_leading_dims():
+    """The body runs inside kernel programs: it must trace under jit and
+    broadcast over arbitrary leading dims (scan slabs are (..., W))."""
+    col_offsets, seg_bits = (0, 7, 15, 24), (3, 5, 7)
+    d = col_offsets[-1]
+    rng = np.random.default_rng(7)
+    lay = word_layout(col_offsets, seg_bits)
+    codes = _random_codes(col_offsets, seg_bits, 12, rng
+                          ).reshape(2, 3, 2, d)
+    words = pack_words(jnp.asarray(codes.reshape(-1, d)),
+                       lay).reshape(2, 3, 2, lay.n_words)
+    tab, _ = unpack_tab(col_offsets, seg_bits)
+    got = jax.jit(lambda w: expand_words(w, jnp.asarray(tab)))(words)
+    np.testing.assert_array_equal(np.asarray(got), codes)
+
+
+def test_kv_word_layout_validates_bits():
+    for bits in KV_BITS:
+        lay = kv_word_layout(64, bits)
+        assert lay.n_words == kv_n_words(64, bits) == 64 * bits // 32
+    for bad in (0, 3, 5, 16):
+        with pytest.raises(ValueError, match="bits"):
+            kv_word_layout(64, bad)
+
+
+@pytest.mark.parametrize("bits", KV_BITS)
+def test_kv_pack_unpack_exact(bits):
+    rng = np.random.default_rng(bits)
+    codes = rng.integers(0, 1 << bits, (3, 5, 2, 64), dtype=np.uint32)
+    words = kv_pack(jnp.asarray(codes), bits)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (3, 5, 2, kv_n_words(64, bits))
+    back = np.asarray(kv_unpack(words, 64, bits))
+    np.testing.assert_array_equal(back, codes)
+
+
+# ---------------------------------------------------------------------------
+# Pinned four-kernel refactor regression
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def built_idx():
+    from repro.core.saq import SAQConfig
+    from repro.ivf import IVFIndex
+
+    x = decaying_data(1500, 32, alpha=0.7, seed=3)
+    idx = IVFIndex.build(
+        x, SAQConfig(avg_bits=4, rounds=2, align=8, max_bits=9),
+        n_clusters=10)
+    qs = decaying_data(5, 32, alpha=0.7, seed=13)
+    return idx, qs
+
+
+@pytest.mark.parametrize("base", ["xla", "pallas-interpret"])
+def test_scan_kernels_bitpacked_vs_unpacked_bit_identical(built_idx,
+                                                          base):
+    """Word-buffer vs column storage through every scan kernel the
+    shared body serves: the gathered probe scan, the cluster-major
+    dedup scan, and the two-phase refine scan (coarse prefix + re-rank)
+    must return BIT-identical ids and distances on both backends."""
+    from repro.ivf import RefineSpec
+
+    idx, qs = built_idx
+    unp = dataclasses.replace(idx, packed=idx.packed.unpack())
+    pb = tuple(max(1, s.bits // 2) for s in idx.plan.stored_segments)
+    runs = [
+        dict(k=8, nprobe=5, backend=base),
+        dict(k=8, nprobe=5, backend=base, prefix_bits=pb),
+        dict(k=8, nprobe=5, backend=base + "-cluster-major"),
+        dict(k=8, nprobe=5, backend=base,
+             refine=RefineSpec(coarse_prefix=1)),
+    ]
+    for kw in runs:
+        ids_p, d_p = idx.search_batch(qs, **kw)
+        ids_u, d_u = unp.search_batch(qs, **kw)
+        np.testing.assert_array_equal(np.asarray(ids_p),
+                                      np.asarray(ids_u), err_msg=str(kw))
+        np.testing.assert_array_equal(np.asarray(d_p).view(np.uint32),
+                                      np.asarray(d_u).view(np.uint32),
+                                      err_msg=str(kw))
+
+
+def test_saq_scan_bitpacked_vs_unpacked_bit_identical():
+    """The flat multi-segment saq_scan (fourth consumer of the body)
+    pinned the same way, with and without prefix truncation."""
+    from repro.core.saq import fit_saq
+    from repro.kernels import ops
+
+    x = decaying_data(400, 64, alpha=0.8, seed=3)
+    saq = fit_saq(x, avg_bits=4, rounds=2, align=8, max_bits=10)
+    packed = saq.encode(x)
+    unp = packed.unpack()
+    qcs = saq.preprocess_queries(
+        jnp.asarray(decaying_data(4, 64, alpha=0.8, seed=23)))
+    pb = tuple(max(1, b // 2) for b in packed.layout.seg_bits)
+    for prefix in (None, pb):
+        d_p = np.asarray(ops.saq_scan(packed, qcs.q_rot,
+                                      q_norm_sq=qcs.q_norm_sq,
+                                      prefix_bits=prefix))
+        d_u = np.asarray(ops.saq_scan(unp, qcs.q_rot,
+                                      q_norm_sq=qcs.q_norm_sq,
+                                      prefix_bits=prefix))
+        np.testing.assert_array_equal(d_p.view(np.uint32),
+                                      d_u.view(np.uint32))

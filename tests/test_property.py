@@ -78,17 +78,17 @@ def test_fwht_preserves_norm(d, n, seed):
 
 
 @settings(max_examples=20, deadline=None)
-@given(st.integers(1, 6), st.integers(2, 16), st.integers(0, 2 ** 31 - 1))
-def test_pack_unpack_roundtrip(n, half_d, seed):
-    from repro.models.kvcache import pack_codes, unpack_codes
+@given(st.integers(1, 6), st.integers(1, 8), st.sampled_from([2, 4, 8]),
+       st.integers(0, 2 ** 31 - 1))
+def test_kv_pack_unpack_roundtrip(n, d_words, bits, seed):
+    from repro.kernels.packbody import kv_pack, kv_unpack
     rng = np.random.default_rng(seed)
-    codes = jnp.asarray(rng.integers(0, 16, (n, half_d * 2)), jnp.uint8)
-    packed = pack_codes(codes, 4)
-    assert packed.shape[-1] == half_d
-    np.testing.assert_array_equal(np.asarray(unpack_codes(packed, 4)),
-                                  np.asarray(codes))
-    # bits=8 passthrough
-    np.testing.assert_array_equal(np.asarray(pack_codes(codes, 8)),
+    hd = d_words * 32 // bits          # whole number of words per row
+    codes = jnp.asarray(rng.integers(0, 1 << bits, (n, hd)), jnp.uint8)
+    packed = kv_pack(codes, bits)
+    assert packed.shape[-1] == hd * bits // 32
+    assert packed.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(kv_unpack(packed, hd, bits)),
                                   np.asarray(codes))
 
 

@@ -327,7 +327,7 @@ def test_probe_budget_slack_from_cache():
 def test_registry_registers_scan_operators():
     from repro.tune import registry
     expected = {"saq_scan", "probe_scan", "cluster_scan", "refine_scan",
-                "two_phase_search", "multistage_scan"}
+                "two_phase_search", "multistage_scan", "attend_scan"}
     assert expected <= set(registry.OPERATORS)
     for name in expected:
         op = registry.OPERATORS[name]
@@ -335,10 +335,13 @@ def test_registry_registers_scan_operators():
         assert cfgs[0] == op.default_config      # reference runs first
         assert all(c == op.default_config or c != cfgs[0]
                    for c in cfgs[1:])
-        # every slab-scan operator exposes at least one work metric
+        # every kernel-backed operator exposes at least one work metric
         if name in ("saq_scan", "probe_scan", "cluster_scan",
-                    "refine_scan"):
+                    "refine_scan", "attend_scan"):
             assert op.metrics, f"{name} has no registered metrics"
+    # the attend op sweeps the streaming block size and the backend
+    assert set(registry.OPERATORS["attend_scan"].config_space) \
+        == {"s_block", "backend"}
 
 
 def test_sweep_bit_identity_gate_rejects_wrong_results():
