@@ -1,0 +1,25 @@
+"""Repo-invariant static analysis (``python -m repro.analysis``).
+
+Four passes over the repo, wired into CI as a hard-failing job:
+
+* :mod:`repro.analysis.invariant_lint` — pure-AST linter for the
+  repo's cross-cutting invariants (no broad excepts without telemetry,
+  integer bit-pattern identity gates, seeded RNG, monotonic timing,
+  no mutable defaults).
+* :mod:`repro.analysis.contracts` — abstract evaluation of every
+  registry operator's Pallas call: per-grid-step VMEM residency vs
+  budget, grid x block row coverage under the masked-tail convention.
+* :mod:`repro.analysis.retrace` — jit-cache retrace detector over the
+  canonical serving sweep, exact-compared against the committed
+  ``analysis/retrace_baseline.json``.
+* :mod:`repro.analysis.lockcheck` — lock-discipline checker for the
+  snapshot-publishing classes (no device work / blocking I/O under
+  the lock, guarded mutations, single-assignment snapshot publish,
+  one snapshot bind per reader).
+
+Findings are ``file:line rule severity message``; suppress a true
+positive inline with ``# saq-lint: disable=<rule> (<reason>)`` — the
+reason is mandatory and unused suppressions fail the run.  See
+``docs/analysis.md`` for the rule catalog.
+"""
+from repro.analysis.rules import RULES, Finding, FileSource  # noqa: F401

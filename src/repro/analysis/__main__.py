@@ -1,0 +1,133 @@
+"""CLI driver: ``python -m repro.analysis [--fix-hints] [paths...]``.
+
+Default run (no flags) = the CI gate: AST passes (invariant lint +
+lock discipline) over ``src/repro`` plus the kernel-contract checker
+over every registry operator.  ``--retrace`` adds the jit-cache
+retrace detector (imports jax and executes the canonical sweep;
+``--bless`` rewrites ``analysis/retrace_baseline.json``).
+
+Exit status is the number of findings (capped at 100), so any
+violation fails CI.  A clean run stamps rule/violation counts into the
+benchmark trajectory (``BENCH_batch_qps.json``) when the benchmarks
+package is importable; ``--no-trajectory`` skips that.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import List
+
+from repro.analysis import contracts as contracts_mod
+from repro.analysis import invariant_lint, lockcheck
+from repro.analysis.rules import RULES, Finding, load_source
+
+DEFAULT_PATHS = ("src/repro",)
+
+
+def iter_py_files(paths) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        path = pathlib.Path(p)
+        if path.is_dir():
+            out.extend(str(f) for f in sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(str(path))
+    return out
+
+
+def run_ast_passes(files: List[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in files:
+        src = load_source(path)
+        if src.parse_error is not None:
+            findings.append(src.parse_error)
+            continue
+        raw = invariant_lint.lint_file(src) + lockcheck.check_file(src)
+        findings.extend(src.apply(raw))
+        findings.extend(src.malformed)
+        findings.extend(src.unused_findings())
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-invariant linter + kernel-contract checker "
+                    "+ retrace detector + lock-discipline analysis")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files/directories for the AST passes "
+                         "(default: src/repro)")
+    ap.add_argument("--fix-hints", action="store_true",
+                    help="print the remediation hint under each finding")
+    ap.add_argument("--retrace", action="store_true",
+                    help="run the jit-cache retrace detector "
+                         "(executes the canonical serving sweep)")
+    ap.add_argument("--bless", action="store_true",
+                    help="with --retrace: rewrite "
+                         "analysis/retrace_baseline.json")
+    ap.add_argument("--vmem-budget-mib", type=float, default=16.0,
+                    help="per-grid-step VMEM budget for the contract "
+                         "checker (default: 16 MiB, one TPU core)")
+    ap.add_argument("--no-contracts", action="store_true",
+                    help="skip the kernel-contract checker (AST passes "
+                         "only; no repo code is imported)")
+    ap.add_argument("--no-trajectory", action="store_true",
+                    help="do not stamp counts into the benchmark "
+                         "trajectory file")
+    args = ap.parse_args(argv)
+
+    files = iter_py_files(args.paths)
+    if not files:
+        print("no python files under", args.paths, file=sys.stderr)
+        return 2
+    findings = run_ast_passes(files)
+
+    if not args.no_contracts:
+        budget = int(args.vmem_budget_mib * 1024 * 1024)
+        cfind, reports = contracts_mod.check_contracts(
+            vmem_budget=budget)
+        findings.extend(cfind)
+        print(contracts_mod.format_reports(reports))
+        print()
+
+    if args.retrace:
+        from repro.analysis import retrace
+        rfind, counts = retrace.check_retrace(bless=args.bless)
+        findings.extend(rfind)
+        traced = {k: v for k, v in sorted(counts.items()) if v}
+        print(f"retrace sweep: {len(counts)} jitted functions, "
+              f"{sum(counts.values())} cache entries across "
+              f"{len(traced)} traced")
+        if args.bless:
+            print(f"blessed {retrace.BASELINE_PATH}")
+        print()
+
+    for f in findings:
+        print(f.format(args.fix_hints))
+    n_files = len(files)
+    print(f"{len(findings)} finding(s) over {n_files} file(s); "
+          f"{len(RULES)} rules active")
+
+    if not findings and not args.no_trajectory:
+        _stamp_trajectory(n_files)
+    return min(len(findings), 100)
+
+
+def _stamp_trajectory(n_files: int) -> None:
+    """Record the clean analysis pass in the benchmark trajectory.
+    benchmarks/ lives at the repo root and is only importable when the
+    analyzer runs from there — elsewhere this is a silent no-op."""
+    try:
+        from benchmarks.common import append_trajectory_entry
+    except ImportError:
+        return
+    append_trajectory_entry({"analysis": {
+        "rules": len(RULES),
+        "files_checked": n_files,
+        "violations": 0,
+    }})
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,122 @@
+"""Pass 2: kernel-contract checker.
+
+Unlike the AST passes this one EXECUTES repo code: it imports the
+operator registry and materializes the canonical fast workloads (the
+same ``_bundle``/``_index`` the autotuner sweeps), then abstractly
+evaluates every operator's Pallas call through its ``contract`` —
+per-grid-step VMEM residency (block operands + scratch + the ``(6, D)``
+unpack table + the in-VMEM expanded-code working set) and grid x block
+row coverage — WITHOUT running any kernel.
+
+Checks per report:
+
+* ``vmem-budget``    per-grid-step residency <= the budget
+                     (default 16 MiB: one TPU core's VMEM).
+* ``tile-coverage``  ``rows_covered >= rows`` (no silently dropped
+                     rows) and ``rows_covered - rows < tile_rows``
+                     (the pad is under one tile — the masked-tail
+                     convention, not runaway padding). The attend
+                     kernel additionally requires ``s % s_block == 0``
+                     (its own assert; reported here statically).
+
+Every operator in the registry must carry a contract
+(``contract-missing`` otherwise), and every config in its full config
+space is evaluated — the sweep may pick any of them, so all must fit.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.rules import Finding
+
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024     # one TPU core's VMEM
+_REGISTRY_PATH = "src/repro/tune/registry.py"
+
+
+def check_report(report: Dict, vmem_budget: int,
+                 where: str = _REGISTRY_PATH) -> List[Finding]:
+    """Pure checks over one accounting report (testable without the
+    registry)."""
+    findings: List[Finding] = []
+    kern = report["kernel"]
+    vmem = report["vmem_per_step_bytes"]
+    if vmem > vmem_budget:
+        findings.append(Finding(
+            where, 1, "vmem-budget",
+            f"{kern}: per-grid-step VMEM {vmem / 2**20:.2f} MiB exceeds "
+            f"budget {vmem_budget / 2**20:.2f} MiB "
+            f"(grid={report['grid']}, tile_rows={report['tile_rows']})"))
+    rows, covered = report["rows"], report["rows_covered"]
+    tile = max(1, report["tile_rows"])
+    if covered < rows:
+        findings.append(Finding(
+            where, 1, "tile-coverage",
+            f"{kern}: grid x block covers {covered} rows of {rows} — "
+            f"{rows - covered} rows silently dropped"))
+    elif covered - rows >= tile and not report.get("divides", True):
+        pass   # non-dividing attend block reported below
+    elif covered - rows >= tile:
+        findings.append(Finding(
+            where, 1, "tile-coverage",
+            f"{kern}: pad of {covered - rows} rows >= one tile "
+            f"({tile}) — tiling arithmetic is off"))
+    if not report.get("divides", True):
+        findings.append(Finding(
+            where, 1, "tile-coverage",
+            f"{kern}: s_block {tile} does not divide the sequence — "
+            f"the kernel asserts s %% s_block == 0"))
+    return findings
+
+
+def check_contracts(fast: bool = True,
+                    vmem_budget: int = DEFAULT_VMEM_BUDGET
+                    ) -> Tuple[List[Finding], List[Dict]]:
+    """Evaluate every registry operator's contract on its canonical
+    workloads under every config in its (full) config space. Returns
+    (findings, reports); reports carry an ``operator``/``config`` tag
+    for the CLI table."""
+    from repro.tune.registry import OPERATORS
+
+    findings: List[Finding] = []
+    reports: List[Dict] = []
+    for name, op in sorted(OPERATORS.items()):
+        if op.contract is None:
+            findings.append(Finding(
+                _REGISTRY_PATH, 1, "contract-missing",
+                f"operator {name!r} has no kernel contract"))
+            continue
+        for wl in op.workloads(fast):
+            seen = set()
+            for config in op.configs(fast=False):
+                key = tuple(sorted(config.items()))
+                if key in seen:
+                    continue
+                seen.add(key)
+                for report in op.contract(wl, config):
+                    report = dict(report)
+                    report["operator"] = name
+                    report["config"] = dict(config)
+                    report["shape_key"] = wl.shape_key
+                    reports.append(report)
+                    findings.extend(check_report(report, vmem_budget))
+    return findings, reports
+
+
+def format_reports(reports: List[Dict]) -> str:
+    """Human-readable per-grid-step VMEM table (one line per distinct
+    (operator, kernel) at its worst-case config)."""
+    worst: Dict[Tuple[str, str], Dict] = {}
+    for r in reports:
+        key = (r["operator"], r["kernel"])
+        if key not in worst or r["vmem_per_step_bytes"] > \
+                worst[key]["vmem_per_step_bytes"]:
+            worst[key] = r
+    lines = [f"{'operator':<18} {'kernel':<36} {'grid':<12} "
+             f"{'tile':>6} {'VMEM/step':>12}"]
+    for (opname, kern), r in sorted(worst.items()):
+        grid = "x".join(str(g) for g in r["grid"])
+        lines.append(
+            f"{opname:<18} {kern:<36} {grid:<12} "
+            f"{r['tile_rows']:>6} "
+            f"{r['vmem_per_step_bytes'] / 2**20:>10.3f}Mi")
+    return "\n".join(lines)

@@ -1,0 +1,204 @@
+"""Pass 1: the repo-invariant linter (pure AST — nothing is imported).
+
+Rules (catalog + rationale in docs/analysis.md):
+
+* ``broad-except``     bare / ``except Exception`` handlers must
+                       re-raise or count the failure into telemetry.
+* ``float-eq-gate``    functions claiming bit-identity (name matches
+                       ``bit`` + ``identical``/``equal``) must compare
+                       integer bit patterns, never float ==/allclose.
+* ``unseeded-random``  no ``np.random.*`` global-state RNG; generators
+                       must be explicitly seeded.
+* ``mutable-default``  no mutable default arguments.
+* ``wallclock-timing`` ``time.time()`` never times measured sections —
+                       ``time.perf_counter()`` does.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List
+
+from repro.analysis.rules import Finding, FileSource, dotted_name
+
+# AugAssign targets that count as failure telemetry inside a broad
+# handler: the handler is *accounting* for the failure, not hiding it.
+_TELEMETRY_RE = re.compile(
+    r"fail|error|err\b|reject|drop|closed|count|stat", re.IGNORECASE)
+
+_BIT_GATE_RE = re.compile(r"bit.*(ident|equal)|(ident|equal).*bit",
+                          re.IGNORECASE)
+
+# np.random attributes that hit the module-level global RNG
+_GLOBAL_RNG_FNS = {
+    "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "choice", "shuffle", "permutation", "normal", "uniform",
+    "standard_normal", "seed", "binomial", "poisson", "beta", "gamma",
+    "exponential", "bytes", "multivariate_normal",
+}
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:
+        return True
+    names = []
+    if isinstance(t, ast.Tuple):
+        names = [e.id for e in t.elts if isinstance(e, ast.Name)]
+    elif isinstance(t, ast.Name):
+        names = [t.id]
+    return any(n in ("Exception", "BaseException") for n in names)
+
+
+def _handler_reraises_or_counts(handler: ast.ExceptHandler) -> bool:
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            return True
+        if isinstance(node, ast.AugAssign) and \
+                isinstance(node.op, ast.Add):
+            chain = []
+            t = node.target
+            while isinstance(t, (ast.Attribute, ast.Subscript)):
+                if isinstance(t, ast.Attribute):
+                    chain.append(t.attr)
+                    t = t.value
+                else:
+                    t = t.value
+            if isinstance(t, ast.Name):
+                chain.append(t.id)
+            if any(_TELEMETRY_RE.search(c) for c in chain):
+                return True
+    return False
+
+
+def _subtree_has_int_view(node: ast.AST) -> bool:
+    """True when the expression goes through an integer reinterpret:
+    ``.view(np.uint32)`` / ``astype(np.int...)`` / ``int(...)`` —
+    the dtype argument may be conditional (``np.uint32 if ... else
+    np.uint64``), so the whole argument subtree is searched."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            name = dotted_name(n.func) or ""
+            if name == "int":
+                return True
+            if name.endswith(".view") or name.endswith(".astype"):
+                for arg in n.args + [kw.value for kw in n.keywords]:
+                    for leaf in ast.walk(arg):
+                        aname = dotted_name(leaf) or ""
+                        if re.search(r"(u?int\d*|bool)$", aname):
+                            return True
+    return False
+
+
+# Metadata reads that make an ==/!= compare structural, not numeric:
+# shapes, dtypes, and sizes are exact by construction.
+_METADATA_ATTRS = {"shape", "dtype", "ndim", "size", "itemsize",
+                   "nbytes", "kind"}
+
+
+def _is_metadata_side(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and \
+            isinstance(node.value, (int, str, bool)):
+        return True
+    if isinstance(node, ast.Call):
+        return (dotted_name(node.func) or "") == "len"
+    n = node
+    while isinstance(n, ast.Attribute):
+        if n.attr in _METADATA_ATTRS:
+            return True
+        n = n.value
+    return False
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, src: FileSource):
+        self.src = src
+        self.findings: List[Finding] = []
+        self._gate_depth = 0
+
+    def _add(self, node: ast.AST, rule: str, message: str) -> None:
+        self.findings.append(
+            Finding(self.src.path, node.lineno, rule, message))
+
+    # -- mutable-default + float-eq-gate scope ---------------------------
+    def _visit_func(self, node) -> None:
+        for default in list(node.args.defaults) + \
+                [d for d in node.args.kw_defaults if d is not None]:
+            bad = isinstance(default, (ast.List, ast.Dict, ast.Set))
+            if isinstance(default, ast.Call):
+                name = dotted_name(default.func) or ""
+                bad = name in ("list", "dict", "set") and not default.args
+            if bad:
+                self._add(default, "mutable-default",
+                          f"mutable default argument in {node.name}()")
+        gate = _BIT_GATE_RE.search(node.name) is not None
+        if gate:
+            self._gate_depth += 1
+        self.generic_visit(node)
+        if gate:
+            self._gate_depth -= 1
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    # -- broad-except ----------------------------------------------------
+    def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+        if _is_broad(node) and not _handler_reraises_or_counts(node):
+            what = ast.unparse(node.type) if node.type else "bare except"
+            self._add(node, "broad-except",
+                      f"`except {what}` neither re-raises nor counts "
+                      f"the failure")
+        self.generic_visit(node)
+
+    # -- float-eq-gate ---------------------------------------------------
+    def visit_Compare(self, node: ast.Compare) -> None:
+        if self._gate_depth and any(
+                isinstance(op, (ast.Eq, ast.NotEq)) for op in node.ops):
+            sides = [node.left] + list(node.comparators)
+            if not any(_subtree_has_int_view(s) for s in sides) \
+                    and not any(_is_metadata_side(s) for s in sides):
+                self._add(node, "float-eq-gate",
+                          "==/!= in a bit-identity gate without an "
+                          "integer bit-pattern view")
+        self.generic_visit(node)
+
+    # -- calls: float-eq-gate / unseeded-random / wallclock-timing -------
+    def visit_Call(self, node: ast.Call) -> None:
+        name = dotted_name(node.func) or ""
+        leaf = name.rsplit(".", 1)[-1]
+        if self._gate_depth:
+            if leaf in ("allclose", "isclose"):
+                self._add(node, "float-eq-gate",
+                          f"{leaf}() in a bit-identity gate (tolerance "
+                          f"compare can pass non-identical floats)")
+            elif leaf == "array_equal" and not any(
+                    _subtree_has_int_view(a) for a in node.args):
+                self._add(node, "float-eq-gate",
+                          "array_equal() on float values in a "
+                          "bit-identity gate (view the bits as uint "
+                          "first: NaN != NaN under float ==)")
+        mod, _, fn = name.rpartition(".")
+        # only the GLOBAL-state RNG namespaces: numpy's module-level
+        # functions and the stdlib module.  jax.random is keyed and
+        # rng.* generator methods carry their own state — never flagged.
+        if mod in ("np.random", "numpy.random", "random"):
+            if fn in _GLOBAL_RNG_FNS:
+                self._add(node, "unseeded-random",
+                          f"{name}() uses global RNG state")
+            elif fn in ("default_rng", "RandomState") \
+                    and not node.args and not node.keywords:
+                self._add(node, "unseeded-random",
+                          f"{name}() without an explicit seed")
+        if name == "time.time":
+            self._add(node, "wallclock-timing",
+                      "time.time() — use time.perf_counter() for "
+                      "measured sections")
+        self.generic_visit(node)
+
+
+def lint_file(src: FileSource) -> List[Finding]:
+    if src.tree is None:
+        return [src.parse_error] if src.parse_error else []
+    v = _Visitor(src)
+    v.visit(src.tree)
+    return v.findings

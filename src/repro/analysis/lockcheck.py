@@ -1,0 +1,226 @@
+"""Pass 4: lock-discipline checker (pure AST — nothing is imported).
+
+Scope: any class that creates ``self._lock`` in ``__init__``
+(``LiveIndex`` in ``ivf/delta.py``, ``AnnEngine`` in
+``serve/ann_engine.py`` today — the checker discovers them, it does not
+hard-code them).
+
+Lock-held regions are (a) the bodies of ``with self._lock:`` statements
+— the attribute name must be exactly ``_lock``; auxiliary locks like
+``_ckpt_lock`` are NOT the snapshot lock — and (b) whole functions whose
+docstring declares the convention, containing ``lock held`` (e.g.
+``LiveIndex._publish`` / ``_append_row``).
+
+Rules:
+
+* ``lock-device-call``  no jnp/jax device work under the lock — the
+                        lock covers host bookkeeping + the snapshot
+                        swap; device work under it stalls every writer
+                        (and the compaction thread) on device latency.
+* ``lock-blocking-io``  no file I/O / sleeps under the lock.
+* ``lock-mutation``     an attribute ever mutated under the lock is
+                        lock-guarded; mutating it anywhere else
+                        (outside ``__init__``) is a race.
+* ``snapshot-publish``  ``self.snapshot`` is published by one whole
+                        assignment, never mutated in place.
+* ``snapshot-rebind``   readers bind ``.snapshot`` once per function —
+                        two reads can observe two different snapshots.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set, Tuple
+
+from repro.analysis.rules import (Finding, FileSource, attr_chain,
+                                  dotted_name)
+
+_DEVICE_ROOTS = ("jnp", "jax")
+_BLOCKING_CALLS = {
+    "open", "time.sleep", "os.replace", "os.rename", "os.remove",
+    "os.fsync", "os.makedirs", "shutil.rmtree", "shutil.copy",
+    "shutil.move", "json.dump", "json.load", "pickle.dump",
+    "pickle.load", "np.save", "np.load", "numpy.save", "numpy.load",
+}
+_BLOCKING_LEAVES = {"save_index", "load_index", "append_wal"}
+
+
+def _docstring_lock_held(fn: ast.AST) -> bool:
+    doc = ast.get_docstring(fn) or ""
+    return "lock held" in doc.lower()
+
+
+def _is_self_lock(expr: ast.AST) -> bool:
+    return (isinstance(expr, ast.Attribute) and expr.attr == "_lock"
+            and isinstance(expr.value, ast.Name)
+            and expr.value.id == "self")
+
+
+def _creates_lock(cls: ast.ClassDef) -> bool:
+    for fn in cls.body:
+        if isinstance(fn, ast.FunctionDef) and fn.name == "__init__":
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) and any(
+                        _is_self_lock(t) for t in node.targets):
+                    return True
+    return False
+
+
+def _mutated_attr(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """('self', 'fill', ...) when ``node`` stores into a self attribute
+    (plain, augmented, annotated, or through a subscript)."""
+    if isinstance(node, ast.Assign):
+        for t in node.targets:
+            c = attr_chain(t)
+            if c and c[0] == "self" and len(c) >= 2:
+                return c
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        c = attr_chain(node.target)
+        if c and c[0] == "self" and len(c) >= 2:
+            return c
+    return None
+
+
+class _ClassChecker:
+    """One lock-owning class: a single recursive walk records every
+    self-attribute mutation with its lexical lock state, and checks
+    call discipline inside lock-held regions."""
+
+    def __init__(self, src: FileSource, cls: ast.ClassDef):
+        self.src = src
+        self.cls = cls
+        self.findings: List[Finding] = []
+        # (node, ('self', attr), locked, enclosing function name)
+        self.mutations: List[
+            Tuple[ast.AST, Tuple[str, str], bool, str]] = []
+
+    def run(self) -> List[Finding]:
+        for fn in self.cls.body:
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._walk(fn.body, _docstring_lock_held(fn), fn.name)
+        guarded: Set[Tuple[str, str]] = {
+            attr for (_, attr, locked, fn_name) in self.mutations
+            if locked and fn_name != "__init__"}
+        for node, attr, locked, fn_name in self.mutations:
+            if fn_name == "__init__" or locked:
+                continue
+            if attr in guarded:
+                self.findings.append(Finding(
+                    self.src.path, node.lineno, "lock-mutation",
+                    f"self.{attr[1]} is lock-guarded (mutated under "
+                    f"self._lock elsewhere) but mutated here without "
+                    f"the lock (in {fn_name})"))
+        return self.findings
+
+    def _walk(self, body: List[ast.stmt], locked: bool,
+              fn_name: str) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._walk(node.body, _docstring_lock_held(node),
+                           node.name)
+            elif isinstance(node, ast.With):
+                inner = locked or any(_is_self_lock(i.context_expr)
+                                      for i in node.items)
+                for item in node.items:
+                    self._check_exprs(item.context_expr, locked, fn_name)
+                self._walk(node.body, inner, fn_name)
+            elif isinstance(node, (ast.If, ast.While)):
+                self._check_exprs(node.test, locked, fn_name)
+                self._walk(node.body, locked, fn_name)
+                self._walk(node.orelse, locked, fn_name)
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                self._check_exprs(node.iter, locked, fn_name)
+                self._walk(node.body, locked, fn_name)
+                self._walk(node.orelse, locked, fn_name)
+            elif isinstance(node, ast.Try):
+                self._walk(node.body, locked, fn_name)
+                for h in node.handlers:
+                    self._walk(h.body, locked, fn_name)
+                self._walk(node.orelse, locked, fn_name)
+                self._walk(node.finalbody, locked, fn_name)
+            else:
+                attr = _mutated_attr(node)
+                if attr is not None:
+                    self.mutations.append(
+                        (node, attr[:2], locked, fn_name))
+                    self._check_snapshot_store(node, attr)
+                self._check_exprs(node, locked, fn_name)
+
+    def _check_exprs(self, root: ast.AST, locked: bool,
+                     fn_name: str) -> None:
+        if not locked:
+            return
+        for node in ast.walk(root):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func) or ""
+            root_name = name.split(".", 1)[0]
+            leaf = name.rsplit(".", 1)[-1]
+            if root_name in _DEVICE_ROOTS or leaf == "block_until_ready":
+                self.findings.append(Finding(
+                    self.src.path, node.lineno, "lock-device-call",
+                    f"{name}() under self._lock (in {fn_name})"))
+            elif name in _BLOCKING_CALLS or leaf in _BLOCKING_LEAVES:
+                self.findings.append(Finding(
+                    self.src.path, node.lineno, "lock-blocking-io",
+                    f"{name}() under self._lock (in {fn_name})"))
+
+    def _check_snapshot_store(self, stmt: ast.AST,
+                              attr: Tuple[str, ...]) -> None:
+        if attr[1] != "snapshot":
+            return
+        if len(attr) > 2:
+            self.findings.append(Finding(
+                self.src.path, stmt.lineno, "snapshot-publish",
+                f"in-place mutation of self.snapshot.{attr[2]} — "
+                f"snapshots are immutable; publish a fresh one"))
+            return
+        targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                   else [stmt.target])
+        for t in targets:
+            if isinstance(t, ast.Subscript):
+                self.findings.append(Finding(
+                    self.src.path, stmt.lineno, "snapshot-publish",
+                    "subscript store into self.snapshot — snapshots "
+                    "are immutable; publish a fresh one"))
+
+
+def _check_rebind(src: FileSource) -> List[Finding]:
+    """snapshot-rebind, module-wide: every function (reader code lives
+    in classes that do NOT own the lock, e.g. IVFIndex.search_batch)
+    may read ``.snapshot`` at most once. Stores don't count — and the
+    walk does not descend into nested function definitions (they run
+    on their own schedule)."""
+    findings: List[Finding] = []
+
+    def loads_of(fn) -> List[ast.Attribute]:
+        out = []
+        stack = list(ast.iter_child_nodes(fn))
+        while stack:
+            n = stack.pop()
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(n, ast.Attribute) and n.attr == "snapshot" \
+                    and isinstance(n.ctx, ast.Load):
+                out.append(n)
+            stack.extend(ast.iter_child_nodes(n))
+        return sorted(out, key=lambda n: (n.lineno, n.col_offset))
+
+    for node in ast.walk(src.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for extra in loads_of(node)[1:]:
+                findings.append(Finding(
+                    src.path, extra.lineno, "snapshot-rebind",
+                    f".snapshot read more than once in {node.name}() — "
+                    f"bind it once and read fields off the local"))
+    return findings
+
+
+def check_file(src: FileSource) -> List[Finding]:
+    if src.tree is None:
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.ClassDef) and _creates_lock(node):
+            findings.extend(_ClassChecker(src, node).run())
+    findings.extend(_check_rebind(src))
+    return findings

@@ -1,0 +1,209 @@
+"""Pass 3: retrace detector.
+
+The serving path promises a *closed* jit cache: ``BatchPolicy`` pads
+every dispatch to a declared static shape, ``AnnEngine.warmup``
+pre-compiles each (shape, tier, backend) program, and steady-state
+traffic must never trace again.  This pass makes that promise a CI
+gate:
+
+1. ``jax.clear_caches()`` — every jitted function starts at 0 entries.
+2. Run the canonical sweep (registry fast index build + engine warmup
+   over ``(None, "balanced")`` tiers + real-query ``search_batch``
+   dispatches at every declared batch shape) and snapshot each
+   module-level jitted function's ``_cache_size()``.
+3. Run the IDENTICAL sweep a second time.  Any growth is a retrace not
+   explained by the declared static keys -> ``retrace-steady-state``.
+4. Exact-compare the first-pass counts against the committed baseline
+   ``analysis/retrace_baseline.json`` -> ``retrace-baseline`` on any
+   drift (a new shape key someone forgot to declare, a lost cache hit,
+   a stale baseline entry).  ``--bless`` rewrites the baseline.
+
+The baseline records the jax version and backend it was blessed on;
+on a different version/backend the exact compare degrades to the
+steady-state check only (trace counts are an implementation detail of
+one jax version — steady-state closure is not).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.analysis.rules import Finding
+
+# src/repro/analysis/retrace.py -> repo root is parents[3]
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
+BASELINE_PATH = REPO_ROOT / "analysis" / "retrace_baseline.json"
+_BASELINE_REL = "analysis/retrace_baseline.json"
+
+# Modules whose module-level jitted functions the sweep exercises.
+# saq_attend is included so a future sweep extension is a baseline
+# change, not a detector change (its counts are simply 0 today).
+SWEEP_MODULES = (
+    "repro.ivf.index",
+    "repro.kernels.ivf_scan",
+    "repro.kernels.saq_attend",
+    "repro.kernels.caq_encode",
+    "repro.kernels.caq_adjust",
+    "repro.kernels.fwht",
+    "repro.core.caq",
+    "repro.core.kmeans",
+)
+
+SWEEP_TIERS: Tuple[Optional[str], ...] = (None, "balanced")
+SWEEP_SHAPES: Tuple[int, ...] = (1, 2, 4)
+
+
+def discover_jitted(modules: Sequence[str] = SWEEP_MODULES
+                    ) -> Dict[str, Any]:
+    """Module-level jitted functions (anything exposing
+    ``_cache_size``), as ``{"module.attr": fn}``.  Re-exports are
+    attributed to the first module in the list that names them."""
+    import importlib
+
+    out: Dict[str, Any] = {}
+    seen: set = set()
+    for mod_name in modules:
+        mod = importlib.import_module(mod_name)
+        for attr in sorted(vars(mod)):
+            obj = vars(mod)[attr]
+            if callable(getattr(obj, "_cache_size", None)) \
+                    and id(obj) not in seen:
+                seen.add(id(obj))
+                out[f"{mod_name}.{attr}"] = obj
+    return out
+
+
+def snapshot_counts(jitted: Dict[str, Any]) -> Dict[str, int]:
+    return {name: int(fn._cache_size()) for name, fn in jitted.items()}
+
+
+def build_engine():
+    """The canonical serving engine over the registry's fast index:
+    small declared shapes, cluster-major crossover inside them, no
+    dispatcher thread (the sweep calls search_batch synchronously)."""
+    from repro.serve.ann_engine import AnnEngine, BatchPolicy
+    from repro.tune.registry import _index
+
+    policy = BatchPolicy(batch_shapes=SWEEP_SHAPES, cluster_major_from=2,
+                         max_wait_us=0)
+    return AnnEngine(_index(fast=True), policy)
+
+
+def run_sweep(engine, *, k: int = 10, nprobe: int = 8,
+              tiers: Sequence[Optional[str]] = SWEEP_TIERS,
+              shapes: Optional[Sequence[int]] = None) -> None:
+    """warmup + one real-query dispatch per (declared shape, tier),
+    each at the exact padded shape and backend the policy would pick.
+    ``shapes`` overrides the dispatch shapes (tests use an undeclared
+    shape to prove the detector sees the extra trace)."""
+    from repro.tune.registry import _bundle
+
+    engine.warmup(k=k, nprobe=nprobe, tiers=tuple(tiers))
+    queries = np.asarray(_bundle(fast=True)["queries"], np.float32)
+    for tier in tiers:
+        spec = engine.policy.resolve_tier(tier)
+        for s in (engine.policy.batch_shapes if shapes is None
+                  else shapes):
+            q = queries[np.arange(s) % queries.shape[0]]
+            ids, _ = engine.index.search_batch(
+                q, k=k, nprobe=nprobe,
+                backend=engine._scan_backend(s), refine=spec)
+            jax.block_until_ready(ids)
+
+
+def load_baseline(path: pathlib.Path = BASELINE_PATH
+                  ) -> Optional[Dict[str, Any]]:
+    if not path.exists():
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def write_baseline(counts: Dict[str, int],
+                   path: pathlib.Path = BASELINE_PATH) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    doc = {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "sweep": {"tiers": [t if t is not None else "exact:untier"
+                            for t in SWEEP_TIERS],
+                  "shapes": list(SWEEP_SHAPES)},
+        "counts": counts,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def compare_counts(counts: Dict[str, int], baseline: Dict[str, Any],
+                   where: str = _BASELINE_REL) -> List[Finding]:
+    """Exact compare vs a blessed baseline (pure; testable)."""
+    findings: List[Finding] = []
+    base = baseline.get("counts", {})
+    for name in sorted(set(base) | set(counts)):
+        got, want = counts.get(name), base.get(name)
+        if got == want:
+            continue
+        if want is None:
+            msg = (f"{name}: {got} cache entries but the function is "
+                   f"not in the blessed baseline — re-bless with "
+                   f"`python -m repro.analysis --retrace --bless`")
+        elif got is None:
+            msg = (f"{name}: in the blessed baseline ({want} entries) "
+                   f"but no longer discovered — stale baseline, "
+                   f"re-bless")
+        else:
+            msg = (f"{name}: {got} cache entries after the canonical "
+                   f"sweep, baseline says {want} — an undeclared "
+                   f"dynamic shape (or a lost cache hit); re-bless "
+                   f"only if the change is intended")
+        findings.append(Finding(where, 1, "retrace-baseline", msg))
+    return findings
+
+
+def check_retrace(baseline_path: pathlib.Path = BASELINE_PATH,
+                  bless: bool = False
+                  ) -> Tuple[List[Finding], Dict[str, int]]:
+    """Run the full detector.  Returns (findings, first-pass counts)."""
+    findings: List[Finding] = []
+    jitted = discover_jitted()
+    jax.clear_caches()
+
+    engine = build_engine()
+    run_sweep(engine)
+    first = snapshot_counts(jitted)
+    run_sweep(engine)
+    second = snapshot_counts(jitted)
+
+    for name in sorted(first):
+        if second[name] != first[name]:
+            findings.append(Finding(
+                _BASELINE_REL, 1, "retrace-steady-state",
+                f"{name}: the identical second sweep grew the jit "
+                f"cache {first[name]} -> {second[name]} — a retrace "
+                f"not explained by the declared batch_shapes/tier/"
+                f"backend keys"))
+
+    if bless:
+        write_baseline(first, baseline_path)
+        return findings, first
+
+    baseline = load_baseline(baseline_path)
+    if baseline is None:
+        findings.append(Finding(
+            _BASELINE_REL, 1, "retrace-baseline",
+            "no committed baseline — generate one with "
+            "`python -m repro.analysis --retrace --bless` and commit "
+            "analysis/retrace_baseline.json"))
+    elif (baseline.get("jax_version") != jax.__version__
+          or baseline.get("backend") != jax.default_backend()):
+        # Counts are only comparable on the blessed version/backend;
+        # the steady-state check above still gates.
+        pass
+    else:
+        findings.extend(compare_counts(first, baseline))
+    return findings, first

@@ -1,0 +1,265 @@
+"""Finding/suppression machinery shared by every analysis pass.
+
+A finding is (path, line, rule, message); severity and the remediation
+hint come from the central rule catalog below. Suppressions are inline
+
+    # saq-lint: disable=<rule>[,<rule>...] (<reason>)
+
+on the offending line or on the line directly above it (its own comment
+line). The reason is REQUIRED — a suppression without one is itself a
+finding (``bad-suppression``), and a suppression that never matched a
+finding is one too (``unused-suppression``): allowlisting is always
+visible and always justified, never silent.
+
+The linter is purely AST/token based — no repo module is ever imported
+by the invariant or lock passes (the contract and retrace passes *do*
+execute code; they say so).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Dict, List, Optional, Set, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    severity: str            # "error" | "warning"
+    summary: str
+    hint: str
+
+
+RULES: Dict[str, Rule] = {r.id: r for r in [
+    Rule("broad-except", "error",
+         "bare/broad `except Exception` without re-raise or counted "
+         "telemetry",
+         "narrow the exception type, re-raise (`raise`/`raise X from e`), "
+         "count the failure into a stats/telemetry counter, or suppress "
+         "with a reason"),
+    Rule("float-eq-gate", "error",
+         "float ==/allclose inside a bit-identity gate",
+         "compare integer bit patterns: `a.view(np.uint32)` / "
+         "`.view(np.uint64)` then `np.array_equal` "
+         "(see repro.tune.autotune.bit_identical)"),
+    Rule("unseeded-random", "error",
+         "np.random.* global-state RNG or unseeded default_rng()",
+         "use an explicit seeded generator: "
+         "`np.random.default_rng(seed)`"),
+    Rule("mutable-default", "error",
+         "mutable default argument",
+         "default to None and construct inside the function"),
+    Rule("wallclock-timing", "error",
+         "time.time() in a measured section",
+         "use time.perf_counter() (monotonic, higher resolution); "
+         "time.time() is for wall-clock stamps only"),
+    Rule("lock-device-call", "error",
+         "jnp/jax device work inside a LiveIndex lock-held region",
+         "move device work outside the lock; the lock should cover "
+         "host-buffer bookkeeping and the snapshot swap only"),
+    Rule("lock-blocking-io", "error",
+         "blocking I/O inside a lock-held region",
+         "move file/socket/sleep work outside the lock (see "
+         "LiveIndex._checkpoint for the discipline)"),
+    Rule("lock-mutation", "error",
+         "lock-guarded attribute mutated outside the lock",
+         "take `with self._lock:` around the mutation, or move it into "
+         "a function documented (docstring) as `lock held`"),
+    Rule("snapshot-publish", "error",
+         "snapshot mutated in place instead of published by a single "
+         "assignment",
+         "build a fresh immutable snapshot object and publish it with "
+         "one `self.snapshot = ...` assignment"),
+    Rule("snapshot-rebind", "error",
+         "`.snapshot` read more than once in one function",
+         "bind the snapshot reference once per dispatch "
+         "(`snap = self.live.snapshot`) and read fields off `snap` — "
+         "repeated reads can observe different snapshots (torn pairs)"),
+    Rule("bad-suppression", "error",
+         "saq-lint suppression without a (reason)",
+         "write `# saq-lint: disable=<rule> (<why this is safe>)`"),
+    Rule("unused-suppression", "error",
+         "saq-lint suppression that matched no finding",
+         "delete the stale suppression (the violation it excused is "
+         "gone)"),
+    Rule("parse-error", "error",
+         "file does not parse",
+         "fix the syntax error"),
+    # contract / retrace passes (not AST rules, same finding pipeline)
+    Rule("vmem-budget", "error",
+         "per-grid-step VMEM residency exceeds the budget",
+         "shrink n_tile/s_block (or raise --vmem-budget-mib if the "
+         "target core really has more VMEM)"),
+    Rule("tile-coverage", "error",
+         "grid x block tiling does not cover the operand exactly",
+         "pad rows to a tile multiple and slice the pad off after the "
+         "call (the repo's masked-tail convention)"),
+    Rule("contract-missing", "error",
+         "registry operator has no kernel contract",
+         "attach one with @register_contract(<operator>) in "
+         "repro.tune.registry"),
+    Rule("retrace-steady-state", "error",
+         "re-running the identical dispatch sweep compiled new programs",
+         "some dispatch key is dynamic (unpadded shape, non-static arg); "
+         "pad through BatchPolicy.batch_shapes or mark the arg in "
+         "static_argnames"),
+    Rule("retrace-baseline", "error",
+         "compile counts diverge from analysis/retrace_baseline.json",
+         "an undeclared recompile hazard (or a removed program). If the "
+         "change is intended, re-bless: "
+         "PYTHONPATH=src python -m repro.analysis --retrace --bless"),
+]}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    @property
+    def severity(self) -> str:
+        return RULES[self.rule].severity
+
+    def format(self, fix_hints: bool = False) -> str:
+        s = f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+        if fix_hints:
+            s += f"\n    hint: {RULES[self.rule].hint}"
+        return s
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+_SUPPRESS_RE = re.compile(
+    r"saq-lint:\s*disable=([a-zA-Z0-9_,\s-]+?)\s*(\(([^)]*)\))?\s*$")
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int                 # line the suppression EXCUSES
+    rules: Tuple[str, ...]
+    reason: str
+    comment_line: int         # line the comment physically sits on
+    used: bool = False
+
+
+class FileSource:
+    """One parsed source file: text, AST, and its suppression table."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path
+        self.text = text
+        self.lines = text.splitlines()
+        self.parse_error: Optional[Finding] = None
+        try:
+            self.tree: Optional[ast.Module] = ast.parse(text)
+        except SyntaxError as e:
+            self.tree = None
+            self.parse_error = Finding(path, e.lineno or 1, "parse-error",
+                                       f"syntax error: {e.msg}")
+        self.suppressions: List[Suppression] = []
+        self.malformed: List[Finding] = []
+        if self.tree is not None:
+            self._collect_suppressions()
+
+    def _collect_suppressions(self) -> None:
+        try:
+            toks = list(tokenize.generate_tokens(
+                io.StringIO(self.text).readline))
+        except tokenize.TokenError:
+            return
+        for tok in toks:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _SUPPRESS_RE.search(tok.string)
+            if m is None:
+                if "saq-lint" in tok.string:
+                    self.malformed.append(Finding(
+                        self.path, tok.start[0], "bad-suppression",
+                        "unparseable saq-lint comment"))
+                continue
+            rules = tuple(r.strip() for r in m.group(1).split(",")
+                          if r.strip())
+            reason = (m.group(3) or "").strip()
+            bad = [r for r in rules if r not in RULES]
+            if bad:
+                self.malformed.append(Finding(
+                    self.path, tok.start[0], "bad-suppression",
+                    f"unknown rule id(s) {bad} in suppression"))
+                continue
+            if not reason:
+                self.malformed.append(Finding(
+                    self.path, tok.start[0], "bad-suppression",
+                    f"suppression of {list(rules)} has no (reason)"))
+                continue
+            comment_line = tok.start[0]
+            # a comment on its own line excuses the line below it; a
+            # trailing comment excuses its own line
+            own_line = self.lines[comment_line - 1].lstrip().startswith("#")
+            target = comment_line + 1 if own_line else comment_line
+            self.suppressions.append(Suppression(
+                line=target, rules=rules, reason=reason,
+                comment_line=comment_line))
+
+    def apply(self, findings: List[Finding]) -> List[Finding]:
+        """Drop findings covered by a suppression (marking it used);
+        afterwards ``unused_findings()`` reports the stale ones."""
+        kept = []
+        for f in findings:
+            hit = None
+            for s in self.suppressions:
+                if s.line == f.line and f.rule in s.rules:
+                    hit = s
+                    break
+            if hit is not None:
+                hit.used = True
+            else:
+                kept.append(f)
+        return kept
+
+    def unused_findings(self) -> List[Finding]:
+        return [Finding(self.path, s.comment_line, "unused-suppression",
+                        f"suppression of {list(s.rules)} matched no "
+                        f"finding")
+                for s in self.suppressions if not s.used]
+
+
+def load_source(path: str) -> FileSource:
+    with open(path, encoding="utf-8") as f:
+        return FileSource(path, f.read())
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'jnp.asarray' for Call.func chains of Names/Attributes (None when
+    the chain roots in something dynamic, e.g. a subscript)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def attr_chain(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """('self', 'snapshot', 'ids') for nested attribute targets; None
+    when the chain roots in a call/subscript."""
+    parts: List[str] = []
+    while True:
+        if isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        elif isinstance(node, ast.Subscript):
+            node = node.value
+        elif isinstance(node, ast.Name):
+            parts.append(node.id)
+            return tuple(reversed(parts))
+        else:
+            return None

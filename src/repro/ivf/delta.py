@@ -175,15 +175,20 @@ class LiveIndex:
         dispatches read ``snapshot`` once and keep that view."""
         idx = self.index
         self._version += 1
+        # The jnp.asarray copies below MUST happen under this lock: the
+        # host buffers they freeze are mutated in place by writers that
+        # hold the same lock, so copying outside it could tear the
+        # snapshot. This is the one sanctioned device-work-under-lock
+        # site; the copies are delta-sized, not index-sized.
         self.snapshot = LiveSnapshot(
             codes=idx.packed.codes, factors=idx.packed.factors,
             o_norm=idx.packed.o_norm_sq_total, ids=idx.ids,
-            live_main=jnp.asarray(self.live_main),
-            d_codes=jnp.asarray(self.d_codes),
-            d_factors=jnp.asarray(self.d_factors),
-            d_o_norm=jnp.asarray(self.d_o_norm),
-            d_ids=jnp.asarray(self.d_ids),
-            live_delta=jnp.asarray(self.live_delta),
+            live_main=jnp.asarray(self.live_main),  # saq-lint: disable=lock-device-call (consistent-snapshot copy, see above)
+            d_codes=jnp.asarray(self.d_codes),  # saq-lint: disable=lock-device-call (consistent-snapshot copy, see above)
+            d_factors=jnp.asarray(self.d_factors),  # saq-lint: disable=lock-device-call (consistent-snapshot copy, see above)
+            d_o_norm=jnp.asarray(self.d_o_norm),  # saq-lint: disable=lock-device-call (consistent-snapshot copy, see above)
+            d_ids=jnp.asarray(self.d_ids),  # saq-lint: disable=lock-device-call (consistent-snapshot copy, see above)
+            live_delta=jnp.asarray(self.live_delta),  # saq-lint: disable=lock-device-call (consistent-snapshot copy, see above)
             empty=(int(self.fill.sum()) == 0 and self.n_tombstones == 0),
             version=self._version)
 
@@ -339,6 +344,8 @@ class LiveIndex:
                 self._replaying = False
 
     def _replay_locked(self, ops: Sequence[_Op]) -> None:
+        """Apply recovered WAL ops in sequence order and republish
+        (lock held; only ``replay_ops`` calls this, inside the lock)."""
         for op in sorted(ops, key=lambda o: o.seq):
             if op.kind == "add":
                 if self.fill[op.cluster] >= self.l_delta:
@@ -455,12 +462,16 @@ class LiveIndex:
                 ids_n[ci, nm:nm + nd] = self.d_ids[ci][d]
                 folded += nd
             import dataclasses as _dc
+            # Folding swaps the index's device slabs while holding the
+            # writer lock — the fold source (main + delta buffers) is
+            # only consistent under it. Same sanctioned exception as
+            # _publish.
             idx.packed = _dc.replace(
-                idx.packed, codes=jnp.asarray(codes_n),
-                factors=jnp.asarray(facs_n),
-                o_norm_sq_total=jnp.asarray(o_n))
-            idx.ids = jnp.asarray(ids_n)
-            idx.counts = jnp.asarray(n_live.copy())
+                idx.packed, codes=jnp.asarray(codes_n),  # saq-lint: disable=lock-device-call (fold swap needs the lock, see above)
+                factors=jnp.asarray(facs_n),  # saq-lint: disable=lock-device-call (fold swap needs the lock, see above)
+                o_norm_sq_total=jnp.asarray(o_n))  # saq-lint: disable=lock-device-call (fold swap needs the lock, see above)
+            idx.ids = jnp.asarray(ids_n)  # saq-lint: disable=lock-device-call (fold swap needs the lock, see above)
+            idx.counts = jnp.asarray(n_live.copy())  # saq-lint: disable=lock-device-call (fold swap needs the lock, see above)
             # list-shaped caches are stale after the fold
             idx.__dict__.pop("_staged_consts_cache", None)
             idx.__dict__.pop("_shard_pad_cache", None)
@@ -520,7 +531,8 @@ class LiveIndex:
         self._ckick.set()
         t.join(timeout)
         if not t.is_alive():
-            self._cthread = None
+            with self._lock:
+                self._cthread = None
 
     def _compact_loop(self) -> None:
         trigger = max(1, math.ceil(self._cthreshold * self.l_delta))

@@ -661,3 +661,139 @@ def saq_probe_scan_xla(codes_g: jnp.ndarray, factors_g: jnp.ndarray,
         col_offsets=col_offsets, seg_bits=seg_bits,
         prefix_bits=prefix_bits, bitpacked=bitpacked)        # (G, 1, L)
     return out.reshape(nq, p, l)
+
+
+# ---------------------------------------------------------------------------
+# Block/scratch accounting: the kernel contracts, as data.
+#
+# Each ``*_accounting`` function mirrors its kernel's tiling arithmetic
+# EXACTLY (the same clamp, the same ``-n % tile`` padding, the same
+# NB-pad special case) but builds the per-grid-step VMEM residency
+# report instead of calling pallas — what ``repro.analysis.contracts``
+# checks against the budget and the masked-tail coverage convention.
+# A "resident" block has a constant index_map (or is shared by every
+# tile of a slab), so it occupies VMEM on every grid step.
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"uint32": 4, "int32": 4, "float32": 4, "uint8": 1,
+                "int8": 1, "uint16": 2, "int16": 2, "bool": 1}
+
+
+def _acct_block(name, shape, dtype, resident=False):
+    nbytes = _DTYPE_BYTES[str(dtype)]
+    for dim in shape:
+        nbytes *= int(dim)
+    return {"name": name, "shape": tuple(int(x) for x in shape),
+            "dtype": str(dtype), "bytes": nbytes, "resident": resident}
+
+
+def _acct_report(kernel, grid, blocks, scratch, expanded, rows,
+                 rows_covered, tile_rows):
+    per_step = sum(b["bytes"] for b in blocks + scratch + expanded)
+    return {"kernel": kernel, "grid": tuple(int(g) for g in grid),
+            "blocks": blocks, "scratch": scratch, "expanded": expanded,
+            "rows": int(rows), "rows_covered": int(rows_covered),
+            "tile_rows": int(tile_rows),
+            "vmem_per_step_bytes": int(per_step)}
+
+
+def saq_scan_accounting(n, code_w, n_q, col_offsets, seg_bits, *,
+                        bitpacked=False, n_tile=None,
+                        code_dtype="uint32"):
+    """Contract report for ``saq_scan_pallas`` (flat N-row scan)."""
+    d = int(col_offsets[-1])
+    s = len(seg_bits)
+    n_tile = min(DEFAULT_N_TILE if n_tile is None else int(n_tile),
+                 max(8, n))
+    n_pad = -n % n_tile
+    grid = ((n + n_pad) // n_tile,)
+    blocks = [
+        _acct_block("codes", (n_tile, code_w), code_dtype),
+        _acct_block("factors", (n_tile, 3 * s + 1), "float32"),
+        _acct_block("colscale", (1, d), "float32", resident=True),
+        _acct_block("qmat", (d, s * n_q), "float32", resident=True),
+        _acct_block("qstats", (s + 1, n_q), "float32", resident=True),
+        _acct_block("out", (n_tile, n_q), "float32"),
+    ]
+    if bitpacked:
+        blocks.insert(-1, _acct_block("unpack_tab", (6, d), "uint32",
+                                      resident=True))
+    expanded = ([_acct_block("expanded_codes", (n_tile, d), "float32")]
+                if bitpacked else [])
+    return _acct_report("saq_scan", grid, blocks, [], expanded,
+                        rows=n, rows_covered=grid[0] * n_tile,
+                        tile_rows=n_tile)
+
+
+def cluster_scan_accounting(u, l, nb, code_w, col_offsets, seg_bits, *,
+                            bitpacked=False, n_tile=None,
+                            code_dtype="uint32"):
+    """Contract report for ``saq_cluster_scan_pallas`` (U slabs x NB
+    queries each; the gathered probe scan is the NB=1 reshape)."""
+    d = int(col_offsets[-1])
+    s = len(seg_bits)
+    if nb * s == 1:          # XLA N=1-matvec accumulation-order pin
+        nb = 2
+    t = l if n_tile is None else max(1, min(int(n_tile), l))
+    l_pad = -l % t
+    l_grid = l + l_pad
+    tiles = l_grid // t
+    grid = (u * tiles,)
+    blocks = [
+        _acct_block("codes", (t, code_w), code_dtype),
+        _acct_block("factors", (t, 3 * s + 1), "float32"),
+        _acct_block("colscale", (1, d), "float32", resident=True),
+        _acct_block("qmat", (d, s * nb), "float32", resident=True),
+        _acct_block("qstats", (s + 1, nb), "float32", resident=True),
+        _acct_block("out", (t, nb), "float32"),
+    ]
+    if bitpacked:
+        blocks.insert(-1, _acct_block("unpack_tab", (6, d), "uint32",
+                                      resident=True))
+    expanded = ([_acct_block("expanded_codes", (t, d), "float32")]
+                if bitpacked else [])
+    return _acct_report("cluster_scan", grid, blocks, [], expanded,
+                        rows=u * l, rows_covered=grid[0] * t,
+                        tile_rows=t)
+
+
+def probe_scan_accounting(nq, p, l, code_w, col_offsets, seg_bits, *,
+                          bitpacked=False, n_tile=None,
+                          code_dtype="uint32"):
+    """Contract report for ``saq_probe_scan_pallas``: the NB=1 gathered
+    layout — one slab per (query, probe) pair."""
+    rep = cluster_scan_accounting(
+        nq * p, l, 1, code_w, col_offsets, seg_bits,
+        bitpacked=bitpacked, n_tile=n_tile, code_dtype=code_dtype)
+    rep["kernel"] = "probe_scan"
+    return rep
+
+
+def refine_scan_accounting(r, code_w, col_offsets, seg_bits, *,
+                           bitpacked=False, n_tile=None,
+                           code_dtype="uint32"):
+    """Contract report for ``saq_refine_scan_pallas`` (candidate-major
+    re-rank: every row carries its own residual query)."""
+    d = int(col_offsets[-1])
+    s = len(seg_bits)
+    n_tile = min(DEFAULT_N_TILE if n_tile is None else int(n_tile),
+                 max(8, r))
+    n_pad = -r % n_tile
+    grid = ((r + n_pad) // n_tile,)
+    blocks = [
+        _acct_block("codes", (n_tile, code_w), code_dtype),
+        _acct_block("queries_res", (n_tile, d), "float32"),
+        _acct_block("factors", (n_tile, 3 * s + 1), "float32"),
+        _acct_block("q_norm", (n_tile, 1), "float32"),
+        _acct_block("colscale", (1, d), "float32", resident=True),
+        _acct_block("onehot", (d, s), "float32", resident=True),
+        _acct_block("out", (n_tile, 1), "float32"),
+    ]
+    if bitpacked:
+        blocks.insert(-1, _acct_block("unpack_tab", (6, d), "uint32",
+                                      resident=True))
+    expanded = ([_acct_block("expanded_codes", (n_tile, d), "float32")]
+                if bitpacked else [])
+    return _acct_report("refine_scan", grid, blocks, [], expanded,
+                        rows=r, rows_covered=grid[0] * n_tile,
+                        tile_rows=n_tile)

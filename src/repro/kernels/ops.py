@@ -404,3 +404,29 @@ def attend_scan(q, k_words, k_vmax, k_rescale, v_words, v_vmax, pos,
 def caq_encode(o: jnp.ndarray, bits: int, rounds: int = 4):
     """Kernel-backed fused CAQ encode; see ref.caq_encode_ref."""
     return caq_encode_pallas(o, bits, rounds, interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# Kernel-contract accounting: one dispatch point over the per-kernel
+# block/scratch reports (repro.analysis.contracts consumes this; the
+# accounting functions live next to the kernels whose tiling they
+# mirror).
+# ---------------------------------------------------------------------------
+
+def block_accounting(kind: str, **dims):
+    """Per-grid-step VMEM residency + row-coverage report for one
+    kernel family. ``kind`` is an operator name from
+    ``repro.tune.registry``; ``dims`` are that accounting function's
+    keyword arguments (see ``ivf_scan.saq_scan_accounting`` etc.)."""
+    from repro.kernels import ivf_scan, saq_attend
+    table = {
+        "saq_scan": ivf_scan.saq_scan_accounting,
+        "probe_scan": ivf_scan.probe_scan_accounting,
+        "cluster_scan": ivf_scan.cluster_scan_accounting,
+        "refine_scan": ivf_scan.refine_scan_accounting,
+        "attend_scan": saq_attend.attend_accounting,
+    }
+    if kind not in table:
+        raise ValueError(f"no block accounting for kernel kind {kind!r};"
+                         f" known: {sorted(table)}")
+    return table[kind](**dims)

@@ -186,3 +186,46 @@ def saq_attend_xla(q: jnp.ndarray, k_words: jnp.ndarray,
     out = out + jnp.sum(p * (0.5 * delta_v - vvm_t)[:, :, None, :],
                         axis=-1)[..., None]
     return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def attend_accounting(b, s, h, hkv, hd, d_stored, *, packed=True,
+                      s_block=None):
+    """Contract report for ``saq_attend_pallas`` — same shape as the
+    IVF scan accountings (see ``ivf_scan.saq_scan_accounting``): the
+    per-grid-step VMEM residency and row coverage of the fused decode
+    attend, mirroring the kernel's tiling arithmetic without calling
+    pallas. ``s % s_block == 0`` is the kernel's own assertion; a
+    non-dividing block is a coverage violation, not a pad."""
+    from repro.kernels.ivf_scan import _acct_block, _acct_report
+
+    g = h // hkv
+    s_block = min(DEFAULT_S_BLOCK if s_block is None else int(s_block), s)
+    n_sblocks = max(1, s // s_block)
+    grid = (b, n_sblocks)
+    code_dtype = "uint32" if packed else "uint8"
+    blocks = [
+        _acct_block("pos", (1,), "int32", resident=True),
+        _acct_block("q", (1, h, hd), "float32"),
+        _acct_block("k_codes", (1, s_block, hkv, d_stored), code_dtype),
+        _acct_block("k_factors", (1, s_block, hkv, 2), "float32"),
+        _acct_block("v_codes", (1, s_block, hkv, d_stored), code_dtype),
+        _acct_block("v_factors", (1, s_block, hkv, 1), "float32"),
+        _acct_block("out", (1, h, hd), "float32"),
+    ]
+    if packed:
+        blocks.insert(-1, _acct_block("unpack_tab", (6, hd), "uint32",
+                                      resident=True))
+    scratch = [
+        _acct_block("m_scratch", (hkv, g), "float32"),
+        _acct_block("l_scratch", (hkv, g), "float32"),
+        _acct_block("acc_scratch", (hkv, g, hd), "float32"),
+    ]
+    expanded = ([_acct_block("expanded_k", (s_block, hkv, hd), "float32"),
+                 _acct_block("expanded_v", (s_block, hkv, hd), "float32")]
+                if packed else [])
+    rep = _acct_report("attend_scan", grid, blocks, scratch, expanded,
+                       rows=b * s,
+                       rows_covered=b * n_sblocks * s_block,
+                       tile_rows=s_block)
+    rep["divides"] = (s % s_block == 0)
+    return rep

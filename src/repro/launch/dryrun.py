@@ -67,7 +67,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     b_spec = batch_specs(cfg, axes, shape.kind, shape.global_batch)
     b_sh = {k: named(b_spec[k], mesh) for k in specs}
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if shape.kind == "train":
         opt = AdamWConfig(quant_bits=opt_bits)
         opt_struct, opt_spec = abstract_opt_state(params_struct, opt,
@@ -115,11 +115,11 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                          donate_argnums=(3,))
         lowered = jitted.lower(*args)
         mf = rl.model_flops_decode(cfg, shape.global_batch)
-    t_lower = time.time() - t0
+    t_lower = time.perf_counter() - t0
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     roof = rl.roofline(compiled)

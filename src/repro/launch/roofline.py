@@ -125,9 +125,11 @@ def roofline(compiled, model_flops: Optional[float] = None) -> Dict:
 
 
 def compiled_num_devices(compiled) -> int:
+    # best effort: sharding introspection is version-dependent — the
+    # path may be missing, empty, or unsharded depending on jax version
     try:
-        return compiled.input_shardings[0][0].mesh.size  # best effort
-    except Exception:
+        return compiled.input_shardings[0][0].mesh.size
+    except (AttributeError, IndexError, KeyError, TypeError):
         return 1
 
 

@@ -47,10 +47,10 @@ def main(argv=None) -> int:
     serve = ServeConfig(max_seq=args.prompt_len + args.tokens + 1,
                         kv_bits=args.kv_bits,
                         temperature=args.temperature)
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = generate(params, cfg, serve, prompt, args.tokens,
                    img_embeds=img, seed=args.seed)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"arch={cfg.arch_id} kv_bits={args.kv_bits} "
           f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.tokens / dt:.1f} tok/s)")

@@ -78,9 +78,9 @@ def main(argv=None) -> int:
                      ckpt=CheckpointManager(args.ckpt_dir, keep=3),
                      ckpt_every=args.ckpt_every,
                      straggler=StragglerMonitor())
-    t0 = time.time()
+    t0 = time.perf_counter()
     (params, opt_state), hist = sup.run((params, opt_state), args.steps)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     toks = args.steps * args.batch * args.seq
     print(f"done: {args.steps} steps in {dt:.1f}s "
           f"({toks/dt:.0f} tok/s); restarts={hist['restarts']}; "

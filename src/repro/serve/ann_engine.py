@@ -665,6 +665,9 @@ class AnnEngine:
             survivors = shape * spec.k_refine(k, capacity)
 
         def _count_tier_rows():
+            """Fold this dispatch into the per-tier counters
+            (lock held: both call sites sit inside
+            ``with self._lock:``)."""
             self._stats.tier_dispatched_rows[tname] = \
                 self._stats.tier_dispatched_rows.get(tname, 0) + shape
             self._stats.tier_refine_survivors[tname] = \

@@ -66,6 +66,10 @@ class Operator:
     default_config: Dict[str, Any]
     workloads: Callable[[bool], List[Workload]]   # (fast) -> points
     metrics: Dict[str, Callable] = field(default_factory=dict)
+    # kernel contract: fn(workload, config) -> list of per-grid-step
+    # VMEM/coverage reports (ops.block_accounting shape); attached via
+    # @register_contract and checked by repro.analysis.contracts
+    contract: Any = None
 
     def configs(self, fast: bool = False) -> Iterator[Dict[str, Any]]:
         """Every candidate config (the default is yielded first so the
@@ -105,6 +109,20 @@ def register_metric(operator: str, metric: str):
     a registered operator (tritonbench's ``register_metric`` shape)."""
     def deco(fn):
         OPERATORS[operator].metrics[metric] = fn
+        return fn
+    return deco
+
+
+def register_contract(operator: str):
+    """Decorator attaching ``fn(workload, config) -> [report, ...]`` to
+    a registered operator: the abstract evaluation of its Pallas call
+    (per-grid-step VMEM residency + grid x block row coverage) that
+    ``python -m repro.analysis`` checks against the VMEM budget and
+    the masked-tail convention. Composite operators (the two-phase
+    search, the multistage scan) return one report per constituent
+    kernel."""
+    def deco(fn):
+        OPERATORS[operator].contract = fn
         return fn
     return deco
 
@@ -493,3 +511,120 @@ def _m_attend_bytes(wl, config, result):
     return float(sum(a.size * a.dtype.itemsize
                      for a in (o["k_words"], o["v_words"], o["k_vmax"],
                                o["k_rescale"], o["v_vmax"])))
+
+
+# ---------------------------------------------------------------------------
+# Kernel contracts (repro.analysis.contracts checks these against the
+# VMEM budget + coverage convention on every canonical workload)
+# ---------------------------------------------------------------------------
+
+@register_contract("saq_scan")
+def _c_saq_scan(wl: Workload, config: Mapping[str, Any]):
+    p = wl.operands["packed"]
+    lay = p.layout
+    return [ops.block_accounting(
+        "saq_scan", n=int(p.codes.shape[0]),
+        code_w=int(p.codes.shape[-1]),
+        n_q=int(wl.operands["queries"].shape[0]),
+        col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
+        bitpacked=bool(p.bitpacked), n_tile=config.get("n_tile"),
+        code_dtype=str(p.codes.dtype))]
+
+
+@register_contract("probe_scan")
+def _c_probe_scan(wl: Workload, config: Mapping[str, Any]):
+    o = wl.operands
+    lay = o["layout"]
+    return [ops.block_accounting(
+        "probe_scan", nq=wl.dims["nq"], p=wl.dims["p"], l=wl.dims["l"],
+        code_w=int(o["codes_g"].shape[-1]),
+        col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
+        bitpacked=bool(o["bitpacked"]), n_tile=config.get("n_tile"),
+        code_dtype=str(o["codes_g"].dtype))]
+
+
+@register_contract("cluster_scan")
+def _c_cluster_scan(wl: Workload, config: Mapping[str, Any]):
+    o = wl.operands
+    lay = o["layout"]
+    return [ops.block_accounting(
+        "cluster_scan", u=wl.dims["u"], l=wl.dims["l"],
+        nb=int(o["queries_u"].shape[1]),
+        code_w=int(o["codes_u"].shape[-1]),
+        col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
+        bitpacked=bool(o["bitpacked"]), n_tile=config.get("n_tile"),
+        code_dtype=str(o["codes_u"].dtype))]
+
+
+@register_contract("refine_scan")
+def _c_refine_scan(wl: Workload, config: Mapping[str, Any]):
+    o = wl.operands
+    lay = o["layout"]
+    return [ops.block_accounting(
+        "refine_scan", r=wl.dims["r"],
+        code_w=int(o["codes_r"].shape[-1]),
+        col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
+        bitpacked=bool(o["bitpacked"]), n_tile=config.get("n_tile"),
+        code_dtype=str(o["codes_r"].dtype))]
+
+
+@register_contract("two_phase_search")
+def _c_two_phase(wl: Workload, config: Mapping[str, Any]):
+    """Composite: phase 1 is the gathered probe scan over the probed
+    slabs at the coarse precision; phase 2 re-ranks the statically
+    shaped k_refine survivors through the candidate-major refine
+    kernel. The engine's cluster-major layout flip changes phase 1 to
+    ``cluster_scan`` with NB = the dispatch shape — same body, checked
+    via the cluster_scan contract."""
+    from repro.ivf.refine import RefineSpec
+    idx = wl.operands["index"]
+    lay = idx.packed.layout
+    nq, k = wl.dims["nq"], wl.operands["k"]
+    eff_probe = min(wl.operands["nprobe"], idx.n_clusters)
+    l = int(idx.ids.shape[1])
+    code_w = int(idx.packed.codes.shape[-1])
+    spec = RefineSpec(
+        coarse_prefix=config.get("coarse_prefix", 1),
+        oversample=config.get("oversample", 8.0),
+        coarse_dim_frac=config.get("coarse_dim_frac", 1.0))
+    k_ref = spec.k_refine(k, eff_probe * l)
+    phase1 = ops.block_accounting(
+        "probe_scan", nq=nq, p=eff_probe, l=l, code_w=code_w,
+        col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
+        bitpacked=bool(idx.packed.bitpacked),
+        code_dtype=str(idx.packed.codes.dtype))
+    phase1["kernel"] = "two_phase_search/phase1:probe_scan"
+    phase2 = ops.block_accounting(
+        "refine_scan", r=nq * k_ref, code_w=code_w,
+        col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
+        bitpacked=bool(idx.packed.bitpacked),
+        code_dtype=str(idx.packed.codes.dtype))
+    phase2["kernel"] = "two_phase_search/phase2:refine_scan"
+    return [phase1, phase2]
+
+
+@register_contract("multistage_scan")
+def _c_multistage(wl: Workload, config: Mapping[str, Any]):
+    """The §4.3 staged scan visits one cluster list at a time (host
+    loop): its device working set is one L-row slab scanned against a
+    single query — the flat scan's geometry at N = L, NQ = 1."""
+    idx = wl.operands["index"]
+    lay = idx.packed.layout
+    rep = ops.block_accounting(
+        "saq_scan", n=int(idx.ids.shape[1]),
+        code_w=int(idx.packed.codes.shape[-1]), n_q=1,
+        col_offsets=lay.col_offsets, seg_bits=lay.seg_bits,
+        bitpacked=bool(idx.packed.bitpacked),
+        code_dtype=str(idx.packed.codes.dtype))
+    rep["kernel"] = "multistage_scan/per-cluster:saq_scan"
+    return [rep]
+
+
+@register_contract("attend_scan")
+def _c_attend(wl: Workload, config: Mapping[str, Any]):
+    o = wl.operands
+    d = wl.dims
+    return [ops.block_accounting(
+        "attend_scan", b=d["b"], s=d["s"], h=d["h"], hkv=d["hkv"],
+        hd=d["hd"], d_stored=int(o["k_words"].shape[-1]), packed=True,
+        s_block=config.get("s_block"))]

@@ -1,0 +1,322 @@
+"""The static-analysis package (``python -m repro.analysis``): each
+lint rule fires on a minimal bad fixture and stays quiet on the good
+twin, suppressions excuse exactly one line and must carry a reason,
+unused suppressions are themselves findings, the kernel-contract
+checker rejects oversized tiles / short coverage on real accounting
+reports, the lock checker catches device work and unlocked mutations,
+and the retrace detector proves steady-state closure of the serving
+jit cache and sees the extra trace from an undeclared dispatch shape.
+
+The tree-wide invariant — the analyzer exits clean on this repo — is
+asserted at the end over ``src/repro`` itself.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import contracts, invariant_lint, lockcheck
+from repro.analysis.rules import RULES, FileSource, Finding
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def lint(text: str):
+    src = FileSource("fixture.py", text)
+    raw = invariant_lint.lint_file(src) + lockcheck.check_file(src)
+    kept = src.apply(raw)
+    return kept + src.malformed + src.unused_findings()
+
+
+def rules_of(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# invariant lint rules: bad fixture fires, good twin is quiet
+# ---------------------------------------------------------------------------
+
+def test_broad_except_fires_and_exemptions_hold():
+    bad = (
+        "def f():\n"
+        "    try:\n"
+        "        g()\n"
+        "    except Exception:\n"
+        "        return None\n")
+    assert rules_of(lint(bad)) == ["broad-except"]
+    # re-raise is compliant
+    ok_raise = bad.replace("return None", "raise")
+    assert lint(ok_raise) == []
+    # counted telemetry is compliant
+    ok_count = (
+        "def f(self):\n"
+        "    try:\n"
+        "        g()\n"
+        "    except Exception:\n"
+        "        self.stats.failed += 1\n")
+    assert lint(ok_count) == []
+    # narrow handlers are always fine
+    ok_narrow = bad.replace("except Exception", "except ValueError")
+    assert lint(ok_narrow) == []
+
+
+def test_float_eq_gate_scoped_to_gate_functions():
+    bad = (
+        "def bit_identical(a, b):\n"
+        "    return bool((a == b).all())\n")
+    assert rules_of(lint(bad)) == ["float-eq-gate"]
+    bad_allclose = (
+        "def results_bit_equal(a, b):\n"
+        "    return np.allclose(a, b)\n")
+    assert rules_of(lint(bad_allclose)) == ["float-eq-gate"]
+    # the repo idiom: integer bit-pattern views are the fix
+    ok = (
+        "def bit_identical(a, b):\n"
+        "    return np.array_equal(a.view(np.uint32), b.view(np.uint32))\n")
+    assert lint(ok) == []
+    # metadata compares are structural, not numeric
+    ok_meta = (
+        "def bit_identical(a, b):\n"
+        "    if a.shape != b.shape or a.dtype.kind == 'f':\n"
+        "        return False\n"
+        "    return len(a) == len(b)\n")
+    assert lint(ok_meta) == []
+    # same comparisons outside a gate-named function: out of scope
+    ok_elsewhere = (
+        "def distances(a, b):\n"
+        "    return a == b\n")
+    assert lint(ok_elsewhere) == []
+
+
+def test_unseeded_random_rules():
+    assert rules_of(lint("x = np.random.normal(0, 1, 8)\n")) == \
+        ["unseeded-random"]
+    assert rules_of(lint("rng = np.random.default_rng()\n")) == \
+        ["unseeded-random"]
+    assert lint("rng = np.random.default_rng(0)\n") == []
+    # keyed / generator APIs are never global state
+    assert lint("x = jax.random.normal(key, (8,))\n") == []
+    assert lint("x = rng.normal(0, 1, 8)\n") == []
+
+
+def test_mutable_default_and_wallclock():
+    assert rules_of(lint("def f(x, acc=[]):\n    return acc\n")) == \
+        ["mutable-default"]
+    assert lint("def f(x, acc=None):\n    return acc or []\n") == []
+    assert rules_of(lint("t0 = time.time()\n")) == ["wallclock-timing"]
+    assert lint("t0 = time.perf_counter()\n") == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_suppression_excuses_one_line_and_is_marked_used():
+    text = ("t0 = time.time()  "
+            "# saq-lint: disable=wallclock-timing (wall-clock stamp)\n"
+            "t1 = time.time()\n")
+    out = lint(text)
+    assert rules_of(out) == ["wallclock-timing"]
+    assert out[0].line == 2
+
+
+def test_own_line_suppression_excuses_next_line():
+    text = ("# saq-lint: disable=wallclock-timing (wall-clock stamp)\n"
+            "t0 = time.time()\n")
+    assert lint(text) == []
+
+
+def test_suppression_without_reason_is_a_finding():
+    text = ("t0 = time.time()  # saq-lint: disable=wallclock-timing\n")
+    assert sorted(rules_of(lint(text))) == \
+        ["bad-suppression", "wallclock-timing"]
+
+
+def test_unknown_rule_suppression_is_a_finding():
+    text = "x = 1  # saq-lint: disable=not-a-rule (whatever)\n"
+    assert "bad-suppression" in rules_of(lint(text))
+
+
+def test_unused_suppression_fails():
+    text = ("# saq-lint: disable=wallclock-timing (nothing here)\n"
+            "x = 1\n")
+    assert rules_of(lint(text)) == ["unused-suppression"]
+
+
+# ---------------------------------------------------------------------------
+# lock discipline
+# ---------------------------------------------------------------------------
+
+_LOCK_CLASS = (
+    "import threading\n"
+    "class Live:\n"
+    "    def __init__(self):\n"
+    "        self._lock = threading.RLock()\n"
+    "        self.fill = 0\n"
+    "%s")
+
+
+def test_lock_device_call_fires():
+    text = _LOCK_CLASS % (
+        "    def publish(self):\n"
+        "        with self._lock:\n"
+        "            x = jnp.asarray(self.fill)\n")
+    assert rules_of(lint(text)) == ["lock-device-call"]
+
+
+def test_lock_blocking_io_fires_and_docstring_convention():
+    text = _LOCK_CLASS % (
+        "    def flush(self):\n"
+        "        '''Writes the WAL (lock held).'''\n"
+        "        with open('x') as f:\n"
+        "            pass\n")
+    assert rules_of(lint(text)) == ["lock-blocking-io"]
+
+
+def test_lock_mutation_fires_outside_lock_only():
+    text = _LOCK_CLASS % (
+        "    def add(self):\n"
+        "        with self._lock:\n"
+        "            self.fill += 1\n"
+        "    def reset(self):\n"
+        "        self.fill = 0\n")
+    out = lint(text)
+    assert rules_of(out) == ["lock-mutation"]
+    assert out[0].line == 10   # the unlocked store in reset()
+    # __init__ stores and other locks are exempt
+    text_ok = _LOCK_CLASS % (
+        "    def add(self):\n"
+        "        with self._lock:\n"
+        "            self.fill += 1\n")
+    assert lint(text_ok) == []
+
+
+def test_snapshot_publish_and_rebind():
+    text = _LOCK_CLASS % (
+        "    def bad_publish(self):\n"
+        "        with self._lock:\n"
+        "            self.snapshot.ids = 3\n")
+    assert "snapshot-publish" in rules_of(lint(text))
+    rebind = (
+        "def search(live):\n"
+        "    a = live.snapshot.codes\n"
+        "    b = live.snapshot.ids\n")
+    assert rules_of(lint(rebind)) == ["snapshot-rebind"]
+    bound_once = (
+        "def search(live):\n"
+        "    snap = live.snapshot\n"
+        "    return snap.codes, snap.ids\n")
+    assert lint(bound_once) == []
+
+
+# ---------------------------------------------------------------------------
+# kernel contracts
+# ---------------------------------------------------------------------------
+
+def test_contract_accounting_matches_budget_checks():
+    from repro.kernels.ops import block_accounting
+    rep = block_accounting("saq_scan", n=1000, code_w=16, n_q=8,
+                           col_offsets=(0, 64), seg_bits=(4, 4),
+                           bitpacked=True, n_tile=128)
+    # masked-tail convention: pad under one tile, full coverage
+    assert rep["rows_covered"] >= rep["rows"] == 1000
+    assert rep["rows_covered"] - rep["rows"] < rep["tile_rows"]
+    assert contracts.check_report(rep, vmem_budget=16 * 2**20) == []
+    # a tiny budget rejects the same report
+    tiny = contracts.check_report(rep, vmem_budget=1024)
+    assert rules_of(tiny) == ["vmem-budget"]
+
+
+def test_contract_oversized_tile_blows_budget():
+    from repro.kernels.ops import block_accounting
+    rep = block_accounting("saq_scan", n=1 << 20, code_w=512, n_q=64,
+                           col_offsets=(0,), seg_bits=(8,),
+                           bitpacked=True, n_tile=1 << 20)
+    out = contracts.check_report(rep, vmem_budget=16 * 2**20)
+    assert "vmem-budget" in rules_of(out)
+
+
+def test_contract_broken_coverage_is_caught():
+    rep = {"kernel": "fake", "grid": (2,), "tile_rows": 64,
+           "rows": 1000, "rows_covered": 128,
+           "vmem_per_step_bytes": 1024}
+    out = contracts.check_report(rep, vmem_budget=16 * 2**20)
+    assert rules_of(out) == ["tile-coverage"]
+
+
+def test_attend_divides_convention():
+    from repro.kernels.ops import block_accounting
+    rep = block_accounting("attend_scan", b=1, s=100, h=4, hkv=2,
+                           hd=64, d_stored=16, s_block=64)
+    assert rep["divides"] is False
+    out = contracts.check_report(rep, vmem_budget=16 * 2**20)
+    assert "tile-coverage" in rules_of(out)
+
+
+def test_every_registry_operator_has_a_contract():
+    from repro.tune.registry import OPERATORS
+    missing = [n for n, op in OPERATORS.items() if op.contract is None]
+    assert missing == []
+
+
+# ---------------------------------------------------------------------------
+# retrace detector
+# ---------------------------------------------------------------------------
+
+def test_retrace_baseline_compare_flags_drift():
+    from repro.analysis import retrace
+    counts = {"m.f": 3, "m.g": 1}
+    base = {"counts": {"m.f": 3, "m.g": 1}}
+    assert retrace.compare_counts(counts, base) == []
+    drift = retrace.compare_counts({"m.f": 4, "m.h": 1}, base)
+    assert rules_of(drift) == ["retrace-baseline"] * 3  # f drift, g gone, h new
+
+
+def test_retrace_steady_state_and_undeclared_shape():
+    jax = pytest.importorskip("jax")
+    from repro.analysis import retrace
+    jitted = retrace.discover_jitted()
+    assert jitted, "no jitted functions discovered"
+    jax.clear_caches()
+    engine = retrace.build_engine()
+    retrace.run_sweep(engine, tiers=(None,))
+    first = retrace.snapshot_counts(jitted)
+    assert sum(first.values()) > 0
+    retrace.run_sweep(engine, tiers=(None,))
+    assert retrace.snapshot_counts(jitted) == first, \
+        "identical sweep must not retrace"
+    # an undeclared dispatch shape (7 pads to nothing) must trace anew
+    retrace.run_sweep(engine, tiers=(None,), shapes=(7,))
+    assert sum(retrace.snapshot_counts(jitted).values()) > \
+        sum(first.values())
+
+
+def test_committed_baseline_exists_and_is_wellformed():
+    path = REPO_ROOT / "analysis" / "retrace_baseline.json"
+    assert path.exists(), "analysis/retrace_baseline.json not committed"
+    doc = json.loads(path.read_text())
+    assert doc["counts"] and all(
+        isinstance(v, int) for v in doc["counts"].values())
+    assert doc["jax_version"] and doc["backend"]
+
+
+# ---------------------------------------------------------------------------
+# the tree itself is clean (the CI gate, minus the slow retrace pass)
+# ---------------------------------------------------------------------------
+
+def test_repo_tree_is_clean_under_ast_passes():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--no-contracts",
+         "--no-trajectory", "src/repro"],
+        capture_output=True, text=True, cwd=REPO_ROOT,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_rule_catalog_is_complete():
+    # every finding the passes can emit resolves to a cataloged rule
+    for f in [Finding("x", 1, r, "m") for r in RULES]:
+        assert f.severity in ("error", "warning")
+        assert RULES[f.rule].hint
